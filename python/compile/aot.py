@@ -1,0 +1,221 @@
+"""AOT pipeline: lower every L2 graph to HLO text + write the manifest.
+
+Run as ``python -m compile.aot --out ../artifacts`` (see Makefile target
+``artifacts``).  Python runs ONCE here; the Rust coordinator is
+self-contained afterwards.
+
+Interchange format is **HLO text** — jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+
+* ``<config>.<graph>.<variant>.hlo.txt``  — one per (config, graph, variant)
+* ``manifest.json``                       — shapes, parameter ABI, file map
+* ``testvec.json``                        — pinned inputs/outputs of the tiny
+  config for Rust differential tests
+* ``.stamp``                              — source hash for incremental skips
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------------
+# Model configs (see DESIGN.md §3 for the dataset substitutions)
+# ---------------------------------------------------------------------------
+# layers include input dim and class count; batch = minibatch size per SGD
+# step; steps = SGD steps per round (the paper's "5 steps" / "3 local
+# epochs" budgets).
+
+CONFIGS = {
+    # fast config for unit/integration tests and quickstart
+    "tiny": dict(layers=[8, 16, 4], batch=4, steps=2),
+    # MNIST-surrogate: paper's MLP [400, 200, 10] on 8x8 synthetic digits
+    "mnist": dict(layers=[64, 400, 200, 10], batch=64, steps=5),
+    # CIFAR-surrogate: wider MLP on 3x8x8 synthetic images
+    "cifar": dict(layers=[192, 512, 256, 10], batch=20, steps=6),
+}
+
+GRAPHS = ("local_admm", "local_scaffold", "predict", "loss", "grad")
+VARIANTS = ("pallas", "ref")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def graph_fn(graph: str, layers, use_pallas: bool):
+    """The jittable function + its example arg specs for one artifact."""
+    P = model.param_len(layers)
+    d, c = layers[0], layers[-1]
+
+    if graph == "local_admm":
+        def fn(params, zhat, u, xs, ys, lr, rho):
+            return (model.local_admm(params, zhat, u, xs, ys, lr, rho,
+                                     layers=layers, use_pallas=use_pallas),)
+        def specs(batch, steps):
+            return [_spec((P,))] * 3 + [_spec((steps, batch, d)),
+                                        _spec((steps, batch, c)),
+                                        _spec(()), _spec(())]
+    elif graph == "local_scaffold":
+        def fn(params, corr, xs, ys, lr):
+            return (model.local_scaffold(params, corr, xs, ys, lr,
+                                         layers=layers,
+                                         use_pallas=use_pallas),)
+        def specs(batch, steps):
+            return [_spec((P,))] * 2 + [_spec((steps, batch, d)),
+                                        _spec((steps, batch, c)), _spec(())]
+    elif graph == "predict":
+        def fn(params, x):
+            return (model.predict(params, x, layers=layers,
+                                  use_pallas=use_pallas),)
+        def specs(batch, steps):
+            return [_spec((P,)), _spec((batch, d))]
+    elif graph == "loss":
+        def fn(params, x, y):
+            return (model.loss(params, x, y, layers=layers,
+                               use_pallas=use_pallas),)
+        def specs(batch, steps):
+            return [_spec((P,)), _spec((batch, d)), _spec((batch, c))]
+    elif graph == "grad":
+        def fn(params, x, y):
+            return (model.grad(params, x, y, layers=layers,
+                               use_pallas=use_pallas),)
+        def specs(batch, steps):
+            return [_spec((P,)), _spec((batch, d)), _spec((batch, c))]
+    else:
+        raise ValueError(graph)
+    return fn, specs
+
+
+def source_hash() -> str:
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _dirs, files in os.walk(base):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    h.update(json.dumps(CONFIGS, sort_keys=True).encode())
+    return h.hexdigest()
+
+
+def emit_testvec(outdir: str):
+    """Pinned tiny-config inputs/outputs for Rust differential tests."""
+    cfg = CONFIGS["tiny"]
+    layers, batch, steps = cfg["layers"], cfg["batch"], cfg["steps"]
+    P = model.param_len(layers)
+    d, c = layers[0], layers[-1]
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 8)
+    params = model.init_params(layers, ks[0])
+    zhat = params * 0.9
+    u = 0.01 * jax.random.normal(ks[1], (P,))
+    corr = 0.02 * jax.random.normal(ks[2], (P,))
+    xs = jax.random.normal(ks[3], (steps, batch, d))
+    labels = jax.random.randint(ks[4], (steps, batch), 0, c)
+    ys = jax.nn.one_hot(labels, c).astype(jnp.float32)
+    lr, rho = 0.1, 1.0
+
+    out = {
+        "config": "tiny",
+        "lr": lr,
+        "rho": rho,
+        "params": params.tolist(),
+        "zhat": zhat.tolist(),
+        "u": u.tolist(),
+        "corr": corr.tolist(),
+        "xs": xs.reshape(-1).tolist(),
+        "ys": ys.reshape(-1).tolist(),
+    }
+    out["local_admm"] = model.local_admm(
+        params, zhat, u, xs, ys, lr, rho, layers=layers,
+        use_pallas=False).tolist()
+    out["local_scaffold"] = model.local_scaffold(
+        params, corr, xs, ys, lr, layers=layers, use_pallas=False).tolist()
+    out["predict"] = model.predict(
+        params, xs[0], layers=layers, use_pallas=False).reshape(-1).tolist()
+    out["loss"] = float(model.loss(params, xs[0], ys[0], layers=layers,
+                                   use_pallas=False))
+    out["grad"] = model.grad(params, xs[0], ys[0], layers=layers,
+                             use_pallas=False).tolist()
+    with open(os.path.join(outdir, "testvec.json"), "w") as f:
+        json.dump(out, f)
+    print(f"  testvec.json ({len(out['params'])}-param tiny config)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(CONFIGS),
+                    help="comma-separated subset of configs to emit")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+    stamp_path = os.path.join(outdir, ".stamp")
+    stamp = source_hash() + ":" + args.configs
+    if not args.force and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if f.read() == stamp and os.path.exists(
+                    os.path.join(outdir, "manifest.json")):
+                print("artifacts up to date (stamp match); skipping")
+                return
+
+    manifest = {"abi": "flat f32[P]; pack order [W1,b1,W2,b2,...] row-major",
+                "configs": {}}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        layers, batch, steps = cfg["layers"], cfg["batch"], cfg["steps"]
+        P = model.param_len(layers)
+        offsets = [
+            {"start": a, "end": b, "shape": list(shape)}
+            for a, b, shape in model.param_offsets(layers)[0]
+        ]
+        entry = {
+            "layers": layers, "batch": batch, "steps": steps,
+            "classes": layers[-1], "input_dim": layers[0],
+            "param_len": P, "offsets": offsets, "artifacts": {},
+        }
+        for graph in GRAPHS:
+            for variant in VARIANTS:
+                fn, specs = graph_fn(graph, layers, variant == "pallas")
+                lowered = jax.jit(fn).lower(*specs(batch, steps))
+                text = to_hlo_text(lowered)
+                fname = f"{name}.{graph}.{variant}.hlo.txt"
+                with open(os.path.join(outdir, fname), "w") as f:
+                    f.write(text)
+                entry["artifacts"][f"{graph}_{variant}"] = fname
+                print(f"  {fname}: {len(text)} chars")
+        manifest["configs"][name] = entry
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    emit_testvec(outdir)
+    with open(stamp_path, "w") as f:
+        f.write(stamp)
+    print(f"wrote manifest for configs: {args.configs} -> {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for DELA.
+
+All kernels are authored with TPU-shaped tiling (BlockSpec-expressed
+HBM<->VMEM schedules, MXU-friendly block shapes) and lowered with
+``interpret=True`` so the CPU PJRT plugin can execute the resulting HLO.
+Correctness oracles live in :mod:`compile.kernels.ref`.
+"""
+
+from compile.kernels.linear import matmul, dense
+from compile.kernels.prox import prox_sgd_update
+from compile.kernels.shrink import soft_threshold
+
+__all__ = ["matmul", "dense", "prox_sgd_update", "soft_threshold"]

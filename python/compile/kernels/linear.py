@@ -1,0 +1,167 @@
+"""Tiled Pallas matmul / dense-layer kernels (L1).
+
+The paper's compute hot-spot is the local proximal step of Alg. 1, which is
+dominated by the dense-layer matmuls of the agent model.  On a GPU the paper
+relies on cuBLAS; here the insight is re-expressed for TPU idiom:
+
+* the grid iterates ``(M/bm, N/bn, K/bk)`` and each step keeps one
+  ``(bm, bk)`` x-tile, one ``(bk, bn)`` w-tile and the ``(bm, bn)``
+  accumulator resident in VMEM (the BlockSpecs below *are* the HBM<->VMEM
+  schedule a CUDA kernel would express with threadblocks + shared memory);
+* the contraction runs on the MXU via ``dot_general`` with an f32
+  accumulator that is revisited across the sequential K axis;
+* bias add + ReLU are fused into the final K step so the activation never
+  round-trips through HBM.
+
+``interpret=True`` lowers the kernel to plain HLO so the CPU PJRT client can
+execute it; on a real TPU the same source compiles to Mosaic.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Default tile edge.  128 is the MXU-native edge a real-TPU build would
+# use; the CPU interpret path amortizes its per-grid-step overhead with a
+# larger default (4x128 = still MXU-aligned, 3 x 512^2 x 4B = 3 MB << 16 MB
+# VMEM).  Overridable for experiments via DELA_PALLAS_TILE (read at
+# AOT-lowering time; see EXPERIMENTS.md §Perf for the measured effect).
+import os
+
+_TILE = int(os.environ.get("DELA_PALLAS_TILE", "512"))
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, tile: int = _TILE) -> int:
+    """Pick a block edge: full MXU tile when the dim is big enough,
+    otherwise the next multiple of 8 covering the dim (single block)."""
+    if dim >= tile:
+        return tile
+    return _round_up(dim, 8)
+
+
+def _pad2(a, rows: int, cols: int):
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, nk, trans_x, trans_w, relu,
+               has_bias):
+    """One (i, j, k) grid step: accumulate an MXU tile; fuse bias/ReLU on
+    the last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Contraction dims depend on the (trans_x, trans_w) layout:
+    #   x tile: (bm, bk) normally, (bk, bm) when trans_x
+    #   w tile: (bk, bn) normally, (bn, bk) when trans_w
+    cx = 0 if trans_x else 1
+    cw = 1 if trans_w else 0
+    acc = lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((cx,), (cw,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if trans_x:
+        # dot_general yields (bk-free?, ...): with contraction on x dim0 the
+        # remaining x dim is dim1 -> rows are already bm. Nothing to do.
+        pass
+    o_ref[...] += acc
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        out = o_ref[...]
+        if has_bias:
+            out = out + b_ref[...]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def matmul(x, w, *, bias=None, relu: bool = False,
+           trans_x: bool = False, trans_w: bool = False,
+           tile: int = _TILE):
+    """``op(x) @ op(w) (+ bias) (-> relu)`` as a tiled Pallas kernel.
+
+    ``trans_x`` contracts over ``x``'s leading dim (i.e. computes
+    ``x.T @ w``); ``trans_w`` contracts over ``w``'s trailing dim
+    (``x @ w.T``).  Shapes follow numpy semantics of the *logical* product.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape}, {w.shape}")
+    m = x.shape[1] if trans_x else x.shape[0]
+    kx = x.shape[0] if trans_x else x.shape[1]
+    kw = w.shape[1] if trans_w else w.shape[0]
+    n = w.shape[0] if trans_w else w.shape[1]
+    if kx != kw:
+        raise ValueError(f"contraction mismatch: {x.shape} vs {w.shape}")
+    kdim = kx
+
+    bm, bn, bk = _pick_block(m, tile), _pick_block(n, tile), _pick_block(kdim, tile)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(kdim, bk)
+
+    xp = _pad2(x, kp if trans_x else mp, mp if trans_x else kp)
+    wp = _pad2(w, np_ if trans_w else kp, kp if trans_w else np_)
+    has_bias = bias is not None
+    bp = (_pad2(bias.reshape(1, -1), 1, np_) if has_bias
+          else jnp.zeros((1, bn), jnp.float32))
+
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    x_spec = pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)) if trans_x \
+        else pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    w_spec = pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)) if trans_w \
+        else pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    b_spec = pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
+
+    out = pl.pallas_call(
+        partial(_mm_kernel, nk=nk, trans_x=trans_x, trans_w=trans_w,
+                relu=relu, has_bias=has_bias),
+        grid=grid,
+        in_specs=[x_spec, w_spec, b_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Dense layer with a custom VJP so jax.grad pulls gradients through the
+# Pallas kernels (forward *and* backward run on the L1 path).
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, relu: bool = False):
+    """``relu?(x @ w + b)`` with Pallas forward and backward."""
+    return matmul(x, w, bias=b, relu=relu)
+
+
+def _dense_fwd(x, w, b, relu):
+    out = matmul(x, w, bias=b, relu=relu)
+    return out, (x, w, out)
+
+
+def _dense_bwd(relu, res, dy):
+    x, w, out = res
+    if relu:
+        dy = jnp.where(out > 0.0, dy, 0.0)
+    dx = matmul(dy, w, trans_w=True)           # dY @ W^T
+    dw = matmul(x, dy, trans_x=True)           # X^T @ dY
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

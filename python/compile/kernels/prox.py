@@ -1,0 +1,63 @@
+"""Fused proximal-SGD update kernel (L1).
+
+One step of the local minimization of Alg. 1 replaces
+``argmin_x f_i(x) + rho/2 |x - zhat + u|^2`` with (stochastic) gradient
+steps
+
+    p <- p - lr * (g + corr + rho * (p - (zhat - u)))
+
+where ``g`` is the data gradient, ``corr`` an optional additive correction
+(SCAFFOLD's ``c - c_i``; zero for ADMM) and ``anchor = zhat - u``.  Written
+naively in jnp this is four elementwise HBM round-trips over the full
+parameter vector; the kernel fuses them into one pass, tiled over a 1-D
+grid so each block lives in VMEM.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import os
+
+# 1-D tile; 64k f32 x 6 operands = 1.5 MB of VMEM per step.
+_BLOCK = int(os.environ.get("DELA_PALLAS_VBLOCK", "65536"))
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _prox_kernel(p_ref, g_ref, a_ref, c_ref, lr_ref, rho_ref, o_ref):
+    lr = lr_ref[0]
+    rho = rho_ref[0]
+    p = p_ref[...]
+    o_ref[...] = p - lr * (g_ref[...] + c_ref[...] + rho * (p - a_ref[...]))
+
+
+def prox_sgd_update(p, g, anchor, corr, lr, rho, *, block: int = _BLOCK):
+    """Fused ``p - lr*(g + corr + rho*(p - anchor))`` over flat f32 vectors.
+
+    ``lr`` and ``rho`` are traced scalars (rank-0 or shape-(1,) arrays).
+    """
+    (n,) = p.shape
+    bs = min(block, _round_up(n, 8))
+    npad = _round_up(n, bs)
+
+    def pad(v):
+        return jnp.pad(v, (0, npad - n)) if npad != n else v
+
+    lr1 = jnp.asarray(lr, jnp.float32).reshape((1,))
+    rho1 = jnp.asarray(rho, jnp.float32).reshape((1,))
+    vec = pl.BlockSpec((bs,), lambda i: (i,))
+    scal = pl.BlockSpec((1,), lambda i: (0,))
+    out = pl.pallas_call(
+        _prox_kernel,
+        grid=(npad // bs,),
+        in_specs=[vec, vec, vec, vec, scal, scal],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=True,
+    )(pad(p), pad(g), pad(anchor), pad(corr), lr1, rho1)
+    return out[:n]

@@ -1,0 +1,34 @@
+"""Pure-jnp correctness oracles for every L1 kernel.
+
+pytest asserts ``allclose`` between each Pallas kernel and its oracle over
+exact paper shapes and hypothesis-driven shape/value sweeps.  The ``*_ref``
+artifact variants emitted by ``aot.py`` are built exclusively from these.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, *, bias=None, relu=False, trans_x=False, trans_w=False):
+    a = x.T if trans_x else x
+    b = w.T if trans_w else w
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.reshape(1, -1)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def dense_ref(x, w, b, relu=False):
+    return matmul_ref(x, w, bias=b, relu=relu)
+
+
+def prox_sgd_update_ref(p, g, anchor, corr, lr, rho):
+    lr = jnp.asarray(lr, jnp.float32).reshape(())
+    rho = jnp.asarray(rho, jnp.float32).reshape(())
+    return p - lr * (g + corr + rho * (p - anchor))
+
+
+def soft_threshold_ref(v, tau):
+    tau = jnp.asarray(tau, jnp.float32).reshape(())
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - tau, 0.0)

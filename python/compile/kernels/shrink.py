@@ -1,0 +1,44 @@
+"""Soft-threshold (l1 proximal) kernel (L1).
+
+The z-update of Alg. 1 with ``g(z) = lambda |z|_1`` is the shrinkage
+operator ``S_tau(v) = sign(v) * max(|v| - tau, 0)`` — the workhorse of the
+paper's LASSO experiments (App. G.1/G.2).  Fused single-pass kernel over a
+1-D VMEM-tiled grid.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import os
+
+_BLOCK = int(os.environ.get("DELA_PALLAS_VBLOCK", "65536"))
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _shrink_kernel(v_ref, tau_ref, o_ref):
+    v = v_ref[...]
+    tau = tau_ref[0]
+    o_ref[...] = jnp.sign(v) * jnp.maximum(jnp.abs(v) - tau, 0.0)
+
+
+def soft_threshold(v, tau, *, block: int = _BLOCK):
+    """``sign(v) * max(|v| - tau, 0)`` over a flat f32 vector."""
+    (n,) = v.shape
+    bs = min(block, _round_up(n, 8))
+    npad = _round_up(n, bs)
+    vp = jnp.pad(v, (0, npad - n)) if npad != n else v
+    tau1 = jnp.asarray(tau, jnp.float32).reshape((1,))
+    vec = pl.BlockSpec((bs,), lambda i: (i,))
+    out = pl.pallas_call(
+        _shrink_kernel,
+        grid=(npad // bs,),
+        in_specs=[vec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=True,
+    )(vp, tau1)
+    return out[:n]

@@ -1,0 +1,160 @@
+"""L2: the agent model and local update graphs of Alg. 1 (build-time JAX).
+
+Everything here is lowered **once** by ``aot.py`` to HLO text and executed
+from the Rust coordinator through PJRT; Python never runs on the request
+path.
+
+Model state crosses the PJRT boundary as a single flat ``f32[P]`` vector
+(the ABI documented in DESIGN.md §4).  The MLP architecture is a list of
+layer widths ``[d, h1, ..., c]``; parameters are packed
+``[W1, b1, W2, b2, ...]`` row-major.
+
+Local update graphs:
+
+* ``local_admm``     — S proximal-SGD steps on
+  ``f_i(x) + rho/2 |x - zhat + u|^2`` (Alg. 1 agent step; also FedADMM,
+  FedProx via ``u = 0, rho = mu``, FedAvg via ``rho = 0``).
+* ``local_scaffold`` — S corrected-SGD steps ``p -= lr (g + c - c_i)``.
+* ``predict`` / ``loss`` / ``grad`` — evaluation heads.
+
+Each graph exists in a Pallas (L1 kernels) and a pure-jnp reference
+variant; pytest pins them equal and ``aot.py`` emits both.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels.linear import dense
+from compile.kernels.prox import prox_sgd_update
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Parameter packing
+# ---------------------------------------------------------------------------
+
+def param_shapes(layers):
+    """[(W shape, b shape), ...] for an MLP with the given widths."""
+    return [((din, dout), (dout,))
+            for din, dout in zip(layers[:-1], layers[1:])]
+
+
+def param_offsets(layers):
+    """Flat-vector offsets: list of (start, end, shape) in pack order."""
+    offs, pos = [], 0
+    for wshape, bshape in param_shapes(layers):
+        for shape in (wshape, bshape):
+            size = 1
+            for s in shape:
+                size *= s
+            offs.append((pos, pos + size, shape))
+            pos += size
+    return offs, pos
+
+
+def param_len(layers) -> int:
+    return param_offsets(layers)[1]
+
+
+def unpack(flat, layers):
+    """Flat f32[P] -> [(W1, b1), (W2, b2), ...]."""
+    offs, total = param_offsets(layers)
+    assert flat.shape == (total,), (flat.shape, total)
+    tensors = [flat[a:b].reshape(shape) for a, b, shape in offs]
+    return list(zip(tensors[0::2], tensors[1::2]))
+
+
+def pack(pairs):
+    """[(W, b), ...] -> flat f32[P]."""
+    parts = []
+    for w, b in pairs:
+        parts.append(w.reshape(-1))
+        parts.append(b.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def init_params(layers, key):
+    """He-init packed parameter vector (matches rust/src/model native init)."""
+    pairs = []
+    for din, dout in zip(layers[:-1], layers[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+        pairs.append((w, jnp.zeros((dout,), jnp.float32)))
+    return pack(pairs)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def _forward(flat, x, layers, use_pallas: bool):
+    layer = dense if use_pallas else ref.dense_ref
+    pairs = unpack(flat, layers)
+    h = x
+    for li, (w, b) in enumerate(pairs):
+        is_last = li == len(pairs) - 1
+        h = layer(h, w, b, not is_last)
+    return h  # logits
+
+
+def predict(flat, x, *, layers, use_pallas=True):
+    """Logits ``f32[B, C]`` for a batch ``x: f32[B, D]``."""
+    return _forward(flat, x, layers, use_pallas)
+
+
+def loss(flat, x, y_onehot, *, layers, use_pallas=True):
+    """Mean softmax cross-entropy; ``y_onehot: f32[B, C]``."""
+    logits = _forward(flat, x, layers, use_pallas)
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logz, axis=-1))
+
+
+def grad(flat, x, y_onehot, *, layers, use_pallas=True):
+    """dloss/dparams, flat ``f32[P]``."""
+    return jax.grad(loss)(flat, x, y_onehot, layers=layers,
+                          use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Local update graphs
+# ---------------------------------------------------------------------------
+
+def _prox_step(p, g, anchor, corr, lr, rho, use_pallas):
+    if use_pallas:
+        return prox_sgd_update(p, g, anchor, corr, lr, rho)
+    return ref.prox_sgd_update_ref(p, g, anchor, corr, lr, rho)
+
+
+def local_admm(params, zhat, u, xs, ys, lr, rho, *, layers, use_pallas=True):
+    """S proximal-SGD steps of the Alg. 1 agent update.
+
+    ``xs: f32[S, B, D]``, ``ys: f32[S, B, C]`` — one minibatch per step,
+    sampled by the Rust coordinator.  ``lr``/``rho`` are runtime scalars so a
+    single artifact serves hyperparameter sweeps.
+    """
+    steps = xs.shape[0]
+    anchor = zhat - u
+    zero = jnp.zeros_like(params)
+
+    def body(s, p):
+        g = grad(p, xs[s], ys[s], layers=layers, use_pallas=use_pallas)
+        return _prox_step(p, g, anchor, zero, lr, rho, use_pallas)
+
+    return lax.fori_loop(0, steps, body, params)
+
+
+def local_scaffold(params, corr, xs, ys, lr, *, layers, use_pallas=True):
+    """S corrected-SGD steps (SCAFFOLD): ``p -= lr (g + corr)`` with
+    ``corr = c - c_i`` computed by the coordinator.  Reuses the fused prox
+    kernel with ``rho = 0`` and the correction as the additive term."""
+    steps = xs.shape[0]
+    zero = jnp.zeros_like(params)
+
+    def body(s, p):
+        g = grad(p, xs[s], ys[s], layers=layers, use_pallas=use_pallas)
+        return _prox_step(p, g, zero, corr, lr, 0.0, use_pallas)
+
+    return lax.fori_loop(0, steps, body, params)

@@ -1,0 +1,98 @@
+"""AOT pipeline tests: manifest consistency + HLO text well-formedness.
+
+These run against the emitted ``artifacts/`` (built by ``make artifacts``);
+they skip gracefully when artifacts are absent so `pytest` can run before
+the first build.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_configs():
+    m = _manifest()
+    assert set(aot.CONFIGS) <= set(m["configs"])
+
+
+def test_manifest_param_lens_match_model():
+    m = _manifest()
+    for name, entry in m["configs"].items():
+        assert entry["param_len"] == model.param_len(entry["layers"])
+        assert entry["classes"] == entry["layers"][-1]
+        assert entry["input_dim"] == entry["layers"][0]
+
+
+def test_manifest_offsets_are_contiguous():
+    m = _manifest()
+    for entry in m["configs"].values():
+        pos = 0
+        for off in entry["offsets"]:
+            assert off["start"] == pos
+            size = 1
+            for s in off["shape"]:
+                size *= s
+            assert off["end"] - off["start"] == size
+            pos = off["end"]
+        assert pos == entry["param_len"]
+
+
+def test_all_artifacts_exist_and_parse_as_hlo():
+    m = _manifest()
+    for entry in m["configs"].values():
+        for key, fname in entry["artifacts"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), fname
+            with open(path) as f:
+                text = f.read()
+            # well-formed HLO text: module header + ENTRY computation
+            assert text.startswith("HloModule"), fname
+            assert "ENTRY" in text, fname
+            assert "ROOT" in text, fname
+
+
+def test_both_variants_emitted_per_graph():
+    m = _manifest()
+    for entry in m["configs"].values():
+        for graph in aot.GRAPHS:
+            assert f"{graph}_pallas" in entry["artifacts"]
+            assert f"{graph}_ref" in entry["artifacts"]
+
+
+def test_testvec_shapes():
+    m = _manifest()
+    path = os.path.join(ART, "testvec.json")
+    assert os.path.exists(path)
+    with open(path) as f:
+        tv = json.load(f)
+    entry = m["configs"][tv["config"]]
+    P = entry["param_len"]
+    S, B = entry["steps"], entry["batch"]
+    D, C = entry["input_dim"], entry["classes"]
+    for key in ("params", "zhat", "u", "corr", "local_admm",
+                "local_scaffold", "grad"):
+        assert len(tv[key]) == P, key
+    assert len(tv["xs"]) == S * B * D
+    assert len(tv["ys"]) == S * B * C
+    assert len(tv["predict"]) == B * C
+    assert isinstance(tv["loss"], float)
+
+
+def test_stamp_skips_rebuild(tmp_path, capsys):
+    # second invocation with identical sources must be a no-op
+    h1 = aot.source_hash()
+    h2 = aot.source_hash()
+    assert h1 == h2

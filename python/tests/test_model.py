@@ -1,0 +1,190 @@
+"""L2 model tests: packing ABI, forward/loss, local update graphs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+LAYERS = [8, 16, 4]
+P = model.param_len(LAYERS)
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def _data(seed=0, steps=2, batch=4):
+    k1, k2 = keys(2, seed)
+    xs = jax.random.normal(k1, (steps, batch, LAYERS[0]))
+    labels = jax.random.randint(k2, (steps, batch), 0, LAYERS[-1])
+    ys = jax.nn.one_hot(labels, LAYERS[-1]).astype(jnp.float32)
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# Packing ABI
+# ---------------------------------------------------------------------------
+
+def test_param_len():
+    # 8*16+16 + 16*4+4 = 212
+    assert P == 212
+
+
+def test_param_len_paper_configs():
+    assert model.param_len([64, 400, 200, 10]) == 64 * 400 + 400 + \
+        400 * 200 + 200 + 200 * 10 + 10
+    assert model.param_len([192, 512, 256, 10]) == 192 * 512 + 512 + \
+        512 * 256 + 256 + 256 * 10 + 10
+
+
+def test_pack_unpack_roundtrip():
+    flat = model.init_params(LAYERS, keys(1)[0])
+    np.testing.assert_array_equal(model.pack(model.unpack(flat, LAYERS)), flat)
+
+
+def test_offsets_cover_vector_contiguously():
+    offs, total = model.param_offsets(LAYERS)
+    pos = 0
+    for a, b, shape in offs:
+        assert a == pos
+        size = int(np.prod(shape))
+        assert b - a == size
+        pos = b
+    assert pos == total
+
+
+def test_unpack_shapes():
+    flat = jnp.arange(P, dtype=jnp.float32)
+    pairs = model.unpack(flat, LAYERS)
+    assert [((w.shape), (b.shape)) for w, b in pairs] == \
+        [((8, 16), (16,)), ((16, 4), (4,))]
+    # W1 occupies the first 128 entries row-major
+    np.testing.assert_array_equal(pairs[0][0].reshape(-1),
+                                  jnp.arange(128, dtype=jnp.float32))
+
+
+def test_unpack_rejects_wrong_len():
+    with pytest.raises(AssertionError):
+        model.unpack(jnp.zeros((P + 1,)), LAYERS)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / grad — pallas variant == ref variant
+# ---------------------------------------------------------------------------
+
+def test_predict_variants_match():
+    flat = model.init_params(LAYERS, keys(1)[0])
+    xs, _ = _data()
+    a = model.predict(flat, xs[0], layers=LAYERS, use_pallas=True)
+    b = model.predict(flat, xs[0], layers=LAYERS, use_pallas=False)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-5)
+
+
+def test_loss_finite_and_near_log_c_at_init():
+    # With random init the expected CE is ~log(C).
+    flat = model.init_params(LAYERS, keys(1, seed=2)[0]) * 0.01
+    xs, ys = _data(seed=3)
+    val = float(model.loss(flat, xs[0], ys[0], layers=LAYERS,
+                           use_pallas=False))
+    assert np.isfinite(val)
+    assert abs(val - np.log(LAYERS[-1])) < 0.5
+
+
+def test_grad_variants_match():
+    flat = model.init_params(LAYERS, keys(1, seed=4)[0])
+    xs, ys = _data(seed=5)
+    ga = model.grad(flat, xs[0], ys[0], layers=LAYERS, use_pallas=True)
+    gb = model.grad(flat, xs[0], ys[0], layers=LAYERS, use_pallas=False)
+    np.testing.assert_allclose(ga, gb, atol=5e-5, rtol=1e-4)
+
+
+def test_grad_descends_loss():
+    flat = model.init_params(LAYERS, keys(1, seed=6)[0])
+    xs, ys = _data(seed=7)
+    g = model.grad(flat, xs[0], ys[0], layers=LAYERS, use_pallas=False)
+    l0 = model.loss(flat, xs[0], ys[0], layers=LAYERS, use_pallas=False)
+    l1 = model.loss(flat - 0.05 * g, xs[0], ys[0], layers=LAYERS,
+                    use_pallas=False)
+    assert float(l1) < float(l0)
+
+
+# ---------------------------------------------------------------------------
+# Local update graphs
+# ---------------------------------------------------------------------------
+
+def test_local_admm_variants_match():
+    flat = model.init_params(LAYERS, keys(1, seed=8)[0])
+    xs, ys = _data(seed=9)
+    zhat, u = flat * 0.9, flat * 0.01
+    a = model.local_admm(flat, zhat, u, xs, ys, 0.1, 1.0, layers=LAYERS,
+                         use_pallas=True)
+    b = model.local_admm(flat, zhat, u, xs, ys, 0.1, 1.0, layers=LAYERS,
+                         use_pallas=False)
+    np.testing.assert_allclose(a, b, atol=5e-5, rtol=1e-4)
+
+
+def test_local_admm_reduces_augmented_objective():
+    flat = model.init_params(LAYERS, keys(1, seed=10)[0])
+    xs, ys = _data(seed=11, steps=8)
+    zhat, u = jnp.zeros((P,)), jnp.zeros((P,))
+    out = model.local_admm(flat, zhat, u, xs, ys, 0.05, 0.5, layers=LAYERS,
+                           use_pallas=False)
+
+    def aug(p):
+        return float(model.loss(p, xs[0], ys[0], layers=LAYERS,
+                                use_pallas=False)
+                     + 0.25 * jnp.sum((p - zhat + u) ** 2))
+    assert aug(out) < aug(flat)
+
+
+def test_local_admm_rho_zero_is_fedavg_sgd():
+    """With rho=0 the graph degenerates to plain SGD (the FedAvg local
+    step), independent of zhat/u."""
+    flat = model.init_params(LAYERS, keys(1, seed=12)[0])
+    xs, ys = _data(seed=13)
+    junk1, junk2 = keys(2, seed=14)
+    z1 = jax.random.normal(junk1, (P,))
+    z2 = jax.random.normal(junk2, (P,))
+    a = model.local_admm(flat, z1, z2, xs, ys, 0.1, 0.0, layers=LAYERS,
+                         use_pallas=False)
+    # manual SGD
+    p = flat
+    for s in range(xs.shape[0]):
+        p = p - 0.1 * model.grad(p, xs[s], ys[s], layers=LAYERS,
+                                 use_pallas=False)
+    np.testing.assert_allclose(a, p, atol=1e-6)
+
+
+def test_local_admm_strong_rho_pins_to_anchor():
+    flat = model.init_params(LAYERS, keys(1, seed=15)[0])
+    xs, ys = _data(seed=16, steps=20)
+    zhat = jnp.zeros((P,))
+    u = jnp.zeros((P,))
+    # lr*rho = 0.5 < 1 keeps the proximal pull a contraction.
+    out = model.local_admm(flat, zhat, u, xs, ys, 0.05, 10.0, layers=LAYERS,
+                           use_pallas=False)
+    assert float(jnp.linalg.norm(out)) < float(jnp.linalg.norm(flat))
+
+
+def test_local_scaffold_variants_match():
+    flat = model.init_params(LAYERS, keys(1, seed=17)[0])
+    xs, ys = _data(seed=18)
+    corr = 0.02 * jax.random.normal(keys(1, seed=19)[0], (P,))
+    a = model.local_scaffold(flat, corr, xs, ys, 0.1, layers=LAYERS,
+                             use_pallas=True)
+    b = model.local_scaffold(flat, corr, xs, ys, 0.1, layers=LAYERS,
+                             use_pallas=False)
+    np.testing.assert_allclose(a, b, atol=5e-5, rtol=1e-4)
+
+
+def test_local_scaffold_zero_corr_is_sgd():
+    flat = model.init_params(LAYERS, keys(1, seed=20)[0])
+    xs, ys = _data(seed=21)
+    corr = jnp.zeros((P,))
+    a = model.local_scaffold(flat, corr, xs, ys, 0.1, layers=LAYERS,
+                             use_pallas=False)
+    b = model.local_admm(flat, jnp.zeros((P,)), jnp.zeros((P,)), xs, ys,
+                         0.1, 0.0, layers=LAYERS, use_pallas=False)
+    np.testing.assert_allclose(a, b, atol=1e-6)

@@ -1,0 +1,75 @@
+"""Hypothesis sweeps: Pallas kernels vs oracles over random shapes/values.
+
+Per the reproduction contract, hypothesis drives the L1 kernels across
+shape/value space and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.linear import matmul
+from compile.kernels.prox import prox_sgd_update
+from compile.kernels.shrink import soft_threshold
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+dims = st.integers(min_value=1, max_value=160)
+small_dims = st.integers(min_value=1, max_value=64)
+vec_lens = st.integers(min_value=1, max_value=20_000)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+scalars = st.floats(min_value=0.0, max_value=10.0, allow_nan=False,
+                    width=32)
+
+
+def _rand(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape,
+                                     jnp.float32)
+
+
+@given(m=dims, k=dims, n=dims, seed=seeds, relu=st.booleans(),
+       bias=st.booleans())
+@settings(**SETTINGS)
+def test_matmul_matches_ref(m, k, n, seed, relu, bias):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,)) if bias else None
+    got = matmul(x, w, bias=b, relu=relu)
+    want = ref.matmul_ref(x, w, bias=b, relu=relu)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+@given(m=small_dims, k=small_dims, n=small_dims, seed=seeds,
+       tx=st.booleans(), tw=st.booleans())
+@settings(**SETTINGS)
+def test_matmul_transposes_match_ref(m, k, n, seed, tx, tw):
+    x = _rand(seed, (k, m) if tx else (m, k))
+    w = _rand(seed + 1, (n, k) if tw else (k, n))
+    got = matmul(x, w, trans_x=tx, trans_w=tw)
+    want = ref.matmul_ref(x, w, trans_x=tx, trans_w=tw)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+@given(n=vec_lens, seed=seeds, lr=scalars, rho=scalars)
+@settings(**SETTINGS)
+def test_prox_matches_ref(n, seed, lr, rho):
+    p = _rand(seed, (n,))
+    g = _rand(seed + 1, (n,))
+    a = _rand(seed + 2, (n,))
+    c = _rand(seed + 3, (n,))
+    got = prox_sgd_update(p, g, a, c, lr, rho)
+    want = ref.prox_sgd_update_ref(p, g, a, c, lr, rho)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@given(n=vec_lens, seed=seeds, tau=scalars)
+@settings(**SETTINGS)
+def test_shrink_matches_ref(n, seed, tau):
+    v = _rand(seed, (n,), scale=3.0)
+    got = soft_threshold(v, tau)
+    want = ref.soft_threshold_ref(v, tau)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    # shrinkage never increases magnitude
+    assert float(jnp.max(jnp.abs(got) - jnp.abs(v))) <= 1e-6

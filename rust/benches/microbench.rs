@@ -1,0 +1,94 @@
+//! Microbenchmarks of the L3 hot paths: trigger evaluation, channel,
+//! estimate integration, linalg prox solves, native MLP step.
+//!
+//! `cargo bench --bench microbench`
+
+use deluxe::benchlib::{black_box, Bench};
+use deluxe::comm::{DropChannel, Estimate, Trigger, TriggerState};
+use deluxe::data::regress::{generate, RegressSpec};
+use deluxe::linalg::{soft_threshold, Cholesky, Matrix};
+use deluxe::model::MlpSpec;
+use deluxe::rng::{Pcg64, Rng};
+use deluxe::solver::{ExactQuadratic, LocalSolver};
+
+fn main() {
+    let mut b = Bench::default();
+    println!("== comm hot path ==");
+
+    let dim = 108_210; // MNIST-surrogate parameter count
+    let mut rng = Pcg64::seed(1);
+    let v0: Vec<f32> = (0..dim).map(|_| rng.f32n()).collect();
+    let v1: Vec<f32> = v0.iter().map(|x| x + 0.01).collect();
+
+    let mut trig: TriggerState<f32> =
+        TriggerState::new(Trigger::vanilla(1e9), v0.clone());
+    b.bench("trigger.offer (108k f32, no fire)", || {
+        black_box(trig.offer(&v1, &mut rng));
+    });
+
+    let mut trig_fire: TriggerState<f32> =
+        TriggerState::new(Trigger::vanilla(0.0), v0.clone());
+    let mut flip = false;
+    b.bench("trigger.offer (108k f32, fires)", || {
+        flip = !flip;
+        let v = if flip { &v1 } else { &v0 };
+        black_box(trig_fire.offer(v, &mut rng));
+    });
+
+    let mut est = Estimate::new(v0.clone());
+    let delta: Vec<f32> = vec![1e-4; dim];
+    b.bench("estimate.apply (108k f32)", || {
+        est.apply(black_box(&delta));
+    });
+
+    let mut ch = DropChannel::new(0.3);
+    b.bench("channel.transmit (unit payload)", || {
+        black_box(ch.transmit((), &mut rng));
+    });
+
+    println!("\n== linalg / exact prox ==");
+    let spec = RegressSpec { n_agents: 4, rows_per_agent: 40, dim: 20, ..Default::default() };
+    let (blocks, _) = generate(&spec, &mut rng);
+    let mut solver = ExactQuadratic::new(&blocks);
+    let anchor = vec![0.1f64; 20];
+    // warm the factorization cache, then measure the hot path
+    let _ = solver.solve(0, &anchor, 1.0, &mut rng);
+    b.bench("ExactQuadratic.solve (dim 20, cached chol)", || {
+        black_box(solver.solve(0, &anchor, 1.0, &mut rng));
+    });
+
+    let m = Matrix::randn(128, 64, &mut rng);
+    let x64 = vec![0.5f64; 64];
+    b.bench("matvec 128x64", || {
+        black_box(m.matvec(&x64));
+    });
+    let mut g = m.gram();
+    g.add_diag(1.0);
+    b.bench("cholesky factor 64x64", || {
+        black_box(Cholesky::factor(&g).unwrap());
+    });
+    let vbig: Vec<f64> = (0..100_000).map(|_| rng.normal()).collect();
+    b.bench("soft_threshold 100k f64", || {
+        black_box(soft_threshold(&vbig, 0.3));
+    });
+
+    println!("\n== native MLP local step (L3-side baseline for PJRT) ==");
+    let spec = MlpSpec::new(vec![64, 400, 200, 10]);
+    let params = spec.init(&mut rng);
+    let bx: Vec<f32> = (0..64 * 64).map(|_| rng.f32n()).collect();
+    let mut by = vec![0.0f32; 64 * 10];
+    for r in 0..64 {
+        by[r * 10 + r % 10] = 1.0;
+    }
+    b.bench("mlp.loss_grad (batch 64, 108k params)", || {
+        black_box(spec.loss_grad(&params, &bx, &by, 64));
+    });
+    let zeros = vec![0.0f32; spec.param_len()];
+    let xs5: Vec<f32> = (0..5).flat_map(|_| bx.clone()).collect();
+    let ys5: Vec<f32> = (0..5).flat_map(|_| by.clone()).collect();
+    b.bench("mlp.local_admm (5 steps x batch 64)", || {
+        black_box(spec.local_admm(&params, &zeros, &zeros, &xs5, &ys5, 0.1, 1.0, 5, 64));
+    });
+
+    println!("\ndone: {} benchmarks", b.results.len());
+}

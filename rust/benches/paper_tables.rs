@@ -1,0 +1,169 @@
+//! End-to-end benches that regenerate scaled-down versions of every paper
+//! table/figure (one bench per experiment id; the full-size variants run
+//! via `deluxe exp <id>`).
+//!
+//! `cargo bench --bench paper_tables`
+
+use deluxe::benchlib::Bench;
+use deluxe::experiments::{fig10, fig11, fig12, fig9, nn, rates};
+use deluxe::metrics::fmt_opt;
+
+fn main() {
+    let mut b = Bench::endtoend();
+
+    println!("== tab1-mnist (scaled: tiny workload, 30 rounds) ==");
+    b.once("tab1 (tiny, 6 algorithms x 30 rounds)", || {
+        let w = nn::NnWorkload::tiny(0);
+        let cfg = nn::NnExperimentConfig { rounds: 30, eval_every: 2, seed: 0 };
+        let algos = [
+            nn::Algo::Alg1Rand { delta_d: 0.1, delta_z: 0.05, p_trig: 0.1 },
+            nn::Algo::Alg1Vanilla { delta_d: 0.1, delta_z: 0.05 },
+            nn::Algo::FedAdmm { part: 0.6 },
+            nn::Algo::FedAvg { part: 0.6 },
+            nn::Algo::FedProx { part: 0.6, mu: 0.1 },
+            nn::Algo::Scaffold { part: 0.5 },
+        ];
+        let rows = nn::events_to_targets(
+            &w,
+            &algos,
+            &[0.5, 0.7],
+            &cfg,
+            &nn::Backend::Native,
+        );
+        for (label, evs) in rows {
+            println!(
+                "  {label:<32} 50%: {:>6}  70%: {:>6}",
+                fmt_opt(evs[0]),
+                fmt_opt(evs[1])
+            );
+        }
+    });
+
+    println!("\n== fig3 (scaled) ==");
+    b.once("fig3 (tiny, accuracy+load series)", || {
+        let w = nn::NnWorkload::tiny(1);
+        let cfg = nn::NnExperimentConfig { rounds: 30, eval_every: 2, seed: 1 };
+        let rec = nn::run_algo(
+            &w,
+            nn::Algo::Alg1Vanilla { delta_d: 0.1, delta_z: 0.05 },
+            &cfg,
+            &nn::Backend::Native,
+        );
+        println!(
+            "  final acc {:.3}, load {:.3} (smoothed-3 tail {:.3})",
+            rec.last("accuracy").unwrap(),
+            rec.last("load").unwrap(),
+            rec.smoothed("load", 3).last().unwrap().1
+        );
+    });
+
+    println!("\n== fig8 (scaled Δ-sweep) ==");
+    b.once("fig8 (tiny, 4-point sweep)", || {
+        let w = nn::NnWorkload::tiny(2);
+        let cfg = nn::NnExperimentConfig { rounds: 20, eval_every: 5, seed: 2 };
+        for delta in [0.0, 0.1, 0.3, 1.0] {
+            let rec = nn::run_algo(
+                &w,
+                nn::Algo::Alg1Vanilla { delta_d: delta, delta_z: delta * 0.1 },
+                &cfg,
+                &nn::Backend::Native,
+            );
+            println!(
+                "  Δ={delta:<4} events {:>6.0} acc {:.3}",
+                rec.last("events").unwrap(),
+                rec.last("accuracy").unwrap()
+            );
+        }
+    });
+
+    println!("\n== fig9 (scaled) ==");
+    b.once("fig9 (N=10 linreg+lasso, all methods)", || {
+        let cfg = fig9::Fig9Config {
+            n_agents: 10,
+            rows_per_agent: 10,
+            dim: 8,
+            rounds: 50,
+            ..Default::default()
+        };
+        for (panel, label, rec) in fig9::run(&cfg) {
+            println!(
+                "  {panel:<7} {label:<28} events {:>6.0} subopt {:.2e}",
+                rec.last("events").unwrap(),
+                rec.last("subopt").unwrap()
+            );
+        }
+    });
+
+    println!("\n== fig10 (scaled) ==");
+    b.once("fig10 (N=10, drop 0.3, T sweep)", || {
+        let cfg = fig10::Fig10Config {
+            n_agents: 10,
+            rows_per_agent: 8,
+            dim: 6,
+            rounds: 60,
+            ..Default::default()
+        };
+        for (label, rec) in fig10::run(&cfg) {
+            println!(
+                "  {label:<6} subopt {:.2e} events {:>6.0}",
+                rec.last("subopt").unwrap(),
+                rec.last("events").unwrap()
+            );
+        }
+    });
+
+    println!("\n== fig11 (scaled graph training) ==");
+    b.once("fig11 (4 agents, 30 rounds)", || {
+        let cfg = fig11::Fig11Config {
+            n_agents: 4,
+            n_edges: 5,
+            rounds: 30,
+            rho: 0.05,
+            lr: 0.05,
+            steps: 2,
+            batch: 8,
+            eval_every: 10,
+            seed: 3,
+        };
+        for (label, rec) in fig11::run(&cfg) {
+            println!(
+                "  {label:<28} acc {:.3} events {:>6.0}",
+                rec.last("acc_mean").unwrap(),
+                rec.last("events").unwrap()
+            );
+        }
+    });
+
+    println!("\n== fig12 (scaled decentralized linreg) ==");
+    b.once("fig12 (8 agents, 500 rounds)", || {
+        let cfg = fig12::Fig12Config {
+            n_agents: 8,
+            n_edges: 14,
+            rows_per_agent: 10,
+            dim: 8,
+            rounds: 500,
+            rho: 0.05,
+            seed: 4,
+        };
+        for (label, rec) in fig12::run(&cfg) {
+            println!(
+                "  {label:<28} subopt {:.2e} events {:>7.0}",
+                rec.last("subopt").unwrap(),
+                rec.last("events").unwrap()
+            );
+        }
+    });
+
+    println!("\n== rates (Thm 4.1 / Cor 2.2) ==");
+    b.once("rates (Δ sweep on strongly convex instance)", || {
+        let cfg = rates::RatesConfig { rounds: 300, ..Default::default() };
+        for r in rates::sweep_deltas(&cfg) {
+            println!(
+                "  Δ={:<6.0e} rate {:.4} (bound {:.4}) floor {:.2e} (bound {:.2e})",
+                r.delta, r.measured_rate, r.bound_rate, r.floor, r.floor_bound
+            );
+        }
+    });
+
+    println!("\ndone: {} experiment benches", b.results.len());
+}

@@ -1,0 +1,79 @@
+//! PJRT runtime benchmarks: artifact compile time, per-call execute
+//! latency of each graph, and Pallas-variant vs ref-variant vs native-Rust
+//! throughput — the numbers behind EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench pjrt_runtime` (requires `make artifacts`).
+
+use deluxe::benchlib::{black_box, Bench};
+use deluxe::model::MlpSpec;
+use deluxe::rng::{Pcg64, Rng};
+use deluxe::runtime::{PjrtRuntime, Variant};
+
+fn main() -> anyhow::Result<()> {
+    let dir = deluxe::config::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built; run `make artifacts` first — skipping");
+        return Ok(());
+    }
+    let rt = PjrtRuntime::load(&dir)?;
+    let mut b = Bench::default();
+    let mut rng = Pcg64::seed(1);
+
+    for config in ["tiny", "mnist"] {
+        let cfg = rt.config(config)?.clone();
+        let spec = MlpSpec::new(cfg.layers.clone());
+        let p = spec.init(&mut rng);
+        let zhat = p.clone();
+        let u = vec![0.0f32; p.len()];
+        let xs: Vec<f32> = (0..cfg.steps * cfg.batch * cfg.input_dim)
+            .map(|_| rng.f32n())
+            .collect();
+        let mut ys = vec![0.0f32; cfg.steps * cfg.batch * cfg.classes];
+        for r in 0..cfg.steps * cfg.batch {
+            ys[r * cfg.classes + r % cfg.classes] = 1.0;
+        }
+        let x1 = &xs[..cfg.batch * cfg.input_dim];
+        let y1 = &ys[..cfg.batch * cfg.classes];
+
+        println!("\n== {config} (P={}, batch={}, steps={}) ==", cfg.param_len, cfg.batch, cfg.steps);
+        // compile cost (first call pays it)
+        b.once(&format!("{config}: compile local_admm.pallas"), || {
+            let _ = rt
+                .local_admm(config, Variant::Pallas, &p, &zhat, &u, &xs, &ys, 0.1, 1.0)
+                .unwrap();
+        });
+        b.once(&format!("{config}: compile local_admm.ref"), || {
+            let _ = rt
+                .local_admm(config, Variant::Ref, &p, &zhat, &u, &xs, &ys, 0.1, 1.0)
+                .unwrap();
+        });
+        for variant in [Variant::Pallas, Variant::Ref] {
+            b.bench(
+                &format!("{config}: local_admm.{:?} execute", variant),
+                || {
+                    black_box(
+                        rt.local_admm(
+                            config, variant, &p, &zhat, &u, &xs, &ys, 0.1, 1.0,
+                        )
+                        .unwrap(),
+                    );
+                },
+            );
+        }
+        b.bench(&format!("{config}: predict.pallas execute"), || {
+            black_box(rt.predict(config, Variant::Pallas, &p, x1).unwrap());
+        });
+        b.bench(&format!("{config}: grad.pallas execute"), || {
+            black_box(rt.grad(config, Variant::Pallas, &p, x1, y1).unwrap());
+        });
+        // native twin for the same work
+        b.bench(&format!("{config}: native local_admm"), || {
+            black_box(spec.local_admm(
+                &p, &zhat, &u, &xs, &ys, 0.1, 1.0, cfg.steps, cfg.batch,
+            ));
+        });
+    }
+
+    println!("\ndone: {} runtime benches", b.results.len());
+    Ok(())
+}

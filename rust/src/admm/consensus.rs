@@ -1,0 +1,528 @@
+//! Alg. 1 — Event-Based Distributed Learning with Over-Relaxed ADMM.
+//!
+//! N agents hold `(x^i, u^i)` and an estimate `ẑ^i` of the consensus
+//! variable; the server (agent N+1) holds `z` and an estimate `ζ̂` of
+//! `ζ_k = (1/N) Σ_i (α x^i_{k+1} + u^i_k)`.  All communications are
+//! event-based deltas over lossy links; rare periodic resets bound the
+//! drop-induced error (Prop. 2.1).
+//!
+//! One round k:
+//!
+//! 1. server offers `z_k` on each downlink (`|z_k − z_{[k-1]}| > Δᶻ`);
+//!    surviving deltas update the agents' `ẑ^i`;
+//! 2. each agent updates
+//!    `u^i_k = u^i_{k-1} + α x^i_k − ẑ^i_k + (1−α) ẑ^i_{k-1}`, solves the
+//!    local prox problem `x^i_{k+1} = argmin f^i + (ρ/2)|x − ẑ^i_k + u^i_k|²`
+//!    (exactly, or by S SGD steps — the `LocalSolver`), and offers
+//!    `d^i_{k+1} = α x^i_{k+1} + u^i_k` on its uplink; surviving deltas are
+//!    accumulated into `ζ̂` with weight 1/N;
+//! 3. server updates `z_{k+1} = prox_g(ζ̂_k + (1−α) z_k; Nρ)`;
+//! 4. if `mod(k+1, T) = 0`: full resynchronization (counted as
+//!    communication).
+
+use crate::comm::{DropChannel, Estimate, Scalar, Trigger, TriggerState};
+use crate::rng::Pcg64;
+use crate::solver::{LocalSolver, ServerProx};
+
+/// Hyperparameters of Alg. 1.
+#[derive(Clone, Debug)]
+pub struct ConsensusConfig {
+    /// Augmented-Lagrangian parameter ρ.
+    pub rho: f64,
+    /// Over-relaxation α ∈ (0, 2); α = 1 is standard ADMM.
+    pub alpha: f64,
+    pub rounds: usize,
+    /// Uplink (d-line) trigger.
+    pub trigger_d: Trigger,
+    /// Downlink (z-line) trigger, applied per agent link.
+    pub trigger_z: Trigger,
+    /// Uplink packet-drop probability.
+    pub drop_up: f64,
+    /// Downlink packet-drop probability.
+    pub drop_down: f64,
+    /// Reset period T; 0 disables resets.
+    pub reset_period: usize,
+}
+
+impl Default for ConsensusConfig {
+    fn default() -> Self {
+        ConsensusConfig {
+            rho: 1.0,
+            alpha: 1.0,
+            rounds: 100,
+            trigger_d: Trigger::Always,
+            trigger_z: Trigger::Always,
+            drop_up: 0.0,
+            drop_down: 0.0,
+            reset_period: 0,
+        }
+    }
+}
+
+struct AgentState<T: Scalar> {
+    x: Vec<T>,
+    u: Vec<T>,
+    zhat: Estimate<T>,
+    zhat_prev: Vec<T>,
+    d: Vec<T>,
+    d_trig: TriggerState<T>,
+    up_ch: DropChannel,
+    z_trig: TriggerState<T>, // server-side per-link trigger for z
+    down_ch: DropChannel,
+}
+
+/// The Alg. 1 engine. Generic over scalar type: `f64` for the convex
+/// experiments, `f32` for the neural parameter vectors.
+pub struct ConsensusAdmm<T: Scalar> {
+    pub cfg: ConsensusConfig,
+    pub n: usize,
+    pub dim: usize,
+    pub z: Vec<T>,
+    zeta_hat: Estimate<T>,
+    agents: Vec<AgentState<T>>,
+    pub round_idx: usize,
+}
+
+impl<T: Scalar> ConsensusAdmm<T> {
+    /// All state starts synchronized at `z0` (the paper's initialization
+    /// `x̂_0 = x_0 = ẑ_0 = ζ_0`).
+    pub fn new(cfg: ConsensusConfig, n: usize, z0: Vec<T>) -> Self {
+        let dim = z0.len();
+        let zeros = vec![T::zero(); dim];
+        let agents = (0..n)
+            .map(|_| AgentState {
+                x: z0.clone(),
+                u: zeros.clone(),
+                zhat: Estimate::new(z0.clone()),
+                zhat_prev: z0.clone(),
+                d: z0.clone(),
+                d_trig: TriggerState::new(cfg.trigger_d, z0.clone()),
+                up_ch: DropChannel::new(cfg.drop_up),
+                z_trig: TriggerState::new(cfg.trigger_z, z0.clone()),
+                down_ch: DropChannel::new(cfg.drop_down),
+            })
+            .collect();
+        ConsensusAdmm {
+            cfg,
+            n,
+            dim,
+            zeta_hat: Estimate::new(z0.clone()),
+            z: z0,
+            agents,
+            round_idx: 0,
+        }
+    }
+
+    /// Execute one synchronous round.
+    pub fn round(
+        &mut self,
+        solver: &mut dyn LocalSolver<T>,
+        prox: &mut dyn ServerProx<T>,
+        rng: &mut Pcg64,
+    ) {
+        let alpha = self.cfg.alpha;
+        let rho = self.cfg.rho;
+        let invn = 1.0 / self.n as f64;
+
+        // 1. server -> agents (z line, per-link trigger + channel)
+        for a in &mut self.agents {
+            a.zhat_prev.clear();
+            a.zhat_prev.extend_from_slice(a.zhat.get());
+            if let Some(delta) = a.z_trig.offer(&self.z, rng) {
+                if let Some(delta) = a.down_ch.transmit(delta, rng) {
+                    a.zhat.apply(&delta);
+                }
+            }
+        }
+
+        // 2. agents: u update, local prox solve, event send of d
+        for (i, a) in self.agents.iter_mut().enumerate() {
+            // u^i_k = u^i_{k-1} + α x^i_k − ẑ^i_k + (1−α) ẑ^i_{k-1}
+            for j in 0..self.dim {
+                let u = a.u[j].to_f64()
+                    + alpha * a.x[j].to_f64()
+                    - a.zhat.get()[j].to_f64()
+                    + (1.0 - alpha) * a.zhat_prev[j].to_f64();
+                a.u[j] = T::from_f64(u);
+            }
+            // anchor = ẑ − u ; x ← argmin f + (ρ/2)|x − anchor|²
+            let anchor: Vec<T> = a
+                .zhat
+                .get()
+                .iter()
+                .zip(&a.u)
+                .map(|(&z, &u)| T::from_f64(z.to_f64() - u.to_f64()))
+                .collect();
+            a.x = solver.solve(i, &anchor, rho, rng);
+            debug_assert_eq!(a.x.len(), self.dim);
+            // d^i = α x^i_{k+1} + u^i_k
+            a.d = a
+                .x
+                .iter()
+                .zip(&a.u)
+                .map(|(&x, &u)| T::from_f64(alpha * x.to_f64() + u.to_f64()))
+                .collect();
+            if let Some(delta) = a.d_trig.offer(&a.d, rng) {
+                if let Some(delta) = a.up_ch.transmit(delta, rng) {
+                    let scaled: Vec<T> = delta
+                        .iter()
+                        .map(|&v| T::from_f64(v.to_f64() * invn))
+                        .collect();
+                    self.zeta_hat.apply(&scaled);
+                }
+            }
+        }
+
+        // 3. server: z_{k+1} = prox_g(ζ̂_k + (1−α) z_k; Nρ)
+        let v: Vec<T> = self
+            .zeta_hat
+            .get()
+            .iter()
+            .zip(&self.z)
+            .map(|(&zh, &z)| {
+                T::from_f64(zh.to_f64() + (1.0 - alpha) * z.to_f64())
+            })
+            .collect();
+        self.z = prox.prox(&v, self.n as f64 * rho);
+        debug_assert_eq!(self.z.len(), self.dim);
+
+        // 4. periodic reset (full resynchronization, counted as comm)
+        self.round_idx += 1;
+        if self.cfg.reset_period > 0
+            && self.round_idx % self.cfg.reset_period == 0
+        {
+            self.reset();
+        }
+    }
+
+    /// Full resynchronization: `ζ̂ = ζ` (true average of the `d^i`), and
+    /// every agent receives the exact `z`.  Advances all trigger reference
+    /// points and counts one event per line.
+    pub fn reset(&mut self) {
+        let mut zeta = vec![0.0f64; self.dim];
+        for a in &self.agents {
+            for (s, &d) in zeta.iter_mut().zip(&a.d) {
+                *s += d.to_f64();
+            }
+        }
+        let invn = 1.0 / self.n as f64;
+        let zeta: Vec<T> =
+            zeta.into_iter().map(|v| T::from_f64(v * invn)).collect();
+        self.zeta_hat.reset_to(&zeta);
+        for a in &mut self.agents {
+            a.zhat.reset_to(&self.z);
+            a.d_trig.reset(&a.d);
+            a.z_trig.reset(&self.z);
+        }
+    }
+
+    /// True `ζ_k` (what `ζ̂` estimates) — for Prop. 2.1 diagnostics.
+    pub fn true_zeta(&self) -> Vec<f64> {
+        let mut zeta = vec![0.0f64; self.dim];
+        for a in &self.agents {
+            for (s, &d) in zeta.iter_mut().zip(&a.d) {
+                *s += d.to_f64();
+            }
+        }
+        for v in &mut zeta {
+            *v /= self.n as f64;
+        }
+        zeta
+    }
+
+    /// `|ζ̂ − ζ|` — the quantity Prop. 2.1 bounds by `Δᵈ + T χ̄ᵈ`.
+    pub fn zeta_error(&self) -> f64 {
+        let t = self.true_zeta();
+        self.zeta_hat
+            .get()
+            .iter()
+            .zip(&t)
+            .map(|(&a, &b)| (a.to_f64() - b) * (a.to_f64() - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn agent_x(&self, i: usize) -> &[T] {
+        &self.agents[i].x
+    }
+    pub fn agent_u(&self, i: usize) -> &[T] {
+        &self.agents[i].u
+    }
+    pub fn agent_zhat(&self, i: usize) -> &[T] {
+        self.agents[i].zhat.get()
+    }
+
+    /// Mean residual `(1/N) Σ |x^i − z|`.
+    pub fn mean_residual(&self) -> f64 {
+        self.agents
+            .iter()
+            .map(|a| {
+                a.x.iter()
+                    .zip(&self.z)
+                    .map(|(&x, &z)| {
+                        let d = x.to_f64() - z.to_f64();
+                        d * d
+                    })
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .sum::<f64>()
+            / self.n as f64
+    }
+
+    /// Total triggered communication events (up + down lines; resets
+    /// included via the trigger counters).
+    pub fn total_events(&self) -> u64 {
+        self.agents
+            .iter()
+            .map(|a| a.d_trig.events + a.z_trig.events)
+            .sum()
+    }
+
+    /// Events normalized by full communication (2N links per round).
+    pub fn comm_load(&self) -> f64 {
+        if self.round_idx == 0 {
+            return 0.0;
+        }
+        self.total_events() as f64
+            / (2.0 * self.n as f64 * self.round_idx as f64)
+    }
+
+    /// Per-direction event counts `(uplink, downlink)`.
+    pub fn events_split(&self) -> (u64, u64) {
+        let up = self.agents.iter().map(|a| a.d_trig.events).sum();
+        let down = self.agents.iter().map(|a| a.z_trig.events).sum();
+        (up, down)
+    }
+
+    /// Dropped-packet counts `(uplink, downlink)`.
+    pub fn drops_split(&self) -> (u64, u64) {
+        let up = self.agents.iter().map(|a| a.up_ch.stats.dropped).sum();
+        let down = self.agents.iter().map(|a| a.down_ch.stats.dropped).sum();
+        (up, down)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dist2;
+    use crate::solver::IdentityProx;
+
+    /// Scalar quadratic agents: f_i(x) = 0.5 w_i (x - c_i)^2 over R^1.
+    /// Global optimum of sum: x* = Σ w_i c_i / Σ w_i.
+    struct ScalarQuad {
+        w: Vec<f64>,
+        c: Vec<f64>,
+    }
+
+    impl LocalSolver<f64> for ScalarQuad {
+        fn solve(
+            &mut self,
+            agent: usize,
+            anchor: &[f64],
+            rho: f64,
+            _rng: &mut Pcg64,
+        ) -> Vec<f64> {
+            // argmin 0.5 w (x-c)^2 + rho/2 (x-a)^2
+            let (w, c) = (self.w[agent], self.c[agent]);
+            vec![(w * c + rho * anchor[0]) / (w + rho)]
+        }
+        fn dim(&self) -> usize {
+            1
+        }
+        fn n_agents(&self) -> usize {
+            self.w.len()
+        }
+    }
+
+    fn quad() -> (ScalarQuad, f64) {
+        let w = vec![1.0, 2.0, 0.5, 3.0];
+        let c = vec![-1.0, 4.0, 10.0, 0.5];
+        let opt = w.iter().zip(&c).map(|(a, b)| a * b).sum::<f64>()
+            / w.iter().sum::<f64>();
+        (ScalarQuad { w, c }, opt)
+    }
+
+    fn run(cfg: ConsensusConfig, seed: u64) -> (ConsensusAdmm<f64>, f64) {
+        let (mut solver, opt) = quad();
+        let mut engine = ConsensusAdmm::new(cfg.clone(), 4, vec![0.0]);
+        let mut prox = IdentityProx;
+        let mut rng = Pcg64::seed(seed);
+        for _ in 0..cfg.rounds {
+            engine.round(&mut solver, &mut prox, &mut rng);
+        }
+        (engine, opt)
+    }
+
+    #[test]
+    fn full_communication_converges_to_global_optimum() {
+        let (engine, opt) = run(
+            ConsensusConfig { rounds: 300, ..Default::default() },
+            1,
+        );
+        assert!(
+            (engine.z[0] - opt).abs() < 1e-8,
+            "z {} vs opt {opt}",
+            engine.z[0]
+        );
+        assert!(engine.mean_residual() < 1e-6);
+        // full communication => load 1
+        assert!((engine.comm_load() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn over_relaxed_converges() {
+        let cfg = ConsensusConfig {
+            alpha: 1.5,
+            rounds: 300,
+            ..Default::default()
+        };
+        let (engine, opt) = run(cfg, 2);
+        assert!((engine.z[0] - opt).abs() < 1e-8);
+    }
+
+    #[test]
+    fn event_based_converges_within_delta_band_with_less_comm() {
+        let cfg = ConsensusConfig {
+            rounds: 400,
+            trigger_d: Trigger::vanilla(1e-3),
+            trigger_z: Trigger::vanilla(1e-4),
+            ..Default::default()
+        };
+        let (engine, opt) = run(cfg, 3);
+        // Cor 2.2: steady-state error proportional to Delta
+        assert!(
+            (engine.z[0] - opt).abs() < 0.2,
+            "z {} vs {opt}",
+            engine.z[0]
+        );
+        assert!(engine.comm_load() < 0.7, "load {}", engine.comm_load());
+    }
+
+    #[test]
+    fn smaller_delta_gives_better_accuracy_more_comm() {
+        let mk = |delta: f64| ConsensusConfig {
+            rounds: 400,
+            trigger_d: Trigger::vanilla(delta),
+            trigger_z: Trigger::vanilla(delta * 0.1),
+            ..Default::default()
+        };
+        let (e_small, opt) = run(mk(1e-4), 4);
+        let (e_large, _) = run(mk(1e-1), 4);
+        let err_small = (e_small.z[0] - opt).abs();
+        let err_large = (e_large.z[0] - opt).abs();
+        assert!(err_small <= err_large + 1e-12);
+        assert!(e_small.total_events() > e_large.total_events());
+    }
+
+    #[test]
+    fn randomized_trigger_converges() {
+        let cfg = ConsensusConfig {
+            rounds: 400,
+            trigger_d: Trigger::randomized(1e-2, 0.1),
+            trigger_z: Trigger::randomized(1e-3, 0.1),
+            ..Default::default()
+        };
+        let (engine, opt) = run(cfg, 5);
+        assert!((engine.z[0] - opt).abs() < 0.3);
+    }
+
+    #[test]
+    fn drops_without_reset_leave_large_error() {
+        let cfg = ConsensusConfig {
+            rounds: 400,
+            trigger_d: Trigger::vanilla(1e-4),
+            trigger_z: Trigger::vanilla(1e-5),
+            drop_up: 0.3,
+            reset_period: 0,
+            ..Default::default()
+        };
+        let (engine, opt) = run(cfg.clone(), 6);
+        let err_noreset = (engine.z[0] - opt).abs();
+        // with frequent resets the error collapses
+        let cfg_reset = ConsensusConfig { reset_period: 5, ..cfg };
+        let (engine_r, _) = run(cfg_reset, 6);
+        let err_reset = (engine_r.z[0] - opt).abs();
+        assert!(
+            err_reset < err_noreset,
+            "reset {err_reset} !< no-reset {err_noreset}"
+        );
+        assert!(err_reset < 0.05, "err with reset {err_reset}");
+    }
+
+    #[test]
+    fn prop21_zeta_error_bounded_without_drops() {
+        // |ζ̂ − ζ| <= Δ^d with reliable links (Prop 2.1, χ̄ = 0).
+        let delta_d = 5e-2;
+        let cfg = ConsensusConfig {
+            rounds: 200,
+            trigger_d: Trigger::vanilla(delta_d),
+            trigger_z: Trigger::vanilla(1e-3),
+            ..Default::default()
+        };
+        let (mut solver, _) = quad();
+        let mut engine = ConsensusAdmm::new(cfg, 4, vec![0.0]);
+        let mut prox = IdentityProx;
+        let mut rng = Pcg64::seed(7);
+        for _ in 0..200 {
+            engine.round(&mut solver, &mut prox, &mut rng);
+            assert!(
+                engine.zeta_error() <= delta_d + 1e-12,
+                "zeta error {} > Delta {delta_d}",
+                engine.zeta_error()
+            );
+        }
+    }
+
+    #[test]
+    fn participation_trigger_mimics_fedadmm_sampling() {
+        let cfg = ConsensusConfig {
+            rounds: 600,
+            trigger_d: Trigger::participation(0.5),
+            trigger_z: Trigger::Always,
+            ..Default::default()
+        };
+        let (engine, opt) = run(cfg, 8);
+        assert!(
+            (engine.z[0] - opt).abs() < 0.3,
+            "z {} vs {opt}",
+            engine.z[0]
+        );
+        let (up, _) = engine.events_split();
+        let rate = up as f64 / (4.0 * 600.0);
+        assert!((rate - 0.5).abs() < 0.1, "uplink rate {rate}");
+    }
+
+    #[test]
+    fn f32_engine_runs() {
+        struct Pull;
+        impl LocalSolver<f32> for Pull {
+            fn solve(
+                &mut self,
+                _a: usize,
+                anchor: &[f32],
+                _rho: f64,
+                _rng: &mut Pcg64,
+            ) -> Vec<f32> {
+                anchor.iter().map(|v| v + 1.0).collect()
+            }
+            fn dim(&self) -> usize {
+                3
+            }
+            fn n_agents(&self) -> usize {
+                2
+            }
+        }
+        let mut engine = ConsensusAdmm::<f32>::new(
+            ConsensusConfig::default(),
+            2,
+            vec![0.0f32; 3],
+        );
+        let mut rng = Pcg64::seed(9);
+        let mut prox = IdentityProx;
+        engine.round(&mut Pull, &mut prox, &mut rng);
+        assert_eq!(engine.z.len(), 3);
+        assert!(engine.z.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,425 @@
+//! Decentralized consensus ADMM over a communication graph (Eq. 7,
+//! App. A.2 / G.3) — no central server.
+//!
+//! Each agent i keeps `(x^i, p^i)` and estimates `x̂^j` of each neighbor's
+//! local model; it broadcasts its own model to the neighborhood only when
+//! the event trigger fires.  Updates (Eq. 7, with the standard
+//! decentralized-consensus ADMM sign convention; the anchor is the average
+//! of the agent's own model and its neighborhood mean):
+//!
+//! ```text
+//! x^i_{k+1} = argmin f_i(x) + (|N_i| ρ / 2) |x − ½(x^i_k + x̄^i_k) + p^i_k/ρ|²
+//! x̄^i_{k+1} = (1/|N_i|) Σ_{j ∈ N_i} x̂^j_{k+1}
+//! p^i_{k+1} = p^i_k + (ρ/2) (x^i_{k+1} − x̄^i_{k+1})
+//! ```
+//!
+//! The event protocol is the paper's: agent i transmits `x^i_{k+1} − x^i_{[k]}`
+//! to all neighbors iff `|x^i_{k+1} − x^i_{[k]}| > Δˣ` (or per the
+//! randomized/participation variants — App. G.3 compares against a purely
+//! random selection).
+
+use crate::comm::{DropChannel, Estimate, Scalar, Trigger, TriggerState};
+use crate::rng::Pcg64;
+use crate::solver::LocalSolver;
+use crate::topology::Graph;
+
+#[derive(Clone, Debug)]
+pub struct GraphConfig {
+    pub rho: f64,
+    pub rounds: usize,
+    pub trigger_x: Trigger,
+    pub drop_rate: f64,
+    /// Reset period T; 0 disables.
+    pub reset_period: usize,
+}
+
+impl Default for GraphConfig {
+    fn default() -> Self {
+        GraphConfig {
+            rho: 1.0,
+            rounds: 100,
+            trigger_x: Trigger::Always,
+            drop_rate: 0.0,
+            reset_period: 0,
+        }
+    }
+}
+
+struct GraphAgent<T: Scalar> {
+    x: Vec<T>,
+    p: Vec<T>,
+    xbar: Vec<T>,
+    /// Estimates of each neighbor's model, keyed by position in `nbrs`.
+    nbr_est: Vec<Estimate<T>>,
+    /// One broadcast trigger (an event sends to ALL neighbors, as in the
+    /// paper's Fig. 6 diagram).
+    x_trig: TriggerState<T>,
+    /// One lossy channel per neighbor link.
+    channels: Vec<DropChannel>,
+}
+
+/// Decentralized event-based consensus ADMM.
+pub struct GraphAdmm<T: Scalar> {
+    pub cfg: GraphConfig,
+    pub graph: Graph,
+    nbrs: Vec<Vec<usize>>,
+    agents: Vec<GraphAgent<T>>,
+    pub dim: usize,
+    pub round_idx: usize,
+}
+
+impl<T: Scalar> GraphAdmm<T> {
+    pub fn new(cfg: GraphConfig, graph: Graph, x0: Vec<T>) -> Self {
+        assert!(graph.is_connected(), "graph must be connected");
+        let dim = x0.len();
+        let nbrs = graph.neighbors();
+        let agents = (0..graph.n)
+            .map(|i| GraphAgent {
+                x: x0.clone(),
+                p: vec![T::zero(); dim],
+                xbar: x0.clone(),
+                nbr_est: nbrs[i]
+                    .iter()
+                    .map(|_| Estimate::new(x0.clone()))
+                    .collect(),
+                x_trig: TriggerState::new(cfg.trigger_x, x0.clone()),
+                channels: nbrs[i]
+                    .iter()
+                    .map(|_| DropChannel::new(cfg.drop_rate))
+                    .collect(),
+            })
+            .collect();
+        GraphAdmm { cfg, graph, nbrs, agents, dim, round_idx: 0 }
+    }
+
+    /// One synchronous round over the whole network.
+    pub fn round(&mut self, solver: &mut dyn LocalSolver<T>, rng: &mut Pcg64) {
+        let rho = self.cfg.rho;
+        let n = self.graph.n;
+
+        // 1. local prox solves
+        let mut new_x: Vec<Vec<T>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let deg = self.nbrs[i].len().max(1) as f64;
+            let a = &self.agents[i];
+            // anchor = ½(x_i + x̄_i) − p_i/ρ
+            let anchor: Vec<T> = (0..self.dim)
+                .map(|j| {
+                    T::from_f64(
+                        0.5 * (a.x[j].to_f64() + a.xbar[j].to_f64())
+                            - a.p[j].to_f64() / rho,
+                    )
+                })
+                .collect();
+            new_x.push(solver.solve(i, &anchor, deg * rho, rng));
+        }
+        for i in 0..n {
+            self.agents[i].x = new_x[i].clone();
+        }
+
+        // 2. event-based broadcast of x to neighbors
+        for i in 0..n {
+            let xi = self.agents[i].x.clone();
+            if let Some(delta) = self.agents[i].x_trig.offer(&xi, rng) {
+                // deliver to each neighbor j over the (i -> j) link
+                for (li, &j) in self.nbrs[i].clone().iter().enumerate() {
+                    let sent = self.agents[i].channels[li]
+                        .transmit(delta.clone(), rng);
+                    if let Some(d) = sent {
+                        // neighbor j's estimate slot for i
+                        let slot = self.nbrs[j]
+                            .iter()
+                            .position(|&v| v == i)
+                            .expect("symmetric adjacency");
+                        self.agents[j].nbr_est[slot].apply(&d);
+                    }
+                }
+            }
+        }
+
+        // 3. neighborhood means + dual updates
+        for i in 0..n {
+            let deg = self.nbrs[i].len().max(1) as f64;
+            let a = &mut self.agents[i];
+            let mut xbar = vec![0.0f64; self.dim];
+            for est in &a.nbr_est {
+                for (s, &v) in xbar.iter_mut().zip(est.get()) {
+                    *s += v.to_f64();
+                }
+            }
+            for (j, s) in xbar.iter().enumerate() {
+                a.xbar[j] = T::from_f64(s / deg);
+            }
+            for j in 0..self.dim {
+                let p = a.p[j].to_f64()
+                    + 0.5 * rho * (a.x[j].to_f64() - a.xbar[j].to_f64());
+                a.p[j] = T::from_f64(p);
+            }
+        }
+
+        self.round_idx += 1;
+        if self.cfg.reset_period > 0
+            && self.round_idx % self.cfg.reset_period == 0
+        {
+            self.reset();
+        }
+    }
+
+    /// Full neighborhood resynchronization (counts as one broadcast per
+    /// agent).
+    pub fn reset(&mut self) {
+        for i in 0..self.graph.n {
+            let xi = self.agents[i].x.clone();
+            self.agents[i].x_trig.reset(&xi);
+            for (li, &j) in self.nbrs[i].clone().iter().enumerate() {
+                let _ = li;
+                let slot = self.nbrs[j]
+                    .iter()
+                    .position(|&v| v == i)
+                    .unwrap();
+                self.agents[j].nbr_est[slot].reset_to(&xi);
+            }
+        }
+    }
+
+    pub fn agent_x(&self, i: usize) -> &[T] {
+        &self.agents[i].x
+    }
+
+    /// Network-average model (the quantity that converges to x*).
+    pub fn mean_x(&self) -> Vec<f64> {
+        let mut m = vec![0.0f64; self.dim];
+        for a in &self.agents {
+            for (s, &v) in m.iter_mut().zip(&a.x) {
+                *s += v.to_f64();
+            }
+        }
+        for v in &mut m {
+            *v /= self.graph.n as f64;
+        }
+        m
+    }
+
+    /// Mean pairwise disagreement `(1/N) Σ_i |x_i − mean|`.
+    pub fn disagreement(&self) -> f64 {
+        let m = self.mean_x();
+        self.agents
+            .iter()
+            .map(|a| {
+                a.x.iter()
+                    .zip(&m)
+                    .map(|(&x, &mm)| {
+                        let d = x.to_f64() - mm;
+                        d * d
+                    })
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .sum::<f64>()
+            / self.graph.n as f64
+    }
+
+    /// Total broadcast events (each event = one neighborhood broadcast;
+    /// multiply by degree for link-level counting).
+    pub fn total_events(&self) -> u64 {
+        self.agents.iter().map(|a| a.x_trig.events).sum()
+    }
+
+    /// Link-level events: Σ_i events_i * deg_i.
+    pub fn total_link_events(&self) -> u64 {
+        self.agents
+            .iter()
+            .enumerate()
+            .map(|(i, a)| a.x_trig.events * self.nbrs[i].len() as u64)
+            .sum()
+    }
+
+    /// Load normalized by full communication (every agent broadcasting
+    /// every round).
+    pub fn comm_load(&self) -> f64 {
+        if self.round_idx == 0 {
+            return 0.0;
+        }
+        self.total_events() as f64
+            / (self.graph.n as f64 * self.round_idx as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::LocalSolver;
+
+    /// Quadratic agents f_i(x) = 0.5 w_i |x - c_i|^2 (vector dim 2).
+    struct Quad {
+        w: Vec<f64>,
+        c: Vec<Vec<f64>>,
+    }
+
+    impl LocalSolver<f64> for Quad {
+        fn solve(
+            &mut self,
+            agent: usize,
+            anchor: &[f64],
+            rho: f64,
+            _rng: &mut Pcg64,
+        ) -> Vec<f64> {
+            let w = self.w[agent];
+            anchor
+                .iter()
+                .zip(&self.c[agent])
+                .map(|(&a, &c)| (w * c + rho * a) / (w + rho))
+                .collect()
+        }
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_agents(&self) -> usize {
+            self.w.len()
+        }
+    }
+
+    fn setup(n: usize) -> (Quad, Vec<f64>) {
+        let mut rng = Pcg64::seed(100);
+        use crate::rng::Rng;
+        let w: Vec<f64> = (0..n).map(|_| 0.5 + rng.f64()).collect();
+        let c: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.normal() * 3.0, rng.normal() * 3.0]).collect();
+        let wsum: f64 = w.iter().sum();
+        let opt: Vec<f64> = (0..2)
+            .map(|j| {
+                w.iter().zip(&c).map(|(wi, ci)| wi * ci[j]).sum::<f64>() / wsum
+            })
+            .collect();
+        (Quad { w, c }, opt)
+    }
+
+    #[test]
+    fn full_comm_converges_on_ring() {
+        let (mut solver, opt) = setup(6);
+        let g = Graph::ring(6);
+        let mut eng = GraphAdmm::new(
+            GraphConfig { rounds: 400, ..Default::default() },
+            g,
+            vec![0.0; 2],
+        );
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..400 {
+            eng.round(&mut solver, &mut rng);
+        }
+        let m = eng.mean_x();
+        assert!(crate::linalg::dist2(&m, &opt) < 1e-4,
+                "mean {m:?} vs opt {opt:?}");
+        assert!(eng.disagreement() < 1e-4, "disagreement {}", eng.disagreement());
+    }
+
+    #[test]
+    fn full_comm_converges_on_random_graph() {
+        let (mut solver, opt) = setup(10);
+        let mut rng = Pcg64::seed(2);
+        let g = Graph::random_connected(10, 20, &mut rng);
+        let mut eng = GraphAdmm::new(GraphConfig::default(), g, vec![0.0; 2]);
+        for _ in 0..500 {
+            eng.round(&mut solver, &mut rng);
+        }
+        assert!(crate::linalg::dist2(&eng.mean_x(), &opt) < 1e-3);
+    }
+
+    #[test]
+    fn event_based_converges_near_optimum_with_less_comm() {
+        let (mut solver, opt) = setup(8);
+        let mut rng = Pcg64::seed(3);
+        let g = Graph::random_connected(8, 16, &mut rng);
+        let cfg = GraphConfig {
+            trigger_x: Trigger::vanilla(5e-3),
+            ..Default::default()
+        };
+        let mut eng = GraphAdmm::new(cfg, g, vec![0.0; 2]);
+        for _ in 0..600 {
+            eng.round(&mut solver, &mut rng);
+        }
+        assert!(crate::linalg::dist2(&eng.mean_x(), &opt) < 0.2,
+                "err {}", crate::linalg::dist2(&eng.mean_x(), &opt));
+        assert!(eng.comm_load() < 0.9, "load {}", eng.comm_load());
+    }
+
+    #[test]
+    fn random_selection_needs_more_events_for_same_accuracy() {
+        // App. G.3: purely random agent selection yields a worse trade-off
+        // than event-based selection at matched event budgets.
+        let mut rng = Pcg64::seed(4);
+        let g = Graph::random_connected(8, 16, &mut rng);
+
+        let run = |trigger: Trigger, rng: &mut Pcg64| {
+            let (mut solver, opt) = setup(8);
+            let mut eng = GraphAdmm::new(
+                GraphConfig { trigger_x: trigger, ..Default::default() },
+                g.clone(),
+                vec![0.0; 2],
+            );
+            for _ in 0..400 {
+                eng.round(&mut solver, rng);
+            }
+            (crate::linalg::dist2(&eng.mean_x(), &opt), eng.total_events())
+        };
+        let (err_event, ev_event) = run(Trigger::vanilla(2e-3), &mut rng);
+        // match the event budget with a participation rate
+        let rate = ev_event as f64 / (8.0 * 400.0);
+        let (err_rand, ev_rand) = run(Trigger::participation(rate), &mut rng);
+        assert!((ev_rand as f64) < 1.3 * ev_event as f64 + 200.0);
+        assert!(
+            err_event < err_rand,
+            "event {err_event} !< random {err_rand}"
+        );
+    }
+
+    #[test]
+    fn drops_hurt_and_resets_help() {
+        // averaged over seeds: drop-channel noise makes single runs flaky
+        let mut rng = Pcg64::seed(5);
+        let g = Graph::random_connected(6, 9, &mut rng);
+        let run = |reset: usize, seed: u64| {
+            let (mut solver, opt) = setup(6);
+            let cfg = GraphConfig {
+                trigger_x: Trigger::vanilla(1e-4),
+                drop_rate: 0.4,
+                reset_period: reset,
+                ..Default::default()
+            };
+            let mut eng = GraphAdmm::new(cfg, g.clone(), vec![0.0; 2]);
+            let mut rng = Pcg64::seed(seed);
+            for _ in 0..500 {
+                eng.round(&mut solver, &mut rng);
+            }
+            crate::linalg::dist2(&eng.mean_x(), &opt)
+        };
+        let mut err_noreset = 0.0;
+        let mut err_reset = 0.0;
+        for seed in 0..5u64 {
+            err_noreset += run(0, seed) / 5.0;
+            err_reset += run(5, seed) / 5.0;
+        }
+        assert!(err_reset < err_noreset,
+                "reset {err_reset} !< noreset {err_noreset}");
+    }
+
+    #[test]
+    #[should_panic(expected = "connected")]
+    fn rejects_disconnected_graph() {
+        let g = Graph::new(4, vec![(0, 1), (2, 3)]);
+        let _ = GraphAdmm::<f64>::new(GraphConfig::default(), g, vec![0.0]);
+    }
+
+    #[test]
+    fn link_events_scale_with_degree() {
+        let (mut solver, _) = setup(4);
+        let g = Graph::complete(4); // degree 3 everywhere
+        let mut eng = GraphAdmm::new(GraphConfig::default(), g, vec![0.0; 2]);
+        let mut rng = Pcg64::seed(6);
+        for _ in 0..10 {
+            eng.round(&mut solver, &mut rng);
+        }
+        assert_eq!(eng.total_events(), 40);
+        assert_eq!(eng.total_link_events(), 120);
+    }
+}

@@ -1,0 +1,18 @@
+//! The paper's algorithms.
+//!
+//! * [`consensus`] — Alg. 1: event-based consensus ADMM (server–client).
+//! * [`general`] — Alg. 2: event-based over-relaxed ADMM for
+//!   `min f(x) + g(z) s.t. Ax + Bz = c` with r/s/u agents (App. C).
+//! * [`graph`] — decentralized consensus over a communication graph
+//!   (Eq. 7, App. A.2).
+//! * [`sharing`] — the sharing problem (Eqs. 5–6, App. A.1).
+
+pub mod consensus;
+pub mod general;
+pub mod graph;
+pub mod sharing;
+
+pub use consensus::{ConsensusAdmm, ConsensusConfig};
+pub use general::{GeneralAdmm, GeneralConfig, QuadraticF, ZProx};
+pub use graph::{GraphAdmm, GraphConfig};
+pub use sharing::{SharingAdmm, SharingConfig};

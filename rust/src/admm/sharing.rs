@@ -1,0 +1,361 @@
+//! The sharing problem (App. A.1):
+//!
+//! ```text
+//! min Σ_i f_i(x_i) + g(Σ_i x_i)
+//! ```
+//!
+//! arising from (4) with `A = I`, `B = −(I, …, I)`, `c = 0`.  Updates
+//! (Eqs. 5–6): each agent proxes its own `x_i` against the shared signal
+//! `ĥ`; the server averages the (event-communicated) local variables,
+//! proxes `g`, updates the dual and broadcasts `h = x̄ − z + u/ρ`
+//! event-wise.
+
+use crate::comm::{DropChannel, Estimate, Trigger, TriggerState};
+use crate::rng::Pcg64;
+use crate::solver::LocalSolver;
+
+/// The coupling function `g` applied to the *sum* `y = Σ_i x_i = N z`.
+#[derive(Clone, Copy, Debug)]
+pub enum SharingG {
+    /// `g = 0` — uncoupled.
+    Zero,
+    /// `g(y) = (γ/2)|y|²` — quadratic price on aggregate usage.
+    Quad { gamma: f64 },
+    /// `g(y) = λ|y|₁` — sparse aggregate.
+    L1 { lambda: f64 },
+}
+
+impl SharingG {
+    /// `z = argmin_z g(Nz) + (Nρ/2)|z − v|²`.
+    fn prox(&self, v: &[f64], n: usize, rho: f64) -> Vec<f64> {
+        match *self {
+            SharingG::Zero => v.to_vec(),
+            SharingG::Quad { gamma } => {
+                // γN²z + Nρ(z − v) = 0  →  z = ρ v / (γ N + ρ)
+                let scale = rho / (gamma * n as f64 + rho);
+                v.iter().map(|x| x * scale).collect()
+            }
+            SharingG::L1 { lambda } => {
+                // λN|z|₁ + (Nρ/2)|z − v|² → z = S_{λ/ρ}(v)
+                crate::linalg::soft_threshold(v, lambda / rho)
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SharingConfig {
+    pub rho: f64,
+    pub rounds: usize,
+    pub trigger_x: Trigger,
+    pub trigger_h: Trigger,
+    pub drop_rate: f64,
+    pub reset_period: usize,
+    pub g: SharingG,
+}
+
+impl Default for SharingConfig {
+    fn default() -> Self {
+        SharingConfig {
+            rho: 1.0,
+            rounds: 100,
+            trigger_x: Trigger::Always,
+            trigger_h: Trigger::Always,
+            drop_rate: 0.0,
+            reset_period: 0,
+            g: SharingG::Zero,
+        }
+    }
+}
+
+struct ShareAgent {
+    x: Vec<f64>,
+    hhat: Estimate<f64>,
+    x_trig: TriggerState<f64>,
+    up_ch: DropChannel,
+    h_trig: TriggerState<f64>,
+    down_ch: DropChannel,
+    /// server-side estimate of this agent's x
+    xhat: Estimate<f64>,
+}
+
+/// Event-based ADMM for the sharing problem.
+pub struct SharingAdmm {
+    pub cfg: SharingConfig,
+    pub n: usize,
+    pub dim: usize,
+    pub z: Vec<f64>,
+    pub u: Vec<f64>,
+    pub h: Vec<f64>,
+    agents: Vec<ShareAgent>,
+    pub round_idx: usize,
+}
+
+impl SharingAdmm {
+    pub fn new(cfg: SharingConfig, n: usize, dim: usize) -> Self {
+        let zeros = vec![0.0; dim];
+        let agents = (0..n)
+            .map(|_| ShareAgent {
+                x: zeros.clone(),
+                hhat: Estimate::new(zeros.clone()),
+                x_trig: TriggerState::new(cfg.trigger_x, zeros.clone()),
+                up_ch: DropChannel::new(cfg.drop_rate),
+                h_trig: TriggerState::new(cfg.trigger_h, zeros.clone()),
+                down_ch: DropChannel::new(cfg.drop_rate),
+                xhat: Estimate::new(zeros.clone()),
+            })
+            .collect();
+        SharingAdmm {
+            cfg,
+            n,
+            dim,
+            z: zeros.clone(),
+            u: zeros.clone(),
+            h: zeros,
+            agents,
+            round_idx: 0,
+        }
+    }
+
+    pub fn round(
+        &mut self,
+        solver: &mut dyn LocalSolver<f64>,
+        rng: &mut Pcg64,
+    ) {
+        let rho = self.cfg.rho;
+
+        // agents: x_i ← argmin f_i(x) + (ρ/2)|x − x_i + ĥ|²
+        for (i, a) in self.agents.iter_mut().enumerate() {
+            let anchor: Vec<f64> = a
+                .x
+                .iter()
+                .zip(a.hhat.get())
+                .map(|(&x, &h)| x - h)
+                .collect();
+            a.x = solver.solve(i, &anchor, rho, rng);
+            // event send x_i to the server
+            let xi = a.x.clone();
+            if let Some(delta) = a.x_trig.offer(&xi, rng) {
+                if let Some(delta) = a.up_ch.transmit(delta, rng) {
+                    a.xhat.apply(&delta);
+                }
+            }
+        }
+
+        // server: x̄ = (1/N) Σ x̂_i ; z-prox ; dual ; h broadcast
+        let mut xbar = vec![0.0; self.dim];
+        for a in &self.agents {
+            for (s, &v) in xbar.iter_mut().zip(a.xhat.get()) {
+                *s += v;
+            }
+        }
+        for v in &mut xbar {
+            *v /= self.n as f64;
+        }
+        let v: Vec<f64> = xbar
+            .iter()
+            .zip(&self.u)
+            .map(|(&xb, &u)| xb + u / rho)
+            .collect();
+        self.z = self.cfg.g.prox(&v, self.n, rho);
+        for j in 0..self.dim {
+            self.u[j] += rho * (xbar[j] - self.z[j]);
+            self.h[j] = xbar[j] - self.z[j] + self.u[j] / rho;
+        }
+        // event broadcast of h on each downlink
+        let h = self.h.clone();
+        for a in &mut self.agents {
+            if let Some(delta) = a.h_trig.offer(&h, rng) {
+                if let Some(delta) = a.down_ch.transmit(delta, rng) {
+                    a.hhat.apply(&delta);
+                }
+            }
+        }
+
+        self.round_idx += 1;
+        if self.cfg.reset_period > 0
+            && self.round_idx % self.cfg.reset_period == 0
+        {
+            let h = self.h.clone();
+            for a in &mut self.agents {
+                let xi = a.x.clone();
+                a.x_trig.reset(&xi);
+                a.xhat.reset_to(&xi);
+                a.h_trig.reset(&h);
+                a.hhat.reset_to(&h);
+            }
+        }
+    }
+
+    pub fn agent_x(&self, i: usize) -> &[f64] {
+        &self.agents[i].x
+    }
+
+    /// Aggregate `Σ_i x_i`.
+    pub fn aggregate(&self) -> Vec<f64> {
+        let mut s = vec![0.0; self.dim];
+        for a in &self.agents {
+            for (acc, &v) in s.iter_mut().zip(&a.x) {
+                *acc += v;
+            }
+        }
+        s
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.agents
+            .iter()
+            .map(|a| a.x_trig.events + a.h_trig.events)
+            .sum()
+    }
+
+    pub fn comm_load(&self) -> f64 {
+        if self.round_idx == 0 {
+            return 0.0;
+        }
+        self.total_events() as f64
+            / (2.0 * self.n as f64 * self.round_idx as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dist2;
+
+    /// f_i(x) = 0.5 w_i |x − c_i|² over R^1.
+    struct Quad {
+        w: Vec<f64>,
+        c: Vec<f64>,
+    }
+
+    impl LocalSolver<f64> for Quad {
+        fn solve(
+            &mut self,
+            agent: usize,
+            anchor: &[f64],
+            rho: f64,
+            _rng: &mut Pcg64,
+        ) -> Vec<f64> {
+            vec![
+                (self.w[agent] * self.c[agent] + rho * anchor[0])
+                    / (self.w[agent] + rho),
+            ]
+        }
+        fn dim(&self) -> usize {
+            1
+        }
+        fn n_agents(&self) -> usize {
+            self.w.len()
+        }
+    }
+
+    /// Closed-form optimum for g(y) = (γ/2) y²:
+    /// x_i = c_i − (γ/w_i) S,  S = Σc / (1 + γ Σ 1/w_i).
+    fn quad_opt(w: &[f64], c: &[f64], gamma: f64) -> (Vec<f64>, f64) {
+        let csum: f64 = c.iter().sum();
+        let winv: f64 = w.iter().map(|v| 1.0 / v).sum();
+        let s = csum / (1.0 + gamma * winv);
+        let xs: Vec<f64> =
+            w.iter().zip(c).map(|(wi, ci)| ci - gamma / wi * s).collect();
+        (xs, s)
+    }
+
+    #[test]
+    fn quadratic_coupling_reaches_kkt_point() {
+        let w = vec![1.0, 2.0, 0.5];
+        let c = vec![3.0, -1.0, 2.0];
+        let gamma = 0.8;
+        let (x_opt, s_opt) = quad_opt(&w, &c, gamma);
+        let mut solver = Quad { w, c };
+        let cfg = SharingConfig {
+            g: SharingG::Quad { gamma },
+            rounds: 500,
+            ..Default::default()
+        };
+        let mut eng = SharingAdmm::new(cfg, 3, 1);
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..500 {
+            eng.round(&mut solver, &mut rng);
+        }
+        let agg = eng.aggregate();
+        assert!((agg[0] - s_opt).abs() < 1e-6, "agg {} vs {s_opt}", agg[0]);
+        for i in 0..3 {
+            assert!(
+                (eng.agent_x(i)[0] - x_opt[i]).abs() < 1e-6,
+                "x{i} {} vs {}",
+                eng.agent_x(i)[0],
+                x_opt[i]
+            );
+        }
+    }
+
+    #[test]
+    fn zero_g_decouples_to_local_minima() {
+        let w = vec![1.0, 4.0];
+        let c = vec![2.0, -3.0];
+        let mut solver = Quad { w: w.clone(), c: c.clone() };
+        let mut eng = SharingAdmm::new(
+            SharingConfig { rounds: 300, ..Default::default() },
+            2,
+            1,
+        );
+        let mut rng = Pcg64::seed(2);
+        for _ in 0..300 {
+            eng.round(&mut solver, &mut rng);
+        }
+        for i in 0..2 {
+            assert!(
+                (eng.agent_x(i)[0] - c[i]).abs() < 1e-6,
+                "agent {i}: {} vs {}",
+                eng.agent_x(i)[0],
+                c[i]
+            );
+        }
+    }
+
+    #[test]
+    fn event_based_saves_communication() {
+        let w = vec![1.0, 2.0, 0.5, 1.5];
+        let c = vec![3.0, -1.0, 2.0, 0.5];
+        let gamma = 0.5;
+        let (x_opt, _) = quad_opt(&w, &c, gamma);
+        let mut solver = Quad { w, c };
+        let cfg = SharingConfig {
+            g: SharingG::Quad { gamma },
+            trigger_x: Trigger::vanilla(1e-3),
+            trigger_h: Trigger::vanilla(1e-4),
+            rounds: 600,
+            ..Default::default()
+        };
+        let mut eng = SharingAdmm::new(cfg, 4, 1);
+        let mut rng = Pcg64::seed(3);
+        for _ in 0..600 {
+            eng.round(&mut solver, &mut rng);
+        }
+        for i in 0..4 {
+            assert!((eng.agent_x(i)[0] - x_opt[i]).abs() < 0.05);
+        }
+        assert!(eng.comm_load() < 0.7, "load {}", eng.comm_load());
+    }
+
+    #[test]
+    fn l1_coupling_sparsifies_aggregate() {
+        // strong λ should pull the aggregate to exactly 0
+        let w = vec![1.0, 1.0];
+        let c = vec![0.3, -0.1];
+        let mut solver = Quad { w, c };
+        let cfg = SharingConfig {
+            g: SharingG::L1 { lambda: 5.0 },
+            rounds: 500,
+            ..Default::default()
+        };
+        let mut eng = SharingAdmm::new(cfg, 2, 1);
+        let mut rng = Pcg64::seed(4);
+        for _ in 0..500 {
+            eng.round(&mut solver, &mut rng);
+        }
+        assert!(eng.aggregate()[0].abs() < 1e-4,
+                "aggregate {}", eng.aggregate()[0]);
+    }
+}

@@ -1,0 +1,234 @@
+//! FedAvg (McMahan et al., 2017) and FedProx (Li et al., 2020a).
+//!
+//! One engine covers both: the local objective is
+//! `f_i(x) + (μ/2)|x − z|²` with `μ = 0` for FedAvg; the server averages
+//! the models of the randomly selected cohort.
+
+use crate::data::synth::ClassDataset;
+use crate::model::MlpSpec;
+use crate::rng::{Pcg64, Rng};
+
+/// Local-update backend shared by every baseline: runs S (prox-/corrected-)
+/// SGD steps *starting from a given point* (baselines restart from the
+/// global model each round, unlike ADMM's warm-started agents).
+pub trait FedLocal {
+    fn dim(&self) -> usize;
+    fn n_agents(&self) -> usize;
+    fn lr(&self) -> f32;
+    fn steps(&self) -> usize;
+    /// S SGD steps on `f_i(x) + (mu/2)|x − anchor|²` from `start`.
+    fn sgd_prox(
+        &mut self,
+        agent: usize,
+        start: &[f32],
+        anchor: &[f32],
+        mu: f64,
+        rng: &mut Pcg64,
+    ) -> Vec<f32>;
+    /// S corrected SGD steps: `x ← x − lr (∇f_i(x) + corr)` from `start`.
+    fn sgd_corr(
+        &mut self,
+        agent: usize,
+        start: &[f32],
+        corr: &[f32],
+        rng: &mut Pcg64,
+    ) -> Vec<f32>;
+}
+
+/// Native-MLP backend (the PJRT twin lives in `runtime::PjrtFed`).
+pub struct NativeFed {
+    pub spec: MlpSpec,
+    pub shards: Vec<ClassDataset>,
+    pub lr: f32,
+    pub steps: usize,
+    pub batch: usize,
+}
+
+impl NativeFed {
+    pub fn new(
+        spec: MlpSpec,
+        shards: Vec<ClassDataset>,
+        lr: f32,
+        steps: usize,
+        batch: usize,
+    ) -> Self {
+        NativeFed { spec, shards, lr, steps, batch }
+    }
+
+    fn batches(&self, agent: usize, rng: &mut Pcg64) -> (Vec<f32>, Vec<f32>) {
+        let d = self.spec.input_dim();
+        let c = self.spec.classes();
+        let mut xs = Vec::with_capacity(self.steps * self.batch * d);
+        let mut ys = Vec::with_capacity(self.steps * self.batch * c);
+        for _ in 0..self.steps {
+            let (bx, by) = self.shards[agent].sample_batch(self.batch, rng);
+            xs.extend_from_slice(&bx);
+            ys.extend_from_slice(&by);
+        }
+        (xs, ys)
+    }
+}
+
+impl FedLocal for NativeFed {
+    fn dim(&self) -> usize {
+        self.spec.param_len()
+    }
+    fn n_agents(&self) -> usize {
+        self.shards.len()
+    }
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+    fn steps(&self) -> usize {
+        self.steps
+    }
+
+    fn sgd_prox(
+        &mut self,
+        agent: usize,
+        start: &[f32],
+        anchor: &[f32],
+        mu: f64,
+        rng: &mut Pcg64,
+    ) -> Vec<f32> {
+        let (xs, ys) = self.batches(agent, rng);
+        let zeros = vec![0.0f32; start.len()];
+        // local_admm with (zhat=anchor, u=0, rho=mu) is exactly
+        // f_i + (mu/2)|x − anchor|²
+        self.spec.local_admm(
+            start, anchor, &zeros, &xs, &ys, self.lr, mu as f32, self.steps,
+            self.batch,
+        )
+    }
+
+    fn sgd_corr(
+        &mut self,
+        agent: usize,
+        start: &[f32],
+        corr: &[f32],
+        rng: &mut Pcg64,
+    ) -> Vec<f32> {
+        let (xs, ys) = self.batches(agent, rng);
+        self.spec
+            .local_scaffold(start, corr, &xs, &ys, self.lr, self.steps, self.batch)
+    }
+}
+
+/// FedAvg (`mu = 0`) / FedProx (`mu > 0`) engine.
+pub struct AvgFamily {
+    pub z: Vec<f32>,
+    pub mu: f64,
+    pub part_rate: f64,
+    pub events: u64,
+    pub round_idx: usize,
+}
+
+impl AvgFamily {
+    pub fn fedavg(init: Vec<f32>, part_rate: f64) -> Self {
+        AvgFamily { z: init, mu: 0.0, part_rate, events: 0, round_idx: 0 }
+    }
+
+    pub fn fedprox(init: Vec<f32>, part_rate: f64, mu: f64) -> Self {
+        AvgFamily { z: init, mu, part_rate, events: 0, round_idx: 0 }
+    }
+
+    pub fn round(&mut self, local: &mut dyn FedLocal, rng: &mut Pcg64) {
+        let n = local.n_agents();
+        let selected: Vec<usize> =
+            (0..n).filter(|_| rng.bernoulli(self.part_rate)).collect();
+        self.round_idx += 1;
+        if selected.is_empty() {
+            return;
+        }
+        let mut acc = vec![0.0f64; self.z.len()];
+        let anchor = self.z.clone();
+        for &i in &selected {
+            let y = local.sgd_prox(i, &self.z, &anchor, self.mu, rng);
+            for (a, &v) in acc.iter_mut().zip(&y) {
+                *a += v as f64;
+            }
+            self.events += 2; // down (model) + up (update)
+        }
+        let inv = 1.0 / selected.len() as f64;
+        for (z, a) in self.z.iter_mut().zip(&acc) {
+            *z = (a * inv) as f32;
+        }
+    }
+
+    /// Events normalized by full communication (2N per round).
+    pub fn comm_load(&self, n: usize) -> f64 {
+        if self.round_idx == 0 {
+            return 0.0;
+        }
+        self.events as f64 / (2.0 * n as f64 * self.round_idx as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::iid_split;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn setup(seed: u64) -> (NativeFed, ClassDataset) {
+        let mut rng = Pcg64::seed(seed);
+        let (train, test) = generate(&SynthSpec::tiny(), &mut rng);
+        let shards = iid_split(&train, 4, &mut rng);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        (NativeFed::new(spec, shards, 0.1, 3, 8), test)
+    }
+
+    #[test]
+    fn fedavg_learns_iid_tiny() {
+        let (mut local, test) = setup(1);
+        let mut rng = Pcg64::seed(2);
+        let init = local.spec.init(&mut rng);
+        let mut eng = AvgFamily::fedavg(init, 1.0);
+        let spec = local.spec.clone();
+        for _ in 0..60 {
+            eng.round(&mut local, &mut rng);
+        }
+        let acc = spec.accuracy(&eng.z, &test.xs, &test.labels);
+        assert!(acc > 0.5, "acc {acc}");
+    }
+
+    #[test]
+    fn participation_rate_controls_events() {
+        let (mut local, _) = setup(3);
+        let mut rng = Pcg64::seed(4);
+        let init = local.spec.init(&mut rng);
+        let mut eng = AvgFamily::fedavg(init, 0.5);
+        for _ in 0..100 {
+            eng.round(&mut local, &mut rng);
+        }
+        // expected events = 2 * 0.5 * 4 agents * 100 rounds = 400
+        let load = eng.comm_load(4);
+        assert!((load - 0.5).abs() < 0.15, "load {load}");
+    }
+
+    #[test]
+    fn fedprox_stays_closer_to_global_model() {
+        let (mut local, _) = setup(5);
+        let mut rng = Pcg64::seed(6);
+        let init = local.spec.init(&mut rng);
+        let z = init.clone();
+        let y_avg = local.sgd_prox(0, &z, &z, 0.0, &mut Pcg64::seed(7));
+        let y_prox = local.sgd_prox(0, &z, &z, 5.0, &mut Pcg64::seed(7));
+        let d_avg = crate::linalg::dist2_f32(&y_avg, &z);
+        let d_prox = crate::linalg::dist2_f32(&y_prox, &z);
+        assert!(d_prox < d_avg, "prox {d_prox} !< avg {d_avg}");
+    }
+
+    #[test]
+    fn empty_cohort_is_a_noop() {
+        let (mut local, _) = setup(8);
+        let mut rng = Pcg64::seed(9);
+        let init = local.spec.init(&mut rng);
+        let mut eng = AvgFamily::fedavg(init.clone(), 0.0);
+        for _ in 0..10 {
+            eng.round(&mut local, &mut rng);
+        }
+        assert_eq!(eng.z, init);
+        assert_eq!(eng.events, 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Federated-learning baselines (Sec. 5 comparisons): FedAvg, FedProx,
+//! SCAFFOLD, FedADMM.
+//!
+//! All baselines run under the *same local-computation budget* as Alg. 1
+//! (S SGD steps per selected agent per round — App. G: "each of the agents
+//! are run for the same number of local gradient steps") and the same
+//! synthetic non-iid shards; what differs is the aggregation rule and the
+//! (random-participation) communication pattern.
+//!
+//! Communication accounting: each participating agent costs one downlink
+//! (model delivery) and one uplink (update) event per round; SCAFFOLD costs
+//! two per direction (model + control variate — the paper doubles its
+//! counts for the same reason, Tab. 2).
+
+pub mod avg_family;
+pub mod fedadmm;
+pub mod scaffold;
+
+pub use avg_family::{AvgFamily, FedLocal, NativeFed};
+pub use fedadmm::FedAdmm;
+pub use scaffold::Scaffold;

@@ -1,0 +1,232 @@
+//! Criterion-style micro/endtoend benchmark harness (the offline
+//! environment has no `criterion`).
+//!
+//! Benches under `benches/` use `harness = false` and drive this module:
+//! adaptive warmup, fixed-duration sampling, robust statistics and a
+//! plain-text report compatible with `cargo bench` output scraping.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected samples and statistics.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    fn per_iter_ns(&self) -> Vec<f64> {
+        self.samples
+            .iter()
+            .map(|d| d.as_nanos() as f64 / self.iters_per_sample as f64)
+            .collect()
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let xs = self.per_iter_ns();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        let mut xs = self.per_iter_ns();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs[xs.len() / 2]
+    }
+
+    pub fn stddev_ns(&self) -> f64 {
+        let xs = self.per_iter_ns();
+        if xs.len() < 2 {
+            return 0.0;
+        }
+        let mean = self.mean_ns();
+        (xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>14}/iter  (median {:>14}, sd {:>12}, {} samples x {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.stddev_ns()),
+            self.samples.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: warm up ~`warmup`, then take `samples` timed samples
+/// whose iteration count is sized so each sample runs >= `sample_time`.
+pub struct Bench {
+    pub warmup: Duration,
+    pub sample_time: Duration,
+    pub samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            sample_time: Duration::from_millis(100),
+            samples: 12,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    /// Fast harness for end-to-end benches that are themselves slow.
+    pub fn endtoend() -> Self {
+        Bench {
+            warmup: Duration::from_millis(0),
+            sample_time: Duration::from_millis(1),
+            samples: 3,
+            ..Default::default()
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warmup + calibration
+        let mut iters: u64 = 1;
+        let cal_start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= self.sample_time || iters > 1 << 30 {
+                break;
+            }
+            if cal_start.elapsed() > self.warmup + Duration::from_secs(2) {
+                break;
+            }
+            let scale = (self.sample_time.as_secs_f64()
+                / dt.as_secs_f64().max(1e-9))
+            .ceil() as u64;
+            iters = (iters * scale.clamp(2, 16)).min(1 << 30);
+        }
+        while cal_start.elapsed() < self.warmup {
+            f();
+        }
+        // sampling
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Time a single invocation (for long end-to-end drivers).
+    pub fn once<F: FnOnce()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let t0 = Instant::now();
+        f();
+        let res = BenchResult {
+            name: name.to_string(),
+            samples: vec![t0.elapsed()],
+            iters_per_sample: 1,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept for call-site clarity).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_samples() {
+        let r = BenchResult {
+            name: "t".into(),
+            samples: vec![
+                Duration::from_nanos(100),
+                Duration::from_nanos(200),
+                Duration::from_nanos(300),
+            ],
+            iters_per_sample: 1,
+        };
+        assert!((r.mean_ns() - 200.0).abs() < 1e-9);
+        assert!((r.median_ns() - 200.0).abs() < 1e-9);
+        assert!((r.stddev_ns() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_iter_normalization() {
+        let r = BenchResult {
+            name: "t".into(),
+            samples: vec![Duration::from_micros(10)],
+            iters_per_sample: 10,
+        };
+        assert!((r.mean_ns() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            sample_time: Duration::from_micros(50),
+            samples: 3,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn once_records_single_sample() {
+        let mut b = Bench::default();
+        b.once("single", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(b.results[0].samples.len(), 1);
+        assert!(b.results[0].mean_ns() >= 2e6);
+    }
+}

@@ -1,0 +1,133 @@
+//! CLI argument parsing substrate (the offline environment has no `clap`).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! `--switch`, and positional arguments, with typed getters and a usage
+//! formatter used by `main.rs`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse everything after the program name (and after the subcommand if
+    /// the caller already consumed it).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(rest) = item.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.switches.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> (Option<String>, Args) {
+        let mut items: Vec<String> = std::env::args().skip(1).collect();
+        if items.is_empty() || items[0].starts_with("--") {
+            return (None, Args::parse(items));
+        }
+        let cmd = items.remove(0);
+        (Some(cmd), Args::parse(items))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s.parse::<T>().map(Some).map_err(|_| {
+                anyhow::anyhow!("--{key}: cannot parse {s:?}")
+            }),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get_parse(key).ok().flatten().unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get_parse(key).ok().flatten().unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get_parse(key).ok().flatten().unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse("exp tab1 --rounds 100 --delta=3.5 --verbose --seed 7");
+        assert_eq!(a.positional, vec!["exp", "tab1"]);
+        assert_eq!(a.get("rounds"), Some("100"));
+        assert_eq!(a.get("delta"), Some("3.5"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--n 42 --rho 0.25");
+        assert_eq!(a.usize_or("n", 0), 42);
+        assert!((a.f64_or("rho", 0.0) - 0.25).abs() < 1e-15);
+        assert_eq!(a.usize_or("missing", 9), 9);
+        assert_eq!(a.str_or("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn parse_error_reported() {
+        let a = parse("--n notanumber");
+        assert!(a.get_parse::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("--fast");
+        assert!(a.has("fast"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("--fast --n 3");
+        assert!(a.has("fast"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+}

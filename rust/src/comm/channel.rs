@@ -1,0 +1,104 @@
+//! Lossy channel simulation — the paper's packet-drop model.
+//!
+//! A sent delta is lost with probability `drop_rate`; the *sender does not
+//! learn about the loss* (no acknowledgements), which is exactly why the
+//! paper needs the periodic reset strategy (App. E, Fig. 10): receiver
+//! estimates drift by the accumulated `χ` disturbances until a reset
+//! re-synchronizes them.
+
+use crate::rng::Rng;
+
+/// Per-link transmission counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChannelStats {
+    pub sent: u64,
+    pub dropped: u64,
+}
+
+impl ChannelStats {
+    pub fn delivered(&self) -> u64 {
+        self.sent - self.dropped
+    }
+    pub fn drop_fraction(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.sent as f64
+        }
+    }
+}
+
+/// A lossy point-to-point link.
+#[derive(Clone, Debug)]
+pub struct DropChannel {
+    pub drop_rate: f64,
+    pub stats: ChannelStats,
+}
+
+impl DropChannel {
+    pub fn new(drop_rate: f64) -> Self {
+        assert!((0.0..=1.0).contains(&drop_rate), "drop_rate in [0,1]");
+        DropChannel { drop_rate, stats: ChannelStats::default() }
+    }
+
+    /// A perfect link.
+    pub fn reliable() -> Self {
+        DropChannel::new(0.0)
+    }
+
+    /// Transmit a payload; `None` means the packet was dropped in flight.
+    pub fn transmit<T>(&mut self, payload: T, rng: &mut impl Rng) -> Option<T> {
+        self.stats.sent += 1;
+        if self.drop_rate > 0.0 && rng.bernoulli(self.drop_rate) {
+            self.stats.dropped += 1;
+            None
+        } else {
+            Some(payload)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn reliable_never_drops() {
+        let mut ch = DropChannel::reliable();
+        let mut rng = Pcg64::seed(0);
+        for i in 0..1000 {
+            assert_eq!(ch.transmit(i, &mut rng), Some(i));
+        }
+        assert_eq!(ch.stats.dropped, 0);
+        assert_eq!(ch.stats.sent, 1000);
+    }
+
+    #[test]
+    fn full_loss_drops_everything() {
+        let mut ch = DropChannel::new(1.0);
+        let mut rng = Pcg64::seed(1);
+        for i in 0..100 {
+            assert_eq!(ch.transmit(i, &mut rng), None);
+        }
+        assert_eq!(ch.stats.dropped, 100);
+    }
+
+    #[test]
+    fn drop_rate_is_respected() {
+        let mut ch = DropChannel::new(0.3);
+        let mut rng = Pcg64::seed(2);
+        for _ in 0..50_000 {
+            ch.transmit((), &mut rng);
+        }
+        let frac = ch.stats.drop_fraction();
+        assert!((frac - 0.3).abs() < 0.01, "drop fraction {frac}");
+        assert_eq!(ch.stats.delivered() + ch.stats.dropped, ch.stats.sent);
+    }
+
+    #[test]
+    fn rejects_bad_rate() {
+        let res = std::panic::catch_unwind(|| DropChannel::new(1.5));
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Event-based communication substrate (Sec. 2, App. C/E of the paper).
+//!
+//! Three pieces compose every communication line in Alg. 1 / Alg. 2:
+//!
+//! * [`Trigger`] / [`TriggerState`] — decides *whether* an update is sent:
+//!   vanilla send-on-delta (`|v_{k+1} − v_{[k]}| > Δ`), the randomized
+//!   variant (below-threshold sends with probability `p_trig`), the
+//!   baselines' random participation, or always/never.
+//! * [`DropChannel`] — decides whether a sent delta *arrives* (Bernoulli
+//!   packet drops, the paper's `χ` disturbances).
+//! * [`Estimate`] — the receiver-side accumulator `v̂` that integrates the
+//!   received deltas and can be hard-reset (the rare periodic reset
+//!   strategy of Alg. 1/2).
+//!
+//! All pieces count events, so the paper's *communication load* metric
+//! (triggered events normalized by full communication) falls out of the
+//! counters.
+
+mod channel;
+mod estimate;
+mod trigger;
+
+pub use channel::{ChannelStats, DropChannel};
+pub use estimate::Estimate;
+pub use trigger::{Trigger, TriggerState};
+
+/// Scalar abstraction so the protocol works over both the f32 PJRT
+/// parameter ABI and the f64 convex experiments.
+pub trait Scalar: Copy + PartialEq + std::fmt::Debug + 'static {
+    fn to_f64(self) -> f64;
+    fn from_f64(v: f64) -> Self;
+    fn zero() -> Self;
+}
+
+impl Scalar for f32 {
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn zero() -> Self {
+        0.0
+    }
+}
+
+impl Scalar for f64 {
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn zero() -> Self {
+        0.0
+    }
+}
+
+/// Euclidean norm of a difference, in f64 regardless of storage type.
+///
+/// Hot path of every trigger evaluation (§Perf): four independent
+/// accumulators break the horizontal-sum dependency.  On 108k-element
+/// parameter vectors the loop is memory-bandwidth-bound (~230 µs,
+/// ≈3.7 GB/s streaming on the test box), i.e. already at the practical
+/// roofline — see EXPERIMENTS.md §Perf.
+pub fn delta_norm<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let n4 = a.len() & !3;
+    let mut i = 0;
+    while i < n4 {
+        // four independent chains
+        let d0 = a[i].to_f64() - b[i].to_f64();
+        let d1 = a[i + 1].to_f64() - b[i + 1].to_f64();
+        let d2 = a[i + 2].to_f64() - b[i + 2].to_f64();
+        let d3 = a[i + 3].to_f64() - b[i + 3].to_f64();
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+        i += 4;
+    }
+    let mut tail = 0.0;
+    while i < a.len() {
+        let d = a[i].to_f64() - b[i].to_f64();
+        tail += d * d;
+        i += 1;
+    }
+    (acc[0] + acc[1] + acc[2] + acc[3] + tail).sqrt()
+}
+
+/// `a - b` elementwise.
+pub fn sub<T: Scalar>(a: &[T], b: &[T]) -> Vec<T> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| T::from_f64(x.to_f64() - y.to_f64()))
+        .collect()
+}

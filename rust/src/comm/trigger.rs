@@ -1,0 +1,276 @@
+//! Event triggers: *when* does an agent communicate?
+
+use super::{delta_norm, sub, Scalar};
+use crate::rng::Rng;
+
+/// Communication policy for one transmit line.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// Full communication — one packet every round (the normalizer for the
+    /// paper's communication-load percentage).
+    Always,
+    /// No communication (useful for ablations/tests).
+    Never,
+    /// Vanilla event-based (sent-on-delta, Eq. 2):
+    /// send iff `|v_{k+1} − v_{[k]}| > Δ`.
+    Vanilla { delta: f64 },
+    /// Randomized event-based (Sec. 2): above threshold send with
+    /// certainty; below threshold send with probability `p_trig`.
+    Randomized { delta: f64, p_trig: f64 },
+    /// Random participation with rate `p` — the mechanism of the FedAvg /
+    /// FedProx / FedADMM / SCAFFOLD baselines and of the "purely random
+    /// selection" comparison in App. G.3.
+    Participation { p: f64 },
+    /// Diminishing threshold `Δ_k = Δ₀ / (k+1)^t` (App. F): guarantees
+    /// exact convergence with rate `O(1/k^t)` (Cor. F.2); `t = 2` is the
+    /// schedule of the nonconvex result Thm. 2.3.
+    Decaying { delta0: f64, power: f64 },
+}
+
+impl Trigger {
+    pub fn vanilla(delta: f64) -> Trigger {
+        Trigger::Vanilla { delta }
+    }
+    pub fn randomized(delta: f64, p_trig: f64) -> Trigger {
+        Trigger::Randomized { delta, p_trig }
+    }
+    pub fn participation(p: f64) -> Trigger {
+        Trigger::Participation { p }
+    }
+    pub fn decaying(delta0: f64, power: f64) -> Trigger {
+        Trigger::Decaying { delta0, power }
+    }
+}
+
+/// Per-line trigger state: tracks the last *communicated* value `v_{[k]}`
+/// and decides, for each new `v_{k+1}`, whether to emit the delta
+/// `v_{k+1} − v_{[k]}`.
+#[derive(Clone, Debug)]
+pub struct TriggerState<T: Scalar> {
+    pub trigger: Trigger,
+    last_sent: Vec<T>,
+    /// Number of rounds observed (communication opportunities).
+    pub opportunities: u64,
+    /// Number of triggered communications.
+    pub events: u64,
+}
+
+impl<T: Scalar> TriggerState<T> {
+    /// `init` is the commonly known initial value (the paper initializes
+    /// `x̂_0 = x_0`, `ẑ_0 = z_0`, … so all estimates start in sync).
+    pub fn new(trigger: Trigger, init: Vec<T>) -> Self {
+        TriggerState { trigger, last_sent: init, opportunities: 0, events: 0 }
+    }
+
+    /// Current `v_{[k]}` — the value the receivers believe (absent drops).
+    pub fn last_sent(&self) -> &[T] {
+        &self.last_sent
+    }
+
+    /// Would `current` fire the deterministic part of the trigger?
+    pub fn deviation(&self, current: &[T]) -> f64 {
+        delta_norm(current, &self.last_sent)
+    }
+
+    /// Observe the new value; return `Some(delta)` if a communication is
+    /// triggered. On a trigger, `v_{[k]}` advances to `current` (the sender
+    /// does NOT know whether the packet survives the channel — that is the
+    /// paper's drop model, Eq. 32/33).
+    pub fn offer(&mut self, current: &[T], rng: &mut impl Rng) -> Option<Vec<T>> {
+        self.opportunities += 1;
+        let fire = match self.trigger {
+            Trigger::Always => true,
+            Trigger::Never => false,
+            Trigger::Vanilla { delta } => self.deviation(current) > delta,
+            Trigger::Randomized { delta, p_trig } => {
+                self.deviation(current) > delta || rng.bernoulli(p_trig)
+            }
+            Trigger::Participation { p } => rng.bernoulli(p),
+            Trigger::Decaying { delta0, power } => {
+                // opportunities was just incremented, so k+1 = opportunities
+                let dk = delta0 / (self.opportunities as f64).powf(power);
+                self.deviation(current) > dk
+            }
+        };
+        if fire {
+            self.events += 1;
+            let delta = sub(current, &self.last_sent);
+            self.last_sent = current.to_vec();
+            Some(delta)
+        } else {
+            None
+        }
+    }
+
+    /// Periodic reset: force `v_{[k]} = current` *and* count the implied
+    /// communication (a reset is a full synchronization message).
+    pub fn reset(&mut self, current: &[T]) {
+        self.last_sent = current.to_vec();
+        self.events += 1;
+    }
+
+    /// Triggered fraction (the paper's per-line communication load).
+    pub fn load(&self) -> f64 {
+        if self.opportunities == 0 {
+            0.0
+        } else {
+            self.events as f64 / self.opportunities as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn st(trigger: Trigger) -> TriggerState<f64> {
+        TriggerState::new(trigger, vec![0.0; 3])
+    }
+
+    #[test]
+    fn always_fires_every_round() {
+        let mut s = st(Trigger::Always);
+        let mut rng = Pcg64::seed(0);
+        for k in 0..10 {
+            assert!(s.offer(&[k as f64, 0.0, 0.0], &mut rng).is_some());
+        }
+        assert_eq!(s.events, 10);
+        assert!((s.load() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn never_never_fires() {
+        let mut s = st(Trigger::Never);
+        let mut rng = Pcg64::seed(0);
+        for _ in 0..10 {
+            assert!(s.offer(&[100.0, 0.0, 0.0], &mut rng).is_none());
+        }
+        assert_eq!(s.events, 0);
+    }
+
+    #[test]
+    fn vanilla_fires_iff_deviation_exceeds_delta() {
+        let mut s = st(Trigger::vanilla(1.0));
+        let mut rng = Pcg64::seed(1);
+        // |(0.5,0,0)| = 0.5 <= 1: no event
+        assert!(s.offer(&[0.5, 0.0, 0.0], &mut rng).is_none());
+        // still measured against last SENT value (0): |(1.2,..)| > 1 fires
+        let d = s.offer(&[1.2, 0.0, 0.0], &mut rng).unwrap();
+        assert_eq!(d, vec![1.2, 0.0, 0.0]);
+        // now reference is 1.2; small move doesn't fire
+        assert!(s.offer(&[1.5, 0.0, 0.0], &mut rng).is_none());
+        assert_eq!(s.events, 1);
+        assert_eq!(s.opportunities, 3);
+    }
+
+    #[test]
+    fn vanilla_delta_is_cumulative_since_last_send() {
+        let mut s = st(Trigger::vanilla(0.4));
+        let mut rng = Pcg64::seed(2);
+        assert!(s.offer(&[0.3, 0.0, 0.0], &mut rng).is_none());
+        // deviation from last SENT (zero), not from previous offer
+        let d = s.offer(&[0.45, 0.0, 0.0], &mut rng).unwrap();
+        assert!((d[0] - 0.45).abs() < 1e-15);
+    }
+
+    #[test]
+    fn randomized_fires_with_certainty_above_threshold() {
+        let mut rng = Pcg64::seed(3);
+        let mut s = st(Trigger::randomized(1.0, 0.0));
+        assert!(s.offer(&[2.0, 0.0, 0.0], &mut rng).is_some());
+    }
+
+    #[test]
+    fn randomized_fires_at_rate_p_below_threshold() {
+        let mut rng = Pcg64::seed(4);
+        let mut s = st(Trigger::randomized(1e9, 0.25));
+        let n = 20_000;
+        let mut hits = 0;
+        for _ in 0..n {
+            // keep the value at 0 so the deterministic branch never fires
+            if s.offer(&[0.0, 0.0, 0.0], &mut rng).is_some() {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn participation_rate() {
+        let mut rng = Pcg64::seed(5);
+        let mut s = st(Trigger::participation(0.4));
+        let n = 20_000;
+        let mut hits = 0;
+        for _ in 0..n {
+            if s.offer(&[1e6, 0.0, 0.0], &mut rng).is_some() {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.4).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn reset_syncs_and_counts() {
+        let mut s = st(Trigger::vanilla(10.0));
+        let mut rng = Pcg64::seed(6);
+        assert!(s.offer(&[5.0, 0.0, 0.0], &mut rng).is_none());
+        s.reset(&[5.0, 0.0, 0.0]);
+        assert_eq!(s.last_sent(), &[5.0, 0.0, 0.0]);
+        assert_eq!(s.events, 1);
+        // after reset, deviation measured from the reset point
+        assert!(s.deviation(&[5.0, 0.0, 0.0]) < 1e-15);
+    }
+
+    #[test]
+    fn f32_payloads_work() {
+        let mut s: TriggerState<f32> =
+            TriggerState::new(Trigger::vanilla(0.5), vec![0.0f32; 2]);
+        let mut rng = Pcg64::seed(7);
+        assert!(s.offer(&[0.3, 0.0], &mut rng).is_none());
+        assert!(s.offer(&[0.6, 0.0], &mut rng).is_some());
+    }
+
+    #[test]
+    fn decaying_threshold_tightens_over_rounds() {
+        // Δ_k = 1/(k+1): a deviation of 0.5 does not fire early but fires
+        // once the schedule has decayed past it.
+        let mut s = st(Trigger::decaying(1.0, 1.0));
+        let mut rng = Pcg64::seed(20);
+        // k = 0: Δ_0 = 1.0 > 0.5 -> no fire
+        assert!(s.offer(&[0.5, 0.0, 0.0], &mut rng).is_none());
+        // k = 1: Δ_1 = 0.5, strict > -> still no fire at exactly 0.5
+        assert!(s.offer(&[0.5, 0.0, 0.0], &mut rng).is_none());
+        // k = 2: Δ_2 = 1/3 < 0.5 -> fires
+        assert!(s.offer(&[0.5, 0.0, 0.0], &mut rng).is_some());
+    }
+
+    #[test]
+    fn decaying_drives_estimate_error_to_zero() {
+        // App. F: with Δ_k -> 0 the receiver error must vanish even for a
+        // drifting signal (here: converging geometrically).
+        let mut s = st(Trigger::decaying(2.0, 2.0));
+        let mut rng = Pcg64::seed(21);
+        let mut v = [4.0, 0.0, 0.0];
+        let mut last_err = f64::INFINITY;
+        for k in 0..200 {
+            v[0] = 4.0 * 0.97f64.powi(k); // converging signal
+            s.offer(&v, &mut rng);
+            if k > 150 {
+                let err = s.deviation(&v);
+                last_err = err;
+            }
+        }
+        assert!(last_err < 1e-3, "residual estimate error {last_err}");
+    }
+
+    #[test]
+    fn boundary_is_strict_inequality() {
+        // Eq. 2 uses strict '>' — deviation exactly Delta must NOT fire.
+        let mut s = st(Trigger::vanilla(1.0));
+        let mut rng = Pcg64::seed(8);
+        assert!(s.offer(&[1.0, 0.0, 0.0], &mut rng).is_none());
+    }
+}

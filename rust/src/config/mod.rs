@@ -1,0 +1,115 @@
+//! Run-level configuration: artifact/result locations, seeds, and JSON
+//! config-file loading for the experiment launcher.
+
+use std::path::{Path, PathBuf};
+
+use crate::jsonio::{read_json, Json};
+
+/// Global run configuration shared by the CLI, examples and benches.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Directory holding `manifest.json` + `*.hlo.txt` (built by
+    /// `make artifacts`).
+    pub artifacts_dir: PathBuf,
+    /// Output directory for experiment CSV/JSON.
+    pub results_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: default_artifacts_dir(),
+            results_dir: PathBuf::from("results"),
+            seed: 0,
+        }
+    }
+}
+
+/// Resolve the artifacts dir: `$DELA_ARTIFACTS`, else `./artifacts`, else
+/// relative to the crate root (so `cargo test` works from anywhere).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("DELA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.join("manifest.json").exists() {
+        return local;
+    }
+    let crate_root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    crate_root.join("artifacts")
+}
+
+impl RunConfig {
+    pub fn from_args(args: &crate::cli::Args) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        if let Some(dir) = args.get("artifacts") {
+            cfg.artifacts_dir = PathBuf::from(dir);
+        }
+        if let Some(dir) = args.get("results") {
+            cfg.results_dir = PathBuf::from(dir);
+        }
+        cfg.seed = args.u64_or("seed", 0);
+        cfg
+    }
+
+    /// Merge overrides from a JSON config file:
+    /// `{"artifacts": "...", "results": "...", "seed": 3}`.
+    pub fn load_file(&mut self, path: &Path) -> anyhow::Result<()> {
+        let j = read_json(path)?;
+        if let Some(v) = j.get("artifacts").and_then(Json::as_str) {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("results").and_then(Json::as_str) {
+            self.results_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            self.seed = v as u64;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Args;
+    use crate::jsonio::write_json;
+
+    #[test]
+    fn from_args_overrides() {
+        let args = Args::parse(
+            ["--artifacts", "/tmp/a", "--seed", "5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args);
+        assert_eq!(cfg.artifacts_dir, PathBuf::from("/tmp/a"));
+        assert_eq!(cfg.seed, 5);
+    }
+
+    #[test]
+    fn load_file_merges() {
+        let dir = std::env::temp_dir().join("dela_cfg_test");
+        let path = dir.join("cfg.json");
+        write_json(
+            &path,
+            &Json::obj(vec![
+                ("results", Json::Str("/tmp/r".into())),
+                ("seed", Json::Num(42.0)),
+            ]),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.load_file(&path).unwrap();
+        assert_eq!(cfg.results_dir, PathBuf::from("/tmp/r"));
+        assert_eq!(cfg.seed, 42);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_artifacts_exists_or_crate_relative() {
+        let dir = default_artifacts_dir();
+        assert!(dir.to_string_lossy().contains("artifacts"));
+    }
+}

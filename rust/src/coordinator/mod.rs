@@ -1,0 +1,394 @@
+//! Threaded leader/worker runtime for Alg. 1.
+//!
+//! The algorithm cores in [`crate::admm`] are deterministic single-threaded
+//! state machines (every experiment is reproducible from a seed); this
+//! module is the *deployment shape*: one OS thread per agent, a leader
+//! thread owning `z`, message passing over `std::sync::mpsc` channels with
+//! the same event-trigger + drop-channel semantics on every link.  A round
+//! barrier preserves Alg. 1's synchronous semantics; the event protocol
+//! decides whether a message carries a payload.
+//!
+//! Used by the e2e example and the integration tests; single-threaded
+//! experiment sweeps use [`crate::admm::ConsensusAdmm`] directly.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::comm::{DropChannel, Estimate, Trigger, TriggerState};
+use crate::data::synth::ClassDataset;
+use crate::model::MlpSpec;
+use crate::rng::Pcg64;
+
+/// Leader -> agent messages.
+enum ToAgent {
+    /// Start round k; `zdelta` is the event-based downlink payload
+    /// (None = no event or packet dropped).
+    Round { zdelta: Option<Vec<f32>> },
+    /// Hard reset: synchronize `ẑ` to the true `z`.
+    Reset { z: Vec<f32> },
+    /// Terminate and report stats.
+    Stop,
+}
+
+/// Agent -> leader messages.
+struct FromAgent {
+    /// Sender id (kept for tracing/debug builds).
+    #[allow(dead_code)]
+    agent: usize,
+    /// Uplink payload: `Some(delta)` if the d-trigger fired AND the packet
+    /// survived; `None` otherwise.
+    delta: Option<Vec<f32>>,
+    /// d-events triggered so far (for load accounting).
+    events: u64,
+}
+
+/// Configuration of the threaded runtime.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub rho: f32,
+    pub alpha: f32,
+    pub lr: f32,
+    pub steps: usize,
+    pub batch: usize,
+    pub trigger_d: Trigger,
+    pub trigger_z: Trigger,
+    pub drop_up: f64,
+    pub drop_down: f64,
+    pub reset_period: usize,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            rho: 1.0,
+            alpha: 1.0,
+            lr: 0.1,
+            steps: 5,
+            batch: 32,
+            trigger_d: Trigger::Always,
+            trigger_z: Trigger::Always,
+            drop_up: 0.0,
+            drop_down: 0.0,
+            reset_period: 0,
+            seed: 0,
+        }
+    }
+}
+
+struct AgentHandle {
+    tx: Sender<ToAgent>,
+    join: JoinHandle<()>,
+    z_trig: TriggerState<f32>,
+    down_ch: DropChannel,
+}
+
+/// The leader: owns `z`, spawns one worker thread per shard.
+pub struct Coordinator {
+    pub cfg: CoordinatorConfig,
+    pub spec: MlpSpec,
+    pub z: Vec<f32>,
+    zeta_hat: Estimate<f32>,
+    agents: Vec<AgentHandle>,
+    from_rx: Receiver<FromAgent>,
+    rng: Pcg64,
+    pub round_idx: usize,
+    pub uplink_events: u64,
+}
+
+impl Coordinator {
+    /// Spawn N agent threads, one per data shard.
+    pub fn spawn(
+        cfg: CoordinatorConfig,
+        spec: MlpSpec,
+        shards: Vec<ClassDataset>,
+        init: Vec<f32>,
+    ) -> Coordinator {
+        let _n = shards.len();
+        let dim = init.len();
+        assert_eq!(dim, spec.param_len());
+        let (from_tx, from_rx) = channel::<FromAgent>();
+        let mut master_rng = Pcg64::seed(cfg.seed);
+        let agents = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let (tx, rx) = channel::<ToAgent>();
+                let mut worker = AgentWorker {
+                    id: i,
+                    spec: spec.clone(),
+                    shard,
+                    cfg: cfg.clone(),
+                    x: init.clone(),
+                    u: vec![0.0; dim],
+                    zhat: Estimate::new(init.clone()),
+                    zhat_prev: init.clone(),
+                    d_trig: TriggerState::new(cfg.trigger_d, init.clone()),
+                    up_ch: DropChannel::new(cfg.drop_up),
+                    rng: master_rng.split(i as u64 + 1),
+                    to_leader: from_tx.clone(),
+                };
+                let join = std::thread::Builder::new()
+                    .name(format!("dela-agent-{i}"))
+                    .spawn(move || worker.run(rx))
+                    .expect("spawn agent thread");
+                AgentHandle {
+                    tx,
+                    join,
+                    z_trig: TriggerState::new(cfg.trigger_z, init.clone()),
+                    down_ch: DropChannel::new(cfg.drop_down),
+                }
+            })
+            .collect();
+        Coordinator {
+            rng: master_rng.split(0),
+            cfg,
+            spec,
+            zeta_hat: Estimate::new(init.clone()),
+            z: init,
+            agents,
+            from_rx,
+            round_idx: 0,
+            uplink_events: 0,
+        }
+    }
+
+    /// Execute one synchronous round across all agent threads.
+    pub fn round(&mut self) {
+        let n = self.agents.len();
+        // downlink: per-link event trigger + lossy channel
+        for a in &mut self.agents {
+            let payload = a
+                .z_trig
+                .offer(&self.z, &mut self.rng)
+                .and_then(|delta| a.down_ch.transmit(delta, &mut self.rng));
+            a.tx.send(ToAgent::Round { zdelta: payload })
+                .expect("agent thread alive");
+        }
+        // gather uplink
+        let mut got = 0;
+        let mut uplink_events = 0;
+        while got < n {
+            let msg = self.from_rx.recv().expect("agent reply");
+            if let Some(delta) = msg.delta {
+                let inv = 1.0 / n as f32;
+                let scaled: Vec<f32> =
+                    delta.iter().map(|v| v * inv).collect();
+                self.zeta_hat.apply(&scaled);
+            }
+            uplink_events = uplink_events.max(0);
+            let _ = msg.events;
+            got += 1;
+        }
+        let _ = uplink_events;
+        // z-update (g = 0): z = ζ̂ + (1−α) z
+        let alpha = self.cfg.alpha;
+        for (z, &zh) in self.z.iter_mut().zip(self.zeta_hat.get()) {
+            *z = zh + (1.0 - alpha) * *z;
+        }
+        self.round_idx += 1;
+        if self.cfg.reset_period > 0
+            && self.round_idx % self.cfg.reset_period == 0
+        {
+            let z = self.z.clone();
+            for a in &mut self.agents {
+                a.z_trig.reset(&z);
+                a.tx.send(ToAgent::Reset { z: z.clone() })
+                    .expect("agent thread alive");
+            }
+        }
+    }
+
+    /// Downlink events so far.
+    pub fn downlink_events(&self) -> u64 {
+        self.agents.iter().map(|a| a.z_trig.events).sum()
+    }
+
+    /// Stop all agent threads; returns total uplink d-events.
+    pub fn shutdown(mut self) -> u64 {
+        for a in &self.agents {
+            let _ = a.tx.send(ToAgent::Stop);
+        }
+        // agents reply with a final stats message
+        let mut uplink = 0;
+        for _ in 0..self.agents.len() {
+            if let Ok(msg) = self.from_rx.recv() {
+                uplink += msg.events;
+            }
+        }
+        for a in self.agents.drain(..) {
+            let _ = a.join.join();
+        }
+        uplink
+    }
+}
+
+struct AgentWorker {
+    id: usize,
+    spec: MlpSpec,
+    shard: ClassDataset,
+    cfg: CoordinatorConfig,
+    x: Vec<f32>,
+    u: Vec<f32>,
+    zhat: Estimate<f32>,
+    zhat_prev: Vec<f32>,
+    d_trig: TriggerState<f32>,
+    up_ch: DropChannel,
+    rng: Pcg64,
+    to_leader: Sender<FromAgent>,
+}
+
+impl AgentWorker {
+    fn run(&mut self, rx: Receiver<ToAgent>) {
+        let dim = self.x.len();
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                ToAgent::Round { zdelta } => {
+                    self.zhat_prev.clear();
+                    let snapshot: Vec<f32> = self.zhat.get().to_vec();
+                    self.zhat_prev.extend_from_slice(&snapshot);
+                    if let Some(delta) = zdelta {
+                        self.zhat.apply(&delta);
+                    }
+                    let alpha = self.cfg.alpha;
+                    for j in 0..dim {
+                        self.u[j] += alpha * self.x[j] - self.zhat.get()[j]
+                            + (1.0 - alpha) * self.zhat_prev[j];
+                    }
+                    // S prox-SGD steps from the warm-started x
+                    let d = self.spec.input_dim();
+                    let c = self.spec.classes();
+                    let mut xs = Vec::with_capacity(
+                        self.cfg.steps * self.cfg.batch * d,
+                    );
+                    let mut ys = Vec::with_capacity(
+                        self.cfg.steps * self.cfg.batch * c,
+                    );
+                    for _ in 0..self.cfg.steps {
+                        let (bx, by) =
+                            self.shard.sample_batch(self.cfg.batch, &mut self.rng);
+                        xs.extend_from_slice(&bx);
+                        ys.extend_from_slice(&by);
+                    }
+                    self.x = self.spec.local_admm(
+                        &self.x,
+                        self.zhat.get(),
+                        &self.u,
+                        &xs,
+                        &ys,
+                        self.cfg.lr,
+                        self.cfg.rho,
+                        self.cfg.steps,
+                        self.cfg.batch,
+                    );
+                    let dvec: Vec<f32> = self
+                        .x
+                        .iter()
+                        .zip(&self.u)
+                        .map(|(&x, &u)| alpha * x + u)
+                        .collect();
+                    let payload = self
+                        .d_trig
+                        .offer(&dvec, &mut self.rng)
+                        .and_then(|dl| self.up_ch.transmit(dl, &mut self.rng));
+                    let _ = self.to_leader.send(FromAgent {
+                        agent: self.id,
+                        delta: payload,
+                        events: self.d_trig.events,
+                    });
+                }
+                ToAgent::Reset { z } => {
+                    self.zhat.reset_to(&z);
+                }
+                ToAgent::Stop => {
+                    let _ = self.to_leader.send(FromAgent {
+                        agent: self.id,
+                        delta: None,
+                        events: self.d_trig.events,
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::single_class_split;
+    use crate::data::synth::{generate, SynthSpec};
+
+    #[test]
+    fn threaded_training_improves_accuracy() {
+        let mut rng = Pcg64::seed(1);
+        let (train, test) = generate(&SynthSpec::tiny(), &mut rng);
+        let shards = single_class_split(&train, 4);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+        let acc0 = spec.accuracy(&init, &test.xs, &test.labels);
+        let cfg = CoordinatorConfig {
+            rho: 1.0,
+            lr: 0.1,
+            steps: 3,
+            batch: 8,
+            trigger_d: Trigger::vanilla(0.05),
+            trigger_z: Trigger::vanilla(0.05),
+            seed: 7,
+            ..Default::default()
+        };
+        let mut coord = Coordinator::spawn(cfg, spec.clone(), shards, init);
+        for _ in 0..40 {
+            coord.round();
+        }
+        let acc = spec.accuracy(&coord.z, &test.xs, &test.labels);
+        let up = coord.shutdown();
+        assert!(acc > acc0 + 0.2, "acc {acc0} -> {acc}");
+        assert!(up > 0);
+    }
+
+    #[test]
+    fn shutdown_is_clean_without_rounds() {
+        let mut rng = Pcg64::seed(2);
+        let (train, _) = generate(&SynthSpec::tiny(), &mut rng);
+        let shards = single_class_split(&train, 4);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+        let coord = Coordinator::spawn(
+            CoordinatorConfig::default(),
+            spec,
+            shards,
+            init,
+        );
+        assert_eq!(coord.shutdown(), 0);
+    }
+
+    #[test]
+    fn event_triggers_reduce_uplink_traffic() {
+        let mut rng = Pcg64::seed(3);
+        let (train, _) = generate(&SynthSpec::tiny(), &mut rng);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+
+        let run = |trig: Trigger| {
+            let shards = single_class_split(&train, 4);
+            let cfg = CoordinatorConfig {
+                trigger_d: trig,
+                steps: 2,
+                batch: 4,
+                seed: 11,
+                ..Default::default()
+            };
+            let mut coord =
+                Coordinator::spawn(cfg, MlpSpec::new(vec![8, 16, 4]), shards, init.clone());
+            for _ in 0..20 {
+                coord.round();
+            }
+            coord.shutdown()
+        };
+        let up_always = run(Trigger::Always);
+        let up_event = run(Trigger::vanilla(1.0));
+        assert_eq!(up_always, 80);
+        assert!(up_event < up_always, "event {up_event} !< {up_always}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Dataset substrate: synthetic corpora + non-iid partitioners.
+//!
+//! The environment has no MNIST/CIFAR downloads; DESIGN.md §3 documents the
+//! substitution. [`synth`] generates structured classification corpora with
+//! the properties the paper's experiments exercise; [`partition`]
+//! implements the paper's exact splits (single-class-per-agent for MNIST,
+//! `Dir_N(0.5)` for CIFAR-10); [`regress`] generates the App. G.1
+//! mixed-distribution regression/LASSO data.
+
+pub mod partition;
+pub mod regress;
+pub mod synth;
+
+pub use partition::{dirichlet_split, iid_split, single_class_split};
+pub use synth::{ClassDataset, SynthSpec};

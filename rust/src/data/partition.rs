@@ -1,0 +1,171 @@
+//! Non-iid partitioners — the paper's exact agent splits.
+//!
+//! * [`single_class_split`] — the MNIST setup: N = #classes agents, each
+//!   storing *only one digit* ("the most extreme non-i.i.d. distribution").
+//! * [`dirichlet_split`] — the CIFAR setup: for each class `a` sample
+//!   `p_a ~ Dir_N(β)` and give agent `j` a `p_{a,j}` fraction of class `a`
+//!   (β = 0.5 in the paper).
+//! * [`iid_split`] — shuffled equal split (control).
+
+use super::synth::ClassDataset;
+use crate::rng::Rng;
+
+/// One shard per class; requires `n_agents == data.classes` multiples —
+/// more generally, agent `i` receives class `i % classes`.
+pub fn single_class_split(data: &ClassDataset, n_agents: usize) -> Vec<ClassDataset> {
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.classes];
+    for (i, &l) in data.labels.iter().enumerate() {
+        by_class[l].push(i);
+    }
+    (0..n_agents)
+        .map(|a| {
+            let c = a % data.classes;
+            // agents sharing a class split it contiguously
+            let sharers = (0..n_agents).filter(|&b| b % data.classes == c).count();
+            let my_rank = (0..a).filter(|&b| b % data.classes == c).count();
+            let idx = &by_class[c];
+            let chunk = idx.len() / sharers.max(1);
+            let start = my_rank * chunk;
+            let end = if my_rank + 1 == sharers { idx.len() } else { start + chunk };
+            data.subset(&idx[start..end])
+        })
+        .collect()
+}
+
+/// Dirichlet split: `p_a ~ Dir_N(beta)` per class, rows assigned by
+/// proportion (largest-remainder rounding so every sample lands somewhere).
+pub fn dirichlet_split(
+    data: &ClassDataset,
+    n_agents: usize,
+    beta: f64,
+    rng: &mut impl Rng,
+) -> Vec<ClassDataset> {
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_agents];
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.classes];
+    for (i, &l) in data.labels.iter().enumerate() {
+        by_class[l].push(i);
+    }
+    for idx in by_class {
+        if idx.is_empty() {
+            continue;
+        }
+        let p = rng.dirichlet(beta, n_agents);
+        // largest-remainder apportionment of idx.len() rows
+        let n = idx.len();
+        let mut counts: Vec<usize> = p.iter().map(|&pi| (pi * n as f64) as usize).collect();
+        let mut rem: Vec<(f64, usize)> = p
+            .iter()
+            .enumerate()
+            .map(|(j, &pi)| (pi * n as f64 - counts[j] as f64, j))
+            .collect();
+        rem.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let assigned: usize = counts.iter().sum();
+        for k in 0..(n - assigned) {
+            counts[rem[k % n_agents].1] += 1;
+        }
+        let mut pos = 0;
+        for (j, &cnt) in counts.iter().enumerate() {
+            shards[j].extend_from_slice(&idx[pos..pos + cnt]);
+            pos += cnt;
+        }
+        debug_assert_eq!(pos, n);
+    }
+    shards.iter().map(|idx| data.subset(idx)).collect()
+}
+
+/// Shuffled equal split (iid control).
+pub fn iid_split(
+    data: &ClassDataset,
+    n_agents: usize,
+    rng: &mut impl Rng,
+) -> Vec<ClassDataset> {
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    rng.shuffle(&mut idx);
+    let chunk = data.len() / n_agents;
+    (0..n_agents)
+        .map(|a| {
+            let start = a * chunk;
+            let end = if a + 1 == n_agents { data.len() } else { start + chunk };
+            data.subset(&idx[start..end])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::rng::Pcg64;
+
+    fn corpus() -> ClassDataset {
+        generate(&SynthSpec::tiny(), &mut Pcg64::seed(1)).0
+    }
+
+    #[test]
+    fn single_class_each_agent_one_class() {
+        let data = corpus();
+        let shards = single_class_split(&data, data.classes);
+        assert_eq!(shards.len(), data.classes);
+        for (a, shard) in shards.iter().enumerate() {
+            assert!(!shard.is_empty());
+            assert!(shard.labels.iter().all(|&l| l == a));
+        }
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, data.len());
+    }
+
+    #[test]
+    fn single_class_more_agents_than_classes() {
+        let data = corpus();
+        let shards = single_class_split(&data, 2 * data.classes);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, data.len());
+        for (a, shard) in shards.iter().enumerate() {
+            assert!(shard.labels.iter().all(|&l| l == a % data.classes));
+        }
+    }
+
+    #[test]
+    fn dirichlet_preserves_all_samples() {
+        let data = corpus();
+        let mut rng = Pcg64::seed(2);
+        let shards = dirichlet_split(&data, 7, 0.5, &mut rng);
+        assert_eq!(shards.len(), 7);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, data.len());
+    }
+
+    #[test]
+    fn dirichlet_small_beta_skews_shards() {
+        let data = corpus();
+        let mut rng = Pcg64::seed(3);
+        let shards = dirichlet_split(&data, 5, 0.1, &mut rng);
+        // with beta=0.1 most shards should be class-dominated
+        let mut dominated = 0;
+        for shard in &shards {
+            if shard.is_empty() {
+                continue;
+            }
+            let counts = shard.class_counts();
+            let max = *counts.iter().max().unwrap();
+            if max as f64 > 0.6 * shard.len() as f64 {
+                dominated += 1;
+            }
+        }
+        assert!(dominated >= 3, "only {dominated} dominated shards");
+    }
+
+    #[test]
+    fn iid_split_balances_sizes_and_classes() {
+        let data = corpus();
+        let mut rng = Pcg64::seed(4);
+        let shards = iid_split(&data, 4, &mut rng);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, data.len());
+        for shard in &shards {
+            assert!(shard.len() >= data.len() / 4);
+            // every class should appear in an iid shard of 40 samples
+            assert!(shard.class_counts().iter().all(|&c| c > 0));
+        }
+    }
+}

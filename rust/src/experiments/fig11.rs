@@ -1,0 +1,188 @@
+//! Fig. 11 — distributed MNIST training over a communication graph
+//! (10 agents, dense random graph), comparing vanilla event-based,
+//! randomized event-based and purely random agent selection (App. G.3).
+//!
+//! Each agent holds a single class; only neighbor communication is allowed
+//! (no server — FedAvg/SCAFFOLD etc. are not applicable here).
+
+use crate::admm::{GraphAdmm, GraphConfig};
+use crate::comm::Trigger;
+use crate::data::partition::single_class_split;
+use crate::data::synth::{self, SynthSpec};
+use crate::metrics::Recorder;
+use crate::model::MlpSpec;
+use crate::rng::Pcg64;
+use crate::solver::NativeSgd;
+use crate::topology::Graph;
+
+#[derive(Clone, Debug)]
+pub struct Fig11Config {
+    pub n_agents: usize,
+    pub n_edges: usize,
+    pub rounds: usize,
+    pub rho: f64,
+    pub lr: f32,
+    pub steps: usize,
+    pub batch: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig11Config {
+    fn default() -> Self {
+        // Tab. 7: 10 agents, lr = 5e-3, rho = 5e-3, 5 grad steps/iter.
+        // The paper's 70-edge/10-node graph exceeds the simple-graph max
+        // (45); we use the densest simple graph (see DESIGN.md).
+        Fig11Config {
+            n_agents: 10,
+            n_edges: 45,
+            rounds: 300,
+            rho: 5e-3,
+            lr: 5e-3,
+            steps: 5,
+            batch: 32,
+            eval_every: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// Strategies compared in Fig. 11.
+#[derive(Clone, Copy, Debug)]
+pub enum GraphStrategy {
+    Vanilla { delta: f64 },
+    Randomized { delta: f64, p_trig: f64 },
+    RandomSelection { p: f64 },
+    Full,
+}
+
+impl GraphStrategy {
+    pub fn label(&self) -> String {
+        match self {
+            GraphStrategy::Vanilla { delta } => format!("Vanilla(Δ={delta})"),
+            GraphStrategy::Randomized { delta, p_trig } => {
+                format!("Randomized(Δ={delta},p={p_trig})")
+            }
+            GraphStrategy::RandomSelection { p } => format!("Random(p={p})"),
+            GraphStrategy::Full => "Full".into(),
+        }
+    }
+
+    fn trigger(&self) -> Trigger {
+        match *self {
+            GraphStrategy::Vanilla { delta } => Trigger::vanilla(delta),
+            GraphStrategy::Randomized { delta, p_trig } => {
+                Trigger::randomized(delta, p_trig)
+            }
+            GraphStrategy::RandomSelection { p } => Trigger::participation(p),
+            GraphStrategy::Full => Trigger::Always,
+        }
+    }
+}
+
+/// Run one strategy; records mean/min/max per-agent accuracy and events.
+pub fn run_strategy(
+    strategy: GraphStrategy,
+    cfg: &Fig11Config,
+) -> Recorder {
+    let mut rng = Pcg64::seed_stream(cfg.seed, 1212);
+    let (train, test) = synth::generate(&SynthSpec::mnist(), &mut rng);
+    let shards = single_class_split(&train, cfg.n_agents);
+    let spec = MlpSpec::new(vec![64, 400, 200, 10]);
+    let init = spec.init(&mut rng);
+    let graph = Graph::random_connected(cfg.n_agents, cfg.n_edges, &mut rng);
+
+    let gcfg = GraphConfig {
+        rho: cfg.rho,
+        rounds: cfg.rounds,
+        trigger_x: strategy.trigger(),
+        ..Default::default()
+    };
+    let mut engine: GraphAdmm<f32> = GraphAdmm::new(gcfg, graph, init.clone());
+    let mut solver = NativeSgd::new(
+        spec.clone(),
+        shards,
+        cfg.lr,
+        cfg.steps,
+        cfg.batch,
+        &init,
+    );
+    let mut rec = Recorder::new();
+    for k in 0..cfg.rounds {
+        engine.round(&mut solver, &mut rng);
+        if (k + 1) % cfg.eval_every == 0 || k + 1 == cfg.rounds {
+            let accs: Vec<f64> = (0..cfg.n_agents)
+                .map(|i| {
+                    spec.accuracy(engine.agent_x(i), &test.xs, &test.labels)
+                })
+                .collect();
+            let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+            let min = accs.iter().cloned().fold(1.0, f64::min);
+            let max = accs.iter().cloned().fold(0.0, f64::max);
+            rec.add("acc_mean", (k + 1) as f64, mean);
+            rec.add("acc_min", (k + 1) as f64, min);
+            rec.add("acc_max", (k + 1) as f64, max);
+            rec.add("events", (k + 1) as f64, engine.total_events() as f64);
+            rec.add("load", (k + 1) as f64, engine.comm_load());
+        }
+    }
+    rec
+}
+
+/// Full Fig. 11: all strategies.
+pub fn run(cfg: &Fig11Config) -> Vec<(String, Recorder)> {
+    [
+        GraphStrategy::Full,
+        GraphStrategy::Vanilla { delta: 0.05 },
+        GraphStrategy::Vanilla { delta: 0.1 },
+        GraphStrategy::Randomized { delta: 0.1, p_trig: 0.1 },
+        GraphStrategy::RandomSelection { p: 0.5 },
+    ]
+    .into_iter()
+    .map(|s| (s.label(), run_strategy(s, cfg)))
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> Fig11Config {
+        Fig11Config {
+            n_agents: 4,
+            n_edges: 5,
+            rounds: 30,
+            rho: 0.05,
+            lr: 0.05,
+            steps: 2,
+            batch: 8,
+            eval_every: 10,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn graph_training_improves_mean_accuracy() {
+        // use the tiny corpus config via a reduced spec: patch the
+        // strategy runner with a small custom workload
+        let cfg = tiny_cfg();
+        let rec = run_strategy(GraphStrategy::Full, &cfg);
+        let first = rec.get("acc_mean")[0].1;
+        let last = rec.last("acc_mean").unwrap();
+        assert!(last >= first - 0.05, "accuracy decayed {first} -> {last}");
+        assert!(rec.last("events").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn event_strategy_uses_fewer_events_than_full() {
+        let cfg = tiny_cfg();
+        let full = run_strategy(GraphStrategy::Full, &cfg);
+        let ev = run_strategy(GraphStrategy::Vanilla { delta: 0.5 }, &cfg);
+        assert!(
+            ev.last("events").unwrap() < full.last("events").unwrap(),
+            "event {} !< full {}",
+            ev.last("events").unwrap(),
+            full.last("events").unwrap()
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! Fig. 12 — distributed linear regression over a large agent network
+//! (paper: 50 agents / 1762 edges, ρ = 10⁻⁵, Δˣ ∈ [0, 1]).
+//!
+//! Each agent holds one least-squares block of the App. G.1 data; the
+//! decentralized graph engine (Eq. 7) runs with the different
+//! communication strategies and we record the comm-load vs suboptimality
+//! trade-off.
+
+use crate::admm::{GraphAdmm, GraphConfig};
+use crate::data::regress::RegressSpec;
+use crate::experiments::fig11::GraphStrategy;
+use crate::lasso::{LassoConfig, LassoProblem};
+use crate::metrics::Recorder;
+use crate::rng::Pcg64;
+use crate::solver::ExactQuadratic;
+use crate::topology::Graph;
+
+#[derive(Clone, Debug)]
+pub struct Fig12Config {
+    pub n_agents: usize,
+    pub n_edges: usize,
+    pub rows_per_agent: usize,
+    pub dim: usize,
+    pub rounds: usize,
+    pub rho: f64,
+    pub seed: u64,
+}
+
+impl Default for Fig12Config {
+    fn default() -> Self {
+        // Tab. 8: N = 50, rho = 1e-5, 17k iterations. The paper's 1762
+        // edges exceed the simple-graph max (1225); we use 1100 (dense).
+        // Default rounds scaled to 2000 for tractability; --rounds 17000
+        // reproduces the paper's horizon.
+        Fig12Config {
+            n_agents: 50,
+            n_edges: 1100,
+            rows_per_agent: 12,
+            dim: 20,
+            rounds: 2000,
+            rho: 1e-5,
+            seed: 0,
+        }
+    }
+}
+
+/// Run one strategy; series: events, suboptimality of the network mean.
+pub fn run_strategy(
+    prob: &LassoProblem,
+    fstar: f64,
+    graph: &Graph,
+    strategy: GraphStrategy,
+    cfg: &Fig12Config,
+) -> Recorder {
+    let trigger = match strategy {
+        GraphStrategy::Vanilla { delta } => crate::comm::Trigger::vanilla(delta),
+        GraphStrategy::Randomized { delta, p_trig } => {
+            crate::comm::Trigger::randomized(delta, p_trig)
+        }
+        GraphStrategy::RandomSelection { p } => {
+            crate::comm::Trigger::participation(p)
+        }
+        GraphStrategy::Full => crate::comm::Trigger::Always,
+    };
+    let gcfg = GraphConfig {
+        rho: cfg.rho,
+        rounds: cfg.rounds,
+        trigger_x: trigger,
+        ..Default::default()
+    };
+    let mut engine: GraphAdmm<f64> =
+        GraphAdmm::new(gcfg, graph.clone(), vec![0.0; prob.dim]);
+    let mut solver = ExactQuadratic::new(&prob.blocks);
+    let mut rng = Pcg64::seed_stream(cfg.seed, 1313);
+    let mut rec = Recorder::new();
+    let eval_every = (cfg.rounds / 100).max(1);
+    for k in 0..cfg.rounds {
+        engine.round(&mut solver, &mut rng);
+        if (k + 1) % eval_every == 0 || k + 1 == cfg.rounds {
+            let sub = (prob.objective(&engine.mean_x()) - fstar).max(1e-16);
+            rec.add("subopt", (k + 1) as f64, sub);
+            rec.add("events", (k + 1) as f64, engine.total_events() as f64);
+            rec.add("disagreement", (k + 1) as f64, engine.disagreement());
+        }
+    }
+    rec
+}
+
+/// Full Fig. 12 comparison.
+pub fn run(cfg: &Fig12Config) -> Vec<(String, Recorder)> {
+    let mut rng = Pcg64::seed_stream(cfg.seed, 1414);
+    let prob = LassoProblem::generate(
+        &LassoConfig {
+            spec: RegressSpec {
+                n_agents: cfg.n_agents,
+                rows_per_agent: cfg.rows_per_agent,
+                dim: cfg.dim,
+                ..Default::default()
+            },
+            lambda: 0.0,
+        },
+        &mut rng,
+    );
+    let (_, fstar) = prob.reference_solution(&mut rng);
+    let graph = Graph::random_connected(cfg.n_agents, cfg.n_edges, &mut rng);
+    [
+        GraphStrategy::Full,
+        GraphStrategy::Vanilla { delta: 0.01 },
+        GraphStrategy::Vanilla { delta: 0.1 },
+        GraphStrategy::Randomized { delta: 0.1, p_trig: 0.1 },
+        GraphStrategy::RandomSelection { p: 0.5 },
+    ]
+    .into_iter()
+    .map(|s| (s.label(), run_strategy(&prob, fstar, &graph, s, cfg)))
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (Fig12Config, LassoProblem, f64, Graph) {
+        let cfg = Fig12Config {
+            n_agents: 6,
+            n_edges: 9,
+            rows_per_agent: 10,
+            dim: 5,
+            rounds: 800,
+            rho: 0.05,
+            seed: 1,
+        };
+        let mut rng = Pcg64::seed(2);
+        let prob = LassoProblem::generate(
+            &LassoConfig {
+                spec: RegressSpec {
+                    n_agents: cfg.n_agents,
+                    rows_per_agent: cfg.rows_per_agent,
+                    dim: cfg.dim,
+                    ..Default::default()
+                },
+                lambda: 0.0,
+            },
+            &mut rng,
+        );
+        let (_, fstar) = prob.reference_solution(&mut rng);
+        let graph =
+            Graph::random_connected(cfg.n_agents, cfg.n_edges, &mut rng);
+        (cfg, prob, fstar, graph)
+    }
+
+    #[test]
+    fn full_comm_converges_decentralized() {
+        let (cfg, prob, fstar, graph) = small();
+        let rec =
+            run_strategy(&prob, fstar, &graph, GraphStrategy::Full, &cfg);
+        let last = rec.last("subopt").unwrap();
+        let first = rec.get("subopt")[0].1;
+        assert!(last < 0.05 * first, "subopt {first:.3e} -> {last:.3e}");
+        assert!(rec.last("disagreement").unwrap() < 0.1);
+    }
+
+    #[test]
+    fn event_based_saves_events_at_similar_accuracy() {
+        let (cfg, prob, fstar, graph) = small();
+        let full =
+            run_strategy(&prob, fstar, &graph, GraphStrategy::Full, &cfg);
+        let ev = run_strategy(
+            &prob,
+            fstar,
+            &graph,
+            GraphStrategy::Vanilla { delta: 1e-3 },
+            &cfg,
+        );
+        assert!(
+            ev.last("events").unwrap() < full.last("events").unwrap(),
+            "event {} !< full {}",
+            ev.last("events").unwrap(),
+            full.last("events").unwrap()
+        );
+        // within an order of magnitude of full-comm accuracy
+        assert!(ev.last("subopt").unwrap() < 100.0 * full.last("subopt").unwrap() + 1e-2);
+    }
+}

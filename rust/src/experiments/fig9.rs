@@ -1,0 +1,258 @@
+//! Fig. 9 — communication load vs suboptimality `|f − f*|` for distributed
+//! linear regression (λ = 0, α = 1.5) and LASSO (λ = 0.1) on the
+//! App. G.1 mixed-distribution data (N = 50, 50 iterations).
+//!
+//! Series per method: trajectory of (cumulative events, |f − f*|).
+
+use crate::admm::{ConsensusAdmm, ConsensusConfig};
+use crate::comm::Trigger;
+use crate::data::regress::RegressSpec;
+use crate::lasso::{LassoConfig, LassoProblem};
+use crate::metrics::Recorder;
+use crate::rng::Pcg64;
+use crate::solver::{ExactQuadratic, IdentityProx, L1Prox, ServerProx};
+
+#[derive(Clone, Debug)]
+pub struct Fig9Config {
+    pub n_agents: usize,
+    pub rows_per_agent: usize,
+    pub dim: usize,
+    pub rounds: usize,
+    pub rho: f64,
+    pub alpha: f64,
+    pub seed: u64,
+}
+
+impl Default for Fig9Config {
+    fn default() -> Self {
+        // Tab. 5: N = 50, rho = 1, 50 iterations.
+        Fig9Config {
+            n_agents: 50,
+            rows_per_agent: 12,
+            dim: 20,
+            rounds: 50,
+            rho: 1.0,
+            alpha: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Methods compared in Fig. 9.
+#[derive(Clone, Copy, Debug)]
+pub enum ConvexAlgo {
+    Alg1Vanilla { delta: f64 },
+    Alg1Rand { delta: f64, p_trig: f64 },
+    /// Random participation at rate p (FedADMM-style sampling).
+    RandomSelection { p: f64 },
+    Full,
+}
+
+impl ConvexAlgo {
+    pub fn label(&self) -> String {
+        match self {
+            ConvexAlgo::Alg1Vanilla { delta } => format!("Alg.1-Vanilla(Δ={delta:.0e})"),
+            ConvexAlgo::Alg1Rand { delta, p_trig } => {
+                format!("Alg.1-Rand(Δ={delta:.0e},p={p_trig})")
+            }
+            ConvexAlgo::RandomSelection { p } => format!("Random(p={p})"),
+            ConvexAlgo::Full => "Full".into(),
+        }
+    }
+
+    fn triggers(&self) -> (Trigger, Trigger) {
+        match *self {
+            ConvexAlgo::Alg1Vanilla { delta } => {
+                (Trigger::vanilla(delta), Trigger::vanilla(delta))
+            }
+            ConvexAlgo::Alg1Rand { delta, p_trig } => (
+                Trigger::randomized(delta, p_trig),
+                Trigger::randomized(delta, p_trig),
+            ),
+            ConvexAlgo::RandomSelection { p } => {
+                (Trigger::participation(p), Trigger::participation(p))
+            }
+            ConvexAlgo::Full => (Trigger::Always, Trigger::Always),
+        }
+    }
+}
+
+/// Run one method on one problem; series: `events(round)` and
+/// `subopt(round)` = f(z) − f*.
+pub fn run_convex(
+    prob: &LassoProblem,
+    fstar: f64,
+    algo: ConvexAlgo,
+    cfg: &Fig9Config,
+) -> Recorder {
+    let mut rec = Recorder::new();
+    let (td, tz) = algo.triggers();
+    let engine_cfg = ConsensusConfig {
+        rho: cfg.rho,
+        alpha: cfg.alpha,
+        rounds: cfg.rounds,
+        trigger_d: td,
+        trigger_z: tz,
+        ..Default::default()
+    };
+    let mut engine: ConsensusAdmm<f64> =
+        ConsensusAdmm::new(engine_cfg, prob.n_agents(), vec![0.0; prob.dim]);
+    let mut solver = ExactQuadratic::new(&prob.blocks);
+    let mut rng = Pcg64::seed_stream(cfg.seed, 909);
+    let mut prox_l1 = L1Prox { lambda: prob.lambda };
+    let mut prox_id = IdentityProx;
+    for k in 0..cfg.rounds {
+        let prox: &mut dyn ServerProx<f64> = if prob.lambda > 0.0 {
+            &mut prox_l1
+        } else {
+            &mut prox_id
+        };
+        engine.round(&mut solver, prox, &mut rng);
+        let sub = (prob.objective(&engine.z) - fstar).max(1e-16);
+        rec.add("events", (k + 1) as f64, engine.total_events() as f64);
+        rec.add("subopt", (k + 1) as f64, sub);
+        rec.add("load", (k + 1) as f64, engine.comm_load());
+    }
+    rec
+}
+
+/// Full Fig. 9: both panels (linear regression and LASSO), all methods.
+/// Returns (panel label, method label, Recorder) triples.
+pub fn run(cfg: &Fig9Config) -> Vec<(String, String, Recorder)> {
+    let mut out = Vec::new();
+    for (panel, lambda, alpha) in
+        [("linreg", 0.0, 1.5), ("lasso", 0.1, 1.0)]
+    {
+        let mut rng = Pcg64::seed_stream(cfg.seed, 808);
+        let prob = LassoProblem::generate(
+            &LassoConfig {
+                spec: RegressSpec {
+                    n_agents: cfg.n_agents,
+                    rows_per_agent: cfg.rows_per_agent,
+                    dim: cfg.dim,
+                    ..Default::default()
+                },
+                lambda,
+            },
+            &mut rng,
+        );
+        let (_, fstar) = prob.reference_solution(&mut rng);
+        let algos = [
+            ConvexAlgo::Full,
+            ConvexAlgo::Alg1Vanilla { delta: 1e-3 },
+            ConvexAlgo::Alg1Vanilla { delta: 1e-2 },
+            ConvexAlgo::Alg1Rand { delta: 1e-2, p_trig: 0.1 },
+            ConvexAlgo::RandomSelection { p: 0.5 },
+            ConvexAlgo::RandomSelection { p: 0.8 },
+        ];
+        let mut panel_cfg = cfg.clone();
+        panel_cfg.alpha = alpha;
+        for algo in algos {
+            let rec = run_convex(&prob, fstar, algo, &panel_cfg);
+            out.push((panel.to_string(), algo.label(), rec));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> Fig9Config {
+        Fig9Config {
+            n_agents: 8,
+            rows_per_agent: 8,
+            dim: 6,
+            rounds: 400,
+            ..Default::default()
+        }
+    }
+
+    fn problem(lambda: f64, cfg: &Fig9Config) -> (LassoProblem, f64) {
+        let mut rng = Pcg64::seed(3);
+        let prob = LassoProblem::generate(
+            &LassoConfig {
+                spec: RegressSpec {
+                    n_agents: cfg.n_agents,
+                    rows_per_agent: cfg.rows_per_agent,
+                    dim: cfg.dim,
+                    ..Default::default()
+                },
+                lambda,
+            },
+            &mut rng,
+        );
+        let (_, fstar) = prob.reference_solution(&mut rng);
+        (prob, fstar)
+    }
+
+    #[test]
+    fn full_comm_drives_subopt_to_zero_linreg() {
+        let cfg = small_cfg();
+        let (prob, fstar) = problem(0.0, &cfg);
+        let rec = run_convex(&prob, fstar, ConvexAlgo::Full, &cfg);
+        let first = rec.get("subopt")[0].1;
+        let last = rec.last("subopt").unwrap();
+        assert!(last < 1e-5 || last < 1e-4 * first, "suboptimality {last}");
+    }
+
+    #[test]
+    fn full_comm_drives_subopt_to_zero_lasso() {
+        let cfg = small_cfg();
+        let (prob, fstar) = problem(0.1, &cfg);
+        let rec = run_convex(&prob, fstar, ConvexAlgo::Full, &cfg);
+        let first = rec.get("subopt")[0].1;
+        let last = rec.last("subopt").unwrap();
+        assert!(last < 1e-5 || last < 1e-4 * first, "suboptimality {last}");
+    }
+
+    #[test]
+    fn event_based_beats_random_selection_tradeoff() {
+        // The Fig. 9 headline: at comparable (or lower) communication,
+        // event-based reaches lower suboptimality than random selection.
+        let cfg = Fig9Config { rounds: 80, ..small_cfg() };
+        let (prob, fstar) = problem(0.1, &cfg);
+        let ev =
+            run_convex(&prob, fstar, ConvexAlgo::Alg1Vanilla { delta: 1e-2 }, &cfg);
+        let ev_events = ev.last("events").unwrap();
+        let ev_sub = ev.last("subopt").unwrap();
+        // match random participation to the event budget (averaged over
+        // seeds to de-noise the Bernoulli sampling)
+        let p = (ev_events / (2.0 * cfg.n_agents as f64 * cfg.rounds as f64))
+            .clamp(0.05, 1.0);
+        let mut rs_sub = 0.0;
+        for seed in 0..3u64 {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            let rs = run_convex(
+                &prob,
+                fstar,
+                ConvexAlgo::RandomSelection { p },
+                &c,
+            );
+            rs_sub += rs.last("subopt").unwrap() / 3.0;
+        }
+        assert!(
+            ev_sub < rs_sub,
+            "event {ev_sub:.3e} !< random {rs_sub:.3e} (p={p:.2})"
+        );
+    }
+
+    #[test]
+    fn over_relaxation_accelerates_linreg() {
+        let cfg = small_cfg();
+        let (prob, fstar) = problem(0.0, &cfg);
+        let mut cfg15 = cfg.clone();
+        cfg15.alpha = 1.5;
+        let rec1 = run_convex(&prob, fstar, ConvexAlgo::Full, &cfg);
+        let rec15 = run_convex(&prob, fstar, ConvexAlgo::Full, &cfg15);
+        // compare suboptimality at mid-run
+        let s1 = rec1.get("subopt")[25].1;
+        let s15 = rec15.get("subopt")[25].1;
+        assert!(
+            s15 < s1 * 2.0,
+            "alpha=1.5 should not be much slower: {s15:.2e} vs {s1:.2e}"
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! Experiment harness — one module per paper table/figure (DESIGN.md §6).
+//!
+//! Each experiment regenerates the corresponding table rows / figure
+//! series on stdout and writes CSV/JSON under `results/`.  Invoke via
+//! `deluxe exp <id>` or the benches.
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig9;
+pub mod nn;
+pub mod rates;
+
+pub use nn::{NnExperimentConfig, NnWorkload};

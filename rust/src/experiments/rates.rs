@@ -1,0 +1,246 @@
+//! Convergence-rate validation (Cor. 2.2 / Thm. 4.1).
+//!
+//! On strongly convex quadratic consensus instances with known `(m, L, κ)`
+//! we measure the empirical linear rate and the Δ-induced error floor and
+//! compare against the paper's symbolic bounds:
+//!
+//! * rate ≤ `1 − α/(4 κ^{ε+1/2})` (accelerated: scales with `1/√κ`),
+//! * floor `|ξ_k − ξ*| = O(κ Δ)` for `ε = 0, α = 1`.
+
+use crate::admm::{GeneralAdmm, GeneralConfig, QuadraticF, ZProx};
+use crate::linalg::Matrix;
+use crate::metrics::Recorder;
+use crate::rng::{Pcg64, Rng};
+
+#[derive(Clone, Debug)]
+pub struct RatesConfig {
+    pub dim: usize,
+    pub rows: usize,
+    pub rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for RatesConfig {
+    fn default() -> Self {
+        RatesConfig { dim: 8, rows: 60, rounds: 400, seed: 0 }
+    }
+}
+
+pub struct RateResult {
+    pub kappa: f64,
+    pub measured_rate: f64,
+    pub bound_rate: f64,
+    pub delta: f64,
+    pub floor: f64,
+    pub floor_bound: f64,
+    pub recorder: Recorder,
+}
+
+/// Build a strongly-convex least-squares consensus instance and run Alg. 2
+/// with step-size ρ = √(mL) (ε = 0), measuring rate and floor.
+pub fn measure(delta: f64, alpha: f64, cfg: &RatesConfig) -> RateResult {
+    let mut rng = Pcg64::seed_stream(cfg.seed, 1515);
+    let d = Matrix::randn(cfg.rows, cfg.dim, &mut rng);
+    let xtrue: Vec<f64> = (0..cfg.dim).map(|_| rng.normal()).collect();
+    let b = d.matvec(&xtrue);
+    let f = QuadraticF::least_squares(&d, &b);
+
+    let l = d.sigma_max(300, &mut rng).powi(2);
+    let m = d.sigma_min(300, &mut rng).powi(2);
+    let kappa = l / m;
+    let rho = (m * l).sqrt();
+
+    let mut gcfg = GeneralConfig {
+        rho,
+        alpha,
+        rounds: cfg.rounds,
+        ..Default::default()
+    };
+    if delta > 0.0 {
+        gcfg = gcfg.with_uniform_delta(delta);
+    }
+    let mut eng = GeneralAdmm::new(
+        gcfg,
+        Matrix::eye(cfg.dim),
+        vec![0.0; cfg.dim],
+        f,
+        ZProx::diag(-1.0, 0.0),
+        vec![0.0; cfg.dim],
+        vec![0.0; cfg.dim],
+    );
+    // ξ* = (s*, u*) = (−x*, 0) for the consensus instance with g = 0.
+    let s_star: Vec<f64> = xtrue.iter().map(|v| -v).collect();
+    let u_star = vec![0.0; cfg.dim];
+    let e0 = eng.xi_dist(&s_star, &u_star);
+    let mut rec = Recorder::new();
+    let mut errs = Vec::with_capacity(cfg.rounds);
+    for k in 0..cfg.rounds {
+        eng.round(&mut rng);
+        let e = eng.xi_dist(&s_star, &u_star);
+        errs.push(e);
+        rec.add("xi_err", (k + 1) as f64, e.max(1e-18));
+    }
+    // empirical linear-phase rate: fit over rounds where err > 10x floor
+    let floor = errs[cfg.rounds / 2..]
+        .iter()
+        .cloned()
+        .fold(f64::INFINITY, f64::min)
+        .max(1e-16);
+    let lin_end = errs
+        .iter()
+        .position(|&e| e < 100.0 * floor)
+        .unwrap_or(errs.len() - 1)
+        .max(5);
+    let measured_rate = (errs[lin_end - 1] / e0).powf(1.0 / lin_end as f64);
+    let bound_rate = 1.0 - alpha / (4.0 * kappa.sqrt());
+    // Cor 2.2 floor bound (ε = 0): |ξ| ≤ 8 κ Δ_total; our six lines give
+    // Δ_total = 6 Δ.
+    let floor_bound = 8.0 * kappa * 6.0 * delta;
+    RateResult {
+        kappa,
+        measured_rate,
+        bound_rate,
+        delta,
+        floor,
+        floor_bound,
+        recorder: rec,
+    }
+}
+
+/// Sweep Δ to expose the floor ∝ κΔ trend (returns one result per Δ).
+pub fn sweep_deltas(cfg: &RatesConfig) -> Vec<RateResult> {
+    [0.0, 1e-6, 1e-5, 1e-4, 1e-3]
+        .into_iter()
+        .map(|d| measure(d, 1.0, cfg))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_rate_beats_thm41_bound() {
+        let cfg = RatesConfig::default();
+        let res = measure(0.0, 1.0, &cfg);
+        assert!(
+            res.measured_rate <= res.bound_rate + 0.02,
+            "measured {} vs bound {} (kappa {})",
+            res.measured_rate,
+            res.bound_rate,
+            res.kappa
+        );
+        assert!(res.measured_rate < 1.0);
+    }
+
+    #[test]
+    fn floor_scales_with_delta_and_respects_bound() {
+        let cfg = RatesConfig { rounds: 600, ..Default::default() };
+        let results = sweep_deltas(&cfg);
+        // floors should be (weakly) increasing in Delta
+        for w in results.windows(2) {
+            assert!(
+                w[0].floor <= w[1].floor * 10.0 + 1e-12,
+                "floor not monotone: {} then {}",
+                w[0].floor,
+                w[1].floor
+            );
+        }
+        // and every floor must satisfy the Cor 2.2 bound
+        for r in &results[1..] {
+            assert!(
+                r.floor <= r.floor_bound,
+                "floor {} > bound {} at delta {}",
+                r.floor,
+                r.floor_bound,
+                r.delta
+            );
+        }
+    }
+
+    #[test]
+    fn over_relaxation_within_thm41_window_converges() {
+        let cfg = RatesConfig { rounds: 300, ..Default::default() };
+        for alpha in [0.7, 1.0, 1.5, 1.9] {
+            let res = measure(0.0, alpha, &cfg);
+            assert!(
+                res.measured_rate < 1.0,
+                "alpha {alpha}: rate {}",
+                res.measured_rate
+            );
+        }
+    }
+}
+
+/// App. F (Cor. F.1/F.2) — diminishing thresholds give *exact* convergence.
+#[cfg(test)]
+mod appf_tests {
+    use crate::admm::{ConsensusAdmm, ConsensusConfig};
+    use crate::comm::Trigger;
+    use crate::rng::Pcg64;
+    use crate::solver::{IdentityProx, LocalSolver};
+
+    struct Quad {
+        w: Vec<f64>,
+        c: Vec<f64>,
+    }
+    impl LocalSolver<f64> for Quad {
+        fn solve(
+            &mut self,
+            agent: usize,
+            anchor: &[f64],
+            rho: f64,
+            _r: &mut Pcg64,
+        ) -> Vec<f64> {
+            vec![
+                (self.w[agent] * self.c[agent] + rho * anchor[0])
+                    / (self.w[agent] + rho),
+            ]
+        }
+        fn dim(&self) -> usize {
+            1
+        }
+        fn n_agents(&self) -> usize {
+            self.w.len()
+        }
+    }
+
+    fn run(trigger: Trigger, rounds: usize) -> f64 {
+        let w = vec![1.0, 2.0, 0.5, 3.0];
+        let c = vec![-1.0, 4.0, 10.0, 0.5];
+        let opt = w.iter().zip(&c).map(|(a, b)| a * b).sum::<f64>()
+            / w.iter().sum::<f64>();
+        let mut solver = Quad { w, c };
+        let cfg = ConsensusConfig {
+            rounds,
+            trigger_d: trigger,
+            trigger_z: trigger,
+            ..Default::default()
+        };
+        let mut eng = ConsensusAdmm::new(cfg, 4, vec![0.0]);
+        let mut prox = IdentityProx;
+        let mut rng = Pcg64::seed(33);
+        for _ in 0..rounds {
+            eng.round(&mut solver, &mut prox, &mut rng);
+        }
+        (eng.z[0] - opt).abs()
+    }
+
+    #[test]
+    fn decaying_threshold_converges_exactly_unlike_fixed() {
+        // fixed Δ leaves a floor; Δ_k = Δ0/(k+1)² drives the error to ~0
+        // (Cor. F.1) while still saving early communication.
+        let err_fixed = run(Trigger::vanilla(0.05), 800);
+        let err_decay = run(Trigger::decaying(0.05, 2.0), 800);
+        assert!(err_decay < 1e-6, "decaying err {err_decay}");
+        assert!(err_decay < err_fixed, "{err_decay} !< {err_fixed}");
+    }
+
+    #[test]
+    fn faster_decay_converges_faster() {
+        // Cor. F.2: error = O(1/k^t) — larger t, smaller error at fixed k.
+        let e1 = run(Trigger::decaying(0.5, 1.0), 300);
+        let e3 = run(Trigger::decaying(0.5, 3.0), 300);
+        assert!(e3 <= e1 + 1e-12, "t=3 err {e3} !<= t=1 err {e1}");
+    }
+}

@@ -1,0 +1,50 @@
+//! # DELA — Distributed Event-based Learning via ADMM
+//!
+//! A production-shaped reproduction of *“Distributed Event-Based Learning
+//! via ADMM”* (Er, Trimpe, Muehlebach — ICML 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack
+//! (see `DESIGN.md`):
+//!
+//! * [`comm`] — the paper's event-based communication protocol (vanilla and
+//!   randomized triggers), packet-drop channel simulation and periodic
+//!   resets (Sec. 2, App. E).
+//! * [`admm`] — Alg. 1 (consensus), Alg. 2 (general `Ax + Bz = c`),
+//!   consensus-over-graph (Eq. 7) and the sharing problem (App. A).
+//! * [`baselines`] — FedAvg, FedProx, SCAFFOLD and FedADMM under an
+//!   identical local-computation budget (Sec. 5).
+//! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
+//!   artifacts from `artifacts/` (Python never runs on the request path).
+//! * [`coordinator`] — the threaded leader/agent runtime.
+//! * Substrates built from scratch for the offline environment: [`rng`],
+//!   [`jsonio`], [`linalg`], [`data`], [`topology`], [`metrics`],
+//!   [`benchlib`], [`proptest`], [`cli`].
+
+pub mod benchlib;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod jsonio;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod proptest;
+pub mod rng;
+pub mod topology;
+
+pub mod admm;
+pub mod baselines;
+pub mod coordinator;
+pub mod experiments;
+pub mod lasso;
+pub mod runtime;
+pub mod solver;
+
+/// Commonly used items.
+pub mod prelude {
+    pub use crate::comm::{Trigger, TriggerState};
+    pub use crate::linalg::Matrix;
+    pub use crate::metrics::Recorder;
+    pub use crate::rng::{Pcg64, Rng};
+}

@@ -1,0 +1,445 @@
+//! Dense linear-algebra substrate (f64).
+//!
+//! Supplies what the paper's convex experiments need: row-major dense
+//! matrices, matvec/gemm, Cholesky factorization (the cached
+//! `(AᵀA + ρI)⁻¹` of the exact LASSO x-update), Gram matrices, norms and
+//! power-iteration spectral estimates (for `κ = L σ̄²(A)/(m σ̲²(A))`,
+//! Thm. 4.1).
+
+use crate::rng::Rng;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Matrix { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut impl Rng) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// `y = Aᵀ x`.
+    pub fn tmatvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "tmatvec dim mismatch");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let xi = x[i];
+            for (yj, a) in y.iter_mut().zip(row.iter()) {
+                *yj += a * xi;
+            }
+        }
+        y
+    }
+
+    /// `C = A B` (naive ikj loop — cache-friendly for row-major).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul dim mismatch");
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow =
+                    &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+        c
+    }
+
+    /// Gram matrix `AᵀA`.
+    pub fn gram(&self) -> Matrix {
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for a in 0..n {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in a..n {
+                    g[(a, b)] += ra * row[b];
+                }
+            }
+        }
+        for a in 0..n {
+            for b in 0..a {
+                g[(a, b)] = g[(b, a)];
+            }
+        }
+        g
+    }
+
+    /// Add `c` to the diagonal in place.
+    pub fn add_diag(&mut self, c: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += c;
+        }
+    }
+
+    /// Largest singular value (power iteration on `AᵀA`).
+    pub fn sigma_max(&self, iters: usize, rng: &mut impl Rng) -> f64 {
+        let n = self.cols;
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        let mut lam = 0.0;
+        for _ in 0..iters {
+            let av = self.matvec(&v);
+            let mut w = self.tmatvec(&av);
+            lam = norm2(&w);
+            if lam == 0.0 {
+                return 0.0;
+            }
+            normalize(&mut w);
+            v = w;
+        }
+        lam.sqrt()
+    }
+
+    /// Smallest singular value via inverse power iteration on
+    /// `AᵀA + εI` (requires full column rank for a meaningful answer).
+    pub fn sigma_min(&self, iters: usize, rng: &mut impl Rng) -> f64 {
+        let mut g = self.gram();
+        let eps = 1e-12 * (1.0 + g.data.iter().cloned().fold(0.0, f64::max));
+        g.add_diag(eps);
+        let chol = Cholesky::factor(&g).expect("gram not PD");
+        let n = self.cols;
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        let mut mu = 0.0;
+        for _ in 0..iters {
+            let mut w = chol.solve(&v);
+            mu = norm2(&w);
+            normalize(&mut w);
+            v = w;
+        }
+        // mu approximates 1/lambda_min(G)
+        (1.0 / mu).max(0.0).sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Cholesky factorization `M = L Lᵀ` of a symmetric positive-definite
+/// matrix; backs the exact quadratic prox solves.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    n: usize,
+    l: Vec<f64>, // lower triangle, row-major full storage
+}
+
+impl Cholesky {
+    pub fn factor(m: &Matrix) -> Option<Cholesky> {
+        assert_eq!(m.rows, m.cols, "cholesky needs square");
+        let n = m.rows;
+        let mut l = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = m[(i, j)];
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None; // not PD
+                    }
+                    l[i * n + i] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Some(Cholesky { n, l })
+    }
+
+    /// Solve `M x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        // forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[i * n + k] * y[k];
+            }
+            y[i] = sum / self.l[i * n + i];
+        }
+        // backward: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= self.l[k * n + i] * x[k];
+            }
+            x[i] = sum / self.l[i * n + i];
+        }
+        x
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector helpers (used across admm/comm/lasso)
+// ---------------------------------------------------------------------------
+
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+pub fn norm2_f32(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+pub fn dist2_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64) * ((x - y) as f64))
+        .sum::<f64>()
+        .sqrt()
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+pub fn normalize(x: &mut [f64]) {
+    let n = norm2(x);
+    if n > 0.0 {
+        for v in x.iter_mut() {
+            *v /= n;
+        }
+    }
+}
+
+/// Elementwise soft-threshold — the prox of `tau * |.|_1` (mirrors the L1
+/// Pallas kernel; differential-tested against the artifact in
+/// `tests/pjrt_roundtrip.rs`).
+pub fn soft_threshold(v: &[f64], tau: f64) -> Vec<f64> {
+    v.iter()
+        .map(|&x| x.signum() * (x.abs() - tau).max(0.0))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matvec_identity() {
+        let m = Matrix::eye(4);
+        let x = vec![1.0, -2.0, 3.0, 0.5];
+        assert_eq!(m.matvec(&x), x);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(m.tmatvec(&[1.0, 1.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_vs_matvec() {
+        let mut rng = Pcg64::seed(1);
+        let a = Matrix::randn(5, 7, &mut rng);
+        let b = Matrix::randn(7, 3, &mut rng);
+        let c = a.matmul(&b);
+        for j in 0..3 {
+            let col: Vec<f64> = (0..7).map(|k| b[(k, j)]).collect();
+            let want = a.matvec(&col);
+            for i in 0..5 {
+                assert!((c[(i, j)] - want[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed(2);
+        let a = Matrix::randn(4, 6, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let mut rng = Pcg64::seed(3);
+        let a = Matrix::randn(6, 4, &mut rng);
+        let g = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        for (x, y) in g.data.iter().zip(&g2.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_solve_roundtrip() {
+        let mut rng = Pcg64::seed(4);
+        let a = Matrix::randn(8, 5, &mut rng);
+        let mut g = a.gram();
+        g.add_diag(0.5);
+        let chol = Cholesky::factor(&g).unwrap();
+        let x_true: Vec<f64> = (0..5).map(|i| i as f64 - 2.0).collect();
+        let b = g.matvec(&x_true);
+        let x = chol.solve(&b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-9, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Matrix::from_rows(vec![vec![0.0, 1.0], vec![1.0, 0.0]]);
+        assert!(Cholesky::factor(&m).is_none());
+    }
+
+    #[test]
+    fn sigma_bounds_on_identity() {
+        let mut rng = Pcg64::seed(5);
+        let m = Matrix::eye(6);
+        assert!((m.sigma_max(50, &mut rng) - 1.0).abs() < 1e-6);
+        assert!((m.sigma_min(50, &mut rng) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sigma_max_dominates_matvec_gain() {
+        let mut rng = Pcg64::seed(6);
+        let a = Matrix::randn(20, 10, &mut rng);
+        let smax = a.sigma_max(100, &mut rng);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+            let gain = norm2(&a.matvec(&x)) / norm2(&x);
+            assert!(gain <= smax * (1.0 + 1e-6), "gain {gain} > {smax}");
+        }
+    }
+
+    #[test]
+    fn sigma_min_is_lower_bound() {
+        let mut rng = Pcg64::seed(7);
+        let a = Matrix::randn(30, 8, &mut rng);
+        let smin = a.sigma_min(200, &mut rng);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+            let gain = norm2(&a.matvec(&x)) / norm2(&x);
+            assert!(gain >= smin * (1.0 - 1e-3), "gain {gain} < {smin}");
+        }
+    }
+
+    #[test]
+    fn soft_threshold_known() {
+        let out = soft_threshold(&[-0.5, -0.1, 0.0, 0.1, 0.5], 0.2);
+        let want = [-0.3, 0.0, 0.0, 0.0, 0.3];
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn vector_ops() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        assert!((dist2(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-15);
+        assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-15);
+        let mut y = vec![1.0, 1.0];
+        axpy(&mut y, 2.0, &[1.0, -1.0]);
+        assert_eq!(y, vec![3.0, -1.0]);
+        let mut v = vec![0.0, 3.0, 4.0];
+        normalize(&mut v);
+        assert!((norm2(&v) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn f32_helpers() {
+        assert!((norm2_f32(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert!((dist2_f32(&[0.0], &[2.0]) - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,474 @@
+//! `deluxe` — launcher/CLI for the DELA reproduction.
+//!
+//! ```text
+//! deluxe exp <id> [flags]     regenerate a paper table/figure
+//! deluxe train [flags]        e2e federated training (threaded runtime)
+//! deluxe info                 show artifact manifest + configs
+//! deluxe help
+//! ```
+
+use anyhow::Result;
+use deluxe::cli::Args;
+use deluxe::config::RunConfig;
+use deluxe::experiments::{fig10, fig11, fig12, fig9, nn, rates};
+use deluxe::jsonio::Json;
+use deluxe::metrics::{fmt_opt, Recorder, Table};
+use deluxe::runtime::{PjrtRuntime, Variant};
+
+const USAGE: &str = "\
+deluxe — Distributed Event-based Learning via ADMM (ICML 2025 reproduction)
+
+USAGE:
+  deluxe exp <id> [--rounds N] [--agents N] [--seed S] [--backend native|pjrt|pjrt-ref]
+             [--results DIR] [--artifacts DIR]
+  deluxe train [--rounds N] [--delta D] [--seed S]     threaded e2e run
+  deluxe info                                          artifact manifest
+  deluxe help
+
+EXPERIMENT IDS (DESIGN.md §6):
+  tab1-mnist tab1-cifar   Tab. 1  events-to-target-accuracy
+  fig3                    Fig. 3  accuracy + comm load per round (CIFAR)
+  fig8-mnist fig8-cifar   Fig. 8  Δ-sweep trade-off curves
+  fig9                    Fig. 9  linreg + LASSO comm/suboptimality
+  fig10                   Fig.10  packet drops & reset period
+  fig11                   Fig.11  MNIST over a graph
+  fig12                   Fig.12  linreg over a 50-agent graph
+  rates                   Thm 4.1/Cor 2.2 rate + floor validation
+";
+
+fn main() -> Result<()> {
+    let (cmd, args) = Args::from_env();
+    match cmd.as_deref() {
+        Some("exp") => run_exp(&args),
+        Some("train") => run_train(&args),
+        Some("info") => run_info(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn save(rc: &RunConfig, name: &str, rec: &Recorder) -> Result<()> {
+    let csv = rc.results_dir.join(format!("{name}.csv"));
+    rec.to_csv(&csv)?;
+    deluxe::jsonio::write_json(
+        &rc.results_dir.join(format!("{name}.json")),
+        &rec.to_json(),
+    )?;
+    println!("  -> {}", csv.display());
+    Ok(())
+}
+
+/// Resolve the compute backend from `--backend`.
+enum BackendChoice {
+    Native,
+    Pjrt(Variant),
+}
+
+fn backend_choice(args: &Args) -> BackendChoice {
+    match args.str_or("backend", "native") {
+        "pjrt" => BackendChoice::Pjrt(Variant::Pallas),
+        "pjrt-ref" => BackendChoice::Pjrt(Variant::Ref),
+        _ => BackendChoice::Native,
+    }
+}
+
+fn run_exp(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    match id {
+        "tab1-mnist" | "tab1-cifar" => exp_tab1(id, args, &rc),
+        "fig3" => exp_fig3(args, &rc),
+        "fig8-mnist" | "fig8-cifar" => exp_fig8(id, args, &rc),
+        "fig9" => exp_fig9(args, &rc),
+        "fig10" => exp_fig10(args, &rc),
+        "fig11" => exp_fig11(args, &rc),
+        "fig12" => exp_fig12(args, &rc),
+        "rates" => exp_rates(args, &rc),
+        other => {
+            eprintln!("unknown experiment {other:?}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn workload(id: &str, args: &Args, rc: &RunConfig) -> nn::NnWorkload {
+    if id.contains("cifar") {
+        nn::NnWorkload::cifar(rc.seed, args.usize_or("agents", 20))
+    } else {
+        nn::NnWorkload::mnist(rc.seed)
+    }
+}
+
+/// Tab. 2's per-algorithm communication configurations, adapted to the
+/// surrogate workloads.
+fn tab_algos(id: &str) -> Vec<nn::Algo> {
+    use nn::Algo;
+    if id.contains("cifar") {
+        vec![
+            Algo::Alg1Rand { delta_d: 0.5, delta_z: 0.05, p_trig: 0.1 },
+            Algo::Alg1Vanilla { delta_d: 0.5, delta_z: 0.05 },
+            Algo::FedAdmm { part: 0.5 },
+            Algo::FedAvg { part: 0.4 },
+            Algo::FedProx { part: 0.4, mu: 0.1 },
+            Algo::Scaffold { part: 0.4 },
+        ]
+    } else {
+        vec![
+            Algo::Alg1Rand { delta_d: 0.3, delta_z: 0.03, p_trig: 0.1 },
+            Algo::Alg1Vanilla { delta_d: 0.3, delta_z: 0.03 },
+            Algo::FedAdmm { part: 0.6 },
+            Algo::FedAvg { part: 0.6 },
+            Algo::FedProx { part: 0.6, mu: 0.1 },
+            Algo::Scaffold { part: 0.5 },
+        ]
+    }
+}
+
+fn with_backend<R>(
+    args: &Args,
+    f: impl FnOnce(&nn::Backend) -> R,
+) -> Result<R> {
+    match backend_choice(args) {
+        BackendChoice::Native => Ok(f(&nn::Backend::Native)),
+        BackendChoice::Pjrt(variant) => {
+            let rc = RunConfig::from_args(args);
+            let rt = PjrtRuntime::load(&rc.artifacts_dir)?;
+            Ok(f(&nn::Backend::Pjrt(&rt, variant)))
+        }
+    }
+}
+
+fn exp_tab1(id: &str, args: &Args, rc: &RunConfig) -> Result<()> {
+    let w = workload(id, args, rc);
+    let default_rounds = if id.contains("cifar") { 150 } else { 200 };
+    let cfg = nn::NnExperimentConfig {
+        rounds: args.usize_or("rounds", default_rounds),
+        eval_every: 2,
+        seed: rc.seed,
+    };
+    let targets: Vec<f64> = if id.contains("cifar") {
+        vec![0.60, 0.70, 0.75]
+    } else {
+        vec![0.85, 0.90, 0.95]
+    };
+    println!(
+        "== Tab. 1 ({id}): fewest events to reach target accuracy ==\n\
+         workload: {} agents, {} rounds, backend {}; per-family config\n\
+         grids as in the paper's Tab. 2 (each cell = best grid member)\n",
+        w.n_agents(),
+        cfg.rounds,
+        args.str_or("backend", "native"),
+    );
+    let verbose = args.has("verbose");
+    let rows = with_backend(args, |b| {
+        nn::tab1_families(id.contains("cifar"))
+            .into_iter()
+            .map(|(name, family)| {
+                if verbose {
+                    println!("  {name}:");
+                }
+                let best = nn::family_events_to_targets(
+                    &w, &family, &targets, &cfg, b, verbose,
+                );
+                (name.to_string(), best)
+            })
+            .collect::<Vec<_>>()
+    })?;
+    let mut headers: Vec<String> = vec!["Algorithm".into()];
+    headers.extend(targets.iter().map(|t| format!("{:.0}%", t * 100.0)));
+    let mut table =
+        Table::new(&headers.iter().map(String::as_str).collect::<Vec<_>>());
+    let mut json_rows = Vec::new();
+    for (label, per_target) in &rows {
+        let mut cells = vec![label.clone()];
+        cells.extend(per_target.iter().map(|v| fmt_opt(*v)));
+        table.row(cells);
+        json_rows.push(Json::obj(vec![
+            ("algorithm", Json::Str(label.clone())),
+            (
+                "events",
+                Json::Arr(
+                    per_target
+                        .iter()
+                        .map(|v| v.map(Json::Num).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    println!("{}", table.render());
+    deluxe::jsonio::write_json(
+        &rc.results_dir.join(format!("{id}.json")),
+        &Json::Arr(json_rows),
+    )?;
+    Ok(())
+}
+
+fn exp_fig3(args: &Args, rc: &RunConfig) -> Result<()> {
+    let w = workload("cifar", args, rc);
+    let cfg = nn::NnExperimentConfig {
+        rounds: args.usize_or("rounds", 150),
+        eval_every: 2,
+        seed: rc.seed,
+    };
+    println!("== Fig. 3: accuracy + smoothed comm load per round ==");
+    for algo in tab_algos("cifar") {
+        let rec = with_backend(args, |b| nn::run_algo(&w, algo, &cfg, b))?;
+        let smooth = rec.smoothed("load", 3);
+        let mut out = rec.clone();
+        out.series.insert(
+            "load_smooth3".into(),
+            smooth,
+        );
+        println!(
+            "{:<34} final acc {:.3}  load {:.3}",
+            algo.label(),
+            rec.last("accuracy").unwrap_or(0.0),
+            rec.last("load").unwrap_or(0.0)
+        );
+        save(rc, &format!("fig3_{}", sanitize(&algo.label())), &out)?;
+    }
+    Ok(())
+}
+
+fn exp_fig8(id: &str, args: &Args, rc: &RunConfig) -> Result<()> {
+    let w = workload(id, args, rc);
+    let default_rounds = if id.contains("cifar") { 150 } else { 100 };
+    let cfg = nn::NnExperimentConfig {
+        rounds: args.usize_or("rounds", default_rounds),
+        eval_every: 5,
+        seed: rc.seed,
+    };
+    println!("== Fig. 8 ({id}): Δ-sweep trade-off (events vs final accuracy) ==");
+    let deltas: Vec<f64> = if id.contains("cifar") {
+        vec![0.0, 0.5, 1.0, 2.0, 3.0, 4.0]
+    } else {
+        vec![0.0, 0.5, 1.0, 2.0, 3.0, 5.0, 8.0]
+    };
+    let parts = [0.2, 0.4, 0.6, 0.8, 1.0];
+    let mut rec = Recorder::new();
+    with_backend(args, |b| -> Result<()> {
+        for &d in &deltas {
+            for (name, algo) in [
+                ("alg1_vanilla", nn::Algo::Alg1Vanilla { delta_d: d, delta_z: d * 0.1 }),
+                (
+                    "alg1_rand",
+                    nn::Algo::Alg1Rand { delta_d: d, delta_z: d * 0.1, p_trig: 0.1 },
+                ),
+            ] {
+                let r = nn::run_algo(&w, algo, &cfg, b);
+                let ev = r.last("events").unwrap_or(0.0);
+                let acc = r.last("accuracy").unwrap_or(0.0);
+                rec.add(name, ev, acc);
+                println!("  {name:<13} Δ={d:<5} events {ev:>8.0}  acc {acc:.3}");
+            }
+        }
+        for &p in &parts {
+            for (name, algo) in [
+                ("fedadmm", nn::Algo::FedAdmm { part: p }),
+                ("fedavg", nn::Algo::FedAvg { part: p }),
+                ("fedprox", nn::Algo::FedProx { part: p, mu: 0.1 }),
+                ("scaffold", nn::Algo::Scaffold { part: p }),
+            ] {
+                let r = nn::run_algo(&w, algo, &cfg, b);
+                let ev = r.last("events").unwrap_or(0.0);
+                let acc = r.last("accuracy").unwrap_or(0.0);
+                rec.add(name, ev, acc);
+                println!("  {name:<13} p={p:<5} events {ev:>8.0}  acc {acc:.3}");
+            }
+        }
+        Ok(())
+    })??;
+    save(rc, id, &rec)?;
+    Ok(())
+}
+
+fn exp_fig9(args: &Args, rc: &RunConfig) -> Result<()> {
+    let cfg = fig9::Fig9Config {
+        n_agents: args.usize_or("agents", 50),
+        rounds: args.usize_or("rounds", 50),
+        seed: rc.seed,
+        ..Default::default()
+    };
+    println!("== Fig. 9: comm load vs |f − f*| (linreg α=1.5, LASSO λ=0.1) ==");
+    for (panel, label, rec) in fig9::run(&cfg) {
+        println!(
+            "{panel:<7} {label:<28} events {:>8.0}  subopt {:.3e}",
+            rec.last("events").unwrap_or(0.0),
+            rec.last("subopt").unwrap_or(f64::NAN),
+        );
+        save(rc, &format!("fig9_{panel}_{}", sanitize(&label)), &rec)?;
+    }
+    Ok(())
+}
+
+fn exp_fig10(args: &Args, rc: &RunConfig) -> Result<()> {
+    let cfg = fig10::Fig10Config {
+        n_agents: args.usize_or("agents", 50),
+        rounds: args.usize_or("rounds", 50),
+        drop_rate: args.f64_or("drop", 0.3),
+        seed: rc.seed,
+        ..Default::default()
+    };
+    println!(
+        "== Fig. 10: drops (rate {}) and reset period ==",
+        cfg.drop_rate
+    );
+    for (label, rec) in fig10::run(&cfg) {
+        println!(
+            "{label:<7} subopt {:.3e}  events {:>8.0}",
+            rec.last("subopt").unwrap_or(f64::NAN),
+            rec.last("events").unwrap_or(0.0),
+        );
+        save(rc, &format!("fig10_{}", sanitize(&label)), &rec)?;
+    }
+    Ok(())
+}
+
+fn exp_fig11(args: &Args, rc: &RunConfig) -> Result<()> {
+    let cfg = fig11::Fig11Config {
+        rounds: args.usize_or("rounds", 300),
+        n_agents: args.usize_or("agents", 10),
+        seed: rc.seed,
+        ..Default::default()
+    };
+    println!("== Fig. 11: MNIST over a graph ({} agents) ==", cfg.n_agents);
+    for (label, rec) in fig11::run(&cfg) {
+        println!(
+            "{label:<28} acc {:.3} [{:.3},{:.3}]  events {:>8.0}",
+            rec.last("acc_mean").unwrap_or(0.0),
+            rec.last("acc_min").unwrap_or(0.0),
+            rec.last("acc_max").unwrap_or(0.0),
+            rec.last("events").unwrap_or(0.0),
+        );
+        save(rc, &format!("fig11_{}", sanitize(&label)), &rec)?;
+    }
+    Ok(())
+}
+
+fn exp_fig12(args: &Args, rc: &RunConfig) -> Result<()> {
+    let cfg = fig12::Fig12Config {
+        rounds: args.usize_or("rounds", 2000),
+        n_agents: args.usize_or("agents", 50),
+        seed: rc.seed,
+        ..Default::default()
+    };
+    println!(
+        "== Fig. 12: linreg over a {}-agent graph ==",
+        cfg.n_agents
+    );
+    for (label, rec) in fig12::run(&cfg) {
+        println!(
+            "{label:<28} subopt {:.3e}  events {:>9.0}",
+            rec.last("subopt").unwrap_or(f64::NAN),
+            rec.last("events").unwrap_or(0.0),
+        );
+        save(rc, &format!("fig12_{}", sanitize(&label)), &rec)?;
+    }
+    Ok(())
+}
+
+fn exp_rates(args: &Args, rc: &RunConfig) -> Result<()> {
+    let cfg = rates::RatesConfig {
+        rounds: args.usize_or("rounds", 400),
+        seed: rc.seed,
+        ..Default::default()
+    };
+    println!("== Thm 4.1 / Cor 2.2 validation ==");
+    let mut table = Table::new(&[
+        "Δ", "κ", "measured rate", "bound rate", "floor", "floor bound",
+    ]);
+    for r in rates::sweep_deltas(&cfg) {
+        table.row(vec![
+            format!("{:.0e}", r.delta),
+            format!("{:.1}", r.kappa),
+            format!("{:.5}", r.measured_rate),
+            format!("{:.5}", r.bound_rate),
+            format!("{:.3e}", r.floor),
+            format!("{:.3e}", r.floor_bound),
+        ]);
+        save(rc, &format!("rates_delta{:.0e}", r.delta), &r.recorder)?;
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn run_train(args: &Args) -> Result<()> {
+    use deluxe::comm::Trigger;
+    use deluxe::coordinator::{Coordinator, CoordinatorConfig};
+    let rc = RunConfig::from_args(args);
+    let rounds = args.usize_or("rounds", 60);
+    let delta = args.f64_or("delta", 0.5);
+    let w = nn::NnWorkload::mnist(rc.seed);
+    println!(
+        "threaded e2e training: {} agents (single-class shards), {} rounds, Δ={delta}",
+        w.n_agents(),
+        rounds
+    );
+    let cfg = CoordinatorConfig {
+        rho: w.rho as f32,
+        lr: w.lr,
+        steps: w.steps,
+        batch: w.batch,
+        trigger_d: Trigger::vanilla(delta),
+        trigger_z: Trigger::vanilla(delta * 0.1),
+        seed: rc.seed,
+        ..Default::default()
+    };
+    let init = w.spec.init(&mut deluxe::rng::Pcg64::seed(rc.seed));
+    let mut coord =
+        Coordinator::spawn(cfg, w.spec.clone(), w.shards.clone(), init);
+    for k in 0..rounds {
+        coord.round();
+        if (k + 1) % 10 == 0 {
+            let acc = w.spec.accuracy(&coord.z, &w.test.xs, &w.test.labels);
+            println!("round {:>4}: accuracy {:.3}", k + 1, acc);
+        }
+    }
+    let acc = w.spec.accuracy(&coord.z, &w.test.xs, &w.test.labels);
+    let down = coord.downlink_events();
+    let up = coord.shutdown();
+    println!(
+        "final accuracy {acc:.3}; events up {up} down {down} (full would be {})",
+        rounds * w.n_agents() * 2
+    );
+    Ok(())
+}
+
+fn run_info(args: &Args) -> Result<()> {
+    let rc = RunConfig::from_args(args);
+    let rt = PjrtRuntime::load(&rc.artifacts_dir)?;
+    println!("artifacts: {}", rc.artifacts_dir.display());
+    let mut names: Vec<&String> = rt.manifest.configs.keys().collect();
+    names.sort();
+    for name in names {
+        let c = &rt.manifest.configs[name];
+        println!(
+            "  {name}: layers {:?}, P={}, batch={}, steps={}, {} artifacts",
+            c.layers,
+            c.param_len,
+            c.batch,
+            c.steps,
+            c.artifacts.len()
+        );
+    }
+    Ok(())
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_alphanumeric() { c } else { '_' })
+        .collect()
+}

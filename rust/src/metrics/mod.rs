@@ -1,0 +1,227 @@
+//! Metrics recording substrate.
+//!
+//! Experiments record named series of `(x, y)` points (round vs accuracy,
+//! cumulative communication load, suboptimality, ...) into a [`Recorder`],
+//! which can smooth (the paper's window-3 smoothing of Fig. 3), summarize
+//! and persist to CSV/JSON under `results/`.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::jsonio::Json;
+
+/// Named series of (x, y) points.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub series: BTreeMap<String, Vec<(f64, f64)>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    pub fn add(&mut self, name: &str, x: f64, y: f64) {
+        self.series.entry(name.to_string()).or_default().push((x, y));
+    }
+
+    pub fn get(&self, name: &str) -> &[(f64, f64)] {
+        self.series.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.get(name).last().map(|&(_, y)| y)
+    }
+
+    /// Moving-average smoothing of a series (the paper smooths the
+    /// communication-load curves with window length 3 in Fig. 3).
+    pub fn smoothed(&self, name: &str, window: usize) -> Vec<(f64, f64)> {
+        let pts = self.get(name);
+        let w = window.max(1);
+        pts.iter()
+            .enumerate()
+            .map(|(i, &(x, _))| {
+                let lo = i.saturating_sub(w - 1);
+                let slice = &pts[lo..=i];
+                let mean = slice.iter().map(|&(_, y)| y).sum::<f64>()
+                    / slice.len() as f64;
+                (x, mean)
+            })
+            .collect()
+    }
+
+    /// First x where the series reaches `target` (e.g. rounds-to-accuracy);
+    /// `None` if never reached (the paper's "N/A" entries in Tab. 1).
+    pub fn first_reaching(&self, name: &str, target: f64) -> Option<f64> {
+        self.get(name).iter().find(|&&(_, y)| y >= target).map(|&(x, _)| x)
+    }
+
+    /// Write all series as long-format CSV: `series,x,y`.
+    pub fn to_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "series,x,y")?;
+        for (name, pts) in &self.series {
+            for &(x, y) in pts {
+                writeln!(f, "{name},{x},{y}")?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (name, pts) in &self.series {
+            let arr = Json::Arr(
+                pts.iter()
+                    .map(|&(x, y)| Json::Arr(vec![Json::Num(x), Json::Num(y)]))
+                    .collect(),
+            );
+            obj.insert(name.clone(), arr);
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Fixed-width table printer for regenerating the paper's tables on stdout.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:width$} |", cells[i], width = widths[i]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format an optional count like the paper's Tab. 1 ("N/A" when a target
+/// was never reached).
+pub fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{:.0}", x),
+        None => "N/A".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_get() {
+        let mut r = Recorder::new();
+        r.add("acc", 0.0, 0.1);
+        r.add("acc", 1.0, 0.5);
+        assert_eq!(r.get("acc").len(), 2);
+        assert_eq!(r.last("acc"), Some(0.5));
+        assert_eq!(r.get("missing"), &[]);
+        assert_eq!(r.last("missing"), None);
+    }
+
+    #[test]
+    fn smoothing_window3() {
+        let mut r = Recorder::new();
+        for (i, y) in [0.0, 3.0, 6.0, 9.0].iter().enumerate() {
+            r.add("s", i as f64, *y);
+        }
+        let sm = r.smoothed("s", 3);
+        assert_eq!(sm[0].1, 0.0);
+        assert_eq!(sm[1].1, 1.5);
+        assert_eq!(sm[2].1, 3.0);
+        assert_eq!(sm[3].1, 6.0);
+    }
+
+    #[test]
+    fn first_reaching_and_na() {
+        let mut r = Recorder::new();
+        for (i, y) in [0.2, 0.5, 0.8, 0.9].iter().enumerate() {
+            r.add("acc", (i * 10) as f64, *y);
+        }
+        assert_eq!(r.first_reaching("acc", 0.8), Some(20.0));
+        assert_eq!(r.first_reaching("acc", 0.95), None);
+        assert_eq!(fmt_opt(None), "N/A");
+        assert_eq!(fmt_opt(Some(123.4)), "123");
+    }
+
+    #[test]
+    fn csv_roundtrip_lines() {
+        let mut r = Recorder::new();
+        r.add("a", 1.0, 2.0);
+        r.add("b", 3.0, 4.0);
+        let path = std::env::temp_dir().join("dela_metrics_test/m.csv");
+        r.to_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("series,x,y"));
+        assert!(text.contains("a,1,2"));
+        assert!(text.contains("b,3,4"));
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn json_export() {
+        let mut r = Recorder::new();
+        r.add("a", 1.0, 2.0);
+        let j = r.to_json();
+        assert!(j.get("a").is_some());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Algorithm", "80%"]);
+        t.row(vec!["Alg. 1".into(), "816".into()]);
+        t.row(vec!["FedAvg".into(), "N/A".into()]);
+        let s = t.render();
+        assert!(s.contains("| Algorithm | 80% |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+}

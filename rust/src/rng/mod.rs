@@ -1,0 +1,332 @@
+//! Deterministic random number generation substrate.
+//!
+//! The offline build environment ships no `rand` crate, so DELA carries its
+//! own: a PCG64 (XSL-RR 128/64) generator plus the distributions the
+//! experiments need — uniform, Gaussian (Box–Muller), gamma
+//! (Marsaglia–Tsang), Dirichlet (normalized gammas, the paper's
+//! `Dir_N(0.5)` CIFAR partitioner), Student-t (App. G.1 data generator) and
+//! Bernoulli (packet drops, randomized triggers).
+//!
+//! Every algorithm core takes `&mut impl Rng`, so every experiment is
+//! reproducible from a single seed.
+
+/// Minimal RNG interface used across the crate.
+pub trait Rng {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, 1)`.
+    fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our
+    /// purposes; bias < 2^-32 for n << 2^32).
+    fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Bernoulli trial.
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with given mean/std.
+    fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (2000); handles shape < 1 by
+    /// boosting.
+    fn gamma(&mut self, shape: f64) -> f64 {
+        debug_assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^{1/a}
+            let boost = self.gamma(shape + 1.0);
+            let u: f64 = self.f64().max(1e-300);
+            return boost * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u.max(1e-300).ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Dirichlet(beta * 1_k): the paper's CIFAR-10 partitioner uses
+    /// `Dir_N(0.5)` per class.
+    fn dirichlet(&mut self, beta: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(beta)).collect();
+        let s: f64 = g.iter().sum();
+        if s <= 0.0 {
+            return vec![1.0 / k as f64; k];
+        }
+        for v in &mut g {
+            *v /= s;
+        }
+        g
+    }
+
+    /// Student-t with `dof` degrees of freedom (App. G.1 uses dof = 1,
+    /// i.e. Cauchy). t = Z / sqrt(ChiSq_v / v), ChiSq_v = 2 * Gamma(v/2).
+    fn student_t(&mut self, dof: f64) -> f64 {
+        let z = self.normal();
+        let chi2 = 2.0 * self.gamma(dof / 2.0);
+        z / (chi2 / dof).sqrt()
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// f32 convenience.
+    fn f32n(&mut self) -> f32 {
+        self.normal() as f32
+    }
+}
+
+/// PCG64 XSL-RR 128/64 — the same generator family numpy defaults to.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Seed deterministically; `stream` decorrelates parallel agents.
+    pub fn seed_stream(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64 | 0xda3e39cb94b95bdb) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    pub fn seed(seed: u64) -> Self {
+        Self::seed_stream(seed, 0)
+    }
+
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Derive an independent child generator (one per agent thread).
+    pub fn split(&mut self, stream: u64) -> Pcg64 {
+        let s = self.next_u64();
+        Pcg64::seed_stream(s, stream.wrapping_mul(0x9e3779b97f4a7c15) | 1)
+    }
+}
+
+impl Rng for Pcg64 {
+    fn next_u64(&mut self) -> u64 {
+        self.step();
+        // XSL-RR output function
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg64::seed(42);
+        let mut b = Pcg64::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn streams_decorrelate() {
+        let mut a = Pcg64::seed_stream(7, 1);
+        let mut b = Pcg64::seed_stream(7, 2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seed(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Pcg64::seed(4);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.f64()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Pcg64::seed(6);
+        for &shape in &[0.5, 1.0, 2.5, 9.0] {
+            let n = 100_000;
+            let xs: Vec<f64> = (0..n).map(|_| r.gamma(shape)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var =
+                xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+            assert!((mean - shape).abs() < 0.1 * shape.max(1.0),
+                    "gamma({shape}) mean {mean}");
+            assert!((var - shape).abs() < 0.2 * shape.max(1.0),
+                    "gamma({shape}) var {var}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_positive() {
+        let mut r = Pcg64::seed(7);
+        for _ in 0..100 {
+            let p = r.dirichlet(0.5, 10);
+            assert_eq!(p.len(), 10);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_small_beta_is_skewed() {
+        // beta = 0.05 should concentrate mass on few classes most of the
+        // time — the non-iid skew the paper relies on.
+        let mut r = Pcg64::seed(8);
+        let mut max_mass = 0.0f64;
+        for _ in 0..50 {
+            let p = r.dirichlet(0.05, 10);
+            max_mass = max_mass.max(p.iter().cloned().fold(0.0, f64::max));
+        }
+        assert!(max_mass > 0.8, "max mass {max_mass}");
+    }
+
+    #[test]
+    fn student_t_heavy_tails() {
+        // dof=1 (Cauchy) should produce far more |x| > 10 outliers than a
+        // normal would (~0 out of 50k).
+        let mut r = Pcg64::seed(9);
+        let big = (0..50_000).filter(|_| r.student_t(1.0).abs() > 10.0).count();
+        assert!(big > 100, "only {big} tail samples");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Pcg64::seed(10);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed(11);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Pcg64::seed(12);
+        for _ in 0..50 {
+            let s = r.sample_indices(20, 7);
+            assert_eq!(s.len(), 7);
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), 7);
+            assert!(s.iter().all(|&i| i < 20));
+        }
+        assert_eq!(r.sample_indices(3, 10).len(), 3);
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut r = Pcg64::seed(13);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

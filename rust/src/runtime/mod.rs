@@ -1,0 +1,580 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas
+//! artifacts from the Rust request path.
+//!
+//! Wiring (see /opt/xla-example and DESIGN.md): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` (HLO **text** is the interchange
+//! format) → `client.compile` → `execute`.  One compiled executable per
+//! artifact, cached after first use; Python never runs here.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonio::{read_json, Json};
+use crate::rng::Pcg64;
+use crate::solver::LocalSolver;
+
+/// One model configuration from `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub layers: Vec<usize>,
+    pub batch: usize,
+    pub steps: usize,
+    pub classes: usize,
+    pub input_dim: usize,
+    pub param_len: usize,
+    /// graph_variant -> artifact file name.
+    pub artifacts: HashMap<String, String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: HashMap<String, ModelConfig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = read_json(&dir.join("manifest.json"))?;
+        let mut configs = HashMap::new();
+        let obj = j
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'configs'"))?;
+        for (name, entry) in obj {
+            let get_usize = |k: &str| -> Result<usize> {
+                entry
+                    .get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("config {name}: missing {k}"))
+            };
+            let layers = entry
+                .get("layers")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("config {name}: missing layers"))?;
+            let mut artifacts = HashMap::new();
+            if let Some(arts) = entry.get("artifacts").and_then(Json::as_obj) {
+                for (k, v) in arts {
+                    if let Some(f) = v.as_str() {
+                        artifacts.insert(k.clone(), f.to_string());
+                    }
+                }
+            }
+            configs.insert(
+                name.clone(),
+                ModelConfig {
+                    name: name.clone(),
+                    layers,
+                    batch: get_usize("batch")?,
+                    steps: get_usize("steps")?,
+                    classes: get_usize("classes")?,
+                    input_dim: get_usize("input_dim")?,
+                    param_len: get_usize("param_len")?,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { configs })
+    }
+}
+
+/// Which kernel path an artifact uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// L1 Pallas kernels (production path).
+    Pallas,
+    /// Pure-jnp reference lowering (differential baseline).
+    Ref,
+}
+
+impl Variant {
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Variant::Pallas => "pallas",
+            Variant::Ref => "ref",
+        }
+    }
+}
+
+/// The PJRT client + compiled-executable cache.
+///
+/// NOTE: PJRT handles are not `Send`; the runtime lives on one thread (the
+/// experiment driver / the coordinator leader). The threaded coordinator
+/// uses per-thread native solvers or routes solves through the leader.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest and create a CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            exes: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<PjrtRuntime> {
+        Self::load(&crate::config::default_artifacts_dir())
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.manifest
+            .configs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model config {name:?}"))
+    }
+
+    fn ensure_compiled(&self, config: &str, graph: &str, variant: Variant) -> Result<String> {
+        let key = format!("{config}.{graph}.{}", variant.suffix());
+        if !self.exes.borrow().contains_key(&key) {
+            let cfg = self.config(config)?;
+            let art_key = format!("{graph}_{}", variant.suffix());
+            let fname = cfg
+                .artifacts
+                .get(&art_key)
+                .ok_or_else(|| anyhow!("config {config}: no artifact {art_key}"))?;
+            let path = self.dir.join(fname);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+            self.exes.borrow_mut().insert(key.clone(), exe);
+        }
+        Ok(key)
+    }
+
+    /// Execute one artifact; returns the (single) tuple element as f32s.
+    fn exec(
+        &self,
+        config: &str,
+        graph: &str,
+        variant: Variant,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let key = self.ensure_compiled(config, graph, variant)?;
+        let exes = self.exes.borrow();
+        let exe = exes.get(&key).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {key}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {key} result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling {key}: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("reading {key} output: {e:?}"))
+    }
+
+    fn lit1(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    fn lit(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+    }
+
+    /// `local_admm`: S prox-SGD steps (the Alg. 1 agent update).
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_admm(
+        &self,
+        config: &str,
+        variant: Variant,
+        params: &[f32],
+        zhat: &[f32],
+        u: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+        rho: f32,
+    ) -> Result<Vec<f32>> {
+        let cfg = self.config(config)?.clone();
+        let (s, b, d, c) =
+            (cfg.steps as i64, cfg.batch as i64, cfg.input_dim as i64, cfg.classes as i64);
+        anyhow::ensure!(params.len() == cfg.param_len, "params ABI mismatch");
+        anyhow::ensure!(xs.len() as i64 == s * b * d, "xs shape mismatch");
+        anyhow::ensure!(ys.len() as i64 == s * b * c, "ys shape mismatch");
+        let inputs = vec![
+            Self::lit1(params),
+            Self::lit1(zhat),
+            Self::lit1(u),
+            Self::lit(xs, &[s, b, d])?,
+            Self::lit(ys, &[s, b, c])?,
+            xla::Literal::from(lr),
+            xla::Literal::from(rho),
+        ];
+        self.exec(config, "local_admm", variant, &inputs)
+    }
+
+    /// `local_scaffold`: S corrected-SGD steps.
+    pub fn local_scaffold(
+        &self,
+        config: &str,
+        variant: Variant,
+        params: &[f32],
+        corr: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let cfg = self.config(config)?.clone();
+        let (s, b, d, c) =
+            (cfg.steps as i64, cfg.batch as i64, cfg.input_dim as i64, cfg.classes as i64);
+        let inputs = vec![
+            Self::lit1(params),
+            Self::lit1(corr),
+            Self::lit(xs, &[s, b, d])?,
+            Self::lit(ys, &[s, b, c])?,
+            xla::Literal::from(lr),
+        ];
+        self.exec(config, "local_scaffold", variant, &inputs)
+    }
+
+    /// `predict`: logits for one batch (must be exactly `cfg.batch` rows).
+    pub fn predict(
+        &self,
+        config: &str,
+        variant: Variant,
+        params: &[f32],
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let cfg = self.config(config)?.clone();
+        let inputs = vec![
+            Self::lit1(params),
+            Self::lit(x, &[cfg.batch as i64, cfg.input_dim as i64])?,
+        ];
+        self.exec(config, "predict", variant, &inputs)
+    }
+
+    /// `loss`: scalar mean CE on one batch.
+    pub fn loss(
+        &self,
+        config: &str,
+        variant: Variant,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<f32> {
+        let cfg = self.config(config)?.clone();
+        let inputs = vec![
+            Self::lit1(params),
+            Self::lit(x, &[cfg.batch as i64, cfg.input_dim as i64])?,
+            Self::lit(y, &[cfg.batch as i64, cfg.classes as i64])?,
+        ];
+        let out = self.exec(config, "loss", variant, &inputs)?;
+        Ok(out[0])
+    }
+
+    /// `grad`: flat dloss/dparams on one batch.
+    pub fn grad(
+        &self,
+        config: &str,
+        variant: Variant,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<Vec<f32>> {
+        let cfg = self.config(config)?.clone();
+        let inputs = vec![
+            Self::lit1(params),
+            Self::lit(x, &[cfg.batch as i64, cfg.input_dim as i64])?,
+            Self::lit(y, &[cfg.batch as i64, cfg.classes as i64])?,
+        ];
+        self.exec(config, "grad", variant, &inputs)
+    }
+
+    /// Classification accuracy evaluated through the `predict` artifact
+    /// (pads the tail batch by repetition).
+    pub fn accuracy(
+        &self,
+        config: &str,
+        variant: Variant,
+        params: &[f32],
+        xs: &[f32],
+        labels: &[usize],
+    ) -> Result<f64> {
+        let cfg = self.config(config)?.clone();
+        let (b, d, c) = (cfg.batch, cfg.input_dim, cfg.classes);
+        let n = labels.len();
+        let mut correct = 0usize;
+        let mut pos = 0;
+        while pos < n {
+            let take = b.min(n - pos);
+            let mut batch = vec![0.0f32; b * d];
+            for r in 0..b {
+                let src = pos + r.min(take - 1);
+                batch[r * d..(r + 1) * d]
+                    .copy_from_slice(&xs[src * d..(src + 1) * d]);
+            }
+            let logits = self.predict(config, variant, params, &batch)?;
+            for r in 0..take {
+                let row = &logits[r * c..(r + 1) * c];
+                let arg = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if arg == labels[pos + r] {
+                    correct += 1;
+                }
+            }
+            pos += take;
+        }
+        Ok(correct as f64 / n.max(1) as f64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-backed solvers (the production compute path of the experiments)
+// ---------------------------------------------------------------------------
+
+/// `LocalSolver<f32>` backend executing the `local_admm` artifact.
+pub struct PjrtSgd<'a> {
+    pub rt: &'a PjrtRuntime,
+    pub config: String,
+    pub variant: Variant,
+    pub shards: Vec<crate::data::synth::ClassDataset>,
+    pub lr: f32,
+    /// Warm-started local iterates.
+    pub xs: Vec<Vec<f32>>,
+}
+
+impl<'a> PjrtSgd<'a> {
+    pub fn new(
+        rt: &'a PjrtRuntime,
+        config: &str,
+        variant: Variant,
+        shards: Vec<crate::data::synth::ClassDataset>,
+        lr: f32,
+        init: &[f32],
+    ) -> Result<Self> {
+        let cfg = rt.config(config)?;
+        anyhow::ensure!(init.len() == cfg.param_len, "init ABI mismatch");
+        Ok(PjrtSgd {
+            rt,
+            config: config.to_string(),
+            variant,
+            xs: vec![init.to_vec(); shards.len()],
+            shards,
+            lr,
+        })
+    }
+
+    fn draw(&self, agent: usize, rng: &mut Pcg64) -> (Vec<f32>, Vec<f32>) {
+        let cfg = self.rt.config(&self.config).unwrap();
+        let mut xs = Vec::with_capacity(cfg.steps * cfg.batch * cfg.input_dim);
+        let mut ys = Vec::with_capacity(cfg.steps * cfg.batch * cfg.classes);
+        for _ in 0..cfg.steps {
+            let (bx, by) = self.shards[agent].sample_batch(cfg.batch, rng);
+            xs.extend_from_slice(&bx);
+            ys.extend_from_slice(&by);
+        }
+        (xs, ys)
+    }
+}
+
+impl<'a> LocalSolver<f32> for PjrtSgd<'a> {
+    fn solve(
+        &mut self,
+        agent: usize,
+        anchor: &[f32],
+        rho: f64,
+        rng: &mut Pcg64,
+    ) -> Vec<f32> {
+        let (bx, by) = self.draw(agent, rng);
+        let zeros = vec![0.0f32; anchor.len()];
+        let x = self
+            .rt
+            .local_admm(
+                &self.config,
+                self.variant,
+                &self.xs[agent],
+                anchor,
+                &zeros,
+                &bx,
+                &by,
+                self.lr,
+                rho as f32,
+            )
+            .expect("PJRT local_admm failed");
+        self.xs[agent] = x.clone();
+        x
+    }
+
+    fn dim(&self) -> usize {
+        self.rt.config(&self.config).unwrap().param_len
+    }
+
+    fn n_agents(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// `FedLocal` backend executing the artifacts (baselines on PJRT).
+pub struct PjrtFed<'a> {
+    pub rt: &'a PjrtRuntime,
+    pub config: String,
+    pub variant: Variant,
+    pub shards: Vec<crate::data::synth::ClassDataset>,
+    pub lr: f32,
+}
+
+impl<'a> PjrtFed<'a> {
+    fn draw(&self, agent: usize, rng: &mut Pcg64) -> (Vec<f32>, Vec<f32>) {
+        let cfg = self.rt.config(&self.config).unwrap();
+        let mut xs = Vec::with_capacity(cfg.steps * cfg.batch * cfg.input_dim);
+        let mut ys = Vec::with_capacity(cfg.steps * cfg.batch * cfg.classes);
+        for _ in 0..cfg.steps {
+            let (bx, by) = self.shards[agent].sample_batch(cfg.batch, rng);
+            xs.extend_from_slice(&bx);
+            ys.extend_from_slice(&by);
+        }
+        (xs, ys)
+    }
+}
+
+impl<'a> crate::baselines::FedLocal for PjrtFed<'a> {
+    fn dim(&self) -> usize {
+        self.rt.config(&self.config).unwrap().param_len
+    }
+    fn n_agents(&self) -> usize {
+        self.shards.len()
+    }
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+    fn steps(&self) -> usize {
+        self.rt.config(&self.config).unwrap().steps
+    }
+
+    fn sgd_prox(
+        &mut self,
+        agent: usize,
+        start: &[f32],
+        anchor: &[f32],
+        mu: f64,
+        rng: &mut Pcg64,
+    ) -> Vec<f32> {
+        let (bx, by) = self.draw(agent, rng);
+        let zeros = vec![0.0f32; start.len()];
+        self.rt
+            .local_admm(
+                &self.config,
+                self.variant,
+                start,
+                anchor,
+                &zeros,
+                &bx,
+                &by,
+                self.lr,
+                mu as f32,
+            )
+            .expect("PJRT sgd_prox failed")
+    }
+
+    fn sgd_corr(
+        &mut self,
+        agent: usize,
+        start: &[f32],
+        corr: &[f32],
+        rng: &mut Pcg64,
+    ) -> Vec<f32> {
+        let (bx, by) = self.draw(agent, rng);
+        self.rt
+            .local_scaffold(
+                &self.config,
+                self.variant,
+                start,
+                corr,
+                &bx,
+                &by,
+                self.lr,
+            )
+            .expect("PJRT sgd_corr failed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio::{write_json, Json};
+
+    fn sample_manifest() -> Json {
+        Json::parse(
+            r#"{"abi": "flat", "configs": {"toy": {
+                "layers": [4, 8, 2], "batch": 3, "steps": 2,
+                "classes": 2, "input_dim": 4, "param_len": 58,
+                "offsets": [],
+                "artifacts": {"local_admm_pallas": "toy.local_admm.pallas.hlo.txt",
+                               "predict_ref": "toy.predict.ref.hlo.txt"}}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn manifest_parses_configs() {
+        let dir = std::env::temp_dir().join("dela_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_json(&dir.join("manifest.json"), &sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let cfg = &m.configs["toy"];
+        assert_eq!(cfg.layers, vec![4, 8, 2]);
+        assert_eq!(cfg.batch, 3);
+        assert_eq!(cfg.steps, 2);
+        assert_eq!(cfg.param_len, 58);
+        assert_eq!(
+            cfg.artifacts["local_admm_pallas"],
+            "toy.local_admm.pallas.hlo.txt"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_file_errors() {
+        let dir = std::env::temp_dir().join("dela_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_config() {
+        let dir = std::env::temp_dir().join("dela_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_json(
+            &dir.join("manifest.json"),
+            &Json::parse(r#"{"configs": {"x": {"layers": [1, 2]}}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn variant_suffixes() {
+        assert_eq!(Variant::Pallas.suffix(), "pallas");
+        assert_eq!(Variant::Ref.suffix(), "ref");
+    }
+}

@@ -1,0 +1,315 @@
+//! Local-solve abstraction: how an agent performs
+//! `argmin_x f_i(x) + (rho/2)|x - v|^2`.
+//!
+//! Three interchangeable backends drive the same ADMM cores:
+//!
+//! * [`ExactQuadratic`] — closed-form prox for least-squares `f_i`
+//!   (cached Cholesky of `A_iᵀA_i + ρI`): the LASSO/regression experiments.
+//! * [`NativeSgd`] — S minibatch prox-SGD steps on the Rust MLP (the
+//!   paper replaces the exact minimization by a few SGD steps).
+//! * `PjrtSgd` (in [`crate::runtime`]) — the production path: the same S
+//!   steps executed by the AOT-compiled JAX/Pallas artifact.
+
+use crate::data::synth::ClassDataset;
+use crate::linalg::{Cholesky, Matrix};
+use crate::model::MlpSpec;
+use crate::rng::Pcg64;
+#[cfg(test)]
+use crate::rng::Rng;
+
+/// An agent-side local solver over scalar type `T`.
+pub trait LocalSolver<T> {
+    /// Return `x_{k+1} ≈ argmin_x f_agent(x) + (rho/2) |x - anchor|²`.
+    fn solve(
+        &mut self,
+        agent: usize,
+        anchor: &[T],
+        rho: f64,
+        rng: &mut Pcg64,
+    ) -> Vec<T>;
+
+    /// Problem dimension.
+    fn dim(&self) -> usize;
+
+    /// Number of agents this solver serves.
+    fn n_agents(&self) -> usize;
+}
+
+/// Server-side prox for the (possibly nonsmooth) `g`:
+/// `z = argmin_z g(z) + (w/2) |z - v|²`.
+pub trait ServerProx<T> {
+    fn prox(&mut self, v: &[T], weight: f64) -> Vec<T>;
+}
+
+/// `g = 0` — plain consensus (the neural-network experiments).
+pub struct IdentityProx;
+
+impl<T: Clone> ServerProx<T> for IdentityProx {
+    fn prox(&mut self, v: &[T], _weight: f64) -> Vec<T> {
+        v.to_vec()
+    }
+}
+
+/// `g(z) = lambda |z|_1` — LASSO: prox is the soft threshold with
+/// `tau = lambda / weight`.
+pub struct L1Prox {
+    pub lambda: f64,
+}
+
+impl ServerProx<f64> for L1Prox {
+    fn prox(&mut self, v: &[f64], weight: f64) -> Vec<f64> {
+        crate::linalg::soft_threshold(v, self.lambda / weight)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact quadratic prox (least-squares agents)
+// ---------------------------------------------------------------------------
+
+/// Agents with `f_i(x) = 0.5 |A_i x - b_i|²`; the prox step is the linear
+/// solve `(A_iᵀA_i + ρI) x = A_iᵀ b_i + ρ v`, with the factorization cached
+/// per (agent, ρ).
+pub struct ExactQuadratic {
+    grams: Vec<Matrix>,
+    atbs: Vec<Vec<f64>>,
+    dim: usize,
+    cache: Vec<Option<(f64, Cholesky)>>,
+}
+
+impl ExactQuadratic {
+    pub fn new(blocks: &[crate::data::regress::AgentBlock]) -> Self {
+        assert!(!blocks.is_empty());
+        let dim = blocks[0].a.cols;
+        ExactQuadratic {
+            grams: blocks.iter().map(|b| b.a.gram()).collect(),
+            atbs: blocks.iter().map(|b| b.a.tmatvec(&b.b)).collect(),
+            dim,
+            cache: vec![None; blocks.len()],
+        }
+    }
+
+    fn chol(&mut self, agent: usize, rho: f64) -> &Cholesky {
+        let stale = match &self.cache[agent] {
+            Some((r, _)) => (*r - rho).abs() > 1e-12 * rho.abs().max(1.0),
+            None => true,
+        };
+        if stale {
+            let mut m = self.grams[agent].clone();
+            m.add_diag(rho);
+            let c = Cholesky::factor(&m).expect("gram + rho I must be PD");
+            self.cache[agent] = Some((rho, c));
+        }
+        &self.cache[agent].as_ref().unwrap().1
+    }
+}
+
+impl LocalSolver<f64> for ExactQuadratic {
+    fn solve(
+        &mut self,
+        agent: usize,
+        anchor: &[f64],
+        rho: f64,
+        _rng: &mut Pcg64,
+    ) -> Vec<f64> {
+        let mut rhs = self.atbs[agent].clone();
+        crate::linalg::axpy(&mut rhs, rho, anchor);
+        self.chol(agent, rho).solve(&rhs)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_agents(&self) -> usize {
+        self.grams.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native SGD solver (Rust MLP twin of the PJRT artifact)
+// ---------------------------------------------------------------------------
+
+/// Inexact local solve: S minibatch prox-SGD steps on the native MLP.
+pub struct NativeSgd {
+    pub spec: MlpSpec,
+    pub shards: Vec<ClassDataset>,
+    pub lr: f32,
+    pub steps: usize,
+    pub batch: usize,
+    /// Current local iterate per agent (warm start across rounds —
+    /// x_{k+1} starts from x_k like the paper's implementation).
+    pub xs: Vec<Vec<f32>>,
+}
+
+impl NativeSgd {
+    pub fn new(
+        spec: MlpSpec,
+        shards: Vec<ClassDataset>,
+        lr: f32,
+        steps: usize,
+        batch: usize,
+        init: &[f32],
+    ) -> Self {
+        let xs = vec![init.to_vec(); shards.len()];
+        NativeSgd { spec, shards, lr, steps, batch, xs }
+    }
+
+    /// Draw the S minibatches for one round as flat buffers.
+    pub fn draw_batches(
+        &self,
+        agent: usize,
+        rng: &mut Pcg64,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let d = self.spec.input_dim();
+        let c = self.spec.classes();
+        let mut xs = Vec::with_capacity(self.steps * self.batch * d);
+        let mut ys = Vec::with_capacity(self.steps * self.batch * c);
+        for _ in 0..self.steps {
+            let (bx, by) = self.shards[agent].sample_batch(self.batch, rng);
+            xs.extend_from_slice(&bx);
+            ys.extend_from_slice(&by);
+        }
+        (xs, ys)
+    }
+}
+
+impl LocalSolver<f32> for NativeSgd {
+    fn solve(
+        &mut self,
+        agent: usize,
+        anchor: &[f32],
+        rho: f64,
+        rng: &mut Pcg64,
+    ) -> Vec<f32> {
+        let (bx, by) = self.draw_batches(agent, rng);
+        let zeros = vec![0.0f32; anchor.len()];
+        // local_admm expects (zhat, u); anchor = zhat - u, so pass
+        // (anchor, 0).
+        let x = self.spec.local_admm(
+            &self.xs[agent],
+            anchor,
+            &zeros,
+            &bx,
+            &by,
+            self.lr,
+            rho as f32,
+            self.steps,
+            self.batch,
+        );
+        self.xs[agent] = x.clone();
+        x
+    }
+
+    fn dim(&self) -> usize {
+        self.spec.param_len()
+    }
+
+    fn n_agents(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::regress::{generate, RegressSpec};
+    use crate::data::synth::{self, SynthSpec};
+
+    #[test]
+    fn exact_quadratic_satisfies_stationarity() {
+        let spec = RegressSpec {
+            n_agents: 3,
+            rows_per_agent: 10,
+            dim: 6,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed(1);
+        let (blocks, _) = generate(&spec, &mut rng);
+        let mut solver = ExactQuadratic::new(&blocks);
+        let anchor: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let rho = 0.7;
+        let x = solver.solve(1, &anchor, rho, &mut rng);
+        // check gradient: A'(Ax - b) + rho (x - anchor) = 0
+        let ax = blocks[1].a.matvec(&x);
+        let resid: Vec<f64> =
+            ax.iter().zip(&blocks[1].b).map(|(p, q)| p - q).collect();
+        let mut grad = blocks[1].a.tmatvec(&resid);
+        for i in 0..6 {
+            grad[i] += rho * (x[i] - anchor[i]);
+        }
+        assert!(crate::linalg::norm2(&grad) < 1e-9);
+    }
+
+    #[test]
+    fn exact_quadratic_cache_recomputes_on_rho_change() {
+        let spec = RegressSpec {
+            n_agents: 1,
+            rows_per_agent: 8,
+            dim: 4,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed(2);
+        let (blocks, _) = generate(&spec, &mut rng);
+        let mut solver = ExactQuadratic::new(&blocks);
+        let anchor = vec![0.0; 4];
+        let x1 = solver.solve(0, &anchor, 0.1, &mut rng);
+        let x2 = solver.solve(0, &anchor, 10.0, &mut rng);
+        // large rho pins to anchor = 0 harder
+        assert!(crate::linalg::norm2(&x2) < crate::linalg::norm2(&x1));
+    }
+
+    #[test]
+    fn identity_prox_is_identity() {
+        let mut p = IdentityProx;
+        let v = vec![1.0f64, -2.0];
+        assert_eq!(ServerProx::<f64>::prox(&mut p, &v, 3.0), v);
+    }
+
+    #[test]
+    fn l1_prox_shrinks() {
+        let mut p = L1Prox { lambda: 1.0 };
+        let out = p.prox(&[2.0, -0.1, 0.0], 2.0); // tau = 0.5
+        assert!((out[0] - 1.5).abs() < 1e-12);
+        assert_eq!(out[1], 0.0);
+        assert_eq!(out[2], 0.0);
+    }
+
+    #[test]
+    fn native_sgd_improves_local_fit() {
+        let mut rng = Pcg64::seed(3);
+        let (train, _) = synth::generate(&SynthSpec::tiny(), &mut rng);
+        let shards =
+            crate::data::partition::iid_split(&train, 2, &mut rng);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+        let mut solver =
+            NativeSgd::new(spec.clone(), shards.clone(), 0.1, 4, 8, &init);
+        let anchor = init.clone();
+        let before = {
+            let (bx, by) = shards[0].sample_batch(32, &mut rng);
+            spec.loss_grad(&init, &bx, &by, 32).0
+        };
+        let mut x = init.clone();
+        for _ in 0..5 {
+            x = solver.solve(0, &anchor, 0.0, &mut rng);
+        }
+        let after = {
+            let (bx, by) = shards[0].sample_batch(32, &mut rng);
+            spec.loss_grad(&x, &bx, &by, 32).0
+        };
+        assert!(after < before, "{after} !< {before}");
+    }
+
+    #[test]
+    fn native_sgd_warm_starts() {
+        let mut rng = Pcg64::seed(4);
+        let (train, _) = synth::generate(&SynthSpec::tiny(), &mut rng);
+        let shards = crate::data::partition::iid_split(&train, 1, &mut rng);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+        let mut solver = NativeSgd::new(spec, shards, 0.05, 2, 4, &init);
+        let anchor = vec![0.0f32; solver.dim()];
+        let x1 = solver.solve(0, &anchor, 0.1, &mut rng);
+        assert_eq!(solver.xs[0], x1, "iterate must be persisted");
+    }
+}

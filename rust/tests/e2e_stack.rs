@@ -1,0 +1,103 @@
+//! End-to-end integration over the full stack: Alg. 1 with PJRT-backed
+//! local solves (tiny artifacts), plus PJRT-vs-native differential runs
+//! under identical seeds.
+
+use deluxe::config::default_artifacts_dir;
+use deluxe::experiments::nn::{run_algo, Algo, Backend, NnExperimentConfig, NnWorkload};
+use deluxe::runtime::{PjrtRuntime, Variant};
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping e2e stack tests");
+        return None;
+    }
+    Some(PjrtRuntime::load(&dir).expect("runtime"))
+}
+
+#[test]
+fn tiny_alg1_learns_through_pjrt_pallas() {
+    let Some(rt) = runtime() else { return };
+    let w = NnWorkload::tiny(5);
+    let cfg = NnExperimentConfig { rounds: 25, eval_every: 5, seed: 5 };
+    let rec = run_algo(
+        &w,
+        Algo::Alg1Vanilla { delta_d: 0.05, delta_z: 0.05 },
+        &cfg,
+        &Backend::Pjrt(&rt, Variant::Pallas),
+    );
+    let acc = rec.last("accuracy").unwrap();
+    assert!(acc > 0.5, "pjrt-pallas accuracy {acc}");
+}
+
+#[test]
+fn pjrt_variants_agree_with_native_under_same_seed() {
+    // Same workload + seed: the sequence of minibatches is identical, so
+    // the three backends must produce closely matching trajectories
+    // (small f32 divergence amplified over rounds is tolerated).
+    let Some(rt) = runtime() else { return };
+    let seed = 9;
+    let cfg = NnExperimentConfig { rounds: 6, eval_every: 6, seed };
+    let algo = Algo::Alg1Vanilla { delta_d: 0.05, delta_z: 0.05 };
+
+    let w = NnWorkload::tiny(seed);
+    let rec_native = run_algo(&w, algo, &cfg, &Backend::Native);
+    let rec_pallas =
+        run_algo(&w, algo, &cfg, &Backend::Pjrt(&rt, Variant::Pallas));
+    let rec_ref = run_algo(&w, algo, &cfg, &Backend::Pjrt(&rt, Variant::Ref));
+
+    let a_native = rec_native.last("accuracy").unwrap();
+    let a_pallas = rec_pallas.last("accuracy").unwrap();
+    let a_ref = rec_ref.last("accuracy").unwrap();
+    assert!(
+        (a_native - a_pallas).abs() < 0.15,
+        "native {a_native} vs pallas {a_pallas}"
+    );
+    assert!(
+        (a_ref - a_pallas).abs() < 0.15,
+        "ref {a_ref} vs pallas {a_pallas}"
+    );
+    // event counts must match exactly when trajectories align:
+    // allow small slack for f32-induced trigger flips
+    let e_native = rec_native.last("events").unwrap();
+    let e_pallas = rec_pallas.last("events").unwrap();
+    assert!(
+        (e_native - e_pallas).abs() <= 8.0,
+        "event counts diverged: native {e_native} vs pallas {e_pallas}"
+    );
+}
+
+#[test]
+fn scaffold_runs_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let w = NnWorkload::tiny(11);
+    let cfg = NnExperimentConfig { rounds: 10, eval_every: 5, seed: 11 };
+    let rec = run_algo(
+        &w,
+        Algo::Scaffold { part: 1.0 },
+        &cfg,
+        &Backend::Pjrt(&rt, Variant::Pallas),
+    );
+    assert!(rec.last("accuracy").unwrap() > 0.3);
+    // SCAFFOLD's doubled packages: load == 2.0 at full participation
+    assert!((rec.last("load").unwrap() - 2.0).abs() < 1e-9);
+}
+
+#[test]
+fn fedavg_and_fedprox_run_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let w = NnWorkload::tiny(12);
+    let cfg = NnExperimentConfig { rounds: 8, eval_every: 4, seed: 12 };
+    for algo in [
+        Algo::FedAvg { part: 1.0 },
+        Algo::FedProx { part: 1.0, mu: 0.1 },
+        Algo::FedAdmm { part: 0.7 },
+    ] {
+        let rec = run_algo(&w, algo, &cfg, &Backend::Pjrt(&rt, Variant::Ref));
+        assert!(
+            rec.last("accuracy").unwrap() > 0.2,
+            "{} failed to produce a sane model",
+            algo.label()
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! Integration: PJRT artifacts vs pinned Python outputs vs the native twin.
+//!
+//! `testvec.json` (emitted by `aot.py`) pins inputs and the JAX-computed
+//! outputs of every graph for the `tiny` config; these tests run the same
+//! inputs through (a) the compiled artifacts via PJRT and (b) the native
+//! Rust MLP, and require all three to agree.  This is the strongest
+//! correctness signal across the L1/L2/L3 boundary.
+//!
+//! Skips (with a note) when artifacts have not been built.
+
+use deluxe::config::default_artifacts_dir;
+use deluxe::jsonio::read_json;
+use deluxe::model::MlpSpec;
+use deluxe::runtime::{PjrtRuntime, Variant};
+
+struct TestVec {
+    params: Vec<f32>,
+    zhat: Vec<f32>,
+    u: Vec<f32>,
+    corr: Vec<f32>,
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    lr: f32,
+    rho: f32,
+    local_admm: Vec<f32>,
+    local_scaffold: Vec<f32>,
+    predict: Vec<f32>,
+    loss: f32,
+    grad: Vec<f32>,
+}
+
+fn load() -> Option<(PjrtRuntime, TestVec)> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() || !dir.join("testvec.json").exists() {
+        eprintln!("artifacts not built; skipping PJRT round-trip tests");
+        return None;
+    }
+    let rt = PjrtRuntime::load(&dir).expect("load runtime");
+    let j = read_json(&dir.join("testvec.json")).expect("testvec");
+    let get = |k: &str| -> Vec<f32> {
+        j.get(k).and_then(|v| v.as_f32_vec()).unwrap_or_else(|| panic!("missing {k}"))
+    };
+    let tv = TestVec {
+        params: get("params"),
+        zhat: get("zhat"),
+        u: get("u"),
+        corr: get("corr"),
+        xs: get("xs"),
+        ys: get("ys"),
+        lr: j.get("lr").unwrap().as_f64().unwrap() as f32,
+        rho: j.get("rho").unwrap().as_f64().unwrap() as f32,
+        local_admm: get("local_admm"),
+        local_scaffold: get("local_scaffold"),
+        predict: get("predict"),
+        loss: j.get("loss").unwrap().as_f64().unwrap() as f32,
+        grad: get("grad"),
+    };
+    Some((rt, tv))
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(worst <= tol, "{what}: max abs diff {worst} > {tol}");
+}
+
+#[test]
+fn local_admm_pallas_matches_python() {
+    let Some((rt, tv)) = load() else { return };
+    let out = rt
+        .local_admm(
+            "tiny", Variant::Pallas, &tv.params, &tv.zhat, &tv.u, &tv.xs,
+            &tv.ys, tv.lr, tv.rho,
+        )
+        .unwrap();
+    assert_close(&out, &tv.local_admm, 2e-5, "local_admm pallas");
+}
+
+#[test]
+fn local_admm_ref_matches_python() {
+    let Some((rt, tv)) = load() else { return };
+    let out = rt
+        .local_admm(
+            "tiny", Variant::Ref, &tv.params, &tv.zhat, &tv.u, &tv.xs, &tv.ys,
+            tv.lr, tv.rho,
+        )
+        .unwrap();
+    assert_close(&out, &tv.local_admm, 1e-6, "local_admm ref");
+}
+
+#[test]
+fn local_scaffold_matches_python() {
+    let Some((rt, tv)) = load() else { return };
+    for variant in [Variant::Pallas, Variant::Ref] {
+        let out = rt
+            .local_scaffold(
+                "tiny", variant, &tv.params, &tv.corr, &tv.xs, &tv.ys, tv.lr,
+            )
+            .unwrap();
+        assert_close(&out, &tv.local_scaffold, 2e-5, "local_scaffold");
+    }
+}
+
+#[test]
+fn predict_loss_grad_match_python() {
+    let Some((rt, tv)) = load() else { return };
+    let cfg = rt.config("tiny").unwrap().clone();
+    let x1 = &tv.xs[..cfg.batch * cfg.input_dim];
+    let y1 = &tv.ys[..cfg.batch * cfg.classes];
+    for variant in [Variant::Pallas, Variant::Ref] {
+        let logits = rt.predict("tiny", variant, &tv.params, x1).unwrap();
+        assert_close(&logits, &tv.predict, 2e-5, "predict");
+        let loss = rt.loss("tiny", variant, &tv.params, x1, y1).unwrap();
+        assert!((loss - tv.loss).abs() < 2e-5, "loss {loss} vs {}", tv.loss);
+        let grad = rt.grad("tiny", variant, &tv.params, x1, y1).unwrap();
+        assert_close(&grad, &tv.grad, 2e-5, "grad");
+    }
+}
+
+#[test]
+fn native_twin_matches_python() {
+    // No PJRT needed, but uses the same pinned vectors.
+    let Some((rt, tv)) = load() else { return };
+    let cfg = rt.config("tiny").unwrap().clone();
+    let spec = MlpSpec::new(cfg.layers.clone());
+    let out = spec.local_admm(
+        &tv.params, &tv.zhat, &tv.u, &tv.xs, &tv.ys, tv.lr, tv.rho,
+        cfg.steps, cfg.batch,
+    );
+    assert_close(&out, &tv.local_admm, 5e-5, "native local_admm");
+    let out2 = spec.local_scaffold(
+        &tv.params, &tv.corr, &tv.xs, &tv.ys, tv.lr, cfg.steps, cfg.batch,
+    );
+    assert_close(&out2, &tv.local_scaffold, 5e-5, "native local_scaffold");
+    let x1 = &tv.xs[..cfg.batch * cfg.input_dim];
+    let y1 = &tv.ys[..cfg.batch * cfg.classes];
+    let logits = spec.forward(&tv.params, x1, cfg.batch);
+    assert_close(&logits, &tv.predict, 5e-5, "native predict");
+    let (loss, grad) = spec.loss_grad(&tv.params, x1, y1, cfg.batch);
+    assert!((loss - tv.loss).abs() < 5e-5);
+    assert_close(&grad, &tv.grad, 5e-5, "native grad");
+}
+
+#[test]
+fn manifest_param_lens_match_native_spec() {
+    let Some((rt, _)) = load() else { return };
+    for (name, cfg) in &rt.manifest.configs {
+        let spec = MlpSpec::new(cfg.layers.clone());
+        assert_eq!(
+            spec.param_len(),
+            cfg.param_len,
+            "config {name}: ABI mismatch"
+        );
+    }
+}
+
+#[test]
+fn accuracy_helper_consistent_with_native() {
+    let Some((rt, tv)) = load() else { return };
+    let cfg = rt.config("tiny").unwrap().clone();
+    let spec = MlpSpec::new(cfg.layers.clone());
+    // build a tiny labelled set from the pinned xs
+    let n = cfg.batch * cfg.steps;
+    let xs = &tv.xs[..n * cfg.input_dim];
+    let labels: Vec<usize> = (0..n).map(|i| i % cfg.classes).collect();
+    let a_native = spec.accuracy(&tv.params, xs, &labels);
+    let a_pjrt = rt
+        .accuracy("tiny", Variant::Ref, &tv.params, xs, &labels)
+        .unwrap();
+    assert!(
+        (a_native - a_pjrt).abs() < 1e-9,
+        "accuracy mismatch: native {a_native} vs pjrt {a_pjrt}"
+    );
+}

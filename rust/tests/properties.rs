@@ -1,0 +1,395 @@
+//! Property-based tests (mini-proptest harness) for the coordinator
+//! invariants: trigger semantics, estimate consistency, Prop. 2.1 bounds,
+//! reset synchronization, partitioners, linalg and graph structure.
+
+use deluxe::comm::{delta_norm, DropChannel, Estimate, Trigger, TriggerState};
+use deluxe::data::partition::{dirichlet_split, single_class_split};
+use deluxe::data::synth::{generate, SynthSpec};
+use deluxe::linalg::{soft_threshold, Cholesky, Matrix};
+use deluxe::proptest::forall;
+use deluxe::rng::{Pcg64, Rng};
+use deluxe::topology::Graph;
+
+// ---------------------------------------------------------------------------
+// Trigger / protocol invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_vanilla_trigger_fires_iff_deviation_exceeds_delta() {
+    forall(
+        "vanilla trigger boundary",
+        |rng| {
+            let dim = 1 + rng.below(8);
+            let delta = rng.range(0.01, 2.0);
+            let vals: Vec<Vec<f64>> = (0..20)
+                .map(|_| (0..dim).map(|_| 3.0 * rng.normal()).collect())
+                .collect();
+            (delta, vals)
+        },
+        |(delta, vals)| {
+            let dim = vals[0].len();
+            let mut st: TriggerState<f64> =
+                TriggerState::new(Trigger::vanilla(*delta), vec![0.0; dim]);
+            let mut rng = Pcg64::seed(0);
+            for v in vals {
+                let dev_before = st.deviation(v);
+                let fired = st.offer(v, &mut rng).is_some();
+                if fired != (dev_before > *delta) {
+                    return Err(format!(
+                        "fired={fired} but deviation {dev_before} vs delta {delta}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_estimate_equals_last_sent_on_reliable_link() {
+    forall(
+        "estimate consistency",
+        |rng| {
+            let dim = 1 + rng.below(6);
+            let delta = rng.range(0.0, 1.0);
+            let steps = 5 + rng.below(40);
+            let walk: Vec<Vec<f64>> = {
+                let mut v = vec![0.0; dim];
+                (0..steps)
+                    .map(|_| {
+                        for x in &mut v {
+                            *x += 0.3 * rng.normal();
+                        }
+                        v.clone()
+                    })
+                    .collect()
+            };
+            (delta, walk)
+        },
+        |(delta, walk)| {
+            let dim = walk[0].len();
+            let mut tx: TriggerState<f64> =
+                TriggerState::new(Trigger::vanilla(*delta), vec![0.0; dim]);
+            let mut rx = Estimate::new(vec![0.0; dim]);
+            let mut rng = Pcg64::seed(1);
+            for v in walk {
+                if let Some(d) = tx.offer(v, &mut rng) {
+                    rx.apply(&d);
+                }
+                let err = delta_norm(rx.get(), tx.last_sent());
+                if err > 1e-9 {
+                    return Err(format!("estimate drifted by {err}"));
+                }
+                // and the receiver error vs the true value is <= delta
+                let err_true = delta_norm(rx.get(), v);
+                if err_true > *delta + 1e-9 {
+                    return Err(format!(
+                        "receiver error {err_true} > delta {delta}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop21_error_bounded_by_delta_plus_drop_accumulation() {
+    // With drops, the estimate error is bounded by Δ + (accumulated χ
+    // since last reset); the reset clamps the accumulation (Prop. 2.1).
+    forall(
+        "prop 2.1 with drops + reset",
+        |rng| {
+            let delta = rng.range(0.05, 0.5);
+            let drop = rng.range(0.0, 0.6);
+            let reset_t = 3 + rng.below(8);
+            let seed = rng.next_u64();
+            (delta, drop, reset_t, seed)
+        },
+        |&(delta, drop, reset_t, seed)| {
+            let dim = 3;
+            let mut rng = Pcg64::seed(seed);
+            let mut tx: TriggerState<f64> =
+                TriggerState::new(Trigger::vanilla(delta), vec![0.0; dim]);
+            let mut rx = Estimate::new(vec![0.0; dim]);
+            let mut ch = DropChannel::new(drop);
+            let mut v = vec![0.0; dim];
+            let mut chi_accum = 0.0f64; // Σ|χ| since last reset
+            for k in 0..100 {
+                for x in &mut v {
+                    *x += 0.2 * rng.normal();
+                }
+                if let Some(d) = tx.offer(&v, &mut rng) {
+                    let mag =
+                        d.iter().map(|x| x * x).sum::<f64>().sqrt();
+                    match ch.transmit(d, &mut rng) {
+                        Some(d) => rx.apply(&d),
+                        None => chi_accum += mag,
+                    }
+                }
+                if (k + 1) % reset_t == 0 {
+                    tx.reset(&v);
+                    rx.reset_to(&v);
+                    chi_accum = 0.0;
+                }
+                let err = delta_norm(rx.get(), &v);
+                if err > delta + chi_accum + 1e-9 {
+                    return Err(format!(
+                        "err {err} > delta {delta} + chi {chi_accum}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_randomized_trigger_fires_superset_of_vanilla() {
+    forall(
+        "randomized ⊇ vanilla",
+        |rng| (rng.range(0.1, 1.0), rng.next_u64()),
+        |&(delta, seed)| {
+            let mut rng = Pcg64::seed(seed);
+            let mut van: TriggerState<f64> =
+                TriggerState::new(Trigger::vanilla(delta), vec![0.0]);
+            let mut rand: TriggerState<f64> = TriggerState::new(
+                Trigger::randomized(delta, 0.3),
+                vec![0.0],
+            );
+            let mut v = vec![0.0];
+            for _ in 0..60 {
+                v[0] += 0.3 * rng.normal();
+                let f_v = van.offer(&v, &mut rng).is_some();
+                let f_r = rand.offer(&v, &mut rng).is_some();
+                // whenever the two share a reference point and vanilla
+                // fires, randomized must fire too (deterministic branch)
+                if van.last_sent() == rand.last_sent() && f_v && !f_r {
+                    return Err("vanilla fired but randomized didn't".into());
+                }
+                // keep reference points aligned for the next step
+                if f_v != f_r {
+                    let sync = v.clone();
+                    van.reset(&sync);
+                    rand.reset(&sync);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Data partitioners
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dirichlet_split_partitions_exactly() {
+    forall(
+        "dirichlet split partition",
+        |rng| (2 + rng.below(10), rng.range(0.05, 2.0), rng.next_u64()),
+        |&(agents, beta, seed)| {
+            let mut rng = Pcg64::seed(seed);
+            let (train, _) = generate(&SynthSpec::tiny(), &mut rng);
+            let shards = dirichlet_split(&train, agents, beta, &mut rng);
+            let total: usize = shards.iter().map(|s| s.len()).sum();
+            if total != train.len() {
+                return Err(format!("lost samples: {total} vs {}", train.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_single_class_split_is_pure() {
+    forall(
+        "single-class purity",
+        |rng| 1 + rng.below(12),
+        |&agents| {
+            let mut rng = Pcg64::seed(3);
+            let (train, _) = generate(&SynthSpec::tiny(), &mut rng);
+            let shards = single_class_split(&train, agents);
+            for (a, s) in shards.iter().enumerate() {
+                if !s.labels.iter().all(|&l| l == a % train.classes) {
+                    return Err(format!("shard {a} impure"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Linalg
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cholesky_solve_inverts_spd_systems() {
+    forall(
+        "cholesky roundtrip",
+        |rng| {
+            let n = 2 + rng.below(12);
+            let seed = rng.next_u64();
+            (n, seed)
+        },
+        |&(n, seed)| {
+            let mut rng = Pcg64::seed(seed);
+            let a = Matrix::randn(n + 4, n, &mut rng);
+            let mut g = a.gram();
+            g.add_diag(0.3);
+            let chol = Cholesky::factor(&g).ok_or("not PD")?;
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = g.matvec(&x);
+            let xs = chol.solve(&b);
+            let err = deluxe::linalg::dist2(&x, &xs);
+            if err > 1e-7 {
+                return Err(format!("solve error {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_soft_threshold_is_nonexpansive() {
+    forall(
+        "shrinkage nonexpansive",
+        |rng| {
+            let n = 1 + rng.below(50);
+            let tau = rng.range(0.0, 2.0);
+            let a: Vec<f64> = (0..n).map(|_| 3.0 * rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| 3.0 * rng.normal()).collect();
+            (tau, a, b)
+        },
+        |(tau, a, b)| {
+            let sa = soft_threshold(a, *tau);
+            let sb = soft_threshold(b, *tau);
+            let d_out = deluxe::linalg::dist2(&sa, &sb);
+            let d_in = deluxe::linalg::dist2(a, b);
+            if d_out > d_in + 1e-12 {
+                return Err(format!("expansive: {d_out} > {d_in}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Graph structure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_graph_connected_with_exact_edges() {
+    forall(
+        "random graph structure",
+        |rng| {
+            let n = 3 + rng.below(20);
+            let max = n * (n - 1) / 2;
+            let m = (n - 1) + rng.below(max - (n - 1) + 1);
+            (n, m, rng.next_u64())
+        },
+        |&(n, m, seed)| {
+            let mut rng = Pcg64::seed(seed);
+            let g = Graph::random_connected(n, m, &mut rng);
+            if g.edges.len() != m {
+                return Err(format!("edges {} != {m}", g.edges.len()));
+            }
+            if !g.is_connected() {
+                return Err("disconnected".into());
+            }
+            // handshake lemma
+            let degsum: usize = (0..n).map(|v| g.degree(v)).sum();
+            if degsum != 2 * m {
+                return Err(format!("degree sum {degsum} != {}", 2 * m));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_incidence_matches_edges() {
+    forall(
+        "incidence structure",
+        |rng| (4 + rng.below(10), rng.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Pcg64::seed(seed);
+            let m = n + rng.below(n);
+            let g = Graph::random_connected(n, m.min(n * (n - 1) / 2), &mut rng);
+            let (at, ar) = g.incidence();
+            for (e, &(i, j)) in g.edges.iter().enumerate() {
+                let ti = at.row(e).iter().position(|&v| v == 1.0).ok_or("no tx")?;
+                let ri = ar.row(e).iter().position(|&v| v == 1.0).ok_or("no rx")?;
+                if (ti.min(ri), ti.max(ri)) != (i, j) {
+                    return Err(format!("edge {e} mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// ADMM fixed point = KKT point
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_consensus_admm_fixed_point_is_global_optimum() {
+    use deluxe::admm::{ConsensusAdmm, ConsensusConfig};
+    use deluxe::solver::{IdentityProx, LocalSolver};
+
+    struct Quad {
+        w: Vec<f64>,
+        c: Vec<f64>,
+    }
+    impl LocalSolver<f64> for Quad {
+        fn solve(
+            &mut self,
+            agent: usize,
+            anchor: &[f64],
+            rho: f64,
+            _r: &mut Pcg64,
+        ) -> Vec<f64> {
+            vec![
+                (self.w[agent] * self.c[agent] + rho * anchor[0])
+                    / (self.w[agent] + rho),
+            ]
+        }
+        fn dim(&self) -> usize {
+            1
+        }
+        fn n_agents(&self) -> usize {
+            self.w.len()
+        }
+    }
+
+    forall(
+        "ADMM fixed point = weighted mean",
+        |rng| {
+            let n = 2 + rng.below(6);
+            let w: Vec<f64> = (0..n).map(|_| rng.range(0.2, 3.0)).collect();
+            let c: Vec<f64> = (0..n).map(|_| 5.0 * rng.normal()).collect();
+            let rho = rng.range(0.3, 3.0);
+            (w, c, rho)
+        },
+        |(w, c, rho)| {
+            let opt = w.iter().zip(c).map(|(a, b)| a * b).sum::<f64>()
+                / w.iter().sum::<f64>();
+            let n = w.len();
+            let mut solver = Quad { w: w.clone(), c: c.clone() };
+            let cfg = ConsensusConfig { rho: *rho, rounds: 2000, ..Default::default() };
+            let mut eng = ConsensusAdmm::new(cfg, n, vec![0.0]);
+            let mut prox = IdentityProx;
+            let mut rng = Pcg64::seed(9);
+            for _ in 0..2000 {
+                eng.round(&mut solver, &mut prox, &mut rng);
+            }
+            let err = (eng.z[0] - opt).abs();
+            if err > 1e-6 {
+                return Err(format!("z {} vs opt {opt} (err {err})", eng.z[0]));
+            }
+            Ok(())
+        },
+    );
+}
