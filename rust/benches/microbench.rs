@@ -4,12 +4,13 @@
 //! `cargo bench --bench microbench`
 
 use deluxe::benchlib::{black_box, Bench};
-use deluxe::comm::{DropChannel, Estimate, Trigger, TriggerState};
+use deluxe::comm::{sub, sub_into, DropChannel, Estimate, Trigger, TriggerState};
 use deluxe::data::regress::{generate, RegressSpec};
 use deluxe::linalg::{soft_threshold, Cholesky, Matrix};
 use deluxe::model::MlpSpec;
 use deluxe::rng::{Pcg64, Rng};
 use deluxe::solver::{ExactQuadratic, LocalSolver};
+use deluxe::wire::{CompressorCfg, ErrorFeedback, WireMessage};
 
 fn main() {
     let mut b = Bench::default();
@@ -35,6 +36,24 @@ fn main() {
         black_box(trig_fire.offer(v, &mut rng));
     });
 
+    // allocation-free delta path: sub vs sub_into, offer vs offer_into
+    b.bench("comm.sub (108k f32, fresh alloc)", || {
+        black_box(sub(&v1, &v0));
+    });
+    let mut delta_buf: Vec<f32> = Vec::with_capacity(dim);
+    b.bench("comm.sub_into (108k f32, reused buffer)", || {
+        sub_into(&v1, &v0, &mut delta_buf);
+        black_box(delta_buf.len());
+    });
+    let mut trig_into: TriggerState<f32> =
+        TriggerState::new(Trigger::vanilla(0.0), v0.clone());
+    let mut flip_into = false;
+    b.bench("trigger.offer_into (108k f32, fires)", || {
+        flip_into = !flip_into;
+        let v = if flip_into { &v1 } else { &v0 };
+        black_box(trig_into.offer_into(v, &mut rng, &mut delta_buf));
+    });
+
     let mut est = Estimate::new(v0.clone());
     let delta: Vec<f32> = vec![1e-4; dim];
     b.bench("estimate.apply (108k f32)", || {
@@ -44,6 +63,26 @@ fn main() {
     let mut ch = DropChannel::new(0.3);
     b.bench("channel.transmit (unit payload)", || {
         black_box(ch.transmit((), &mut rng));
+    });
+
+    println!("\n== wire codec / compressors ==");
+    let dense_msg = WireMessage::dense(&v1);
+    b.bench("wire.encode dense (108k f32)", || {
+        black_box(dense_msg.encode());
+    });
+    let dense_buf = dense_msg.encode();
+    b.bench("wire.decode dense (108k f32)", || {
+        black_box(WireMessage::<f32>::decode(&dense_buf).unwrap());
+    });
+    let topkq = CompressorCfg::TopKQuant { frac: 0.05, bits: 8 }.build::<f32>();
+    let mut ef = ErrorFeedback::new();
+    b.bench("wire.ef+topkq compress (108k f32, 5%/8b)", || {
+        black_box(ef.compress(&v1, topkq.as_ref(), &mut rng));
+    });
+    let quant8 = CompressorCfg::Quant { bits: 8 }.build::<f32>();
+    let mut ef_q = ErrorFeedback::new();
+    b.bench("wire.ef+quant8 compress (108k f32)", || {
+        black_box(ef_q.compress(&v1, quant8.as_ref(), &mut rng));
     });
 
     println!("\n== linalg / exact prox ==");

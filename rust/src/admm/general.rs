@@ -15,6 +15,7 @@
 use crate::comm::{DropChannel, Estimate, Trigger, TriggerState};
 use crate::linalg::{soft_threshold, Cholesky, Matrix};
 use crate::rng::Pcg64;
+use crate::wire::{Compressor, CompressorCfg, ErrorFeedback, WireMessage};
 
 /// Smooth part: `f(x) = ½ xᵀHx + qᵀx` (covers least squares
 /// `½|Dx−b|²` via `H = DᵀD`, `q = −Dᵀb`).  The x-update is the linear
@@ -138,6 +139,9 @@ pub struct GeneralConfig {
     pub trig_us: Trigger,
     pub drop_rate: f64,
     pub reset_period: usize,
+    /// Delta compressor applied on all six lines (per-line error
+    /// feedback); `Identity` reproduces the uncompressed protocol.
+    pub compressor: CompressorCfg,
 }
 
 impl Default for GeneralConfig {
@@ -154,6 +158,7 @@ impl Default for GeneralConfig {
             trig_us: Trigger::Always,
             drop_rate: 0.0,
             reset_period: 0,
+            compressor: CompressorCfg::Identity,
         }
     }
 }
@@ -175,6 +180,7 @@ impl GeneralConfig {
 struct Line {
     trig: TriggerState<f64>,
     ch: DropChannel,
+    ef: ErrorFeedback<f64>,
 }
 
 impl Line {
@@ -182,6 +188,7 @@ impl Line {
         Line {
             trig: TriggerState::new(trig, init),
             ch: DropChannel::new(drop_rate),
+            ef: ErrorFeedback::new(),
         }
     }
 
@@ -189,11 +196,14 @@ impl Line {
         &mut self,
         value: &[f64],
         dest: &mut Estimate<f64>,
+        comp: &dyn Compressor<f64>,
         rng: &mut Pcg64,
     ) {
         if let Some(delta) = self.trig.offer(value, rng) {
-            if let Some(delta) = self.ch.transmit(delta, rng) {
-                dest.apply(&delta);
+            let msg = self.ef.compress(&delta, comp, rng);
+            let bytes = msg.wire_bytes() as u64;
+            if let Some(msg) = self.ch.transmit_bytes(msg, bytes, rng) {
+                dest.apply_msg(&msg);
             }
         }
     }
@@ -201,6 +211,11 @@ impl Line {
     fn reset(&mut self, value: &[f64], dest: &mut Estimate<f64>) {
         self.trig.reset(value);
         dest.reset_to(value);
+        self.ef.clear();
+        self.ch
+            .stats
+            .record_reliable(WireMessage::<f64>::dense_bytes(value.len())
+                as u64);
     }
 }
 
@@ -234,6 +249,9 @@ pub struct GeneralAdmm {
     line_su: Line,
     line_ur: Line,
     line_us: Line,
+
+    /// Shared compression operator for all six lines.
+    comp: Box<dyn Compressor<f64>>,
 
     pub round_idx: usize,
 }
@@ -274,6 +292,7 @@ impl GeneralAdmm {
             r_at_u: Estimate::new(r0.clone()),
             s_at_u: Estimate::new(s0.clone()),
             s_at_u_prev: s0.clone(),
+            comp: cfg.compressor.build::<f64>(),
             cfg,
             a,
             c,
@@ -303,8 +322,8 @@ impl GeneralAdmm {
             .collect();
         self.x = self.f.solve_x(&self.a, &dir, rho);
         self.r = self.a.matvec(&self.x);
-        self.line_rs.send(&self.r, &mut self.r_at_s, rng);
-        self.line_ru.send(&self.r, &mut self.r_at_u, rng);
+        self.line_rs.send(&self.r, &mut self.r_at_s, self.comp.as_ref(), rng);
+        self.line_ru.send(&self.r, &mut self.r_at_u, self.comp.as_ref(), rng);
 
         // ---- s-agent: z-update ----
         // w = α r̂ˢ − (1−α) s_k + û ˢ − α c   (note: uses the s-agent's own
@@ -319,11 +338,11 @@ impl GeneralAdmm {
         let (z, s_new) = self.zprox.update(&w, rho);
         self.z = z;
         self.s = s_new;
-        self.line_sr.send(&self.s, &mut self.s_at_r, rng);
+        self.line_sr.send(&self.s, &mut self.s_at_r, self.comp.as_ref(), rng);
         // u-agent needs ŝᵘ_k and ŝᵘ_{k+1}: stash prev before delivery
         self.s_at_u_prev.clear();
         self.s_at_u_prev.extend_from_slice(self.s_at_u.get());
-        self.line_su.send(&self.s, &mut self.s_at_u, rng);
+        self.line_su.send(&self.s, &mut self.s_at_u, self.comp.as_ref(), rng);
 
         // ---- u-agent ----
         // u_{k+1} = u_k + α r̂ᵘ_{k+1} − (1−α) ŝᵘ_k + ŝᵘ_{k+1} − α c
@@ -333,8 +352,8 @@ impl GeneralAdmm {
                 + self.s_at_u.get()[j]
                 - alpha * self.c[j];
         }
-        self.line_ur.send(&self.u, &mut self.u_at_r, rng);
-        self.line_us.send(&self.u, &mut self.u_at_s, rng);
+        self.line_ur.send(&self.u, &mut self.u_at_r, self.comp.as_ref(), rng);
+        self.line_us.send(&self.u, &mut self.u_at_s, self.comp.as_ref(), rng);
 
         self.round_idx += 1;
         if self.cfg.reset_period > 0
@@ -386,6 +405,33 @@ impl GeneralAdmm {
             return 0.0;
         }
         self.total_events() as f64 / (6.0 * self.round_idx as f64)
+    }
+
+    /// Total bytes put on the wire across all six lines.
+    pub fn total_wire_bytes(&self) -> u64 {
+        [
+            &self.line_rs,
+            &self.line_ru,
+            &self.line_sr,
+            &self.line_su,
+            &self.line_ur,
+            &self.line_us,
+        ]
+        .iter()
+        .map(|l| l.ch.stats.sent_bytes)
+        .sum()
+    }
+
+    /// Per-line `(label, ChannelStats)` snapshot for byte accounting.
+    pub fn line_stats(&self) -> Vec<(&'static str, crate::comm::ChannelStats)> {
+        vec![
+            ("rs", self.line_rs.ch.stats),
+            ("ru", self.line_ru.ch.stats),
+            ("sr", self.line_sr.ch.stats),
+            ("su", self.line_su.ch.stats),
+            ("ur", self.line_ur.ch.stats),
+            ("us", self.line_us.ch.stats),
+        ]
     }
 
     /// State distance `|ξ_k − ξ*|` with `ξ = (s, u)` (Thm. 4.1's metric).
@@ -619,6 +665,54 @@ mod tests {
             "measured rate {measured} vs bound {bound} (kappa {kappa})"
         );
         assert!(errs[199] < 1e-8);
+    }
+
+    #[test]
+    fn wire_bytes_counted_on_all_six_lines() {
+        let (mut eng, _) = ls_consensus(1.0, None);
+        let mut rng = Pcg64::seed(40);
+        for _ in 0..10 {
+            eng.round(&mut rng);
+        }
+        // full communication: 6 lines x 10 rounds x dense(dim 5) bytes
+        let dense = WireMessage::<f64>::dense_bytes(5) as u64;
+        assert_eq!(eng.total_wire_bytes(), 60 * dense);
+        assert_eq!(eng.line_stats().len(), 6);
+        for (_, st) in eng.line_stats() {
+            assert_eq!(st.sent_bytes, 10 * dense);
+        }
+    }
+
+    #[test]
+    fn compressed_general_engine_still_converges() {
+        let mut rng = Pcg64::seed(41);
+        let d = Matrix::randn(20, 5, &mut rng);
+        let xtrue: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let b = d.matvec(&xtrue);
+        let f = QuadraticF::least_squares(&d, &b);
+        let cfg = GeneralConfig {
+            rounds: 400,
+            compressor: crate::wire::CompressorCfg::Quant { bits: 10 },
+            ..Default::default()
+        }
+        .with_uniform_delta(1e-4);
+        let mut eng = GeneralAdmm::new(
+            cfg,
+            Matrix::eye(5),
+            vec![0.0; 5],
+            f,
+            ZProx::diag(-1.0, 0.0),
+            vec![0.0; 5],
+            vec![0.0; 5],
+        );
+        for _ in 0..400 {
+            eng.round(&mut rng);
+        }
+        assert!(
+            crate::linalg::dist2(&eng.x, &xtrue) < 0.1,
+            "compressed err {}",
+            crate::linalg::dist2(&eng.x, &xtrue)
+        );
     }
 
     #[test]

@@ -7,6 +7,7 @@
 use crate::data::synth::ClassDataset;
 use crate::model::MlpSpec;
 use crate::rng::{Pcg64, Rng};
+use crate::wire::{ByteTally, WireMessage};
 
 /// Local-update backend shared by every baseline: runs S (prox-/corrected-)
 /// SGD steps *starting from a given point* (baselines restart from the
@@ -121,15 +122,34 @@ pub struct AvgFamily {
     pub part_rate: f64,
     pub events: u64,
     pub round_idx: usize,
+    /// Byte accounting with the same wire codec the ADMM engines use:
+    /// each participating agent costs one dense model downlink and one
+    /// dense model uplink per round (the family transmits full models,
+    /// not deltas, so the dense layout is the honest charge).
+    pub wire: ByteTally,
 }
 
 impl AvgFamily {
     pub fn fedavg(init: Vec<f32>, part_rate: f64) -> Self {
-        AvgFamily { z: init, mu: 0.0, part_rate, events: 0, round_idx: 0 }
+        AvgFamily {
+            z: init,
+            mu: 0.0,
+            part_rate,
+            events: 0,
+            round_idx: 0,
+            wire: ByteTally::default(),
+        }
     }
 
     pub fn fedprox(init: Vec<f32>, part_rate: f64, mu: f64) -> Self {
-        AvgFamily { z: init, mu, part_rate, events: 0, round_idx: 0 }
+        AvgFamily {
+            z: init,
+            mu,
+            part_rate,
+            events: 0,
+            round_idx: 0,
+            wire: ByteTally::default(),
+        }
     }
 
     pub fn round(&mut self, local: &mut dyn FedLocal, rng: &mut Pcg64) {
@@ -140,6 +160,7 @@ impl AvgFamily {
         if selected.is_empty() {
             return;
         }
+        let model_bytes = WireMessage::<f32>::dense_bytes(self.z.len()) as u64;
         let mut acc = vec![0.0f64; self.z.len()];
         let anchor = self.z.clone();
         for &i in &selected {
@@ -148,6 +169,8 @@ impl AvgFamily {
                 *a += v as f64;
             }
             self.events += 2; // down (model) + up (update)
+            self.wire.downlink += model_bytes;
+            self.wire.uplink += model_bytes;
         }
         let inv = 1.0 / selected.len() as f64;
         for (z, a) in self.z.iter_mut().zip(&acc) {
@@ -230,5 +253,22 @@ mod tests {
         }
         assert_eq!(eng.z, init);
         assert_eq!(eng.events, 0);
+        assert_eq!(eng.wire.total(), 0);
+    }
+
+    #[test]
+    fn byte_tally_matches_event_count() {
+        // one dense model per event, by construction
+        let (mut local, _) = setup(10);
+        let mut rng = Pcg64::seed(11);
+        let init = local.spec.init(&mut rng);
+        let dim = init.len();
+        let mut eng = AvgFamily::fedavg(init, 0.7);
+        for _ in 0..20 {
+            eng.round(&mut local, &mut rng);
+        }
+        let dense = WireMessage::<f32>::dense_bytes(dim) as u64;
+        assert_eq!(eng.wire.total(), eng.events * dense);
+        assert_eq!(eng.wire.uplink, eng.wire.downlink);
     }
 }

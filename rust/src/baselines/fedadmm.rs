@@ -55,6 +55,12 @@ impl<T: Scalar> FedAdmm<T> {
     pub fn comm_load(&self) -> f64 {
         self.engine.comm_load()
     }
+
+    /// Byte-accurate wire accounting (inherited from the shared engine:
+    /// FedADMM rides the same codec/channel path as Alg. 1).
+    pub fn wire_stats(&self) -> crate::wire::WireStats {
+        self.engine.wire_stats()
+    }
 }
 
 #[cfg(test)]

@@ -15,6 +15,7 @@
 
 use super::avg_family::FedLocal;
 use crate::rng::{Pcg64, Rng};
+use crate::wire::{ByteTally, WireMessage};
 
 pub struct Scaffold {
     pub z: Vec<f32>,
@@ -23,6 +24,10 @@ pub struct Scaffold {
     pub part_rate: f64,
     pub events: u64,
     pub round_idx: usize,
+    /// Byte accounting (same codec sizing as the ADMM engines): two dense
+    /// packages per direction per participating agent — model + control
+    /// variate, the paper's ×2 factor made byte-exact.
+    pub wire: ByteTally,
 }
 
 impl Scaffold {
@@ -35,6 +40,7 @@ impl Scaffold {
             part_rate,
             events: 0,
             round_idx: 0,
+            wire: ByteTally::default(),
         }
     }
 
@@ -68,6 +74,9 @@ impl Scaffold {
             }
             // 2 packages down (z, c) + 2 packages up (y, c_i)
             self.events += 4;
+            let pkg = WireMessage::<f32>::dense_bytes(dim) as u64;
+            self.wire.downlink += 2 * pkg;
+            self.wire.uplink += 2 * pkg;
         }
         let inv_s = 1.0 / selected.len() as f64;
         let inv_n = 1.0 / n as f64;
@@ -150,5 +159,9 @@ mod tests {
             eng.round(&mut local, &mut rng);
         }
         assert!((eng.comm_load(4) - 2.0).abs() < 1e-12);
+        // byte-exact x2: two dense packages per direction per event pair
+        let dim = eng.z.len();
+        let pkg = WireMessage::<f32>::dense_bytes(dim) as u64;
+        assert_eq!(eng.wire.total(), eng.events * pkg);
     }
 }

@@ -8,16 +8,25 @@
 
 use crate::rng::Rng;
 
-/// Per-link transmission counters.
+/// Per-link transmission counters — messages *and* wire bytes (the byte
+/// totals are charged with each message's exact encoded size, see
+/// [`crate::wire::WireMessage::wire_bytes`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ChannelStats {
     pub sent: u64,
     pub dropped: u64,
+    /// Bytes put on the wire (delivered or not).
+    pub sent_bytes: u64,
+    /// Bytes lost in flight.
+    pub dropped_bytes: u64,
 }
 
 impl ChannelStats {
     pub fn delivered(&self) -> u64 {
         self.sent - self.dropped
+    }
+    pub fn delivered_bytes(&self) -> u64 {
+        self.sent_bytes - self.dropped_bytes
     }
     pub fn drop_fraction(&self) -> f64 {
         if self.sent == 0 {
@@ -25,6 +34,14 @@ impl ChannelStats {
         } else {
             self.dropped as f64 / self.sent as f64
         }
+    }
+
+    /// Charge a message that bypasses the lossy channel (the periodic
+    /// resets are full, reliable synchronization messages — they count as
+    /// traffic but can never drop).
+    pub fn record_reliable(&mut self, bytes: u64) {
+        self.sent += 1;
+        self.sent_bytes += bytes;
     }
 }
 
@@ -48,9 +65,21 @@ impl DropChannel {
 
     /// Transmit a payload; `None` means the packet was dropped in flight.
     pub fn transmit<T>(&mut self, payload: T, rng: &mut impl Rng) -> Option<T> {
+        self.transmit_bytes(payload, 0, rng)
+    }
+
+    /// Transmit a payload of known wire size, charging the byte counters.
+    pub fn transmit_bytes<T>(
+        &mut self,
+        payload: T,
+        bytes: u64,
+        rng: &mut impl Rng,
+    ) -> Option<T> {
         self.stats.sent += 1;
+        self.stats.sent_bytes += bytes;
         if self.drop_rate > 0.0 && rng.bernoulli(self.drop_rate) {
             self.stats.dropped += 1;
+            self.stats.dropped_bytes += bytes;
             None
         } else {
             Some(payload)
@@ -100,5 +129,29 @@ mod tests {
     fn rejects_bad_rate() {
         let res = std::panic::catch_unwind(|| DropChannel::new(1.5));
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn byte_counters_track_sent_and_dropped() {
+        let mut ch = DropChannel::new(0.5);
+        let mut rng = Pcg64::seed(4);
+        for _ in 0..10_000 {
+            ch.transmit_bytes((), 100, &mut rng);
+        }
+        assert_eq!(ch.stats.sent_bytes, 1_000_000);
+        assert_eq!(ch.stats.dropped_bytes, ch.stats.dropped * 100);
+        assert_eq!(
+            ch.stats.delivered_bytes(),
+            ch.stats.delivered() * 100
+        );
+    }
+
+    #[test]
+    fn reliable_messages_count_traffic_but_never_drop() {
+        let mut ch = DropChannel::new(1.0);
+        ch.stats.record_reliable(42);
+        assert_eq!(ch.stats.sent, 1);
+        assert_eq!(ch.stats.sent_bytes, 42);
+        assert_eq!(ch.stats.dropped, 0);
     }
 }

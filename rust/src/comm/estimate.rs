@@ -7,6 +7,7 @@
 //! error, which our property tests verify numerically.
 
 use super::Scalar;
+use crate::wire::WireMessage;
 
 #[derive(Clone, Debug)]
 pub struct Estimate<T: Scalar> {
@@ -32,6 +33,20 @@ impl<T: Scalar> Estimate<T> {
         for (v, d) in self.value.iter_mut().zip(delta) {
             *v = T::from_f64(v.to_f64() + d.to_f64());
         }
+        self.updates += 1;
+    }
+
+    /// Integrate a received wire message (decompressing in place; sparse
+    /// payloads touch only the coordinates they carry).
+    pub fn apply_msg(&mut self, msg: &WireMessage<T>) {
+        self.apply_scaled_msg(msg, 1.0);
+    }
+
+    /// Integrate `scale * decompress(msg)` — the weighted-accumulator
+    /// form the server's `ζ̂` uses (weight `1/N` per agent).
+    pub fn apply_scaled_msg(&mut self, msg: &WireMessage<T>, scale: f64) {
+        debug_assert_eq!(msg.dim(), self.value.len());
+        msg.add_scaled_to(scale, &mut self.value);
         self.updates += 1;
     }
 
@@ -87,5 +102,29 @@ mod tests {
             let norm: f64 = err.iter().map(|e| e * e).sum::<f64>().sqrt();
             assert!(norm < 1e-12, "estimate diverged from last_sent: {norm}");
         }
+    }
+
+    #[test]
+    fn apply_msg_dense_equals_apply() {
+        let mut a = Estimate::new(vec![1.0f64, -2.0, 0.5]);
+        let mut b = a.clone();
+        let delta = vec![0.25f64, 4.0, -1.5];
+        a.apply(&delta);
+        b.apply_msg(&WireMessage::dense(&delta));
+        assert_eq!(a.get(), b.get());
+        assert_eq!(a.updates, b.updates);
+    }
+
+    #[test]
+    fn apply_scaled_msg_sparse_touches_only_carried_coords() {
+        let mut e = Estimate::new(vec![1.0f64; 4]);
+        let msg = WireMessage::Sparse {
+            dim: 4,
+            idx: vec![2],
+            val: vec![8.0f64],
+        };
+        e.apply_scaled_msg(&msg, 0.5);
+        assert_eq!(e.get(), &[1.0, 1.0, 5.0, 1.0]);
+        assert_eq!(e.updates, 1);
     }
 }

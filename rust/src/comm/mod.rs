@@ -26,13 +26,25 @@ pub use trigger::{Trigger, TriggerState};
 
 /// Scalar abstraction so the protocol works over both the f32 PJRT
 /// parameter ABI and the f64 convex experiments.
+///
+/// Beyond the arithmetic hooks, a scalar knows its exact wire format
+/// ([`Scalar::WIRE_BYTES`] little-endian bytes, raw IEEE-754 bit pattern)
+/// so [`crate::wire`]'s codec round-trips dense payloads losslessly.
 pub trait Scalar: Copy + PartialEq + std::fmt::Debug + 'static {
+    /// Bytes per value on the wire (4 for f32, 8 for f64); doubles as the
+    /// codec's scalar tag so decoding with the wrong type fails loudly.
+    const WIRE_BYTES: usize;
     fn to_f64(self) -> f64;
     fn from_f64(v: f64) -> Self;
     fn zero() -> Self;
+    /// Append the exact little-endian bit pattern to `out`.
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Read the exact bit pattern back (`buf` holds >= `WIRE_BYTES`).
+    fn read_le(buf: &[u8]) -> Self;
 }
 
 impl Scalar for f32 {
+    const WIRE_BYTES: usize = 4;
     fn to_f64(self) -> f64 {
         self as f64
     }
@@ -42,9 +54,16 @@ impl Scalar for f32 {
     fn zero() -> Self {
         0.0
     }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(buf: &[u8]) -> Self {
+        f32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]])
+    }
 }
 
 impl Scalar for f64 {
+    const WIRE_BYTES: usize = 8;
     fn to_f64(self) -> f64 {
         self
     }
@@ -53,6 +72,14 @@ impl Scalar for f64 {
     }
     fn zero() -> Self {
         0.0
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(buf: &[u8]) -> Self {
+        f64::from_le_bytes([
+            buf[0], buf[1], buf[2], buf[3], buf[4], buf[5], buf[6], buf[7],
+        ])
     }
 }
 
@@ -96,4 +123,19 @@ pub fn sub<T: Scalar>(a: &[T], b: &[T]) -> Vec<T> {
         .zip(b)
         .map(|(&x, &y)| T::from_f64(x.to_f64() - y.to_f64()))
         .collect()
+}
+
+/// `a - b` elementwise into a reusable buffer — the allocation-free twin
+/// of [`sub`] for the per-round trigger hot path (§Perf: the ADMM loops
+/// fire one delta per line per round; reusing one scratch buffer removes
+/// that allocation entirely).
+pub fn sub_into<T: Scalar>(a: &[T], b: &[T], out: &mut Vec<T>) {
+    debug_assert_eq!(a.len(), b.len());
+    out.clear();
+    out.reserve(a.len());
+    out.extend(
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| T::from_f64(x.to_f64() - y.to_f64())),
+    );
 }

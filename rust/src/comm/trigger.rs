@@ -1,6 +1,6 @@
 //! Event triggers: *when* does an agent communicate?
 
-use super::{delta_norm, sub, Scalar};
+use super::{delta_norm, sub, sub_into, Scalar};
 use crate::rng::Rng;
 
 /// Communication policy for one transmit line.
@@ -72,13 +72,11 @@ impl<T: Scalar> TriggerState<T> {
         delta_norm(current, &self.last_sent)
     }
 
-    /// Observe the new value; return `Some(delta)` if a communication is
-    /// triggered. On a trigger, `v_{[k]}` advances to `current` (the sender
-    /// does NOT know whether the packet survives the channel — that is the
-    /// paper's drop model, Eq. 32/33).
-    pub fn offer(&mut self, current: &[T], rng: &mut impl Rng) -> Option<Vec<T>> {
+    /// The firing rule shared by [`Self::offer`] and [`Self::offer_into`];
+    /// counts the opportunity and consumes the same RNG stream either way.
+    fn decide(&mut self, current: &[T], rng: &mut impl Rng) -> bool {
         self.opportunities += 1;
-        let fire = match self.trigger {
+        match self.trigger {
             Trigger::Always => true,
             Trigger::Never => false,
             Trigger::Vanilla { delta } => self.deviation(current) > delta,
@@ -91,14 +89,44 @@ impl<T: Scalar> TriggerState<T> {
                 let dk = delta0 / (self.opportunities as f64).powf(power);
                 self.deviation(current) > dk
             }
-        };
-        if fire {
+        }
+    }
+
+    /// Observe the new value; return `Some(delta)` if a communication is
+    /// triggered. On a trigger, `v_{[k]}` advances to `current` (the sender
+    /// does NOT know whether the packet survives the channel — that is the
+    /// paper's drop model, Eq. 32/33).
+    pub fn offer(&mut self, current: &[T], rng: &mut impl Rng) -> Option<Vec<T>> {
+        if self.decide(current, rng) {
             self.events += 1;
             let delta = sub(current, &self.last_sent);
-            self.last_sent = current.to_vec();
+            self.last_sent.clear();
+            self.last_sent.extend_from_slice(current);
             Some(delta)
         } else {
             None
+        }
+    }
+
+    /// Allocation-free twin of [`Self::offer`] for the per-round hot
+    /// loops: on a trigger the delta is written into `delta_out` (reused
+    /// across rounds) and `true` is returned; otherwise `delta_out` is
+    /// cleared.  Identical firing decisions and RNG consumption.
+    pub fn offer_into(
+        &mut self,
+        current: &[T],
+        rng: &mut impl Rng,
+        delta_out: &mut Vec<T>,
+    ) -> bool {
+        if self.decide(current, rng) {
+            self.events += 1;
+            sub_into(current, &self.last_sent, delta_out);
+            self.last_sent.clear();
+            self.last_sent.extend_from_slice(current);
+            true
+        } else {
+            delta_out.clear();
+            false
         }
     }
 
@@ -272,5 +300,47 @@ mod tests {
         let mut s = st(Trigger::vanilla(1.0));
         let mut rng = Pcg64::seed(8);
         assert!(s.offer(&[1.0, 0.0, 0.0], &mut rng).is_none());
+    }
+
+    #[test]
+    fn offer_into_matches_offer_exactly() {
+        // Same trigger, same seed: the buffer variant must fire on the
+        // same rounds with identical deltas and counters.
+        let trig = Trigger::randomized(0.5, 0.2);
+        let mut a = st(trig);
+        let mut b = st(trig);
+        let mut rng_a = Pcg64::seed(30);
+        let mut rng_b = Pcg64::seed(30);
+        let mut buf = Vec::new();
+        for k in 0..200 {
+            let v = [
+                (k as f64 * 0.37).sin(),
+                (k as f64 * 0.11).cos(),
+                0.01 * k as f64,
+            ];
+            let got_a = a.offer(&v, &mut rng_a);
+            let fired_b = b.offer_into(&v, &mut rng_b, &mut buf);
+            assert_eq!(got_a.is_some(), fired_b, "round {k}");
+            if let Some(da) = got_a {
+                assert_eq!(da, buf, "round {k}");
+            } else {
+                assert!(buf.is_empty());
+            }
+        }
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.opportunities, b.opportunities);
+        assert_eq!(a.last_sent(), b.last_sent());
+    }
+
+    #[test]
+    fn offer_into_reuses_capacity() {
+        let mut s = st(Trigger::Always);
+        let mut rng = Pcg64::seed(31);
+        let mut buf = Vec::with_capacity(3);
+        let cap = buf.capacity();
+        for k in 0..50 {
+            assert!(s.offer_into(&[k as f64, 0.0, 0.0], &mut rng, &mut buf));
+        }
+        assert_eq!(buf.capacity(), cap, "hot path must not reallocate");
     }
 }

@@ -4,6 +4,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::jsonio::{read_json, Json};
+use crate::wire::CompressorCfg;
 
 /// Global run configuration shared by the CLI, examples and benches.
 #[derive(Clone, Debug)]
@@ -14,6 +15,8 @@ pub struct RunConfig {
     /// Output directory for experiment CSV/JSON.
     pub results_dir: PathBuf,
     pub seed: u64,
+    /// Wire compressor (`--compressor none|topk:F|randk:F|quant:B|topkq:F:B`).
+    pub compressor: CompressorCfg,
 }
 
 impl Default for RunConfig {
@@ -22,6 +25,7 @@ impl Default for RunConfig {
             artifacts_dir: default_artifacts_dir(),
             results_dir: PathBuf::from("results"),
             seed: 0,
+            compressor: CompressorCfg::Identity,
         }
     }
 }
@@ -50,6 +54,13 @@ impl RunConfig {
             cfg.results_dir = PathBuf::from(dir);
         }
         cfg.seed = args.u64_or("seed", 0);
+        if let Some(spec) = args.get("compressor") {
+            // a typo silently measuring the dense baseline would corrupt a
+            // whole sweep — malformed values are fatal, same as the JSON
+            // config path
+            cfg.compressor = CompressorCfg::parse(spec)
+                .unwrap_or_else(|e| panic!("--compressor: {e}"));
+        }
         cfg
     }
 
@@ -65,6 +76,10 @@ impl RunConfig {
         }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             self.seed = v as u64;
+        }
+        if let Some(v) = j.get("compressor").and_then(Json::as_str) {
+            self.compressor = CompressorCfg::parse(v)
+                .map_err(|e| anyhow::anyhow!("config compressor: {e}"))?;
         }
         Ok(())
     }
@@ -86,6 +101,30 @@ mod tests {
         let cfg = RunConfig::from_args(&args);
         assert_eq!(cfg.artifacts_dir, PathBuf::from("/tmp/a"));
         assert_eq!(cfg.seed, 5);
+        assert_eq!(cfg.compressor, CompressorCfg::Identity);
+    }
+
+    #[test]
+    fn from_args_parses_compressor_flag() {
+        let args = Args::parse(
+            ["--compressor", "topkq:0.05:8"].iter().map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args);
+        assert_eq!(
+            cfg.compressor,
+            CompressorCfg::TopKQuant { frac: 0.05, bits: 8 }
+        );
+    }
+
+    #[test]
+    fn from_args_rejects_malformed_compressor() {
+        // a typo must abort, not silently measure the dense baseline
+        let bad = Args::parse(
+            ["--compressor", "bogus:9"].iter().map(|s| s.to_string()),
+        );
+        let res =
+            std::panic::catch_unwind(|| RunConfig::from_args(&bad));
+        assert!(res.is_err());
     }
 
     #[test]

@@ -18,12 +18,16 @@ use crate::comm::{DropChannel, Estimate, Trigger, TriggerState};
 use crate::data::synth::ClassDataset;
 use crate::model::MlpSpec;
 use crate::rng::Pcg64;
+use crate::wire::{CompressorCfg, ErrorFeedback, WireMessage};
 
-/// Leader -> agent messages.
+/// Leader -> agent messages.  Payloads cross the thread boundary as
+/// [`WireMessage`]s — the same codec the single-threaded engines use —
+/// so byte accounting and compression behave identically in the
+/// deployment-shaped runtime.
 enum ToAgent {
     /// Start round k; `zdelta` is the event-based downlink payload
     /// (None = no event or packet dropped).
-    Round { zdelta: Option<Vec<f32>> },
+    Round { zdelta: Option<WireMessage<f32>> },
     /// Hard reset: synchronize `ẑ` to the true `z`.
     Reset { z: Vec<f32> },
     /// Terminate and report stats.
@@ -32,14 +36,15 @@ enum ToAgent {
 
 /// Agent -> leader messages.
 struct FromAgent {
-    /// Sender id (kept for tracing/debug builds).
-    #[allow(dead_code)]
+    /// Sender id.
     agent: usize,
-    /// Uplink payload: `Some(delta)` if the d-trigger fired AND the packet
+    /// Uplink payload: `Some(msg)` if the d-trigger fired AND the packet
     /// survived; `None` otherwise.
-    delta: Option<Vec<f32>>,
+    delta: Option<WireMessage<f32>>,
     /// d-events triggered so far (for load accounting).
     events: u64,
+    /// Cumulative uplink bytes put on the wire by this agent.
+    sent_bytes: u64,
 }
 
 /// Configuration of the threaded runtime.
@@ -56,6 +61,8 @@ pub struct CoordinatorConfig {
     pub drop_down: f64,
     pub reset_period: usize,
     pub seed: u64,
+    /// Delta compressor on both directions (`--compressor` on the CLI).
+    pub compressor: CompressorCfg,
 }
 
 impl Default for CoordinatorConfig {
@@ -72,6 +79,7 @@ impl Default for CoordinatorConfig {
             drop_down: 0.0,
             reset_period: 0,
             seed: 0,
+            compressor: CompressorCfg::Identity,
         }
     }
 }
@@ -81,6 +89,7 @@ struct AgentHandle {
     join: JoinHandle<()>,
     z_trig: TriggerState<f32>,
     down_ch: DropChannel,
+    ef_down: ErrorFeedback<f32>,
 }
 
 /// The leader: owns `z`, spawns one worker thread per shard.
@@ -94,6 +103,9 @@ pub struct Coordinator {
     rng: Pcg64,
     pub round_idx: usize,
     pub uplink_events: u64,
+    comp: Box<dyn crate::wire::Compressor<f32>>,
+    /// Latest cumulative uplink bytes reported by each agent thread.
+    uplink_bytes_per_agent: Vec<u64>,
 }
 
 impl Coordinator {
@@ -109,6 +121,7 @@ impl Coordinator {
         assert_eq!(dim, spec.param_len());
         let (from_tx, from_rx) = channel::<FromAgent>();
         let mut master_rng = Pcg64::seed(cfg.seed);
+        let n_agents = shards.len();
         let agents = shards
             .into_iter()
             .enumerate()
@@ -125,6 +138,7 @@ impl Coordinator {
                     zhat_prev: init.clone(),
                     d_trig: TriggerState::new(cfg.trigger_d, init.clone()),
                     up_ch: DropChannel::new(cfg.drop_up),
+                    ef_up: ErrorFeedback::new(),
                     rng: master_rng.split(i as u64 + 1),
                     to_leader: from_tx.clone(),
                 };
@@ -137,9 +151,11 @@ impl Coordinator {
                     join,
                     z_trig: TriggerState::new(cfg.trigger_z, init.clone()),
                     down_ch: DropChannel::new(cfg.drop_down),
+                    ef_down: ErrorFeedback::new(),
                 }
             })
             .collect();
+        let comp = cfg.compressor.build::<f32>();
         Coordinator {
             rng: master_rng.split(0),
             cfg,
@@ -150,18 +166,27 @@ impl Coordinator {
             from_rx,
             round_idx: 0,
             uplink_events: 0,
+            comp,
+            uplink_bytes_per_agent: vec![0; n_agents],
         }
     }
 
     /// Execute one synchronous round across all agent threads.
     pub fn round(&mut self) {
         let n = self.agents.len();
-        // downlink: per-link event trigger + lossy channel
+        // downlink: per-link event trigger + EF-compressed codec + lossy
+        // channel with byte accounting
         for a in &mut self.agents {
-            let payload = a
-                .z_trig
-                .offer(&self.z, &mut self.rng)
-                .and_then(|delta| a.down_ch.transmit(delta, &mut self.rng));
+            let mut payload = None;
+            if let Some(delta) = a.z_trig.offer(&self.z, &mut self.rng) {
+                let msg = a.ef_down.compress(
+                    &delta,
+                    self.comp.as_ref(),
+                    &mut self.rng,
+                );
+                let bytes = msg.wire_bytes() as u64;
+                payload = a.down_ch.transmit_bytes(msg, bytes, &mut self.rng);
+            }
             a.tx.send(ToAgent::Round { zdelta: payload })
                 .expect("agent thread alive");
         }
@@ -170,17 +195,14 @@ impl Coordinator {
         let mut uplink_events = 0;
         while got < n {
             let msg = self.from_rx.recv().expect("agent reply");
-            if let Some(delta) = msg.delta {
-                let inv = 1.0 / n as f32;
-                let scaled: Vec<f32> =
-                    delta.iter().map(|v| v * inv).collect();
-                self.zeta_hat.apply(&scaled);
+            if let Some(wire_msg) = msg.delta {
+                self.zeta_hat.apply_scaled_msg(&wire_msg, 1.0 / n as f64);
             }
-            uplink_events = uplink_events.max(0);
-            let _ = msg.events;
+            self.uplink_bytes_per_agent[msg.agent] = msg.sent_bytes;
+            uplink_events += msg.events;
             got += 1;
         }
-        let _ = uplink_events;
+        self.uplink_events = uplink_events;
         // z-update (g = 0): z = ζ̂ + (1−α) z
         let alpha = self.cfg.alpha;
         for (z, &zh) in self.z.iter_mut().zip(self.zeta_hat.get()) {
@@ -191,8 +213,12 @@ impl Coordinator {
             && self.round_idx % self.cfg.reset_period == 0
         {
             let z = self.z.clone();
+            let sync_bytes =
+                WireMessage::<f32>::dense_bytes(z.len()) as u64;
             for a in &mut self.agents {
                 a.z_trig.reset(&z);
+                a.ef_down.clear();
+                a.down_ch.stats.record_reliable(sync_bytes);
                 a.tx.send(ToAgent::Reset { z: z.clone() })
                     .expect("agent thread alive");
             }
@@ -202,6 +228,17 @@ impl Coordinator {
     /// Downlink events so far.
     pub fn downlink_events(&self) -> u64 {
         self.agents.iter().map(|a| a.z_trig.events).sum()
+    }
+
+    /// Downlink bytes put on the wire so far.
+    pub fn downlink_bytes(&self) -> u64 {
+        self.agents.iter().map(|a| a.down_ch.stats.sent_bytes).sum()
+    }
+
+    /// Uplink bytes put on the wire so far (as last reported by each
+    /// agent thread).
+    pub fn uplink_bytes(&self) -> u64 {
+        self.uplink_bytes_per_agent.iter().sum()
     }
 
     /// Stop all agent threads; returns total uplink d-events.
@@ -234,6 +271,7 @@ struct AgentWorker {
     zhat_prev: Vec<f32>,
     d_trig: TriggerState<f32>,
     up_ch: DropChannel,
+    ef_up: ErrorFeedback<f32>,
     rng: Pcg64,
     to_leader: Sender<FromAgent>,
 }
@@ -241,14 +279,15 @@ struct AgentWorker {
 impl AgentWorker {
     fn run(&mut self, rx: Receiver<ToAgent>) {
         let dim = self.x.len();
+        let comp = self.cfg.compressor.build::<f32>();
         while let Ok(msg) = rx.recv() {
             match msg {
                 ToAgent::Round { zdelta } => {
                     self.zhat_prev.clear();
                     let snapshot: Vec<f32> = self.zhat.get().to_vec();
                     self.zhat_prev.extend_from_slice(&snapshot);
-                    if let Some(delta) = zdelta {
-                        self.zhat.apply(&delta);
+                    if let Some(wire_msg) = zdelta {
+                        self.zhat.apply_msg(&wire_msg);
                     }
                     let alpha = self.cfg.alpha;
                     for j in 0..dim {
@@ -287,17 +326,36 @@ impl AgentWorker {
                         .zip(&self.u)
                         .map(|(&x, &u)| alpha * x + u)
                         .collect();
-                    let payload = self
-                        .d_trig
-                        .offer(&dvec, &mut self.rng)
-                        .and_then(|dl| self.up_ch.transmit(dl, &mut self.rng));
+                    let mut payload = None;
+                    if let Some(dl) = self.d_trig.offer(&dvec, &mut self.rng)
+                    {
+                        let msg = self.ef_up.compress(
+                            &dl,
+                            comp.as_ref(),
+                            &mut self.rng,
+                        );
+                        let bytes = msg.wire_bytes() as u64;
+                        payload = self.up_ch.transmit_bytes(
+                            msg,
+                            bytes,
+                            &mut self.rng,
+                        );
+                    }
                     let _ = self.to_leader.send(FromAgent {
                         agent: self.id,
                         delta: payload,
                         events: self.d_trig.events,
+                        sent_bytes: self.up_ch.stats.sent_bytes,
                     });
                 }
                 ToAgent::Reset { z } => {
+                    // the coordinator's reset resynchronizes only the z
+                    // (downlink) line; the uplink d-line keeps its trigger
+                    // reference AND its error-feedback residual, which is
+                    // re-injected on the next event — clearing it here
+                    // would silently discard compressed update mass
+                    // (unlike ConsensusAdmm::reset, which resyncs ζ̂
+                    // exactly and may therefore drop the residual).
                     self.zhat.reset_to(&z);
                 }
                 ToAgent::Stop => {
@@ -305,6 +363,7 @@ impl AgentWorker {
                         agent: self.id,
                         delta: None,
                         events: self.d_trig.events,
+                        sent_bytes: self.up_ch.stats.sent_bytes,
                     });
                     break;
                 }
@@ -390,5 +449,66 @@ mod tests {
         let up_event = run(Trigger::vanilla(1.0));
         assert_eq!(up_always, 80);
         assert!(up_event < up_always, "event {up_event} !< {up_always}");
+    }
+
+    #[test]
+    fn wire_bytes_counted_on_both_directions() {
+        let mut rng = Pcg64::seed(4);
+        let (train, _) = generate(&SynthSpec::tiny(), &mut rng);
+        let shards = single_class_split(&train, 4);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+        let dim = init.len();
+        let cfg = CoordinatorConfig {
+            steps: 1,
+            batch: 4,
+            seed: 13,
+            ..Default::default()
+        };
+        let mut coord = Coordinator::spawn(cfg, spec, shards, init);
+        let rounds = 15;
+        for _ in 0..rounds {
+            coord.round();
+        }
+        // Trigger::Always + identity compressor: every round, every agent,
+        // both directions carry one dense message.
+        let dense = crate::wire::WireMessage::<f32>::dense_bytes(dim) as u64;
+        let expect = rounds as u64 * 4 * dense;
+        assert_eq!(coord.downlink_bytes(), expect);
+        assert_eq!(coord.uplink_bytes(), expect);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn compressed_coordinator_still_learns() {
+        let mut rng = Pcg64::seed(5);
+        let (train, test) = generate(&SynthSpec::tiny(), &mut rng);
+        let shards = single_class_split(&train, 4);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+        let acc0 = spec.accuracy(&init, &test.xs, &test.labels);
+        let cfg = CoordinatorConfig {
+            rho: 1.0,
+            lr: 0.1,
+            steps: 3,
+            batch: 8,
+            trigger_d: Trigger::vanilla(0.05),
+            trigger_z: Trigger::vanilla(0.05),
+            seed: 7,
+            compressor: crate::wire::CompressorCfg::TopKQuant {
+                frac: 0.25,
+                bits: 10,
+            },
+            ..Default::default()
+        };
+        let mut coord = Coordinator::spawn(cfg, spec.clone(), shards, init);
+        for _ in 0..40 {
+            coord.round();
+        }
+        let acc = spec.accuracy(&coord.z, &test.xs, &test.labels);
+        let uplink_bytes = coord.uplink_bytes();
+        coord.shutdown();
+        assert!(acc > acc0 + 0.15, "compressed acc {acc0} -> {acc}");
+        assert!(uplink_bytes > 0);
     }
 }

@@ -109,9 +109,12 @@ pub fn run_convex(
         };
         engine.round(&mut solver, prox, &mut rng);
         let sub = (prob.objective(&engine.z) - fstar).max(1e-16);
+        let (up_bytes, down_bytes) = engine.bytes_split();
         rec.add("events", (k + 1) as f64, engine.total_events() as f64);
         rec.add("subopt", (k + 1) as f64, sub);
         rec.add("load", (k + 1) as f64, engine.comm_load());
+        rec.add("up_bytes", (k + 1) as f64, up_bytes as f64);
+        rec.add("down_bytes", (k + 1) as f64, down_bytes as f64);
     }
     rec
 }

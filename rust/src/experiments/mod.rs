@@ -9,6 +9,8 @@ pub mod fig11;
 pub mod fig12;
 pub mod fig9;
 pub mod nn;
+pub mod pareto;
 pub mod rates;
 
 pub use nn::{NnExperimentConfig, NnWorkload};
+pub use pareto::{ParetoConfig, ParetoPoint};

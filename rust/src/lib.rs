@@ -9,6 +9,9 @@
 //! * [`comm`] — the paper's event-based communication protocol (vanilla and
 //!   randomized triggers), packet-drop channel simulation and periodic
 //!   resets (Sec. 2, App. E).
+//! * [`wire`] — the compressed-message codec (TopK / RandK / b-bit
+//!   stochastic quantization with error feedback) and byte-accurate
+//!   uplink/downlink accounting layered under every link.
 //! * [`admm`] — Alg. 1 (consensus), Alg. 2 (general `Ax + Bz = c`),
 //!   consensus-over-graph (Eq. 7) and the sharing problem (App. A).
 //! * [`baselines`] — FedAvg, FedProx, SCAFFOLD and FedADMM under an
@@ -32,6 +35,7 @@ pub mod model;
 pub mod proptest;
 pub mod rng;
 pub mod topology;
+pub mod wire;
 
 pub mod admm;
 pub mod baselines;
@@ -47,4 +51,5 @@ pub mod prelude {
     pub use crate::linalg::Matrix;
     pub use crate::metrics::Recorder;
     pub use crate::rng::{Pcg64, Rng};
+    pub use crate::wire::{Compressor, CompressorCfg, WireMessage};
 }

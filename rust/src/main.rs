@@ -10,9 +10,9 @@
 use anyhow::Result;
 use deluxe::cli::Args;
 use deluxe::config::RunConfig;
-use deluxe::experiments::{fig10, fig11, fig12, fig9, nn, rates};
+use deluxe::experiments::{fig10, fig11, fig12, fig9, nn, pareto, rates};
 use deluxe::jsonio::Json;
-use deluxe::metrics::{fmt_opt, Recorder, Table};
+use deluxe::metrics::{fmt_bytes, fmt_opt, Recorder, Table};
 use deluxe::runtime::{PjrtRuntime, Variant};
 
 const USAGE: &str = "\
@@ -21,7 +21,9 @@ deluxe — Distributed Event-based Learning via ADMM (ICML 2025 reproduction)
 USAGE:
   deluxe exp <id> [--rounds N] [--agents N] [--seed S] [--backend native|pjrt|pjrt-ref]
              [--results DIR] [--artifacts DIR]
-  deluxe train [--rounds N] [--delta D] [--seed S]     threaded e2e run
+             [--compressor none|topk:F|randk:F|quant:B|topkq:F:B]
+  deluxe train [--rounds N] [--delta D] [--seed S] [--compressor C]
+                                                       threaded e2e run
   deluxe info                                          artifact manifest
   deluxe help
 
@@ -34,6 +36,7 @@ EXPERIMENT IDS (DESIGN.md §6):
   fig11                   Fig.11  MNIST over a graph
   fig12                   Fig.12  linreg over a 50-agent graph
   rates                   Thm 4.1/Cor 2.2 rate + floor validation
+  pareto                  trigger-Δ x compression frontier (bytes-accurate)
 ";
 
 fn main() -> Result<()> {
@@ -95,6 +98,7 @@ fn run_exp(args: &Args) -> Result<()> {
         "fig11" => exp_fig11(args, &rc),
         "fig12" => exp_fig12(args, &rc),
         "rates" => exp_rates(args, &rc),
+        "pareto" => exp_pareto(args, &rc),
         other => {
             eprintln!("unknown experiment {other:?}\n");
             print!("{USAGE}");
@@ -405,6 +409,88 @@ fn exp_rates(args: &Args, rc: &RunConfig) -> Result<()> {
     Ok(())
 }
 
+fn exp_pareto(args: &Args, rc: &RunConfig) -> Result<()> {
+    let cfg = pareto::ParetoConfig {
+        n_agents: args.usize_or("agents", 20),
+        rounds: args.usize_or("rounds", 400),
+        seed: rc.seed,
+        ..Default::default()
+    };
+    println!(
+        "== Pareto: trigger-Δ x compression (lasso + consensus, \
+         byte-accurate) =="
+    );
+    let points = pareto::run(&cfg);
+    let mut table = Table::new(&[
+        "panel",
+        "Δ",
+        "compressor",
+        "events",
+        "uplink",
+        "downlink",
+        "subopt",
+    ]);
+    let mut json_rows = Vec::new();
+    for p in &points {
+        table.row(vec![
+            p.panel.clone(),
+            format!("{:.0e}", p.delta),
+            p.compressor.clone(),
+            format!("{}", p.events),
+            fmt_bytes(p.up_bytes),
+            fmt_bytes(p.down_bytes),
+            format!("{:.3e}", p.subopt),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("panel", Json::Str(p.panel.clone())),
+            ("delta", Json::Num(p.delta)),
+            ("compressor", Json::Str(p.compressor.clone())),
+            ("events", Json::Num(p.events as f64)),
+            ("up_bytes", Json::Num(p.up_bytes as f64)),
+            ("down_bytes", Json::Num(p.down_bytes as f64)),
+            ("objective", Json::Num(p.objective)),
+            ("subopt", Json::Num(p.subopt)),
+        ]));
+        save(
+            rc,
+            &format!(
+                "pareto_{}_d{:.0e}_{}",
+                p.panel,
+                p.delta,
+                sanitize(&p.compressor)
+            ),
+            &p.recorder,
+        )?;
+    }
+    println!("{}", table.render());
+    // headline: byte reduction vs dense at matched objective per panel/Δ
+    for p in &points {
+        if p.compressor == "identity" {
+            continue;
+        }
+        if let Some((ratio, gap)) = pareto::uplink_reduction(
+            &points,
+            &p.panel,
+            p.delta,
+            &p.compressor,
+        ) {
+            println!(
+                "{:<10} Δ={:<8.0e} {:<14} uplink reduction {ratio:6.1}x \
+                 (objective gap {:.3}%)",
+                p.panel,
+                p.delta,
+                p.compressor,
+                gap * 100.0
+            );
+        }
+    }
+    deluxe::jsonio::write_json(
+        &rc.results_dir.join("pareto.json"),
+        &Json::Arr(json_rows),
+    )?;
+    Ok(())
+}
+
 fn run_train(args: &Args) -> Result<()> {
     use deluxe::comm::Trigger;
     use deluxe::coordinator::{Coordinator, CoordinatorConfig};
@@ -413,9 +499,11 @@ fn run_train(args: &Args) -> Result<()> {
     let delta = args.f64_or("delta", 0.5);
     let w = nn::NnWorkload::mnist(rc.seed);
     println!(
-        "threaded e2e training: {} agents (single-class shards), {} rounds, Δ={delta}",
+        "threaded e2e training: {} agents (single-class shards), {} rounds, \
+         Δ={delta}, compressor {}",
         w.n_agents(),
-        rounds
+        rounds,
+        rc.compressor.label()
     );
     let cfg = CoordinatorConfig {
         rho: w.rho as f32,
@@ -425,6 +513,7 @@ fn run_train(args: &Args) -> Result<()> {
         trigger_d: Trigger::vanilla(delta),
         trigger_z: Trigger::vanilla(delta * 0.1),
         seed: rc.seed,
+        compressor: rc.compressor,
         ..Default::default()
     };
     let init = w.spec.init(&mut deluxe::rng::Pcg64::seed(rc.seed));
@@ -439,10 +528,21 @@ fn run_train(args: &Args) -> Result<()> {
     }
     let acc = w.spec.accuracy(&coord.z, &w.test.xs, &w.test.labels);
     let down = coord.downlink_events();
+    let up_bytes = coord.uplink_bytes();
+    let down_bytes = coord.downlink_bytes();
     let up = coord.shutdown();
+    let dense = deluxe::wire::WireMessage::<f32>::dense_bytes(
+        w.spec.param_len(),
+    ) as u64;
     println!(
         "final accuracy {acc:.3}; events up {up} down {down} (full would be {})",
         rounds * w.n_agents() * 2
+    );
+    println!(
+        "wire: uplink {} downlink {} (full-dense would be {} per direction)",
+        fmt_bytes(up_bytes),
+        fmt_bytes(down_bytes),
+        fmt_bytes(rounds as u64 * w.n_agents() as u64 * dense),
     );
     Ok(())
 }

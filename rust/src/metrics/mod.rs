@@ -146,6 +146,21 @@ pub fn fmt_opt(v: Option<f64>) -> String {
     }
 }
 
+/// Human-readable byte count for the wire-accounting columns.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b < KIB {
+        format!("{bytes} B")
+    } else if b < KIB * KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else if b < KIB * KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +221,15 @@ mod tests {
         r.add("a", 1.0, 2.0);
         let j = r.to_json();
         assert!(j.get("a").is_some());
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert!(fmt_bytes(5 * 1024 * 1024 * 1024).ends_with("GiB"));
     }
 
     #[test]

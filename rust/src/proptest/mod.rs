@@ -48,6 +48,125 @@ pub fn forall_seeded<T: std::fmt::Debug + Clone>(
     }
 }
 
+/// Property tests for the wire layer (codec + compressors), driven by the
+/// harness above.  Kept here rather than in `wire` so the properties read
+/// as specifications: unbiasedness of the stochastic quantizer,
+/// contraction of TopK, losslessness of the identity codec path.
+#[cfg(test)]
+mod wire_props {
+    use super::forall;
+    use crate::rng::{Pcg64, Rng};
+    use crate::wire::{
+        Compressor, CompressorCfg, Quant, TopK, WireMessage,
+    };
+
+    fn norm(v: &[f64]) -> f64 {
+        v.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn prop_identity_codec_roundtrip_is_lossless() {
+        forall(
+            "identity encode/decode is lossless",
+            |rng| {
+                let dim = 1 + rng.below(64);
+                let v: Vec<f64> =
+                    (0..dim).map(|_| rng.normal() * 10.0).collect();
+                v
+            },
+            |v| {
+                let comp = CompressorCfg::Identity.build::<f64>();
+                let mut rng = Pcg64::seed(1);
+                let msg = comp.compress(v, &mut rng);
+                let decoded = WireMessage::<f64>::decode(&msg.encode())
+                    .map_err(|e| format!("decode failed: {e}"))?;
+                if decoded != msg {
+                    return Err("decode != encode input".into());
+                }
+                if decoded.to_dense() != *v {
+                    return Err("identity payload not bit-exact".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_stochastic_quantizer_is_unbiased() {
+        forall(
+            "E[Q(v)] = v for the b-bit stochastic quantizer",
+            |rng| {
+                let dim = 2 + rng.below(6);
+                let v: Vec<f64> =
+                    (0..dim).map(|_| rng.range(-3.0, 3.0)).collect();
+                let seed = rng.next_u64();
+                (v, seed)
+            },
+            |(v, seed)| {
+                let comp = Quant { bits: 8 };
+                let mut rng = Pcg64::seed(*seed);
+                let draws = 2000;
+                let mut mean = vec![0.0f64; v.len()];
+                for _ in 0..draws {
+                    let out = comp.compress(v, &mut rng).to_dense();
+                    for (m, o) in mean.iter_mut().zip(out) {
+                        *m += o / draws as f64;
+                    }
+                }
+                let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi =
+                    v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let step = (hi - lo) / 255.0;
+                // per-draw sd <= step/2, so the mean's sd <= step/(2*sqrt(N));
+                // 0.15*step is a >13-sigma band
+                let tol = (0.15 * step).max(1e-12);
+                for (m, x) in mean.iter().zip(v) {
+                    if (m - x).abs() > tol {
+                        return Err(format!(
+                            "biased: mean {m} vs value {x} (tol {tol})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_topk_error_norm_bounded_by_input_norm() {
+        forall(
+            "|v - TopK(v)| <= |v|",
+            |rng| {
+                let dim = 1 + rng.below(100);
+                let frac = rng.range(0.01, 1.0);
+                let v: Vec<f64> = (0..dim)
+                    .map(|_| rng.normal() * 10.0f64.powi(rng.below(4) as i32))
+                    .collect();
+                (v, frac)
+            },
+            |(v, frac)| {
+                let comp = TopK { frac: *frac };
+                let mut rng = Pcg64::seed(2);
+                let kept = comp.compress(v, &mut rng).to_dense();
+                let err: Vec<f64> = v
+                    .iter()
+                    .zip(&kept)
+                    .map(|(a, b)| a - b)
+                    .collect();
+                if norm(&err) <= norm(v) + 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "contraction violated: |err| {} > |v| {}",
+                        norm(&err),
+                        norm(v)
+                    ))
+                }
+            },
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -47,6 +47,51 @@ impl Graph {
         Graph::new(n, (0..n).map(|i| (i, (i + 1) % n)).collect())
     }
 
+    /// Star: vertex 0 is the hub, every other vertex is a leaf — the
+    /// worst-case bottleneck topology (server-like, diameter 2).
+    pub fn star(n: usize) -> Self {
+        assert!(n >= 1, "star needs at least one vertex");
+        Graph::new(n, (1..n).map(|i| (0, i)).collect())
+    }
+
+    /// `rows x cols` 4-neighbor grid (vertex `r*cols + c`) — the standard
+    /// mesh topology for spatially local scenarios.
+    pub fn grid2d(rows: usize, cols: usize) -> Self {
+        assert!(rows >= 1 && cols >= 1, "grid needs positive extents");
+        let mut edges = Vec::with_capacity(2 * rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = r * cols + c;
+                if c + 1 < cols {
+                    edges.push((v, v + 1));
+                }
+                if r + 1 < rows {
+                    edges.push((v, v + cols));
+                }
+            }
+        }
+        Graph::new(rows * cols, edges)
+    }
+
+    /// Seeded Erdős–Rényi `G(n, p)`: each of the `n(n-1)/2` possible edges
+    /// is present independently with probability `p`.  Deterministic given
+    /// the RNG state; NOT guaranteed connected — callers that need
+    /// connectivity should check [`Self::is_connected`] (or use
+    /// [`Self::random_connected`], which plants a spanning tree).
+    pub fn erdos_renyi(n: usize, p: f64, rng: &mut impl Rng) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p in [0,1]");
+        let mut edges = Vec::new();
+        for a in 0..n {
+            for b in a + 1..n {
+                if rng.bernoulli(p) {
+                    edges.push((a, b));
+                }
+            }
+        }
+        // built in sorted order, no duplicates, all indices < n
+        Graph { n, edges }
+    }
+
     /// Random connected graph with exactly `m >= n-1` edges: random
     /// spanning tree (guarantees connectivity) + random extra edges.
     /// The paper's Fig. 11 uses (10, 70); Fig. 12 uses (50, 1762).
@@ -208,6 +253,81 @@ mod tests {
             let g = Graph::random_connected(12, 11, &mut rng); // tree
             assert_eq!(g.edges.len(), 11);
             assert!(g.is_connected());
+        }
+    }
+
+    #[test]
+    fn star_structure() {
+        let g = Graph::star(6);
+        assert_eq!(g.edges.len(), 5);
+        assert!(g.is_connected());
+        assert_eq!(g.degree(0), 5);
+        for v in 1..6 {
+            assert_eq!(g.degree(v), 1);
+        }
+        // degenerate cases
+        assert!(Graph::star(1).is_connected());
+        assert_eq!(Graph::star(2).edges, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn grid2d_structure() {
+        let g = Graph::grid2d(3, 4);
+        assert_eq!(g.n, 12);
+        // horizontal: 3 rows x 3; vertical: 2 gaps x 4 cols
+        assert_eq!(g.edges.len(), 3 * 3 + 2 * 4);
+        assert!(g.is_connected());
+        assert_eq!(g.degree(0), 2); // corner
+        assert_eq!(g.degree(1), 3); // edge
+        assert_eq!(g.degree(5), 4); // interior (row 1, col 1)
+        // 1 x n degenerates to a path
+        let path = Graph::grid2d(1, 5);
+        assert_eq!(path.edges.len(), 4);
+        assert!(path.is_connected());
+    }
+
+    #[test]
+    fn erdos_renyi_is_seed_deterministic() {
+        let g1 = Graph::erdos_renyi(15, 0.4, &mut Pcg64::seed(9));
+        let g2 = Graph::erdos_renyi(15, 0.4, &mut Pcg64::seed(9));
+        assert_eq!(g1.edges, g2.edges);
+        let g3 = Graph::erdos_renyi(15, 0.4, &mut Pcg64::seed(10));
+        assert_ne!(g1.edges, g3.edges);
+    }
+
+    #[test]
+    fn erdos_renyi_connectivity_regimes() {
+        // p = 1 is the complete graph; p = 0 is edgeless.
+        let mut rng = Pcg64::seed(11);
+        let full = Graph::erdos_renyi(8, 1.0, &mut rng);
+        assert_eq!(full.edges.len(), 28);
+        assert!(full.is_connected());
+        let empty = Graph::erdos_renyi(8, 0.0, &mut rng);
+        assert!(empty.edges.is_empty());
+        assert!(!empty.is_connected());
+        // dense regime: p well above the ln(n)/n connectivity threshold
+        // is connected for every seed we sample
+        for seed in 0..20u64 {
+            let g = Graph::erdos_renyi(20, 0.5, &mut Pcg64::seed(seed));
+            assert!(g.is_connected(), "seed {seed} disconnected");
+        }
+    }
+
+    #[test]
+    fn new_topologies_drive_graph_admm_shapes() {
+        // the constructors must produce graphs the incidence machinery
+        // accepts (canonical edges, valid indices)
+        for g in [
+            Graph::star(7),
+            Graph::grid2d(3, 3),
+            Graph::erdos_renyi(9, 0.6, &mut Pcg64::seed(12)),
+        ] {
+            let (at, ar) = g.incidence();
+            assert_eq!(at.rows, g.edges.len());
+            assert_eq!(ar.cols, g.n);
+            for w in g.edges.windows(2) {
+                assert!(w[0] < w[1], "edges must be sorted/deduped");
+            }
         }
     }
 

@@ -1,0 +1,609 @@
+//! `WireMessage` — the byte-exact encode/decode codec for every payload
+//! that crosses a simulated link.
+//!
+//! Four payload layouts cover the compressor outputs:
+//!
+//! * `Dense` — raw little-endian IEEE-754 values; encode→decode is
+//!   bit-exact for both f32 and f64 (the codec stores bit patterns, never
+//!   re-rounded decimal text).
+//! * `Sparse` — index+value pairs (TopK / RandK sparsification).
+//! * `Quant` — b-bit uniform stochastic quantization of a dense vector:
+//!   per-message `[lo, hi]` range plus bit-packed level indices.
+//! * `SparseQuant` — TopK indices with quantized values (the
+//!   multiplicative combination of Ren et al., arXiv:2501.13516).
+//!
+//! Every layout knows its exact encoded size ([`WireMessage::wire_bytes`],
+//! equal to `encode().len()`), which is what the byte-accurate
+//! communication accounting in [`crate::wire::WireStats`] charges.
+//!
+//! Wire format (all integers little-endian):
+//!
+//! ```text
+//! [0] magic 0xD1   [1] scalar tag (= Scalar::WIRE_BYTES)   [2] kind
+//! [3..7] u32 dim (Dense: value count; others: decompressed dimension)
+//! kind 0 Dense:       dim * WIRE_BYTES raw values
+//! kind 1 Sparse:      u32 k, k * u32 idx, k * WIRE_BYTES values
+//! kind 2 Quant:       u8 bits, f64 lo, f64 hi, ceil(dim*bits/8) packed
+//! kind 3 SparseQuant: u32 k, k * u32 idx,
+//!                     u8 bits, f64 lo, f64 hi, ceil(k*bits/8) packed
+//! ```
+
+use crate::comm::Scalar;
+
+const MAGIC: u8 = 0xD1;
+const KIND_DENSE: u8 = 0;
+const KIND_SPARSE: u8 = 1;
+const KIND_QUANT: u8 = 2;
+const KIND_SPARSE_QUANT: u8 = 3;
+
+/// Fixed per-message overhead: magic + scalar tag + kind + u32 dim.
+pub const HEADER_BYTES: usize = 7;
+
+/// A b-bit uniformly quantized block: level indices over `[lo, hi]`.
+///
+/// Kept unpacked in memory (one `u32` level per value); bit-packing
+/// happens at encode time and is what [`Self::wire_bytes`] charges.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantBlock {
+    /// Bits per value, 1..=16.
+    pub bits: u8,
+    pub lo: f64,
+    pub hi: f64,
+    /// One level index per value, each < 2^bits.
+    pub levels: Vec<u32>,
+}
+
+impl QuantBlock {
+    /// Largest representable level for a bit width.
+    pub fn max_level(bits: u8) -> u32 {
+        debug_assert!((1..=16).contains(&bits));
+        (1u32 << bits) - 1
+    }
+
+    /// Dequantize one level index back to the value grid.
+    pub fn dequant(&self, level: u32) -> f64 {
+        let maxl = Self::max_level(self.bits);
+        if maxl == 0 || self.hi <= self.lo {
+            return self.lo;
+        }
+        self.lo + (self.hi - self.lo) * level as f64 / maxl as f64
+    }
+
+    /// Encoded size of the block body: bits + lo + hi + packed levels.
+    pub fn wire_bytes(&self) -> usize {
+        1 + 8 + 8 + Self::packed_len(self.levels.len(), self.bits)
+    }
+
+    fn packed_len(count: usize, bits: u8) -> usize {
+        (count * bits as usize + 7) / 8
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.push(self.bits);
+        out.extend_from_slice(&self.lo.to_le_bytes());
+        out.extend_from_slice(&self.hi.to_le_bytes());
+        out.extend_from_slice(&pack_bits(&self.levels, self.bits));
+    }
+
+    fn decode_from(
+        buf: &[u8],
+        pos: &mut usize,
+        count: usize,
+    ) -> Result<QuantBlock, String> {
+        let bits = *buf.get(*pos).ok_or("truncated quant block")?;
+        *pos += 1;
+        if !(1..=16).contains(&bits) {
+            return Err(format!("quant bits {bits} out of range 1..=16"));
+        }
+        let lo = read_f64(buf, pos)?;
+        let hi = read_f64(buf, pos)?;
+        // u64 math: count is wire-controlled, the product must not wrap
+        let plen64 = (count as u64 * bits as u64 + 7) / 8;
+        if (buf.len() as u64) < *pos as u64 + plen64 {
+            return Err("truncated quant levels".into());
+        }
+        let plen = plen64 as usize;
+        let levels = unpack_bits(&buf[*pos..*pos + plen], count, bits);
+        *pos += plen;
+        Ok(QuantBlock { bits, lo, hi, levels })
+    }
+}
+
+/// LSB-first bit packing of level indices.
+fn pack_bits(levels: &[u32], bits: u8) -> Vec<u8> {
+    let bits = bits as usize;
+    let mut out = vec![0u8; (levels.len() * bits + 7) / 8];
+    let mut bitpos = 0usize;
+    for &v in levels {
+        for b in 0..bits {
+            if (v >> b) & 1 == 1 {
+                out[(bitpos + b) / 8] |= 1 << ((bitpos + b) % 8);
+            }
+        }
+        bitpos += bits;
+    }
+    out
+}
+
+fn unpack_bits(buf: &[u8], count: usize, bits: u8) -> Vec<u32> {
+    let bits = bits as usize;
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let mut v = 0u32;
+        for b in 0..bits {
+            if (buf[(bitpos + b) / 8] >> ((bitpos + b) % 8)) & 1 == 1 {
+                v |= 1 << b;
+            }
+        }
+        out.push(v);
+        bitpos += bits;
+    }
+    out
+}
+
+fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32, String> {
+    if buf.len() < *pos + 4 {
+        return Err("truncated u32".into());
+    }
+    let v = u32::from_le_bytes([
+        buf[*pos],
+        buf[*pos + 1],
+        buf[*pos + 2],
+        buf[*pos + 3],
+    ]);
+    *pos += 4;
+    Ok(v)
+}
+
+fn read_f64(buf: &[u8], pos: &mut usize) -> Result<f64, String> {
+    if buf.len() < *pos + 8 {
+        return Err("truncated f64".into());
+    }
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[*pos..*pos + 8]);
+    *pos += 8;
+    Ok(f64::from_le_bytes(b))
+}
+
+/// One compressed (or dense) payload as it travels a link.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMessage<T: Scalar> {
+    /// All `dim` values, bit-exact.
+    Dense(Vec<T>),
+    /// `val[j]` lives at coordinate `idx[j]`; all other coordinates are 0.
+    Sparse { dim: u32, idx: Vec<u32>, val: Vec<T> },
+    /// Every coordinate quantized to `bits` levels over `[lo, hi]`.
+    Quant(QuantBlock),
+    /// TopK indices with quantized values.
+    SparseQuant { dim: u32, idx: Vec<u32>, q: QuantBlock },
+}
+
+impl<T: Scalar> WireMessage<T> {
+    /// Dense message from a slice (clones; the codec owns its payload).
+    pub fn dense(v: &[T]) -> Self {
+        WireMessage::Dense(v.to_vec())
+    }
+
+    /// Encoded size of a dense message of `dim` values — the normalizer
+    /// for compression-ratio reporting and the cost the baselines charge
+    /// per full-model transfer.
+    pub fn dense_bytes(dim: usize) -> usize {
+        HEADER_BYTES + dim * T::WIRE_BYTES
+    }
+
+    /// Decompressed dimension.
+    pub fn dim(&self) -> usize {
+        match self {
+            WireMessage::Dense(v) => v.len(),
+            WireMessage::Sparse { dim, .. } => *dim as usize,
+            WireMessage::Quant(q) => q.levels.len(),
+            WireMessage::SparseQuant { dim, .. } => *dim as usize,
+        }
+    }
+
+    /// Exact encoded length (`== self.encode().len()`) without encoding.
+    pub fn wire_bytes(&self) -> usize {
+        HEADER_BYTES
+            + match self {
+                WireMessage::Dense(v) => v.len() * T::WIRE_BYTES,
+                WireMessage::Sparse { idx, val, .. } => {
+                    4 + idx.len() * 4 + val.len() * T::WIRE_BYTES
+                }
+                WireMessage::Quant(q) => q.wire_bytes(),
+                WireMessage::SparseQuant { idx, q, .. } => {
+                    4 + idx.len() * 4 + q.wire_bytes()
+                }
+            }
+    }
+
+    /// Serialize to the wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.push(MAGIC);
+        out.push(T::WIRE_BYTES as u8);
+        match self {
+            WireMessage::Dense(v) => {
+                out.push(KIND_DENSE);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for &x in v {
+                    x.write_le(&mut out);
+                }
+            }
+            WireMessage::Sparse { dim, idx, val } => {
+                out.push(KIND_SPARSE);
+                out.extend_from_slice(&dim.to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for &i in idx {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for &x in val {
+                    x.write_le(&mut out);
+                }
+            }
+            WireMessage::Quant(q) => {
+                out.push(KIND_QUANT);
+                out.extend_from_slice(
+                    &(q.levels.len() as u32).to_le_bytes(),
+                );
+                q.encode_into(&mut out);
+            }
+            WireMessage::SparseQuant { dim, idx, q } => {
+                out.push(KIND_SPARSE_QUANT);
+                out.extend_from_slice(&dim.to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for &i in idx {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                q.encode_into(&mut out);
+            }
+        }
+        debug_assert_eq!(out.len(), self.wire_bytes());
+        out
+    }
+
+    /// Parse the wire format back; errors on wrong magic, scalar-width
+    /// mismatch, unknown kind, or truncation.
+    pub fn decode(buf: &[u8]) -> Result<Self, String> {
+        if buf.len() < HEADER_BYTES {
+            return Err("message shorter than header".into());
+        }
+        if buf[0] != MAGIC {
+            return Err(format!("bad magic 0x{:02x}", buf[0]));
+        }
+        if buf[1] as usize != T::WIRE_BYTES {
+            return Err(format!(
+                "scalar width mismatch: wire {} vs decoder {}",
+                buf[1],
+                T::WIRE_BYTES
+            ));
+        }
+        let kind = buf[2];
+        let mut pos = 3;
+        let dim = read_u32(buf, &mut pos)? as usize;
+        match kind {
+            KIND_DENSE => {
+                if (buf.len() as u64)
+                    < pos as u64 + dim as u64 * T::WIRE_BYTES as u64
+                {
+                    return Err("truncated dense payload".into());
+                }
+                let mut v = Vec::with_capacity(dim);
+                for j in 0..dim {
+                    v.push(T::read_le(&buf[pos + j * T::WIRE_BYTES..]));
+                }
+                Ok(WireMessage::Dense(v))
+            }
+            KIND_SPARSE => {
+                let k = read_u32(buf, &mut pos)? as usize;
+                if k > dim {
+                    return Err(format!("sparse k {k} > dim {dim}"));
+                }
+                // validate the full remaining length BEFORE allocating:
+                // k is wire-controlled and must never size an allocation
+                // on its own (a garbage k near u32::MAX would abort);
+                // u64 math so the product cannot wrap on 32-bit targets
+                if (buf.len() as u64)
+                    < pos as u64 + k as u64 * (4 + T::WIRE_BYTES) as u64
+                {
+                    return Err("truncated sparse payload".into());
+                }
+                let mut idx = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let i = read_u32(buf, &mut pos)?;
+                    if i as usize >= dim {
+                        return Err(format!(
+                            "sparse index {i} out of range (dim {dim})"
+                        ));
+                    }
+                    idx.push(i);
+                }
+                let mut val = Vec::with_capacity(k);
+                for j in 0..k {
+                    val.push(T::read_le(&buf[pos + j * T::WIRE_BYTES..]));
+                }
+                Ok(WireMessage::Sparse { dim: dim as u32, idx, val })
+            }
+            KIND_QUANT => {
+                let q = QuantBlock::decode_from(buf, &mut pos, dim)?;
+                Ok(WireMessage::Quant(q))
+            }
+            KIND_SPARSE_QUANT => {
+                let k = read_u32(buf, &mut pos)? as usize;
+                if k > dim {
+                    return Err(format!("sparse-quant k {k} > dim {dim}"));
+                }
+                // length check before any k-sized allocation (see Sparse)
+                if (buf.len() as u64) < pos as u64 + k as u64 * 4 {
+                    return Err("truncated sparse-quant indices".into());
+                }
+                let mut idx = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let i = read_u32(buf, &mut pos)?;
+                    if i as usize >= dim {
+                        return Err(format!(
+                            "sparse-quant index {i} out of range (dim {dim})"
+                        ));
+                    }
+                    idx.push(i);
+                }
+                let q = QuantBlock::decode_from(buf, &mut pos, k)?;
+                Ok(WireMessage::SparseQuant { dim: dim as u32, idx, q })
+            }
+            other => Err(format!("unknown payload kind {other}")),
+        }
+    }
+
+    /// Decompress to a full vector (zeros where a sparse message is
+    /// silent).
+    pub fn to_dense(&self) -> Vec<T> {
+        match self {
+            WireMessage::Dense(v) => v.clone(),
+            WireMessage::Sparse { dim, idx, val } => {
+                let mut out = vec![T::zero(); *dim as usize];
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+            WireMessage::Quant(q) => q
+                .levels
+                .iter()
+                .map(|&l| T::from_f64(q.dequant(l)))
+                .collect(),
+            WireMessage::SparseQuant { dim, idx, q } => {
+                let mut out = vec![T::zero(); *dim as usize];
+                for (&i, &l) in idx.iter().zip(&q.levels) {
+                    out[i as usize] = T::from_f64(q.dequant(l));
+                }
+                out
+            }
+        }
+    }
+
+    /// `out += scale * decompress(self)`, touching only the coordinates
+    /// the message carries.  The scaled addend is rounded to `T` *before*
+    /// the accumulate so the identity-compressor path is bit-identical to
+    /// the historical uncompressed code (`apply(scale * delta)`).
+    pub fn add_scaled_to(&self, scale: f64, out: &mut [T]) {
+        debug_assert_eq!(self.dim(), out.len());
+        let acc = |o: &mut T, v: f64| {
+            let addend = T::from_f64(v * scale);
+            *o = T::from_f64(o.to_f64() + addend.to_f64());
+        };
+        match self {
+            WireMessage::Dense(v) => {
+                for (o, &x) in out.iter_mut().zip(v) {
+                    acc(o, x.to_f64());
+                }
+            }
+            WireMessage::Sparse { idx, val, .. } => {
+                for (&i, &x) in idx.iter().zip(val) {
+                    acc(&mut out[i as usize], x.to_f64());
+                }
+            }
+            WireMessage::Quant(q) => {
+                for (o, &l) in out.iter_mut().zip(&q.levels) {
+                    acc(o, q.dequant(l));
+                }
+            }
+            WireMessage::SparseQuant { idx, q, .. } => {
+                for (&i, &l) in idx.iter().zip(&q.levels) {
+                    acc(&mut out[i as usize], q.dequant(l));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn randvec_f64(n: usize, rng: &mut Pcg64) -> Vec<f64> {
+        (0..n).map(|_| rng.normal() * 3.0).collect()
+    }
+
+    #[test]
+    fn dense_f64_roundtrip_is_bit_exact() {
+        let mut rng = Pcg64::seed(1);
+        let v = randvec_f64(137, &mut rng);
+        let msg = WireMessage::dense(&v);
+        let buf = msg.encode();
+        assert_eq!(buf.len(), msg.wire_bytes());
+        let back = WireMessage::<f64>::decode(&buf).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(back.to_dense(), v);
+    }
+
+    #[test]
+    fn dense_f32_roundtrip_is_bit_exact() {
+        let mut rng = Pcg64::seed(2);
+        let v: Vec<f32> = (0..211).map(|_| rng.f32n()).collect();
+        let msg = WireMessage::dense(&v);
+        let back = WireMessage::<f32>::decode(&msg.encode()).unwrap();
+        // bit-exact, including any subnormals/signed zeros
+        let got = back.to_dense();
+        assert_eq!(got.len(), v.len());
+        for (g, w) in got.iter().zip(&v) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn dense_roundtrip_preserves_special_values() {
+        let v = vec![0.0f64, -0.0, f64::MIN_POSITIVE, 1e300, -1e-300];
+        let back =
+            WireMessage::<f64>::decode(&WireMessage::dense(&v).encode())
+                .unwrap()
+                .to_dense();
+        for (g, w) in back.iter().zip(&v) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrip_and_to_dense() {
+        let msg: WireMessage<f64> = WireMessage::Sparse {
+            dim: 6,
+            idx: vec![1, 4],
+            val: vec![2.5, -7.0],
+        };
+        let back = WireMessage::<f64>::decode(&msg.encode()).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(back.to_dense(), vec![0.0, 2.5, 0.0, 0.0, -7.0, 0.0]);
+        assert_eq!(msg.encode().len(), msg.wire_bytes());
+    }
+
+    #[test]
+    fn quant_roundtrip_preserves_levels() {
+        let q = QuantBlock {
+            bits: 5,
+            lo: -1.0,
+            hi: 3.0,
+            levels: vec![0, 31, 7, 15, 1],
+        };
+        let msg: WireMessage<f64> = WireMessage::Quant(q.clone());
+        let back = WireMessage::<f64>::decode(&msg.encode()).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(msg.encode().len(), msg.wire_bytes());
+        // grid endpoints decode exactly
+        assert_eq!(q.dequant(0), -1.0);
+        assert_eq!(q.dequant(31), 3.0);
+    }
+
+    #[test]
+    fn sparse_quant_roundtrip() {
+        let msg: WireMessage<f32> = WireMessage::SparseQuant {
+            dim: 10,
+            idx: vec![0, 3, 9],
+            q: QuantBlock {
+                bits: 8,
+                lo: -2.0,
+                hi: 2.0,
+                levels: vec![0, 128, 255],
+            },
+        };
+        let back = WireMessage::<f32>::decode(&msg.encode()).unwrap();
+        assert_eq!(back, msg);
+        let dense = back.to_dense();
+        assert_eq!(dense.len(), 10);
+        assert_eq!(dense[0], -2.0);
+        assert_eq!(dense[9], 2.0);
+        assert_eq!(dense[5], 0.0);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(WireMessage::<f64>::decode(&[]).is_err());
+        assert!(WireMessage::<f64>::decode(&[0xFF; 16]).is_err());
+        // scalar-width mismatch: encode as f32, decode as f64
+        let msg = WireMessage::dense(&[1.0f32, 2.0]);
+        assert!(WireMessage::<f64>::decode(&msg.encode()).is_err());
+        // truncation
+        let buf = WireMessage::dense(&[1.0f64, 2.0]).encode();
+        assert!(WireMessage::<f64>::decode(&buf[..buf.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_indices() {
+        // a wire-controlled index >= dim must fail decode, not panic
+        // later in to_dense()/add_scaled_to()
+        let msg: WireMessage<f64> = WireMessage::Sparse {
+            dim: 4,
+            idx: vec![100],
+            val: vec![1.0],
+        };
+        assert!(WireMessage::<f64>::decode(&msg.encode()).is_err());
+        let msg: WireMessage<f64> = WireMessage::SparseQuant {
+            dim: 4,
+            idx: vec![7],
+            q: QuantBlock { bits: 8, lo: 0.0, hi: 1.0, levels: vec![3] },
+        };
+        assert!(WireMessage::<f64>::decode(&msg.encode()).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_huge_counts_without_allocating() {
+        // a wire-controlled k near u32::MAX must fail the length check,
+        // not size an allocation (which would abort the process)
+        for kind in [1u8, 3u8] {
+            let mut buf = vec![0xD1, 8, kind];
+            buf.extend_from_slice(&u32::MAX.to_le_bytes()); // dim
+            buf.extend_from_slice(&u32::MAX.to_le_bytes()); // k
+            assert!(WireMessage::<f64>::decode(&buf).is_err());
+        }
+        // same for a dense header claiming u32::MAX values
+        let mut buf = vec![0xD1, 8, 0];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(WireMessage::<f64>::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn bit_packing_roundtrips_all_widths() {
+        let mut rng = Pcg64::seed(3);
+        for bits in 1..=16u8 {
+            let maxl = QuantBlock::max_level(bits);
+            let levels: Vec<u32> =
+                (0..53).map(|_| rng.below(maxl as usize + 1) as u32).collect();
+            let packed = pack_bits(&levels, bits);
+            assert_eq!(
+                packed.len(),
+                (levels.len() * bits as usize + 7) / 8
+            );
+            assert_eq!(unpack_bits(&packed, levels.len(), bits), levels);
+        }
+    }
+
+    #[test]
+    fn add_scaled_to_matches_historical_apply() {
+        // identity path: adding a dense message with scale s must equal
+        // rounding s*delta to T first, then accumulating — per coordinate.
+        let mut rng = Pcg64::seed(4);
+        let delta: Vec<f32> = (0..64).map(|_| rng.f32n()).collect();
+        let mut acc = vec![1.5f32; 64];
+        let mut want = acc.clone();
+        let scale = 0.1f64;
+        WireMessage::dense(&delta).add_scaled_to(scale, &mut acc);
+        for (w, &d) in want.iter_mut().zip(&delta) {
+            let addend = (d as f64 * scale) as f32;
+            *w += addend;
+        }
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn dense_bytes_matches_encoded_len() {
+        let v = vec![0.0f64; 33];
+        assert_eq!(
+            WireMessage::<f64>::dense_bytes(33),
+            WireMessage::dense(&v).encode().len()
+        );
+        let v32 = vec![0.0f32; 33];
+        assert_eq!(
+            WireMessage::<f32>::dense_bytes(33),
+            WireMessage::dense(&v32).encode().len()
+        );
+    }
+}

@@ -1,0 +1,531 @@
+//! Compression operators and the per-line error-feedback accumulator.
+//!
+//! Event triggering decides *when* a delta is worth sending;
+//! compression decides *how many bytes* the sent delta costs.  The two
+//! compose multiplicatively (Ren et al., arXiv:2501.13516 /
+//! arXiv:2508.15509): a TopK-sparsified, b-bit-quantized delta on an
+//! event-triggered line cuts uplink bytes by orders of magnitude at a
+//! bounded accuracy cost — provided the compression residual is not
+//! *lost*.  [`ErrorFeedback`] keeps the residual `e ← (δ + e) − C(δ + e)`
+//! per transmit line and folds it into the next payload, the standard
+//! EF14 correction that restores convergence for contractive operators.
+//!
+//! All operators are deterministic given the caller's RNG stream;
+//! [`Identity`] and [`TopK`] draw nothing, so enabling them leaves every
+//! seeded trajectory's random sequence untouched.
+
+use crate::comm::Scalar;
+use crate::rng::{Pcg64, Rng};
+
+use super::codec::{QuantBlock, WireMessage};
+
+/// A (possibly lossy) delta compressor for one transmit line.
+pub trait Compressor<T: Scalar> {
+    /// Compress a dense delta into a wire payload.
+    fn compress(&self, input: &[T], rng: &mut Pcg64) -> WireMessage<T>;
+
+    /// `true` iff `compress(v).to_dense() == v` for every input; lossless
+    /// operators skip the error-feedback bookkeeping entirely.
+    fn is_lossless(&self) -> bool {
+        false
+    }
+
+    /// Short human-readable label for tables/CSV.
+    fn name(&self) -> String;
+}
+
+/// No compression: the dense codec path (bit-exact round-trip).
+pub struct Identity;
+
+impl<T: Scalar> Compressor<T> for Identity {
+    fn compress(&self, input: &[T], _rng: &mut Pcg64) -> WireMessage<T> {
+        WireMessage::dense(input)
+    }
+    fn is_lossless(&self) -> bool {
+        true
+    }
+    fn name(&self) -> String {
+        "identity".into()
+    }
+}
+
+/// Number of kept coordinates for a sparsification fraction.
+fn k_of(frac: f64, dim: usize) -> usize {
+    ((frac * dim as f64).ceil() as usize).clamp(1, dim.max(1))
+}
+
+/// Indices of the `k` largest-magnitude coordinates, ascending.
+/// Partial selection (O(dim) expected) rather than a full sort — this
+/// runs once per fired event per line on full-model-sized deltas.
+fn topk_indices<T: Scalar>(input: &[T], k: usize) -> Vec<u32> {
+    let mut order: Vec<usize> = (0..input.len()).collect();
+    if k < order.len() {
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            input[b]
+                .to_f64()
+                .abs()
+                .partial_cmp(&input[a].to_f64().abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        order.truncate(k);
+    }
+    let mut idx: Vec<u32> = order.into_iter().map(|i| i as u32).collect();
+    idx.sort_unstable();
+    idx
+}
+
+/// Keep the `ceil(frac * dim)` largest-magnitude coordinates exactly.
+pub struct TopK {
+    pub frac: f64,
+}
+
+impl<T: Scalar> Compressor<T> for TopK {
+    fn compress(&self, input: &[T], _rng: &mut Pcg64) -> WireMessage<T> {
+        let k = k_of(self.frac, input.len());
+        let idx = topk_indices(input, k);
+        let val = idx.iter().map(|&i| input[i as usize]).collect();
+        WireMessage::Sparse { dim: input.len() as u32, idx, val }
+    }
+    fn name(&self) -> String {
+        format!("topk:{}", self.frac)
+    }
+}
+
+/// Keep `ceil(frac * dim)` *uniformly random* coordinates exactly
+/// (unscaled — the error-feedback accumulator re-injects what is
+/// dropped, so the biased-but-contractive form is the right one here).
+pub struct RandK {
+    pub frac: f64,
+}
+
+impl<T: Scalar> Compressor<T> for RandK {
+    fn compress(&self, input: &[T], rng: &mut Pcg64) -> WireMessage<T> {
+        let k = k_of(self.frac, input.len());
+        let mut idx: Vec<u32> = rng
+            .sample_indices(input.len(), k)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        idx.sort_unstable();
+        let val = idx.iter().map(|&i| input[i as usize]).collect();
+        WireMessage::Sparse { dim: input.len() as u32, idx, val }
+    }
+    fn name(&self) -> String {
+        format!("randk:{}", self.frac)
+    }
+}
+
+/// Stochastically round values onto the b-bit uniform grid over the
+/// message's own `[min, max]` range.  Unbiased: `E[Q(v)] = v`.
+fn quantize<T: Scalar>(vals: &[T], bits: u8, rng: &mut Pcg64) -> QuantBlock {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for v in vals {
+        let x = v.to_f64();
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if vals.is_empty() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let maxl = QuantBlock::max_level(bits);
+    let step = (hi - lo) / maxl as f64;
+    let levels = vals
+        .iter()
+        .map(|v| {
+            if step <= 0.0 || !step.is_finite() {
+                return 0;
+            }
+            let t = (v.to_f64() - lo) / step;
+            let base = t.floor();
+            let frac = t - base;
+            let mut level = base as u32;
+            if rng.f64() < frac {
+                level += 1;
+            }
+            level.min(maxl)
+        })
+        .collect();
+    QuantBlock { bits, lo, hi, levels }
+}
+
+/// b-bit uniform stochastic quantization of the full delta.
+pub struct Quant {
+    pub bits: u8,
+}
+
+impl<T: Scalar> Compressor<T> for Quant {
+    fn compress(&self, input: &[T], rng: &mut Pcg64) -> WireMessage<T> {
+        WireMessage::Quant(quantize(input, self.bits, rng))
+    }
+    fn name(&self) -> String {
+        format!("quant:{}", self.bits)
+    }
+}
+
+/// TopK sparsification followed by b-bit quantization of the kept values
+/// — the multiplicative-savings combination.
+pub struct TopKQuant {
+    pub frac: f64,
+    pub bits: u8,
+}
+
+impl<T: Scalar> Compressor<T> for TopKQuant {
+    fn compress(&self, input: &[T], rng: &mut Pcg64) -> WireMessage<T> {
+        let k = k_of(self.frac, input.len());
+        let idx = topk_indices(input, k);
+        let kept: Vec<T> = idx.iter().map(|&i| input[i as usize]).collect();
+        let q = quantize(&kept, self.bits, rng);
+        WireMessage::SparseQuant { dim: input.len() as u32, idx, q }
+    }
+    fn name(&self) -> String {
+        format!("topkq:{}:{}", self.frac, self.bits)
+    }
+}
+
+/// Declarative compressor choice — what `--compressor` parses into and
+/// what the engine configs carry (the trait objects are built per engine
+/// via [`CompressorCfg::build`]).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum CompressorCfg {
+    #[default]
+    Identity,
+    TopK { frac: f64 },
+    RandK { frac: f64 },
+    Quant { bits: u8 },
+    TopKQuant { frac: f64, bits: u8 },
+}
+
+impl CompressorCfg {
+    /// Parse the CLI syntax: `none` | `identity` | `topk:FRAC` |
+    /// `randk:FRAC` | `quant:BITS` | `topkq:FRAC:BITS`.
+    pub fn parse(s: &str) -> Result<CompressorCfg, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let frac_arg = |p: &[&str]| -> Result<f64, String> {
+            let f: f64 = p
+                .get(1)
+                .ok_or_else(|| format!("{s:?}: missing fraction"))?
+                .parse()
+                .map_err(|_| format!("{s:?}: bad fraction"))?;
+            if !(f > 0.0 && f <= 1.0) {
+                return Err(format!("{s:?}: fraction must be in (0, 1]"));
+            }
+            Ok(f)
+        };
+        let bits_arg = |p: &str| -> Result<u8, String> {
+            let b: u8 =
+                p.parse().map_err(|_| format!("{s:?}: bad bit width"))?;
+            if !(1..=16).contains(&b) {
+                return Err(format!("{s:?}: bits must be in 1..=16"));
+            }
+            Ok(b)
+        };
+        match parts[0] {
+            "none" | "identity" => Ok(CompressorCfg::Identity),
+            "topk" => Ok(CompressorCfg::TopK { frac: frac_arg(&parts)? }),
+            "randk" => Ok(CompressorCfg::RandK { frac: frac_arg(&parts)? }),
+            "quant" => Ok(CompressorCfg::Quant {
+                bits: bits_arg(
+                    parts.get(1).ok_or_else(|| format!("{s:?}: missing bits"))?,
+                )?,
+            }),
+            "topkq" => Ok(CompressorCfg::TopKQuant {
+                frac: frac_arg(&parts)?,
+                bits: bits_arg(
+                    parts.get(2).ok_or_else(|| format!("{s:?}: missing bits"))?,
+                )?,
+            }),
+            other => Err(format!(
+                "unknown compressor {other:?} (expected none | topk:F | \
+                 randk:F | quant:B | topkq:F:B)"
+            )),
+        }
+    }
+
+    /// Instantiate the operator for a scalar type.
+    pub fn build<T: Scalar>(&self) -> Box<dyn Compressor<T>> {
+        match *self {
+            CompressorCfg::Identity => Box::new(Identity),
+            CompressorCfg::TopK { frac } => Box::new(TopK { frac }),
+            CompressorCfg::RandK { frac } => Box::new(RandK { frac }),
+            CompressorCfg::Quant { bits } => Box::new(Quant { bits }),
+            CompressorCfg::TopKQuant { frac, bits } => {
+                Box::new(TopKQuant { frac, bits })
+            }
+        }
+    }
+
+    /// The operator's display label (matches `Compressor::name`).
+    pub fn label(&self) -> String {
+        match *self {
+            CompressorCfg::Identity => "identity".into(),
+            CompressorCfg::TopK { frac } => format!("topk:{frac}"),
+            CompressorCfg::RandK { frac } => format!("randk:{frac}"),
+            CompressorCfg::Quant { bits } => format!("quant:{bits}"),
+            CompressorCfg::TopKQuant { frac, bits } => {
+                format!("topkq:{frac}:{bits}")
+            }
+        }
+    }
+}
+
+/// Per-line error-feedback accumulator: the compression residual is
+/// carried forward and re-injected into the next transmitted delta
+/// instead of being silently dropped.
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback<T: Scalar> {
+    residual: Vec<T>,
+}
+
+impl<T: Scalar> Default for ErrorFeedback<T> {
+    fn default() -> Self {
+        ErrorFeedback::new()
+    }
+}
+
+impl<T: Scalar> ErrorFeedback<T> {
+    pub fn new() -> Self {
+        ErrorFeedback { residual: Vec::new() }
+    }
+
+    /// Drop the carried residual (used on the periodic hard resets, which
+    /// resynchronize receivers with the *exact* state).
+    pub fn clear(&mut self) {
+        self.residual.clear();
+    }
+
+    /// Euclidean norm of the carried residual (diagnostics).
+    pub fn residual_norm(&self) -> f64 {
+        self.residual
+            .iter()
+            .map(|r| {
+                let x = r.to_f64();
+                x * x
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Compress `delta + residual`, store the new residual, and return
+    /// the payload.  Lossless operators bypass the accumulator (zero
+    /// residual forever), keeping the identity path allocation-light and
+    /// bit-identical to uncompressed operation.
+    pub fn compress(
+        &mut self,
+        delta: &[T],
+        comp: &dyn Compressor<T>,
+        rng: &mut Pcg64,
+    ) -> WireMessage<T> {
+        if comp.is_lossless() {
+            return comp.compress(delta, rng);
+        }
+        if self.residual.len() != delta.len() {
+            self.residual = vec![T::zero(); delta.len()];
+        }
+        let corrected: Vec<T> = delta
+            .iter()
+            .zip(&self.residual)
+            .map(|(&d, &r)| T::from_f64(d.to_f64() + r.to_f64()))
+            .collect();
+        let msg = comp.compress(&corrected, rng);
+        let approx = msg.to_dense();
+        for ((r, &c), &a) in
+            self.residual.iter_mut().zip(&corrected).zip(&approx)
+        {
+            *r = T::from_f64(c.to_f64() - a.to_f64());
+        }
+        msg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn norm(v: &[f64]) -> f64 {
+        v.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn identity_is_lossless_and_exact() {
+        let comp = Identity;
+        let v = vec![1.5f64, -2.25, 0.0, 1e-30];
+        let mut rng = Pcg64::seed(1);
+        let msg = Compressor::<f64>::compress(&comp, &v, &mut rng);
+        assert!(Compressor::<f64>::is_lossless(&comp));
+        assert_eq!(msg.to_dense(), v);
+        assert_eq!(msg.wire_bytes(), WireMessage::<f64>::dense_bytes(4));
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_exactly() {
+        let comp = TopK { frac: 0.4 }; // k = 2 of 5
+        let v = vec![0.1f64, -5.0, 0.2, 3.0, -0.05];
+        let mut rng = Pcg64::seed(2);
+        let msg = comp.compress(&v, &mut rng);
+        match &msg {
+            WireMessage::Sparse { idx, val, .. } => {
+                assert_eq!(idx, &vec![1, 3]);
+                assert_eq!(val, &vec![-5.0, 3.0]);
+            }
+            other => panic!("expected sparse, got {other:?}"),
+        }
+        // contraction: dropping coordinates can only shrink the vector
+        let err: Vec<f64> = v
+            .iter()
+            .zip(msg.to_dense())
+            .map(|(a, b)| a - b)
+            .collect();
+        assert!(norm(&err) <= norm(&v));
+    }
+
+    #[test]
+    fn randk_is_seeded_and_keeps_exact_values() {
+        let v: Vec<f64> = (0..20).map(|i| i as f64 - 10.0).collect();
+        let comp = RandK { frac: 0.25 };
+        let m1 = comp.compress(&v, &mut Pcg64::seed(7));
+        let m2 = comp.compress(&v, &mut Pcg64::seed(7));
+        assert_eq!(m1, m2, "same seed must select the same coordinates");
+        if let WireMessage::Sparse { idx, val, .. } = &m1 {
+            assert_eq!(idx.len(), 5);
+            for (&i, &x) in idx.iter().zip(val) {
+                assert_eq!(x, v[i as usize]);
+            }
+        } else {
+            panic!("expected sparse");
+        }
+    }
+
+    #[test]
+    fn quant_hits_range_endpoints_exactly() {
+        let comp = Quant { bits: 8 };
+        let v = vec![-4.0f64, 4.0];
+        let mut rng = Pcg64::seed(3);
+        let out = comp.compress(&v, &mut rng).to_dense();
+        assert_eq!(out, vec![-4.0, 4.0]);
+    }
+
+    #[test]
+    fn quant_error_bounded_by_step() {
+        let mut rng = Pcg64::seed(4);
+        let v: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+        let comp = Quant { bits: 8 };
+        let out = comp.compress(&v, &mut rng).to_dense();
+        let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let step = (hi - lo) / 255.0;
+        for (a, b) in v.iter().zip(&out) {
+            assert!((a - b).abs() <= step + 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quant_constant_vector_is_exact() {
+        let comp = Quant { bits: 4 };
+        let v = vec![2.5f64; 9];
+        let mut rng = Pcg64::seed(5);
+        assert_eq!(comp.compress(&v, &mut rng).to_dense(), v);
+    }
+
+    #[test]
+    fn topkq_message_is_small() {
+        let v: Vec<f64> = (0..1000).map(|i| (i as f64).sin()).collect();
+        let comp = TopKQuant { frac: 0.05, bits: 8 };
+        let mut rng = Pcg64::seed(6);
+        let msg = comp.compress(&v, &mut rng);
+        let dense = WireMessage::<f64>::dense_bytes(1000);
+        assert!(
+            msg.wire_bytes() * 4 < dense,
+            "topkq {} !<< dense {dense}",
+            msg.wire_bytes()
+        );
+        // and the codec round-trips it
+        let back = WireMessage::<f64>::decode(&msg.encode()).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn error_feedback_recovers_dropped_mass() {
+        // a constant stream through aggressive TopK: with EF the receiver's
+        // integrated sum must track the true cumulative sum closely.
+        let dim = 16;
+        let delta = vec![1.0f64; dim];
+        let comp = TopK { frac: 0.25 }; // keeps 4 of 16 per message
+        let mut ef = ErrorFeedback::new();
+        let mut rng = Pcg64::seed(8);
+        let mut received = vec![0.0f64; dim];
+        let rounds = 40;
+        for _ in 0..rounds {
+            let msg = ef.compress(&delta, &comp, &mut rng);
+            msg.add_scaled_to(1.0, &mut received);
+        }
+        let true_sum = rounds as f64;
+        for r in &received {
+            // EF carries at most a bounded residual per coordinate
+            assert!(
+                (r - true_sum).abs() <= true_sum * 0.5,
+                "received {r} vs true {true_sum}"
+            );
+        }
+        // total received mass = total injected mass minus the bounded
+        // carried residual
+        let total: f64 = received.iter().sum();
+        let injected = dim as f64 * true_sum;
+        assert!((total - injected).abs() / injected < 0.3);
+    }
+
+    #[test]
+    fn error_feedback_lossless_path_keeps_zero_residual() {
+        let mut ef = ErrorFeedback::new();
+        let mut rng = Pcg64::seed(9);
+        let delta = vec![1.0f32, -2.0];
+        let msg = ef.compress(&delta, &Identity, &mut rng);
+        assert_eq!(msg.to_dense(), delta);
+        assert_eq!(ef.residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn cfg_parse_accepts_the_documented_syntax() {
+        assert_eq!(CompressorCfg::parse("none"), Ok(CompressorCfg::Identity));
+        assert_eq!(
+            CompressorCfg::parse("identity"),
+            Ok(CompressorCfg::Identity)
+        );
+        assert_eq!(
+            CompressorCfg::parse("topk:0.05"),
+            Ok(CompressorCfg::TopK { frac: 0.05 })
+        );
+        assert_eq!(
+            CompressorCfg::parse("randk:0.1"),
+            Ok(CompressorCfg::RandK { frac: 0.1 })
+        );
+        assert_eq!(
+            CompressorCfg::parse("quant:8"),
+            Ok(CompressorCfg::Quant { bits: 8 })
+        );
+        assert_eq!(
+            CompressorCfg::parse("topkq:0.05:8"),
+            Ok(CompressorCfg::TopKQuant { frac: 0.05, bits: 8 })
+        );
+        for bad in [
+            "nope", "topk", "topk:0", "topk:2", "quant:0", "quant:33",
+            "topkq:0.1", "topkq:x:8",
+        ] {
+            assert!(CompressorCfg::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn cfg_label_matches_operator_name() {
+        for cfg in [
+            CompressorCfg::Identity,
+            CompressorCfg::TopK { frac: 0.05 },
+            CompressorCfg::RandK { frac: 0.5 },
+            CompressorCfg::Quant { bits: 8 },
+            CompressorCfg::TopKQuant { frac: 0.05, bits: 8 },
+        ] {
+            assert_eq!(cfg.label(), cfg.build::<f64>().name());
+        }
+    }
+}

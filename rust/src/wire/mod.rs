@@ -1,0 +1,32 @@
+//! The wire layer: compressed-message codec + byte-accurate accounting
+//! (DESIGN.md §7).
+//!
+//! The paper's protocol reduces communication *events*; this subsystem
+//! models what each event actually costs on a network.  Three pieces:
+//!
+//! * [`compress`] — the [`Compressor`] operators ([`Identity`], [`TopK`],
+//!   [`RandK`], b-bit stochastic [`Quant`], and the combined
+//!   [`TopKQuant`]) plus the per-line [`ErrorFeedback`] accumulator that
+//!   re-injects compression residuals instead of losing them.
+//! * [`codec`] — [`WireMessage`]: the dense / sparse / quantized payload
+//!   layouts with exact (bit-preserving) encode/decode and exact byte
+//!   sizing.
+//! * [`stats`] — [`WireStats`] / [`LinkStats`] / [`ByteTally`]: uplink
+//!   and downlink bytes per agent, fed by the byte counters that
+//!   [`crate::comm::DropChannel`] charges per transmitted message.
+//!
+//! Everything composes with the existing event triggers: a trigger
+//! decides *whether* a delta is sent, the compressor decides *how many
+//! bytes* it costs, and the `Δ`-threshold × compressor product space is
+//! what [`crate::experiments::pareto`] sweeps.
+
+mod codec;
+mod compress;
+mod stats;
+
+pub use codec::{QuantBlock, WireMessage, HEADER_BYTES};
+pub use compress::{
+    Compressor, CompressorCfg, ErrorFeedback, Identity, Quant, RandK, TopK,
+    TopKQuant,
+};
+pub use stats::{ByteTally, LinkStats, WireStats};

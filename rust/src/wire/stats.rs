@@ -1,0 +1,158 @@
+//! Byte-accurate communication accounting.
+//!
+//! Event counters (how many messages fired) already existed in the
+//! trigger/channel layer; this module adds the quantity the paper's
+//! "production-scale, heavy traffic" framing actually cares about —
+//! **bytes on the wire**, per agent and per direction, as charged by the
+//! exact encoded size of each [`crate::wire::WireMessage`].
+
+use crate::comm::ChannelStats;
+use crate::jsonio::Json;
+
+/// Per-link transfer totals (messages and bytes, sent and lost).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    pub msgs: u64,
+    pub bytes: u64,
+    pub dropped_msgs: u64,
+    pub dropped_bytes: u64,
+}
+
+impl LinkStats {
+    /// Bytes that actually arrived.
+    pub fn delivered_bytes(&self) -> u64 {
+        self.bytes - self.dropped_bytes
+    }
+}
+
+impl From<&ChannelStats> for LinkStats {
+    fn from(s: &ChannelStats) -> LinkStats {
+        LinkStats {
+            msgs: s.sent,
+            bytes: s.sent_bytes,
+            dropped_msgs: s.dropped,
+            dropped_bytes: s.dropped_bytes,
+        }
+    }
+}
+
+/// Snapshot of an engine's wire usage: one [`LinkStats`] per agent per
+/// direction.  Engines expose this each round; sampling the monotone
+/// counters per round yields the per-round byte series the experiments
+/// record.
+#[derive(Clone, Debug, Default)]
+pub struct WireStats {
+    pub uplink: Vec<LinkStats>,
+    pub downlink: Vec<LinkStats>,
+}
+
+impl WireStats {
+    pub fn uplink_bytes(&self) -> u64 {
+        self.uplink.iter().map(|l| l.bytes).sum()
+    }
+
+    pub fn downlink_bytes(&self) -> u64 {
+        self.downlink.iter().map(|l| l.bytes).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.uplink_bytes() + self.downlink_bytes()
+    }
+
+    pub fn uplink_msgs(&self) -> u64 {
+        self.uplink.iter().map(|l| l.msgs).sum()
+    }
+
+    pub fn downlink_msgs(&self) -> u64 {
+        self.downlink.iter().map(|l| l.msgs).sum()
+    }
+
+    /// JSON export (the experiments' `*.json` bytes columns).
+    pub fn to_json(&self) -> Json {
+        let links = |ls: &[LinkStats]| {
+            Json::Arr(
+                ls.iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("msgs", Json::Num(l.msgs as f64)),
+                            ("bytes", Json::Num(l.bytes as f64)),
+                            ("dropped_msgs", Json::Num(l.dropped_msgs as f64)),
+                            (
+                                "dropped_bytes",
+                                Json::Num(l.dropped_bytes as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("uplink_bytes", Json::Num(self.uplink_bytes() as f64)),
+            ("downlink_bytes", Json::Num(self.downlink_bytes() as f64)),
+            ("uplink", links(&self.uplink)),
+            ("downlink", links(&self.downlink)),
+        ])
+    }
+}
+
+/// Minimal two-direction byte tally for the averaging-family baselines
+/// (which have no per-link channel objects — the server touches every
+/// selected agent directly).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ByteTally {
+    pub uplink: u64,
+    pub downlink: u64,
+}
+
+impl ByteTally {
+    pub fn total(&self) -> u64 {
+        self.uplink + self.downlink
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_stats_from_channel_stats() {
+        let cs = ChannelStats {
+            sent: 10,
+            dropped: 3,
+            sent_bytes: 1000,
+            dropped_bytes: 300,
+        };
+        let ls = LinkStats::from(&cs);
+        assert_eq!(ls.msgs, 10);
+        assert_eq!(ls.bytes, 1000);
+        assert_eq!(ls.delivered_bytes(), 700);
+    }
+
+    #[test]
+    fn wire_stats_sums() {
+        let ws = WireStats {
+            uplink: vec![
+                LinkStats { msgs: 2, bytes: 20, ..Default::default() },
+                LinkStats { msgs: 3, bytes: 30, ..Default::default() },
+            ],
+            downlink: vec![LinkStats {
+                msgs: 1,
+                bytes: 5,
+                ..Default::default()
+            }],
+        };
+        assert_eq!(ws.uplink_bytes(), 50);
+        assert_eq!(ws.downlink_bytes(), 5);
+        assert_eq!(ws.total_bytes(), 55);
+        assert_eq!(ws.uplink_msgs(), 5);
+        assert_eq!(ws.downlink_msgs(), 1);
+        let j = ws.to_json();
+        assert_eq!(j.get("uplink_bytes").and_then(Json::as_f64), Some(50.0));
+    }
+
+    #[test]
+    fn byte_tally_totals() {
+        let t = ByteTally { uplink: 7, downlink: 11 };
+        assert_eq!(t.total(), 18);
+    }
+}
