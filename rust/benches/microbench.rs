@@ -9,8 +9,9 @@ use deluxe::data::regress::{generate, RegressSpec};
 use deluxe::linalg::{soft_threshold, Cholesky, Matrix};
 use deluxe::model::MlpSpec;
 use deluxe::rng::{Pcg64, Rng};
+use deluxe::sim::EventQueue;
 use deluxe::solver::{ExactQuadratic, LocalSolver};
-use deluxe::wire::{CompressorCfg, ErrorFeedback, WireMessage};
+use deluxe::wire::{Compressor, CompressorCfg, ErrorFeedback, WireMessage};
 
 fn main() {
     let mut b = Bench::default();
@@ -109,6 +110,43 @@ fn main() {
     let vbig: Vec<f64> = (0..100_000).map(|_| rng.normal()).collect();
     b.bench("soft_threshold 100k f64", || {
         black_box(soft_threshold(&vbig, 0.3));
+    });
+
+    println!("\n== sim event queue / async leader hot path ==");
+    // steady-state scheduling: one pop + one push against a 1024-deep
+    // queue (the regime the async engine lives in)
+    let mut q: EventQueue<u64> = EventQueue::new();
+    for i in 0..1024u64 {
+        q.push(i, i);
+    }
+    b.bench("sim.queue pop+push (1024-deep steady state)", || {
+        let (t, ev) = q.pop().unwrap();
+        q.push(t + 1024, ev);
+    });
+    // bulk throughput: 1e6 seeded-time events through an empty queue
+    b.once("sim.queue push+pop throughput (1e6 events)", || {
+        let mut big: EventQueue<u64> = EventQueue::new();
+        let mut r = Pcg64::seed(99);
+        for i in 0..1_000_000u64 {
+            big.push(r.next_u64() % 1_000_000, i);
+        }
+        let mut n = 0u64;
+        while big.pop().is_some() {
+            n += 1;
+        }
+        black_box(n);
+    });
+    // the async leader's delta-apply hot path: integrate an arriving
+    // uplink message into the 1/N-weighted accumulator, dense and sparse
+    let mut zeta = Estimate::new(v0.clone());
+    let dense_up = WireMessage::dense(&v1);
+    b.bench("sim.leader delta-apply (108k f32 dense, 1/N)", || {
+        zeta.apply_scaled_msg(black_box(&dense_up), 1.0 / 64.0);
+    });
+    let topk5 = CompressorCfg::TopK { frac: 0.05 }.build::<f32>();
+    let sparse_up = topk5.compress(&v1, &mut rng);
+    b.bench("sim.leader delta-apply (108k f32 topk 5%, 1/N)", || {
+        zeta.apply_scaled_msg(black_box(&sparse_up), 1.0 / 64.0);
     });
 
     println!("\n== native MLP local step (L3-side baseline for PJRT) ==");

@@ -153,6 +153,7 @@ impl<T: Scalar> ConsensusAdmm<T> {
         for a in &mut self.agents {
             a.zhat_prev.clear();
             a.zhat_prev.extend_from_slice(a.zhat.get());
+            a.down_ch.mark_round();
             if a.z_trig.offer_into(&self.z, rng, &mut self.scratch) {
                 let msg =
                     a.ef_down.compress(&self.scratch, self.comp.as_ref(), rng);
@@ -190,6 +191,7 @@ impl<T: Scalar> ConsensusAdmm<T> {
                 .zip(&a.u)
                 .map(|(&x, &u)| T::from_f64(alpha * x.to_f64() + u.to_f64()))
                 .collect();
+            a.up_ch.mark_round();
             if a.d_trig.offer_into(&a.d, rng, &mut self.scratch) {
                 let msg =
                     a.ef_up.compress(&self.scratch, self.comp.as_ref(), rng);
@@ -226,7 +228,10 @@ impl<T: Scalar> ConsensusAdmm<T> {
     /// every agent receives the exact `z`.  Advances all trigger reference
     /// points, counts one event per line, charges each line one full dense
     /// message (a reset is an uncompressed synchronization transfer), and
-    /// drops any carried compression residual.
+    /// drops any carried compression residual.  A packet that triggered
+    /// but *dropped* in the same round is superseded by the sync — the
+    /// round bills exactly one dense transfer on that line, never two
+    /// (see [`DropChannel::charge_sync`]).
     pub fn reset(&mut self) {
         let mut zeta = vec![0.0f64; self.dim];
         for a in &self.agents {
@@ -245,8 +250,8 @@ impl<T: Scalar> ConsensusAdmm<T> {
             a.z_trig.reset(&self.z);
             a.ef_up.clear();
             a.ef_down.clear();
-            a.up_ch.stats.record_reliable(sync_bytes);
-            a.down_ch.stats.record_reliable(sync_bytes);
+            a.up_ch.charge_sync(sync_bytes);
+            a.down_ch.charge_sync(sync_bytes);
         }
     }
 
@@ -646,6 +651,38 @@ mod tests {
         for i in 0..4 {
             assert_eq!(engine.agent_x(i)[0], x[i]);
             assert_eq!(engine.agent_u(i)[0], u[i]);
+        }
+    }
+
+    #[test]
+    fn reset_supersedes_same_round_dropped_packet() {
+        // Accounting edge case: with drop_up = 1.0, trigger Always and a
+        // reset every round, each round's uplink carries one
+        // triggered-but-dropped delta followed by the reset sync.  The
+        // reset supersedes the lost packet, so the books must show
+        // exactly one dense sync per round — not a dropped message PLUS
+        // a sync.
+        let cfg = ConsensusConfig {
+            rounds: 3,
+            drop_up: 1.0,
+            reset_period: 1,
+            ..Default::default()
+        };
+        let (engine, _) = run(cfg, 40);
+        let dense = crate::wire::WireMessage::<f64>::dense_bytes(1) as u64;
+        let ws = engine.wire_stats();
+        for l in &ws.uplink {
+            assert_eq!(l.msgs, 3, "one sync per round, drop superseded");
+            assert_eq!(l.bytes, 3 * dense);
+            assert_eq!(l.dropped_msgs, 0);
+            assert_eq!(l.dropped_bytes, 0);
+        }
+        // downlink is reliable here: each round bills the delivered
+        // triggered delta AND the reset sync
+        for l in &ws.downlink {
+            assert_eq!(l.msgs, 6);
+            assert_eq!(l.bytes, 6 * dense);
+            assert_eq!(l.dropped_msgs, 0);
         }
     }
 

@@ -199,6 +199,7 @@ impl Line {
         comp: &dyn Compressor<f64>,
         rng: &mut Pcg64,
     ) {
+        self.ch.mark_round();
         if let Some(delta) = self.trig.offer(value, rng) {
             let msg = self.ef.compress(&delta, comp, rng);
             let bytes = msg.wire_bytes() as u64;
@@ -212,10 +213,11 @@ impl Line {
         self.trig.reset(value);
         dest.reset_to(value);
         self.ef.clear();
-        self.ch
-            .stats
-            .record_reliable(WireMessage::<f64>::dense_bytes(value.len())
-                as u64);
+        // a same-round triggered-but-dropped packet is superseded by the
+        // sync: the round bills exactly one dense transfer
+        self.ch.charge_sync(
+            WireMessage::<f64>::dense_bytes(value.len()) as u64,
+        );
     }
 }
 

@@ -78,7 +78,16 @@ pub struct GraphAdmm<T: Scalar> {
 
 impl<T: Scalar> GraphAdmm<T> {
     pub fn new(cfg: GraphConfig, graph: Graph, x0: Vec<T>) -> Self {
-        assert!(graph.is_connected(), "graph must be connected");
+        assert!(
+            graph.is_connected(),
+            "graph engine requires a connected topology ({} vertices, {} \
+             edges given): consensus over a disconnected graph would \
+             silently stall on the unreachable components — use \
+             Graph::erdos_renyi_connected / random_connected or add \
+             bridging edges",
+            graph.n,
+            graph.edges.len()
+        );
         let dim = x0.len();
         let nbrs = graph.neighbors();
         let agents = (0..graph.n)
@@ -132,6 +141,9 @@ impl<T: Scalar> GraphAdmm<T> {
         //    accounting
         for i in 0..n {
             let xi = self.agents[i].x.clone();
+            for ch in &mut self.agents[i].channels {
+                ch.mark_round();
+            }
             if let Some(delta) = self.agents[i].x_trig.offer(&xi, rng) {
                 let msg = {
                     let comp = self.comp.as_ref();
@@ -184,7 +196,9 @@ impl<T: Scalar> GraphAdmm<T> {
 
     /// Full neighborhood resynchronization (counts as one broadcast per
     /// agent; charges one dense message per link and drops any carried
-    /// compression residual).
+    /// compression residual).  A broadcast that triggered but dropped on
+    /// a link in the same round is superseded by the sync on that link
+    /// (see [`DropChannel::charge_sync`]).
     pub fn reset(&mut self) {
         let sync_bytes =
             crate::wire::WireMessage::<T>::dense_bytes(self.dim) as u64;
@@ -193,7 +207,7 @@ impl<T: Scalar> GraphAdmm<T> {
             self.agents[i].x_trig.reset(&xi);
             self.agents[i].ef.clear();
             for (li, &j) in self.nbrs[i].clone().iter().enumerate() {
-                self.agents[i].channels[li].stats.record_reliable(sync_bytes);
+                self.agents[i].channels[li].charge_sync(sync_bytes);
                 let slot = self.nbrs[j]
                     .iter()
                     .position(|&v| v == i)
@@ -323,6 +337,16 @@ mod tests {
             })
             .collect();
         (Quad { w, c }, opt)
+    }
+
+    #[test]
+    #[should_panic(expected = "connected topology")]
+    fn rejects_disconnected_topology_with_clear_error() {
+        // two components: {0,1} and {2,3} — the engine must refuse to
+        // start rather than silently stall
+        let g = Graph::new(4, vec![(0, 1), (2, 3)]);
+        assert!(!g.is_connected());
+        let _ = GraphAdmm::<f64>::new(GraphConfig::default(), g, vec![0.0; 2]);
     }
 
     #[test]

@@ -45,17 +45,143 @@ impl ChannelStats {
     }
 }
 
+/// A packet-loss process for one link.  `Bernoulli` is the paper's i.i.d.
+/// drop model; `GilbertElliott` is the standard two-state Markov burst
+/// model (a good link that occasionally degrades into a lossy burst),
+/// which the discrete-event simulator uses for correlated failures.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LossModel {
+    /// Never drops.
+    None,
+    /// i.i.d. drops with probability `p` (the paper's `χ` disturbances).
+    Bernoulli { p: f64 },
+    /// Two-state burst loss: transition good→bad w.p. `p_gb`, bad→good
+    /// w.p. `p_bg` (evaluated per transmission), dropping w.p.
+    /// `loss_good` / `loss_bad` in the respective state.
+    GilbertElliott { p_gb: f64, p_bg: f64, loss_good: f64, loss_bad: f64 },
+}
+
+impl LossModel {
+    /// Sample one transmission: evolve the chain state (`bad`) and return
+    /// `true` iff the packet is lost.  `None` and `Bernoulli { p: 0 }`
+    /// draw nothing from the RNG (the sim's sync-equivalence contract).
+    pub fn sample(&self, bad: &mut bool, rng: &mut impl Rng) -> bool {
+        match *self {
+            LossModel::None => false,
+            LossModel::Bernoulli { p } => p > 0.0 && rng.bernoulli(p),
+            LossModel::GilbertElliott { p_gb, p_bg, loss_good, loss_bad } => {
+                if *bad {
+                    if rng.bernoulli(p_bg) {
+                        *bad = false;
+                    }
+                } else if rng.bernoulli(p_gb) {
+                    *bad = true;
+                }
+                let p = if *bad { loss_bad } else { loss_good };
+                p > 0.0 && rng.bernoulli(p)
+            }
+        }
+    }
+
+    /// Parse the CLI/scenario syntax:
+    /// `none` | `bernoulli:P` | `ge:PGB:PBG:LOSS_GOOD:LOSS_BAD`.
+    pub fn parse(s: &str) -> Result<LossModel, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let prob = |i: usize, what: &str| -> Result<f64, String> {
+            let p: f64 = parts
+                .get(i)
+                .ok_or_else(|| format!("{s:?}: missing {what}"))?
+                .parse()
+                .map_err(|_| format!("{s:?}: bad {what}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{s:?}: {what} must be in [0,1]"));
+            }
+            Ok(p)
+        };
+        match parts[0] {
+            "none" => Ok(LossModel::None),
+            "bernoulli" | "bern" => {
+                Ok(LossModel::Bernoulli { p: prob(1, "drop probability")? })
+            }
+            "ge" => Ok(LossModel::GilbertElliott {
+                p_gb: prob(1, "p_gb")?,
+                p_bg: prob(2, "p_bg")?,
+                loss_good: prob(3, "loss_good")?,
+                loss_bad: prob(4, "loss_bad")?,
+            }),
+            other => Err(format!(
+                "unknown loss model {other:?} (expected none | bernoulli:P \
+                 | ge:PGB:PBG:LG:LB)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            LossModel::None => "none".into(),
+            LossModel::Bernoulli { p } => format!("bernoulli:{p}"),
+            LossModel::GilbertElliott { p_gb, p_bg, loss_good, loss_bad } => {
+                format!("ge:{p_gb}:{p_bg}:{loss_good}:{loss_bad}")
+            }
+        }
+    }
+}
+
 /// A lossy point-to-point link.
 #[derive(Clone, Debug)]
 pub struct DropChannel {
     pub drop_rate: f64,
+    /// Generalized loss process; `None` uses the i.i.d. `drop_rate`
+    /// Bernoulli model (so mutating `drop_rate` keeps working and the
+    /// legacy RNG stream is untouched).
+    loss: Option<LossModel>,
+    /// Gilbert–Elliott chain state.
+    bad: bool,
+    /// Bytes of a packet dropped at the current round's transmit
+    /// opportunity (cleared by [`Self::mark_round`]) — feeds the
+    /// reset-supersession accounting rule of [`Self::charge_sync`].
+    last_drop: Option<u64>,
     pub stats: ChannelStats,
 }
 
 impl DropChannel {
     pub fn new(drop_rate: f64) -> Self {
         assert!((0.0..=1.0).contains(&drop_rate), "drop_rate in [0,1]");
-        DropChannel { drop_rate, stats: ChannelStats::default() }
+        DropChannel {
+            drop_rate,
+            loss: None,
+            bad: false,
+            last_drop: None,
+            stats: ChannelStats::default(),
+        }
+    }
+
+    /// A link with a generalized loss process (burst drops etc.).  The
+    /// public `drop_rate` field becomes informational only — it is set
+    /// to the process's *stationary average* loss rate (for display)
+    /// and mutating it has no effect on a model-driven channel; use a
+    /// fresh `with_model` to change the process.
+    pub fn with_model(loss: LossModel) -> Self {
+        let drop_rate = match loss {
+            LossModel::None => 0.0,
+            LossModel::Bernoulli { p } => p,
+            LossModel::GilbertElliott { p_gb, p_bg, loss_good, loss_bad } => {
+                // stationary bad-state mass of the two-state chain
+                let pi_bad = if p_gb + p_bg > 0.0 {
+                    p_gb / (p_gb + p_bg)
+                } else {
+                    0.0
+                };
+                pi_bad * loss_bad + (1.0 - pi_bad) * loss_good
+            }
+        };
+        DropChannel {
+            drop_rate,
+            loss: Some(loss),
+            bad: false,
+            last_drop: None,
+            stats: ChannelStats::default(),
+        }
     }
 
     /// A perfect link.
@@ -77,13 +203,42 @@ impl DropChannel {
     ) -> Option<T> {
         self.stats.sent += 1;
         self.stats.sent_bytes += bytes;
-        if self.drop_rate > 0.0 && rng.bernoulli(self.drop_rate) {
+        let dropped = match self.loss {
+            None => self.drop_rate > 0.0 && rng.bernoulli(self.drop_rate),
+            Some(m) => m.sample(&mut self.bad, rng),
+        };
+        if dropped {
             self.stats.dropped += 1;
             self.stats.dropped_bytes += bytes;
+            self.last_drop = Some(bytes);
             None
         } else {
             Some(payload)
         }
+    }
+
+    /// Open the link's per-round transmit opportunity: forget any drop
+    /// recorded in the previous round so [`Self::charge_sync`] only
+    /// supersedes a *same-round* loss.  Engines call this once per round
+    /// per line, before the trigger is offered.
+    pub fn mark_round(&mut self) {
+        self.last_drop = None;
+    }
+
+    /// Charge a reset's full dense synchronization transfer.  If this
+    /// round's triggered packet was dropped, the reset supersedes it: the
+    /// lost packet is removed from the counters so the round bills
+    /// exactly one dense sync instead of a dropped delta *plus* a sync
+    /// (the accounting rule pinned by
+    /// `reset_supersedes_same_round_dropped_packet`).
+    pub fn charge_sync(&mut self, sync_bytes: u64) {
+        if let Some(b) = self.last_drop.take() {
+            self.stats.sent -= 1;
+            self.stats.sent_bytes -= b;
+            self.stats.dropped -= 1;
+            self.stats.dropped_bytes -= b;
+        }
+        self.stats.record_reliable(sync_bytes);
     }
 }
 
@@ -153,5 +308,135 @@ mod tests {
         assert_eq!(ch.stats.sent, 1);
         assert_eq!(ch.stats.sent_bytes, 42);
         assert_eq!(ch.stats.dropped, 0);
+    }
+
+    #[test]
+    fn charge_sync_supersedes_same_round_drop() {
+        // round: triggered packet drops, then a reset syncs the link —
+        // the books must show exactly one (dense sync) message.
+        let mut ch = DropChannel::new(1.0);
+        let mut rng = Pcg64::seed(5);
+        ch.mark_round();
+        assert_eq!(ch.transmit_bytes((), 100, &mut rng), None);
+        ch.charge_sync(800);
+        assert_eq!(ch.stats.sent, 1);
+        assert_eq!(ch.stats.sent_bytes, 800);
+        assert_eq!(ch.stats.dropped, 0);
+        assert_eq!(ch.stats.dropped_bytes, 0);
+    }
+
+    #[test]
+    fn charge_sync_does_not_supersede_earlier_round_drop() {
+        let mut ch = DropChannel::new(1.0);
+        let mut rng = Pcg64::seed(6);
+        // round 1: drop
+        ch.mark_round();
+        assert_eq!(ch.transmit_bytes((), 100, &mut rng), None);
+        // round 2: no transmit, but a reset fires — the round-1 drop is
+        // real traffic and must stay on the books
+        ch.mark_round();
+        ch.charge_sync(800);
+        assert_eq!(ch.stats.sent, 2);
+        assert_eq!(ch.stats.sent_bytes, 900);
+        assert_eq!(ch.stats.dropped, 1);
+        assert_eq!(ch.stats.dropped_bytes, 100);
+    }
+
+    #[test]
+    fn charge_sync_keeps_delivered_packet_on_the_books() {
+        // a delivered delta followed by a reset is two real transfers
+        let mut ch = DropChannel::new(0.0);
+        let mut rng = Pcg64::seed(7);
+        ch.mark_round();
+        assert!(ch.transmit_bytes((), 100, &mut rng).is_some());
+        ch.charge_sync(800);
+        assert_eq!(ch.stats.sent, 2);
+        assert_eq!(ch.stats.sent_bytes, 900);
+        assert_eq!(ch.stats.dropped, 0);
+    }
+
+    #[test]
+    fn loss_model_none_and_bernoulli_rates() {
+        let mut rng = Pcg64::seed(8);
+        let mut bad = false;
+        assert!(!LossModel::None.sample(&mut bad, &mut rng));
+        let m = LossModel::Bernoulli { p: 0.4 };
+        let hits =
+            (0..50_000).filter(|_| m.sample(&mut bad, &mut rng)).count();
+        let rate = hits as f64 / 50_000.0;
+        assert!((rate - 0.4).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn gilbert_elliott_bursts() {
+        // loss only in the bad state: drops must arrive in runs whose
+        // mean length ~ 1/p_bg, far burstier than i.i.d. at the same
+        // average rate.
+        let m = LossModel::GilbertElliott {
+            p_gb: 0.02,
+            p_bg: 0.2,
+            loss_good: 0.0,
+            loss_bad: 1.0,
+        };
+        let mut rng = Pcg64::seed(9);
+        let mut bad = false;
+        let outcomes: Vec<bool> =
+            (0..100_000).map(|_| m.sample(&mut bad, &mut rng)).collect();
+        let drops = outcomes.iter().filter(|&&d| d).count();
+        // stationary bad fraction = p_gb / (p_gb + p_bg) ~ 0.09
+        let frac = drops as f64 / outcomes.len() as f64;
+        assert!((0.03..0.2).contains(&frac), "drop fraction {frac}");
+        // burstiness: count drop->drop adjacencies; i.i.d. at `frac`
+        // would give ~frac^2 per pair, the chain gives ~frac*(1-p_bg)
+        let pairs = outcomes.windows(2).filter(|w| w[0] && w[1]).count();
+        let adj = pairs as f64 / (outcomes.len() - 1) as f64;
+        assert!(
+            adj > 2.0 * frac * frac,
+            "adjacency {adj} not bursty vs iid {}",
+            frac * frac
+        );
+    }
+
+    #[test]
+    fn gilbert_elliott_all_bad_drops_everything() {
+        let mut ch = DropChannel::with_model(LossModel::GilbertElliott {
+            p_gb: 1.0,
+            p_bg: 0.0,
+            loss_good: 0.0,
+            loss_bad: 1.0,
+        });
+        // informational rate = stationary average = pi_bad * loss_bad
+        assert!((ch.drop_rate - 1.0).abs() < 1e-12);
+        let mut rng = Pcg64::seed(10);
+        for _ in 0..100 {
+            // first transmit already transitions good->bad (p_gb = 1)
+            assert_eq!(ch.transmit((), &mut rng), None);
+        }
+        assert_eq!(ch.stats.dropped, 100);
+    }
+
+    #[test]
+    fn with_model_reports_stationary_average_rate() {
+        let ch = DropChannel::with_model(LossModel::GilbertElliott {
+            p_gb: 0.1,
+            p_bg: 0.3,
+            loss_good: 0.0,
+            loss_bad: 0.8,
+        });
+        // pi_bad = 0.1/0.4 = 0.25; average = 0.25 * 0.8 = 0.2
+        assert!((ch.drop_rate - 0.2).abs() < 1e-12, "{}", ch.drop_rate);
+        let b = DropChannel::with_model(LossModel::Bernoulli { p: 0.3 });
+        assert_eq!(b.drop_rate, 0.3);
+    }
+
+    #[test]
+    fn loss_model_parse_roundtrip() {
+        for s in ["none", "bernoulli:0.3", "ge:0.02:0.2:0:1"] {
+            let m = LossModel::parse(s).unwrap();
+            assert_eq!(LossModel::parse(&m.label()).unwrap(), m);
+        }
+        assert!(LossModel::parse("bernoulli:1.5").is_err());
+        assert!(LossModel::parse("bogus").is_err());
+        assert!(LossModel::parse("ge:0.1:0.2:0.3").is_err());
     }
 }

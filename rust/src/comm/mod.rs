@@ -20,7 +20,7 @@ mod channel;
 mod estimate;
 mod trigger;
 
-pub use channel::{ChannelStats, DropChannel};
+pub use channel::{ChannelStats, DropChannel, LossModel};
 pub use estimate::Estimate;
 pub use trigger::{Trigger, TriggerState};
 

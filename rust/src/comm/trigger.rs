@@ -40,6 +40,74 @@ impl Trigger {
     pub fn decaying(delta0: f64, power: f64) -> Trigger {
         Trigger::Decaying { delta0, power }
     }
+
+    /// Parse the CLI/scenario syntax: `always` | `never` | `vanilla:D` |
+    /// `randomized:D:P` | `participation:P` | `decaying:D0:T`.
+    /// Thresholds must be >= 0 and probabilities in [0,1] — a mistyped
+    /// value must not silently degenerate into a different policy.
+    pub fn parse(s: &str) -> Result<Trigger, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize, what: &str| -> Result<f64, String> {
+            parts
+                .get(i)
+                .ok_or_else(|| format!("{s:?}: missing {what}"))?
+                .parse::<f64>()
+                .map_err(|_| format!("{s:?}: bad {what}"))
+        };
+        let nonneg = |i: usize, what: &str| -> Result<f64, String> {
+            let v = num(i, what)?;
+            if v.is_nan() || v < 0.0 {
+                return Err(format!("{s:?}: {what} must be >= 0"));
+            }
+            Ok(v)
+        };
+        let prob = |i: usize, what: &str| -> Result<f64, String> {
+            let v = num(i, what)?;
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{s:?}: {what} must be in [0,1]"));
+            }
+            Ok(v)
+        };
+        match parts[0] {
+            "always" => Ok(Trigger::Always),
+            "never" => Ok(Trigger::Never),
+            "vanilla" => {
+                Ok(Trigger::Vanilla { delta: nonneg(1, "delta")? })
+            }
+            "randomized" => Ok(Trigger::Randomized {
+                delta: nonneg(1, "delta")?,
+                p_trig: prob(2, "p_trig")?,
+            }),
+            "participation" => {
+                Ok(Trigger::Participation { p: prob(1, "p")? })
+            }
+            "decaying" => Ok(Trigger::Decaying {
+                delta0: nonneg(1, "delta0")?,
+                power: nonneg(2, "power")?,
+            }),
+            other => Err(format!(
+                "unknown trigger {other:?} (expected always | never | \
+                 vanilla:D | randomized:D:P | participation:P | \
+                 decaying:D0:T)"
+            )),
+        }
+    }
+
+    /// Display label matching the [`Self::parse`] syntax.
+    pub fn label(&self) -> String {
+        match *self {
+            Trigger::Always => "always".into(),
+            Trigger::Never => "never".into(),
+            Trigger::Vanilla { delta } => format!("vanilla:{delta}"),
+            Trigger::Randomized { delta, p_trig } => {
+                format!("randomized:{delta}:{p_trig}")
+            }
+            Trigger::Participation { p } => format!("participation:{p}"),
+            Trigger::Decaying { delta0, power } => {
+                format!("decaying:{delta0}:{power}")
+            }
+        }
+    }
 }
 
 /// Per-line trigger state: tracks the last *communicated* value `v_{[k]}`
@@ -330,6 +398,29 @@ mod tests {
         assert_eq!(a.events, b.events);
         assert_eq!(a.opportunities, b.opportunities);
         assert_eq!(a.last_sent(), b.last_sent());
+    }
+
+    #[test]
+    fn trigger_parse_roundtrip() {
+        for s in [
+            "always",
+            "never",
+            "vanilla:0.001",
+            "randomized:0.5:0.1",
+            "participation:0.4",
+            "decaying:2:1.5",
+        ] {
+            let t = Trigger::parse(s).unwrap();
+            assert_eq!(Trigger::parse(&t.label()).unwrap(), t);
+        }
+        assert!(Trigger::parse("vanilla").is_err());
+        assert!(Trigger::parse("randomized:0.5").is_err());
+        assert!(Trigger::parse("warp:9").is_err());
+        // out-of-range values must not degenerate into another policy
+        assert!(Trigger::parse("vanilla:-1").is_err());
+        assert!(Trigger::parse("randomized:0.001:5").is_err());
+        assert!(Trigger::parse("participation:1.5").is_err());
+        assert!(Trigger::parse("decaying:2:-1").is_err());
     }
 
     #[test]

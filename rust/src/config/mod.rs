@@ -17,6 +17,8 @@ pub struct RunConfig {
     pub seed: u64,
     /// Wire compressor (`--compressor none|topk:F|randk:F|quant:B|topkq:F:B`).
     pub compressor: CompressorCfg,
+    /// Sweep worker threads (`--workers N`); 0 = one per core.
+    pub workers: usize,
 }
 
 impl Default for RunConfig {
@@ -26,6 +28,7 @@ impl Default for RunConfig {
             results_dir: PathBuf::from("results"),
             seed: 0,
             compressor: CompressorCfg::Identity,
+            workers: 0,
         }
     }
 }
@@ -54,6 +57,7 @@ impl RunConfig {
             cfg.results_dir = PathBuf::from(dir);
         }
         cfg.seed = args.u64_or("seed", 0);
+        cfg.workers = args.usize_or("workers", 0);
         if let Some(spec) = args.get("compressor") {
             // a typo silently measuring the dense baseline would corrupt a
             // whole sweep — malformed values are fatal, same as the JSON
@@ -76,6 +80,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             self.seed = v as u64;
+        }
+        if let Some(v) = j.get("workers").and_then(Json::as_f64) {
+            self.workers = v as usize;
         }
         if let Some(v) = j.get("compressor").and_then(Json::as_str) {
             self.compressor = CompressorCfg::parse(v)
@@ -102,6 +109,14 @@ mod tests {
         assert_eq!(cfg.artifacts_dir, PathBuf::from("/tmp/a"));
         assert_eq!(cfg.seed, 5);
         assert_eq!(cfg.compressor, CompressorCfg::Identity);
+        assert_eq!(cfg.workers, 0);
+    }
+
+    #[test]
+    fn from_args_parses_workers() {
+        let args =
+            Args::parse(["--workers", "6"].iter().map(|s| s.to_string()));
+        assert_eq!(RunConfig::from_args(&args).workers, 6);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! series on stdout and writes CSV/JSON under `results/`.  Invoke via
 //! `deluxe exp <id>` or the benches.
 
+pub mod faults;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -12,5 +13,6 @@ pub mod nn;
 pub mod pareto;
 pub mod rates;
 
+pub use faults::{FaultPoint, FaultsConfig};
 pub use nn::{NnExperimentConfig, NnWorkload};
 pub use pareto::{ParetoConfig, ParetoPoint};

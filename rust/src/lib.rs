@@ -16,6 +16,10 @@
 //!   consensus-over-graph (Eq. 7) and the sharing problem (App. A).
 //! * [`baselines`] — FedAvg, FedProx, SCAFFOLD and FedADMM under an
 //!   identical local-computation budget (Sec. 5).
+//! * [`sim`] — deterministic discrete-event network simulator: latency /
+//!   bandwidth / burst-loss links, stragglers, agent churn, and the
+//!   asynchronous quorum-based variant of Alg. 1, with a threaded
+//!   scenario-sweep runner.
 //! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
 //!   artifacts from `artifacts/` (Python never runs on the request path).
 //! * [`coordinator`] — the threaded leader/agent runtime.
@@ -34,6 +38,7 @@ pub mod metrics;
 pub mod model;
 pub mod proptest;
 pub mod rng;
+pub mod sim;
 pub mod topology;
 pub mod wire;
 

@@ -10,10 +10,13 @@
 use anyhow::Result;
 use deluxe::cli::Args;
 use deluxe::config::RunConfig;
-use deluxe::experiments::{fig10, fig11, fig12, fig9, nn, pareto, rates};
+use deluxe::experiments::{
+    faults, fig10, fig11, fig12, fig9, nn, pareto, rates,
+};
 use deluxe::jsonio::Json;
-use deluxe::metrics::{fmt_bytes, fmt_opt, Recorder, Table};
+use deluxe::metrics::{fmt_bytes, fmt_duration, fmt_opt, Recorder, Table};
 use deluxe::runtime::{PjrtRuntime, Variant};
+use deluxe::sim::Scenario;
 
 const USAGE: &str = "\
 deluxe — Distributed Event-based Learning via ADMM (ICML 2025 reproduction)
@@ -24,6 +27,9 @@ USAGE:
              [--compressor none|topk:F|randk:F|quant:B|topkq:F:B]
   deluxe train [--rounds N] [--delta D] [--seed S] [--compressor C]
                                                        threaded e2e run
+  deluxe sim --scenario NAME|file.json [--agents N] [--rounds N] [--seed S]
+             discrete-event network simulation (builtins: ideal | lossy |
+             stragglers | churn); scenario JSON schema in DESIGN.md §9
   deluxe info                                          artifact manifest
   deluxe help
 
@@ -37,6 +43,9 @@ EXPERIMENT IDS (DESIGN.md §6):
   fig12                   Fig.12  linreg over a 50-agent graph
   rates                   Thm 4.1/Cor 2.2 rate + floor validation
   pareto                  trigger-Δ x compression frontier (bytes-accurate)
+  faults                  latency x participation frontier on the sim
+                          backend (drops, stragglers, staleness; --nn adds
+                          the NN-surrogate panel; --workers N)
 ";
 
 fn main() -> Result<()> {
@@ -44,6 +53,7 @@ fn main() -> Result<()> {
     match cmd.as_deref() {
         Some("exp") => run_exp(&args),
         Some("train") => run_train(&args),
+        Some("sim") => run_sim(&args),
         Some("info") => run_info(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -99,6 +109,7 @@ fn run_exp(args: &Args) -> Result<()> {
         "fig12" => exp_fig12(args, &rc),
         "rates" => exp_rates(args, &rc),
         "pareto" => exp_pareto(args, &rc),
+        "faults" => exp_faults(args, &rc),
         other => {
             eprintln!("unknown experiment {other:?}\n");
             print!("{USAGE}");
@@ -488,6 +499,192 @@ fn exp_pareto(args: &Args, rc: &RunConfig) -> Result<()> {
         &rc.results_dir.join("pareto.json"),
         &Json::Arr(json_rows),
     )?;
+    Ok(())
+}
+
+fn exp_faults(args: &Args, rc: &RunConfig) -> Result<()> {
+    let cfg = faults::FaultsConfig {
+        n_agents: args.usize_or("agents", 64),
+        rounds: args.usize_or("rounds", 240),
+        delta: args.f64_or("delta", 1e-3),
+        drop_rate: args.f64_or("drop", 0.05),
+        seed: rc.seed,
+        workers: rc.workers,
+        ..Default::default()
+    };
+    println!(
+        "== faults: latency x participation frontier on the sim backend \
+         ({} agents, {} rounds, drop {}, stragglers {:.0}% x{}) ==",
+        cfg.n_agents,
+        cfg.rounds,
+        cfg.drop_rate,
+        cfg.straggler_frac * 100.0,
+        cfg.straggler_mult,
+    );
+    let points = faults::run(&cfg);
+    let mut table = Table::new(&[
+        "latency",
+        "quorum",
+        "subopt",
+        "rel gap",
+        "vtime",
+        "events",
+        "uplink",
+        "stale",
+    ]);
+    let mut json_rows = Vec::new();
+    for p in &points {
+        table.row(vec![
+            fmt_duration(p.latency),
+            format!("{:.0}%", p.participation * 100.0),
+            format!("{:.3e}", p.subopt),
+            format!("{:.2}%", p.rel_gap * 100.0),
+            fmt_duration(p.vtime_secs),
+            format!("{}", p.events),
+            fmt_bytes(p.up_bytes),
+            format!("{}", p.stale_discarded),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("latency", Json::Num(p.latency)),
+            ("participation", Json::Num(p.participation)),
+            ("objective", Json::Num(p.objective)),
+            ("subopt", Json::Num(p.subopt)),
+            ("vtime_secs", Json::Num(p.vtime_secs)),
+            ("events", Json::Num(p.events as f64)),
+            ("up_bytes", Json::Num(p.up_bytes as f64)),
+            ("stale_discarded", Json::Num(p.stale_discarded as f64)),
+        ]));
+        save(
+            rc,
+            &format!(
+                "faults_l{}_q{}",
+                sanitize(&format!("{}", p.latency)),
+                sanitize(&format!("{}", p.participation))
+            ),
+            &p.recorder,
+        )?;
+    }
+    println!("{}", table.render());
+    deluxe::jsonio::write_json(
+        &rc.results_dir.join("faults.json"),
+        &Json::Arr(json_rows),
+    )?;
+    if args.has("nn") {
+        println!("\n-- NN-surrogate panel (inexact SGD local solves) --");
+        let w = nn::NnWorkload::mnist(rc.seed);
+        let nn_cfg = faults::FaultsConfig {
+            n_agents: w.n_agents(),
+            rounds: args.usize_or("rounds", 100),
+            delta: args.f64_or("delta", 0.3),
+            ..cfg
+        };
+        for p in faults::run_nn(&w, &nn_cfg) {
+            println!(
+                "latency {:<9} quorum {:>4.0}%  acc {:.3}  vtime {:<10} \
+                 events {:>7}  uplink {}",
+                fmt_duration(p.latency),
+                p.participation * 100.0,
+                p.accuracy,
+                fmt_duration(p.vtime_secs),
+                p.events,
+                fmt_bytes(p.up_bytes),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_sim(args: &Args) -> Result<()> {
+    use deluxe::lasso::{LassoConfig, LassoProblem};
+    use deluxe::rng::Pcg64;
+    use deluxe::sim::AsyncConsensus;
+    use deluxe::solver::{ExactQuadratic, L1Prox};
+
+    let rc = RunConfig::from_args(args);
+    let spec = args.str_or("scenario", "ideal");
+    let path = std::path::Path::new(spec);
+    let mut scn = if path.exists() {
+        Scenario::load(path)?
+    } else {
+        Scenario::builtin(
+            spec,
+            args.usize_or("agents", 16),
+            args.usize_or("rounds", 200),
+            rc.seed,
+        )
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario {spec:?} (builtins: ideal | lossy | \
+                 stragglers | churn; or a path to a scenario JSON file)"
+            )
+        })?
+    };
+    if let Some(n) = args.get_parse::<usize>("agents")? {
+        scn.n_agents = n;
+    }
+    if let Some(r) = args.get_parse::<usize>("rounds")? {
+        scn.rounds = r;
+    }
+    if args.get("seed").is_some() {
+        scn.seed = rc.seed;
+    }
+    // flag overrides can invalidate a scenario that parsed fine (e.g.
+    // --agents below a fault's agent id): fail as a CLI error, not a
+    // panic inside the engine
+    scn.validate()
+        .map_err(|e| anyhow::anyhow!("scenario {:?}: {e}", scn.name))?;
+    println!("scenario {}", scn.summary());
+
+    // LASSO workload sized to the scenario
+    let mut rng = Pcg64::seed_stream(scn.seed, 4242);
+    let prob = LassoProblem::generate(
+        &LassoConfig {
+            spec: deluxe::data::regress::RegressSpec {
+                n_agents: scn.n_agents,
+                rows_per_agent: 8,
+                dim: 20,
+                ..Default::default()
+            },
+            lambda: 0.1,
+        },
+        &mut rng,
+    );
+    let (_, fstar) = prob.reference_solution(&mut rng);
+    let mut engine = AsyncConsensus::<f64>::new(scn, vec![0.0; prob.dim]);
+    let mut solver = ExactQuadratic::new(&prob.blocks);
+    let mut prox = L1Prox { lambda: prob.lambda };
+    let rounds = engine.scn.rounds as u64;
+    let mut rec = Recorder::new();
+    for r in 1..=rounds {
+        engine.run_until(r, &mut solver, &mut prox);
+        let subopt = (prob.objective(&engine.z) - fstar).max(1e-16);
+        rec.add("subopt", r as f64, subopt);
+        rec.add("vtime", r as f64, engine.now_secs());
+        rec.add("subopt_vs_vtime", engine.now_secs(), subopt);
+    }
+    let (up, down) = engine.bytes_split();
+    let (du, dd) = engine.drops_split();
+    println!(
+        "completed {} / {} leader rounds in {} virtual time \
+         ({} events processed)",
+        engine.leader_round,
+        rounds,
+        fmt_duration(engine.now_secs()),
+        engine.events_processed(),
+    );
+    println!(
+        "subopt {:.3e}  events {}  uplink {} (dropped {du})  \
+         downlink {} (dropped {dd})  stale discarded {}  rejoins {}",
+        (prob.objective(&engine.z) - fstar).max(1e-16),
+        engine.total_events(),
+        fmt_bytes(up),
+        fmt_bytes(down),
+        engine.stale_discarded,
+        engine.rejoin_resyncs,
+    );
+    println!("trace hash {:016x} (same scenario + seed => same hash)",
+        engine.trace_hash());
+    save(&rc, &format!("sim_{}", sanitize(&engine.scn.name)), &rec)?;
     Ok(())
 }
 

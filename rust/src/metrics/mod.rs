@@ -161,6 +161,23 @@ pub fn fmt_bytes(bytes: u64) -> String {
     }
 }
 
+/// Human-readable virtual-time duration for the simulator's summaries
+/// (the sim's clock is integer microseconds, so µs is the floor unit).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.0} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 60.0 {
+        format!("{secs:.2} s")
+    } else {
+        // round once, then split — "119.7" must print "2 min 0 s",
+        // never "1 min 60 s"
+        let total = secs.round() as u64;
+        format!("{} min {} s", total / 60, total % 60)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +215,11 @@ mod tests {
         assert_eq!(r.first_reaching("acc", 0.8), Some(20.0));
         assert_eq!(r.first_reaching("acc", 0.95), None);
         assert_eq!(fmt_opt(None), "N/A");
+        assert_eq!(fmt_duration(2.5e-5), "25 µs");
+        assert_eq!(fmt_duration(0.0305), "30.5 ms");
+        assert_eq!(fmt_duration(2.25), "2.25 s");
+        assert_eq!(fmt_duration(95.0), "1 min 35 s");
+        assert_eq!(fmt_duration(119.7), "2 min 0 s");
         assert_eq!(fmt_opt(Some(123.4)), "123");
     }
 

@@ -1,0 +1,1032 @@
+//! `AsyncConsensus` — the asynchronous variant of Alg. 1 running on the
+//! discrete-event queue.
+//!
+//! The synchronous engine ([`crate::admm::ConsensusAdmm`]) assumes a
+//! round barrier: every agent computes and every message (or its loss)
+//! resolves before `z` advances.  Here the barrier is gone:
+//!
+//! * the leader **broadcasts** `z` (per-link event trigger + compressed
+//!   codec + lossy, delayed link) and go-ticks every active agent;
+//! * each agent, on its tick, runs the Alg. 1 dual update + local prox
+//!   solve (taking modeled compute time — stragglers take longer), then
+//!   offers its `d`-delta uplink;
+//! * every completed solve sends a reliable control-plane **completion
+//!   report** (zero bytes; the async analogue of the sync round
+//!   barrier), carrying the event-triggered delta when one fired and
+//!   survived the link; the leader integrates payloads **as they
+//!   arrive**, and once a quorum (`participation` fraction of active
+//!   agents) has reported since the last update it advances `z` and
+//!   broadcasts again.  Payloads older than the `staleness` bound (in
+//!   leader rounds) are discarded — a controlled disturbance the
+//!   periodic resets absorb, exactly like packet drops (Prop. 2.1);
+//! * agents **leave and rejoin** per the fault schedule; a rejoining
+//!   agent is resynchronized through the reset path (one reliable dense
+//!   `z` transfer).
+//!
+//! **Sync-equivalence contract** (pinned by tests): under an ideal
+//! scenario — zero latency, infinite bandwidth, no drops, instant
+//! compute, full participation, no churn, and draw-free uplink triggers
+//! — the event ordering reduces to the synchronous schedule and the
+//! trajectory matches `ConsensusAdmm` bit-for-bit, including the RNG
+//! stream consumed by the local solvers.
+//!
+//! **Determinism contract**: the queue is keyed by `(time, seq)` with a
+//! monotone sequence number, all randomness flows through one seeded
+//! `Pcg64`, and virtual time is integer microseconds — same `Scenario` +
+//! seed ⇒ identical iterates, counters and event-trace hash.
+
+use crate::comm::{Estimate, Scalar, TriggerState};
+use crate::rng::Pcg64;
+use crate::solver::{LocalSolver, ServerProx};
+use crate::wire::{
+    Compressor, ErrorFeedback, LinkStats, WireMessage, WireStats,
+};
+
+use super::event::{secs, ticks, EventQueue, SimTime, TraceHash};
+use super::link::Link;
+use super::scenario::{FaultKind, Scenario, TopologySpec};
+
+/// Events of the async Alg. 1 simulation.
+///
+/// Stateful agent events carry the agent's `epoch` (incarnation
+/// counter, bumped on every leave and join): an event scheduled before
+/// a churn fault must not act on the state of a later incarnation — a
+/// delta sent to an agent that left and rejoined would otherwise land
+/// on the freshly resynced estimate and permanently desynchronize it
+/// from the leader's per-link trigger reference.  `Tick` carries no
+/// epoch: it is a pure control signal that only ever acts on whatever
+/// the agent's current state is.
+enum SimEvent<T: Scalar> {
+    /// Leader offers `z` on every active downlink and ticks the agents.
+    Broadcast,
+    /// A downlink payload arrives at an agent.
+    DeliverDown { agent: usize, epoch: u64, msg: WireMessage<T> },
+    /// Control-plane go-tick: the agent may start its next local solve.
+    Tick { agent: usize },
+    /// The agent's local solve completes; it offers its delta uplink.
+    Finish { agent: usize, epoch: u64 },
+    /// An agent's round-completion report arrives at the leader: always
+    /// sent (control-plane, reliable — the async analogue of the sync
+    /// round barrier, so quorum progress never depends on a trigger
+    /// firing), carrying the triggered delta payload when one fired and
+    /// survived the link.  Tagged with the leader round the compute
+    /// started from (the staleness bound's clock).
+    DeliverUp {
+        agent: usize,
+        epoch: u64,
+        msg: Option<WireMessage<T>>,
+        tag: u64,
+    },
+    /// Apply the next fault-schedule entry.
+    Fault { idx: usize },
+}
+
+struct AsyncAgent<T: Scalar> {
+    x: Vec<T>,
+    u: Vec<T>,
+    zhat: Estimate<T>,
+    /// `ẑ` as of this agent's previous dual update (the sync engine's
+    /// pre-downlink snapshot, maintained incrementally here).
+    zhat_prev: Vec<T>,
+    d: Vec<T>,
+    d_trig: TriggerState<T>,
+    /// Leader-side per-link downlink trigger.
+    z_trig: TriggerState<T>,
+    ef_up: ErrorFeedback<T>,
+    ef_down: ErrorFeedback<T>,
+    up: Link,
+    down: Link,
+    active: bool,
+    busy: bool,
+    /// A broadcast arrived while this agent was computing; start again
+    /// as soon as the current solve finishes.
+    tick_pending: bool,
+    /// Leader round at the start of the current compute.
+    tag: u64,
+    /// Incarnation counter (bumped on leave and join); in-flight events
+    /// from an earlier incarnation are discarded on arrival.
+    epoch: u64,
+    straggler: bool,
+}
+
+/// Asynchronous event-based consensus ADMM on the discrete-event queue.
+/// Generic over the scalar type like the synchronous engine.
+pub struct AsyncConsensus<T: Scalar> {
+    pub scn: Scenario,
+    pub n: usize,
+    pub dim: usize,
+    pub z: Vec<T>,
+    zeta_hat: Estimate<T>,
+    agents: Vec<AsyncAgent<T>>,
+    queue: EventQueue<SimEvent<T>>,
+    comp: Box<dyn Compressor<T>>,
+    scratch: Vec<T>,
+    rng: Pcg64,
+    /// Number of `z` updates performed so far.
+    pub leader_round: u64,
+    /// Distinct agents heard from since the last `z` update.
+    arrived: Vec<bool>,
+    arrival_count: usize,
+    /// Uplink deltas discarded by the staleness bound.
+    pub stale_discarded: u64,
+    /// Rejoin resynchronizations performed.
+    pub rejoin_resyncs: u64,
+    trace: TraceHash,
+}
+
+impl<T: Scalar> AsyncConsensus<T> {
+    /// All state starts synchronized at `z0`, mirroring the synchronous
+    /// engine's initialization contract.
+    pub fn new(scn: Scenario, z0: Vec<T>) -> Self {
+        scn.validate()
+            .unwrap_or_else(|e| panic!("invalid scenario {:?}: {e}", scn.name));
+        assert!(
+            matches!(scn.topology, TopologySpec::Star),
+            "the async sim engine models the leader/agent (star) pattern; \
+             decentralized topologies run on the synchronous GraphAdmm \
+             engine"
+        );
+        let n = scn.n_agents;
+        let dim = z0.len();
+        let stragglers =
+            (scn.compute.straggler_frac * n as f64).ceil() as usize;
+        let agents: Vec<AsyncAgent<T>> = (0..n)
+            .map(|i| AsyncAgent {
+                x: z0.clone(),
+                u: vec![T::zero(); dim],
+                zhat: Estimate::new(z0.clone()),
+                zhat_prev: z0.clone(),
+                d: z0.clone(),
+                d_trig: TriggerState::new(scn.trigger_d, z0.clone()),
+                z_trig: TriggerState::new(scn.trigger_z, z0.clone()),
+                ef_up: ErrorFeedback::new(),
+                ef_down: ErrorFeedback::new(),
+                up: Link::new(scn.link_up),
+                down: Link::new(scn.link_down),
+                active: true,
+                busy: false,
+                tick_pending: false,
+                tag: 0,
+                epoch: 0,
+                straggler: i < stragglers,
+            })
+            .collect();
+        let comp = scn.compressor.build::<T>();
+        let rng = Pcg64::seed(scn.seed);
+        let mut queue = EventQueue::new();
+        for (idx, f) in scn.faults.iter().enumerate() {
+            queue.push(ticks(f.at_secs), SimEvent::Fault { idx });
+        }
+        queue.push(0, SimEvent::Broadcast);
+        AsyncConsensus {
+            n,
+            dim,
+            zeta_hat: Estimate::new(z0.clone()),
+            z: z0,
+            agents,
+            queue,
+            comp,
+            scratch: Vec::with_capacity(dim),
+            rng,
+            leader_round: 0,
+            arrived: vec![false; n],
+            arrival_count: 0,
+            stale_discarded: 0,
+            rejoin_resyncs: 0,
+            trace: TraceHash::new(),
+            scn,
+        }
+    }
+
+    /// Run the simulation to the scenario horizon.
+    pub fn run(
+        &mut self,
+        solver: &mut dyn LocalSolver<T>,
+        prox: &mut dyn ServerProx<T>,
+    ) {
+        self.run_until(self.scn.rounds as u64, solver, prox);
+    }
+
+    /// Process events until `target` leader rounds have completed (or the
+    /// queue drains — e.g. the quorum became unreachable after churn).
+    /// Incremental: callers may step round-by-round to record metrics
+    /// against the virtual clock.
+    pub fn run_until(
+        &mut self,
+        target: u64,
+        solver: &mut dyn LocalSolver<T>,
+        prox: &mut dyn ServerProx<T>,
+    ) {
+        let target = target.min(self.scn.rounds as u64);
+        while self.leader_round < target {
+            let (t, ev) = match self.queue.pop() {
+                Some(e) => e,
+                None => return,
+            };
+            self.trace_event(t, &ev);
+            match ev {
+                SimEvent::Broadcast => self.on_broadcast(),
+                SimEvent::DeliverDown { agent, epoch, msg } => {
+                    self.on_deliver_down(agent, epoch, &msg)
+                }
+                SimEvent::Tick { agent } => self.on_tick(agent, solver),
+                SimEvent::Finish { agent, epoch } => {
+                    self.on_finish(agent, epoch)
+                }
+                SimEvent::DeliverUp { agent, epoch, msg, tag } => {
+                    self.on_deliver_up(agent, epoch, &msg, tag, prox);
+                }
+                SimEvent::Fault { idx } => self.on_fault(idx, prox),
+            }
+        }
+    }
+
+    fn trace_event(&mut self, t: SimTime, ev: &SimEvent<T>) {
+        let (kind, who) = match ev {
+            SimEvent::Broadcast => (1u64, u64::MAX),
+            SimEvent::DeliverDown { agent, .. } => (2, *agent as u64),
+            SimEvent::Tick { agent } => (3, *agent as u64),
+            SimEvent::Finish { agent, .. } => (4, *agent as u64),
+            SimEvent::DeliverUp { agent, .. } => (5, *agent as u64),
+            SimEvent::Fault { idx } => (6, *idx as u64),
+        };
+        self.trace.mix(t);
+        self.trace.mix(kind);
+        self.trace.mix(who);
+    }
+
+    /// Leader side of a round: per-link event-based `z` offer plus the
+    /// go-tick that lets each active agent start its next local solve.
+    /// Mirrors the synchronous step 1 agent-by-agent, so the ideal
+    /// scenario consumes the RNG in the same order.
+    fn on_broadcast(&mut self) {
+        let now = self.queue.now();
+        for i in 0..self.n {
+            if !self.agents[i].active {
+                continue;
+            }
+            let a = &mut self.agents[i];
+            a.down.mark_round();
+            if a.z_trig.offer_into(&self.z, &mut self.rng, &mut self.scratch)
+            {
+                let msg = a.ef_down.compress(
+                    &self.scratch,
+                    self.comp.as_ref(),
+                    &mut self.rng,
+                );
+                let bytes = msg.wire_bytes() as u64;
+                if let Some(delay) = a.down.transmit(bytes, &mut self.rng) {
+                    let epoch = a.epoch;
+                    self.queue.push(
+                        now.saturating_add(delay),
+                        SimEvent::DeliverDown { agent: i, epoch, msg },
+                    );
+                }
+            }
+            let tick_delay = a.down.control_delay(&mut self.rng);
+            self.queue.push(
+                now.saturating_add(tick_delay),
+                SimEvent::Tick { agent: i },
+            );
+        }
+    }
+
+    fn on_deliver_down(
+        &mut self,
+        agent: usize,
+        epoch: u64,
+        msg: &WireMessage<T>,
+    ) {
+        let a = &mut self.agents[agent];
+        if !a.active || epoch != a.epoch {
+            // left while the packet was in flight (possibly rejoining
+            // since): a stale delta must not land on the resynced state
+            return;
+        }
+        a.zhat.apply_msg(msg);
+    }
+
+    fn on_tick(&mut self, agent: usize, solver: &mut dyn LocalSolver<T>) {
+        if !self.agents[agent].active {
+            return;
+        }
+        if self.agents[agent].busy {
+            self.agents[agent].tick_pending = true;
+            return;
+        }
+        self.start_compute(agent, solver);
+    }
+
+    /// Alg. 1 step 2, agent side: dual update against the current `ẑ`,
+    /// local prox solve, then the uplink offer is scheduled after the
+    /// modeled compute time.  The arithmetic mirrors
+    /// `ConsensusAdmm::round` expression-for-expression — the
+    /// sync-equivalence test pins this bit-for-bit.
+    fn start_compute(&mut self, i: usize, solver: &mut dyn LocalSolver<T>) {
+        let alpha = self.scn.alpha;
+        let rho = self.scn.rho;
+        let a = &mut self.agents[i];
+        a.busy = true;
+        a.tick_pending = false;
+        a.tag = self.leader_round;
+        // u^i = u^i + α x^i − ẑ^i + (1−α) ẑ^i_prev
+        for j in 0..self.dim {
+            let u = a.u[j].to_f64()
+                + alpha * a.x[j].to_f64()
+                - a.zhat.get()[j].to_f64()
+                + (1.0 - alpha) * a.zhat_prev[j].to_f64();
+            a.u[j] = T::from_f64(u);
+        }
+        // the ẑ used in this dual update becomes the next one's ẑ_prev
+        a.zhat_prev.clear();
+        a.zhat_prev.extend_from_slice(a.zhat.get());
+        let anchor: Vec<T> = a
+            .zhat
+            .get()
+            .iter()
+            .zip(&a.u)
+            .map(|(&z, &u)| T::from_f64(z.to_f64() - u.to_f64()))
+            .collect();
+        a.x = solver.solve(i, &anchor, rho, &mut self.rng);
+        debug_assert_eq!(a.x.len(), self.dim);
+        a.d = a
+            .x
+            .iter()
+            .zip(&a.u)
+            .map(|(&x, &u)| T::from_f64(alpha * x.to_f64() + u.to_f64()))
+            .collect();
+        let straggler = a.straggler;
+        let epoch = a.epoch;
+        let dt = self.scn.compute.sample(straggler, &mut self.rng);
+        self.queue
+            .push_after(ticks(dt), SimEvent::Finish { agent: i, epoch });
+    }
+
+    fn on_finish(&mut self, i: usize, epoch: u64) {
+        let now = self.queue.now();
+        let a = &mut self.agents[i];
+        if epoch != a.epoch {
+            // the compute belongs to an incarnation that has since left
+            // (and possibly rejoined): its result was discarded by the
+            // fault handler, so neither report nor payload goes out
+            return;
+        }
+        a.busy = false;
+        if !a.active {
+            return; // left mid-compute: the result is discarded
+        }
+        // The completion report always goes out (control-plane,
+        // reliable): without it, a converged network whose triggers all
+        // stay silent would starve the quorum and stall the leader —
+        // whereas the sync engine's round barrier always advances.
+        let mut delay = a.up.control_delay(&mut self.rng);
+        let mut payload: Option<WireMessage<T>> = None;
+        a.up.mark_round();
+        if a.d_trig.offer_into(&a.d, &mut self.rng, &mut self.scratch) {
+            let msg = a.ef_up.compress(
+                &self.scratch,
+                self.comp.as_ref(),
+                &mut self.rng,
+            );
+            let bytes = msg.wire_bytes() as u64;
+            // on loss the payload vanishes (the sender's trigger
+            // reference already advanced — the paper's χ disturbance)
+            // but the bare report below still arrives
+            if let Some(d) = a.up.transmit(bytes, &mut self.rng) {
+                // the report rides with the payload
+                delay = d;
+                payload = Some(msg);
+            }
+        }
+        let tag = a.tag;
+        let up_epoch = a.epoch;
+        self.queue.push(
+            now.saturating_add(delay),
+            SimEvent::DeliverUp {
+                agent: i,
+                epoch: up_epoch,
+                msg: payload,
+                tag,
+            },
+        );
+        if a.tick_pending {
+            a.tick_pending = false;
+            self.queue.push(now, SimEvent::Tick { agent: i });
+        }
+    }
+
+    fn on_deliver_up(
+        &mut self,
+        i: usize,
+        epoch: u64,
+        msg: &Option<WireMessage<T>>,
+        tag: u64,
+        prox: &mut dyn ServerProx<T>,
+    ) {
+        if !self.agents[i].active || epoch != self.agents[i].epoch {
+            // the sender has since left (and possibly rejoined with a
+            // fresh state): the leader ignores the stale report
+            return;
+        }
+        if let Some(msg) = msg {
+            if self.leader_round.saturating_sub(tag) > self.scn.staleness {
+                // Too stale: discard the payload.  The sender's trigger
+                // already advanced its reference, so this acts exactly
+                // like a packet drop (a χ disturbance) — the periodic
+                // resets absorb the drift.
+                self.stale_discarded += 1;
+            } else {
+                let invn = 1.0 / self.n as f64;
+                self.zeta_hat.apply_scaled_msg(msg, invn);
+            }
+        }
+        // the completion itself counts toward the participation quorum
+        if !self.arrived[i] {
+            self.arrived[i] = true;
+            self.arrival_count += 1;
+        }
+        self.maybe_update(prox);
+    }
+
+    fn active_count(&self) -> usize {
+        self.agents.iter().filter(|a| a.active).count()
+    }
+
+    /// Quorum size: `ceil(participation * active)`, at least 1.
+    fn quorum_size(&self) -> usize {
+        let active = self.active_count();
+        ((self.scn.participation * active as f64).ceil() as usize)
+            .clamp(1, active.max(1))
+    }
+
+    fn maybe_update(&mut self, prox: &mut dyn ServerProx<T>) {
+        if self.arrival_count >= self.quorum_size() {
+            self.leader_update(prox);
+        }
+    }
+
+    /// Alg. 1 step 3: `z ← prox_g(ζ̂ + (1−α) z; Nρ)`, then the next
+    /// broadcast (and a periodic reset when due).
+    fn leader_update(&mut self, prox: &mut dyn ServerProx<T>) {
+        let alpha = self.scn.alpha;
+        let v: Vec<T> = self
+            .zeta_hat
+            .get()
+            .iter()
+            .zip(&self.z)
+            .map(|(&zh, &z)| {
+                T::from_f64(zh.to_f64() + (1.0 - alpha) * z.to_f64())
+            })
+            .collect();
+        self.z = prox.prox(&v, self.n as f64 * self.scn.rho);
+        debug_assert_eq!(self.z.len(), self.dim);
+        self.leader_round += 1;
+        self.arrived.fill(false);
+        self.arrival_count = 0;
+        if self.scn.reset_period > 0
+            && self.leader_round as usize % self.scn.reset_period == 0
+        {
+            self.resync();
+        }
+        if self.leader_round < self.scn.rounds as u64 {
+            let now = self.queue.now();
+            self.queue.push(now, SimEvent::Broadcast);
+        }
+    }
+
+    /// Full resynchronization — the synchronous engine's periodic reset
+    /// (App. E) transplanted to the event world: `ζ̂` snaps to the true
+    /// mean of the `d^i`, and every active agent receives the exact `z`
+    /// out-of-band (reliable, instantaneous, charged as one dense sync
+    /// per direction; see DESIGN.md §9 for why the sync transfer is
+    /// modeled as out-of-band).
+    fn resync(&mut self) {
+        let mut zeta = vec![0.0f64; self.dim];
+        for a in &self.agents {
+            for (s, &d) in zeta.iter_mut().zip(&a.d) {
+                *s += d.to_f64();
+            }
+        }
+        let invn = 1.0 / self.n as f64;
+        let zeta: Vec<T> =
+            zeta.into_iter().map(|v| T::from_f64(v * invn)).collect();
+        self.zeta_hat.reset_to(&zeta);
+        let sync_bytes = WireMessage::<T>::dense_bytes(self.dim) as u64;
+        for a in &mut self.agents {
+            if !a.active {
+                continue;
+            }
+            a.zhat.reset_to(&self.z);
+            // the sync engine snapshots ẑ_prev each round, so a reset
+            // there propagates into the next dual update; replicate by
+            // overwriting the incremental snapshot too
+            a.zhat_prev.clear();
+            a.zhat_prev.extend_from_slice(&self.z);
+            a.d_trig.reset(&a.d);
+            a.z_trig.reset(&self.z);
+            a.ef_up.clear();
+            a.ef_down.clear();
+            a.up.charge_sync(sync_bytes);
+            a.down.charge_sync(sync_bytes);
+        }
+    }
+
+    fn on_fault(&mut self, idx: usize, prox: &mut dyn ServerProx<T>) {
+        let f = self.scn.faults[idx];
+        match f.kind {
+            FaultKind::Leave => {
+                let a = &mut self.agents[f.agent];
+                if !a.active {
+                    return;
+                }
+                a.active = false;
+                a.busy = false; // an in-progress compute dies with it
+                a.tick_pending = false;
+                a.epoch += 1; // in-flight events to/from it are now stale
+                if self.arrived[f.agent] {
+                    self.arrived[f.agent] = false;
+                    self.arrival_count -= 1;
+                }
+                // a shrinking quorum may already be satisfied
+                if self.active_count() > 0 {
+                    self.maybe_update(prox);
+                }
+            }
+            FaultKind::Join => {
+                if self.agents[f.agent].active {
+                    return;
+                }
+                // stale-state resync through the reset path: the leader
+                // ships the exact current z (one reliable dense sync) and
+                // the agent restarts from the common initialization
+                let sync_bytes =
+                    WireMessage::<T>::dense_bytes(self.dim) as u64;
+                let z = self.z.clone();
+                let a = &mut self.agents[f.agent];
+                a.active = true;
+                a.epoch += 1;
+                a.zhat.reset_to(&z);
+                a.zhat_prev.clear();
+                a.zhat_prev.extend_from_slice(&z);
+                for v in &mut a.u {
+                    *v = T::zero();
+                }
+                a.x.clear();
+                a.x.extend_from_slice(&z);
+                a.d.clear();
+                a.d.extend_from_slice(&z);
+                a.d_trig.reset(&z);
+                a.z_trig.reset(&z);
+                a.ef_up.clear();
+                a.ef_down.clear();
+                a.down.charge_sync(sync_bytes);
+                self.rejoin_resyncs += 1;
+                let now = self.queue.now();
+                self.queue.push(now, SimEvent::Tick { agent: f.agent });
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Observers (mirroring the synchronous engine's accessors)
+    // ---------------------------------------------------------------
+
+    /// Virtual clock, in seconds.
+    pub fn now_secs(&self) -> f64 {
+        secs(self.queue.now())
+    }
+
+    /// Virtual clock, in ticks (integer microseconds).
+    pub fn now_ticks(&self) -> SimTime {
+        self.queue.now()
+    }
+
+    /// Events processed / scheduled so far.
+    pub fn events_processed(&self) -> u64 {
+        self.queue.popped
+    }
+
+    pub fn events_scheduled(&self) -> u64 {
+        self.queue.pushed
+    }
+
+    /// The determinism witness: FNV-1a hash over `(time, kind, agent)`
+    /// of every processed event.
+    pub fn trace_hash(&self) -> u64 {
+        self.trace.value()
+    }
+
+    pub fn agent_x(&self, i: usize) -> &[T] {
+        &self.agents[i].x
+    }
+
+    pub fn agent_u(&self, i: usize) -> &[T] {
+        &self.agents[i].u
+    }
+
+    pub fn agent_active(&self, i: usize) -> bool {
+        self.agents[i].active
+    }
+
+    /// Total triggered communication events (up + down lines).
+    pub fn total_events(&self) -> u64 {
+        self.agents
+            .iter()
+            .map(|a| a.d_trig.events + a.z_trig.events)
+            .sum()
+    }
+
+    /// Per-direction event counts `(uplink, downlink)`.
+    pub fn events_split(&self) -> (u64, u64) {
+        let up = self.agents.iter().map(|a| a.d_trig.events).sum();
+        let down = self.agents.iter().map(|a| a.z_trig.events).sum();
+        (up, down)
+    }
+
+    /// Dropped-packet counts `(uplink, downlink)`.
+    pub fn drops_split(&self) -> (u64, u64) {
+        let up = self.agents.iter().map(|a| a.up.stats.dropped).sum();
+        let down = self.agents.iter().map(|a| a.down.stats.dropped).sum();
+        (up, down)
+    }
+
+    /// Total sent bytes `(uplink, downlink)`.
+    pub fn bytes_split(&self) -> (u64, u64) {
+        let up = self.agents.iter().map(|a| a.up.stats.sent_bytes).sum();
+        let down =
+            self.agents.iter().map(|a| a.down.stats.sent_bytes).sum();
+        (up, down)
+    }
+
+    /// Byte-accurate per-agent wire accounting (both directions).
+    pub fn wire_stats(&self) -> WireStats {
+        WireStats {
+            uplink: self
+                .agents
+                .iter()
+                .map(|a| LinkStats::from(&a.up.stats))
+                .collect(),
+            downlink: self
+                .agents
+                .iter()
+                .map(|a| LinkStats::from(&a.down.stats))
+                .collect(),
+        }
+    }
+
+    /// Mean residual `(1/N) Σ |x^i − z|` over active agents.
+    pub fn mean_residual(&self) -> f64 {
+        let active = self.active_count().max(1);
+        self.agents
+            .iter()
+            .filter(|a| a.active)
+            .map(|a| {
+                a.x.iter()
+                    .zip(&self.z)
+                    .map(|(&x, &z)| {
+                        let d = x.to_f64() - z.to_f64();
+                        d * d
+                    })
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .sum::<f64>()
+            / active as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::{ConsensusAdmm, ConsensusConfig};
+    use crate::comm::{LossModel, Trigger};
+    use crate::sim::link::{LatencyModel, LinkModel};
+    use crate::sim::scenario::{ComputeModel, FaultEvent};
+    use crate::solver::IdentityProx;
+
+    /// Scalar quadratic agents f_i(x) = 0.5 w_i (x - c_i)^2 — the same
+    /// workload the synchronous engine's tests use, so the equivalence
+    /// test compares like for like.
+    struct ScalarQuad {
+        w: Vec<f64>,
+        c: Vec<f64>,
+    }
+
+    impl LocalSolver<f64> for ScalarQuad {
+        fn solve(
+            &mut self,
+            agent: usize,
+            anchor: &[f64],
+            rho: f64,
+            _rng: &mut Pcg64,
+        ) -> Vec<f64> {
+            let (w, c) = (self.w[agent], self.c[agent]);
+            vec![(w * c + rho * anchor[0]) / (w + rho)]
+        }
+        fn dim(&self) -> usize {
+            1
+        }
+        fn n_agents(&self) -> usize {
+            self.w.len()
+        }
+    }
+
+    fn quad(n: usize) -> (ScalarQuad, f64) {
+        use crate::rng::Rng;
+        let mut rng = Pcg64::seed(9000);
+        let w: Vec<f64> = (0..n).map(|_| 0.5 + rng.f64() * 2.0).collect();
+        let c: Vec<f64> = (0..n).map(|_| rng.normal() * 3.0).collect();
+        let opt = w.iter().zip(&c).map(|(a, b)| a * b).sum::<f64>()
+            / w.iter().sum::<f64>();
+        (ScalarQuad { w, c }, opt)
+    }
+
+    fn gnarly_scenario(seed: u64) -> Scenario {
+        let mut s = Scenario::ideal("gnarly", 8, 60);
+        s.seed = seed;
+        s.trigger_d = Trigger::vanilla(1e-3);
+        s.trigger_z = Trigger::vanilla(1e-4);
+        s.link_up = LinkModel {
+            latency: LatencyModel::lognormal_median(0.010, 0.6),
+            bandwidth: 1e6,
+            loss: LossModel::GilbertElliott {
+                p_gb: 0.05,
+                p_bg: 0.3,
+                loss_good: 0.02,
+                loss_bad: 0.7,
+            },
+        };
+        s.link_down = LinkModel {
+            latency: LatencyModel::Uniform { lo: 0.002, hi: 0.02 },
+            bandwidth: 2e6,
+            loss: LossModel::Bernoulli { p: 0.1 },
+        };
+        s.compute = ComputeModel {
+            time: LatencyModel::Uniform { lo: 0.005, hi: 0.02 },
+            straggler_frac: 0.25,
+            straggler_mult: 8.0,
+        };
+        s.participation = 0.5;
+        s.staleness = 3;
+        s.reset_period = 10;
+        s.faults = vec![
+            FaultEvent { at_secs: 0.3, agent: 2, kind: FaultKind::Leave },
+            FaultEvent { at_secs: 0.9, agent: 2, kind: FaultKind::Join },
+        ];
+        s
+    }
+
+    #[test]
+    fn ideal_scenario_reproduces_sync_engine_bit_for_bit() {
+        // zero latency, infinite bandwidth, no drops, instant compute,
+        // full participation: the async engine must be indistinguishable
+        // from ConsensusAdmm — identical z, x, u, event counts and bytes.
+        let n = 6;
+        let rounds = 150;
+        let mut scn = Scenario::ideal("equiv", n, rounds);
+        scn.seed = 11;
+        scn.alpha = 1.5;
+        scn.rho = 0.7;
+        scn.trigger_d = Trigger::vanilla(1e-3);
+        scn.trigger_z = Trigger::vanilla(1e-4);
+        scn.reset_period = 17;
+
+        let (mut solver_a, _) = quad(n);
+        let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+        let mut prox_a = IdentityProx;
+        sim.run(&mut solver_a, &mut prox_a);
+
+        let cfg = ConsensusConfig {
+            rho: 0.7,
+            alpha: 1.5,
+            rounds,
+            trigger_d: Trigger::vanilla(1e-3),
+            trigger_z: Trigger::vanilla(1e-4),
+            reset_period: 17,
+            ..Default::default()
+        };
+        let (mut solver_b, _) = quad(n);
+        let mut sync = ConsensusAdmm::new(cfg, n, vec![0.0]);
+        let mut prox_b = IdentityProx;
+        let mut rng = Pcg64::seed(11);
+        for _ in 0..rounds {
+            sync.round(&mut solver_b, &mut prox_b, &mut rng);
+        }
+
+        assert_eq!(sim.leader_round, rounds as u64);
+        assert_eq!(sim.z[0], sync.z[0], "z diverged");
+        for i in 0..n {
+            assert_eq!(sim.agent_x(i)[0], sync.agent_x(i)[0], "x[{i}]");
+            assert_eq!(sim.agent_u(i)[0], sync.agent_u(i)[0], "u[{i}]");
+        }
+        assert_eq!(sim.total_events(), sync.total_events());
+        assert_eq!(sim.events_split(), sync.events_split());
+        assert_eq!(sim.bytes_split(), sync.bytes_split());
+        // everything happened at virtual time zero
+        assert_eq!(sim.now_ticks(), 0);
+    }
+
+    #[test]
+    fn ideal_scenario_converges_to_optimum() {
+        let n = 8;
+        let mut scn = Scenario::ideal("opt", n, 300);
+        scn.trigger_d = Trigger::vanilla(1e-5);
+        scn.trigger_z = Trigger::vanilla(1e-6);
+        let (mut solver, opt) = quad(n);
+        let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+        let mut prox = IdentityProx;
+        sim.run(&mut solver, &mut prox);
+        assert!(
+            (sim.z[0] - opt).abs() < 1e-4,
+            "z {} vs opt {opt}",
+            sim.z[0]
+        );
+        assert!(sim.mean_residual() < 1e-3);
+    }
+
+    #[test]
+    fn determinism_same_seed_identical_trace_and_iterates() {
+        // the acceptance contract: two runs of the same Scenario + seed
+        // produce identical final iterates, event counts, byte counts
+        // and event-trace hash
+        let run = || {
+            let scn = gnarly_scenario(77);
+            let (mut solver, _) = quad(scn.n_agents);
+            let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+            let mut prox = IdentityProx;
+            sim.run(&mut solver, &mut prox);
+            (
+                sim.z[0].to_bits(),
+                sim.trace_hash(),
+                sim.events_processed(),
+                sim.events_scheduled(),
+                sim.total_events(),
+                sim.bytes_split(),
+                sim.drops_split(),
+                sim.stale_discarded,
+                sim.now_ticks(),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same scenario + seed must be bit-identical");
+    }
+
+    #[test]
+    fn different_seed_changes_the_trace() {
+        let run = |seed| {
+            let scn = gnarly_scenario(seed);
+            let (mut solver, _) = quad(scn.n_agents);
+            let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+            let mut prox = IdentityProx;
+            sim.run(&mut solver, &mut prox);
+            sim.trace_hash()
+        };
+        assert_ne!(run(1), run(2));
+    }
+
+    #[test]
+    fn gnarly_scenario_completes_and_stays_finite() {
+        let scn = gnarly_scenario(5);
+        let rounds = scn.rounds as u64;
+        let (mut solver, opt) = quad(scn.n_agents);
+        let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+        let mut prox = IdentityProx;
+        sim.run(&mut solver, &mut prox);
+        assert_eq!(sim.leader_round, rounds);
+        assert!(sim.z[0].is_finite());
+        // lossy links + staleness bound + churn must all have fired
+        let (du, dd) = sim.drops_split();
+        assert!(du + dd > 0, "lossy links never dropped");
+        assert_eq!(sim.rejoin_resyncs, 1);
+        assert!(sim.now_ticks() > 0, "virtual time must advance");
+        // with resets every 10 rounds the error stays bounded
+        assert!(
+            (sim.z[0] - opt).abs() < 1.5,
+            "z {} too far from {opt}",
+            sim.z[0]
+        );
+    }
+
+    #[test]
+    fn churn_quorum_shrinks_and_recovers() {
+        // all-but-one agents leave; the quorum shrinks to the survivor
+        // and the run still completes all rounds
+        let mut scn = Scenario::ideal("churn", 4, 40);
+        scn.trigger_d = Trigger::vanilla(1e-4);
+        scn.trigger_z = Trigger::vanilla(1e-5);
+        scn.compute = ComputeModel {
+            time: LatencyModel::Fixed { secs: 0.001 },
+            straggler_frac: 0.0,
+            straggler_mult: 1.0,
+        };
+        scn.faults = vec![
+            FaultEvent { at_secs: 0.005, agent: 1, kind: FaultKind::Leave },
+            FaultEvent { at_secs: 0.005, agent: 2, kind: FaultKind::Leave },
+            FaultEvent { at_secs: 0.005, agent: 3, kind: FaultKind::Leave },
+            FaultEvent { at_secs: 0.020, agent: 1, kind: FaultKind::Join },
+            FaultEvent { at_secs: 0.025, agent: 2, kind: FaultKind::Join },
+        ];
+        let (mut solver, _) = quad(4);
+        let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+        let mut prox = IdentityProx;
+        sim.run(&mut solver, &mut prox);
+        assert_eq!(sim.leader_round, 40);
+        assert_eq!(sim.rejoin_resyncs, 2);
+        assert!(sim.agent_active(1));
+        assert!(sim.agent_active(2));
+        assert!(!sim.agent_active(3));
+        assert!(sim.z[0].is_finite());
+    }
+
+    #[test]
+    fn in_flight_downlink_across_rejoin_is_discarded() {
+        // a delta broadcast before an agent leaves must not land on the
+        // rejoined agent's freshly resynced estimate: without the epoch
+        // guard the stale delta permanently desynchronizes the link
+        let mut scn = Scenario::ideal("inflight", 4, 120);
+        scn.trigger_d = Trigger::vanilla(1e-6);
+        scn.trigger_z = Trigger::vanilla(1e-6);
+        scn.link_down = LinkModel {
+            latency: LatencyModel::Fixed { secs: 0.010 },
+            bandwidth: 0.0,
+            loss: LossModel::None,
+        };
+        scn.compute = ComputeModel {
+            time: LatencyModel::Fixed { secs: 0.005 },
+            straggler_frac: 0.0,
+            straggler_mult: 1.0,
+        };
+        // broadcasts land every ~15 ms; agent 1 leaves right after one
+        // with its delta still in flight and rejoins before delivery
+        scn.faults = vec![
+            FaultEvent { at_secs: 0.017, agent: 1, kind: FaultKind::Leave },
+            FaultEvent { at_secs: 0.019, agent: 1, kind: FaultKind::Join },
+        ];
+        let (mut solver, opt) = quad(4);
+        let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+        let mut prox = IdentityProx;
+        sim.run(&mut solver, &mut prox);
+        assert_eq!(sim.rejoin_resyncs, 1);
+        assert_eq!(sim.leader_round, 120);
+        // reliable links + no resets: only a stale in-flight delta could
+        // leave a permanent estimate offset here
+        assert!(
+            (sim.z[0] - opt).abs() < 1e-3,
+            "z {} vs opt {opt}: stale in-flight delta corrupted the link",
+            sim.z[0]
+        );
+        assert!(sim.mean_residual() < 1e-2);
+    }
+
+    #[test]
+    fn staleness_bound_discards_straggler_deltas() {
+        // one extreme straggler with a tight staleness bound: its deltas
+        // arrive many leader rounds late and must be discarded
+        let mut scn = Scenario::ideal("stale", 5, 60);
+        scn.trigger_d = Trigger::vanilla(1e-6);
+        scn.trigger_z = Trigger::vanilla(1e-6);
+        scn.compute = ComputeModel {
+            time: LatencyModel::Fixed { secs: 0.001 },
+            straggler_frac: 0.2, // agent 0
+            straggler_mult: 50.0,
+        };
+        scn.participation = 0.6; // quorum of 3: the fast agents carry it
+        scn.staleness = 2;
+        let (mut solver, _) = quad(5);
+        let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+        let mut prox = IdentityProx;
+        sim.run(&mut solver, &mut prox);
+        assert_eq!(sim.leader_round, 60);
+        assert!(
+            sim.stale_discarded > 0,
+            "straggler deltas should exceed the staleness bound"
+        );
+    }
+
+    #[test]
+    fn bandwidth_makes_virtual_time_advance() {
+        // finite bandwidth: each dense message takes dim*8 bytes / bw
+        // seconds, so the horizon's virtual time is bounded below
+        let mut scn = Scenario::ideal("bw", 3, 10);
+        scn.link_up.bandwidth = 1e6;
+        scn.link_down.bandwidth = 1e6;
+        let (mut solver, _) = quad(3);
+        let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+        let mut prox = IdentityProx;
+        sim.run(&mut solver, &mut prox);
+        assert_eq!(sim.leader_round, 10);
+        assert!(
+            sim.now_secs() > 0.0,
+            "serialization delay must advance the clock"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "star")]
+    fn non_star_topology_is_rejected() {
+        let mut scn = Scenario::ideal("ring", 4, 10);
+        scn.topology = TopologySpec::Ring;
+        let _ = AsyncConsensus::<f64>::new(scn, vec![0.0]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Deterministic discrete-event machinery: virtual clock, binary-heap
+//! event queue keyed by `(time, tie-break seq)`, and the FNV-1a trace
+//! hash that pins the determinism contract (same seed ⇒ bit-identical
+//! event trace — see DESIGN.md §9).
+//!
+//! Virtual time is integer microseconds.  Integer ticks keep the heap
+//! ordering total (no float comparisons anywhere in the scheduler) and
+//! make the trace hash exact across platforms.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in integer microseconds ("ticks").
+pub type SimTime = u64;
+
+/// Seconds → ticks, saturating at zero (the scheduler never goes back in
+/// time) and at `u64::MAX` for non-finite inputs.
+pub fn ticks(seconds: f64) -> SimTime {
+    if seconds.is_nan() || seconds <= 0.0 {
+        return 0;
+    }
+    (seconds * 1e6).round() as SimTime
+}
+
+/// Ticks → seconds (for reporting; never used in scheduling decisions).
+pub fn secs(t: SimTime) -> f64 {
+    t as f64 * 1e-6
+}
+
+/// One scheduled entry; ordered by `(time, seq)` only — the payload
+/// never participates in the ordering, so any event type works.
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse so the earliest (time, seq)
+        // pops first.  The monotone seq makes same-time events FIFO and
+        // the total order unique — pop order is deterministic no matter
+        // how the heap arranges ties internally.
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Deterministic, seeded discrete-event queue with a virtual clock.  No
+/// wall-clock, no OS threads: `pop` advances virtual time to the event's
+/// timestamp.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: SimTime,
+    /// Lifetime push/pop counters (for the trace summary and benches).
+    pub pushed: u64,
+    pub popped: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            pushed: 0,
+            popped: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `ev` at absolute time `at` (clamped to `now`: the
+    /// simulator never schedules into the past).
+    pub fn push(&mut self, at: SimTime, ev: E) {
+        let time = at.max(self.now);
+        self.heap.push(Entry { time, seq: self.seq, ev });
+        self.seq += 1;
+        self.pushed += 1;
+    }
+
+    /// Schedule `ev` at `now + delay`.
+    pub fn push_after(&mut self, delay: SimTime, ev: E) {
+        let at = self.now.saturating_add(delay);
+        self.push(at, ev);
+    }
+
+    /// Pop the earliest event, advancing the virtual clock to its
+    /// timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        self.popped += 1;
+        Some((e.time, e.ev))
+    }
+}
+
+/// Running FNV-1a (64-bit) hash over the event trace.  Two runs of the
+/// same scenario + seed must produce the same final value — the cheapest
+/// possible "bit-identical trace" witness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceHash(u64);
+
+impl Default for TraceHash {
+    fn default() -> Self {
+        TraceHash::new()
+    }
+}
+
+impl TraceHash {
+    pub fn new() -> Self {
+        TraceHash(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold one 64-bit word (little-endian bytes) into the hash.
+    pub fn mix(&mut self, word: u64) {
+        let mut h = self.0;
+        for b in word.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self.0 = h;
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.now(), 30);
+        assert_eq!(q.pushed, 3);
+        assert_eq!(q.popped, 3);
+    }
+
+    #[test]
+    fn same_time_is_fifo_by_seq() {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        for i in 0..100 {
+            q.push(7, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((7, i)));
+        }
+    }
+
+    #[test]
+    fn never_schedules_into_the_past() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.push(50, "later");
+        assert_eq!(q.pop(), Some((50, "later")));
+        q.push(10, "stale"); // clamped to now = 50
+        assert_eq!(q.pop(), Some((50, "stale")));
+        assert_eq!(q.now(), 50);
+    }
+
+    #[test]
+    fn push_after_is_relative_to_now() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.push(100, 1);
+        q.pop();
+        q.push_after(25, 2);
+        assert_eq!(q.pop(), Some((125, 2)));
+    }
+
+    #[test]
+    fn ticks_conversion() {
+        assert_eq!(ticks(0.0), 0);
+        assert_eq!(ticks(-3.0), 0);
+        assert_eq!(ticks(1.0), 1_000_000);
+        assert_eq!(ticks(0.010), 10_000);
+        assert_eq!(ticks(f64::NAN), 0);
+        assert_eq!(ticks(f64::INFINITY), u64::MAX);
+        assert!((secs(1_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..10 {
+            q.push(i * 10, i);
+        }
+        let mut last = 0;
+        while let Some((t, ev)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+            if ev < 5 {
+                q.push(t + 35, ev + 100);
+            }
+        }
+        assert_eq!(q.popped, 15);
+    }
+
+    #[test]
+    fn trace_hash_is_input_sensitive_and_reproducible() {
+        let mut a = TraceHash::new();
+        let mut b = TraceHash::new();
+        for w in [1u64, 2, 3, u64::MAX] {
+            a.mix(w);
+            b.mix(w);
+        }
+        assert_eq!(a.value(), b.value());
+        let mut c = TraceHash::new();
+        for w in [1u64, 2, 4, u64::MAX] {
+            c.mix(w);
+        }
+        assert_ne!(a.value(), c.value());
+        assert_ne!(a.value(), TraceHash::new().value());
+    }
+}

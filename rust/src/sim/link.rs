@@ -1,0 +1,393 @@
+//! Per-link delivery models for the discrete-event simulator.
+//!
+//! A [`Link`] generalizes [`crate::comm::DropChannel`] from "Bernoulli
+//! drop, instantaneous delivery" to the full cost model of a real
+//! network path:
+//!
+//! * **latency** — a seeded delay distribution ([`LatencyModel`]:
+//!   fixed / uniform / lognormal, all via the crate's `Pcg64`);
+//! * **bandwidth** — bytes/second that convert a
+//!   [`crate::wire::WireMessage`]'s exact encoded size into
+//!   serialization time (`0` = infinite);
+//! * **loss** — the shared [`crate::comm::LossModel`] (Bernoulli or
+//!   Gilbert–Elliott burst drops).
+//!
+//! Byte accounting reuses [`crate::comm::ChannelStats`], so
+//! [`crate::wire::WireStats`] snapshots work identically on simulated
+//! links.
+
+use crate::comm::{ChannelStats, LossModel};
+use crate::rng::{Pcg64, Rng};
+
+use super::event::{ticks, SimTime};
+
+/// A seeded delay distribution in seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyModel {
+    /// Constant delay; `Fixed { secs: 0.0 }` models an ideal link and
+    /// draws nothing from the RNG (the sync-equivalence contract).
+    Fixed { secs: f64 },
+    /// Uniform in `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// `exp(N(mu, sigma²))` — the heavy-tailed WAN latency shape.
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+impl LatencyModel {
+    pub fn zero() -> Self {
+        LatencyModel::Fixed { secs: 0.0 }
+    }
+
+    /// LogNormal parameterized by its median in seconds.
+    pub fn lognormal_median(median_secs: f64, sigma: f64) -> Self {
+        LatencyModel::LogNormal { mu: median_secs.max(1e-12).ln(), sigma }
+    }
+
+    /// Sample one delay in seconds.  `Fixed` draws nothing.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match *self {
+            LatencyModel::Fixed { secs } => secs,
+            LatencyModel::Uniform { lo, hi } => rng.range(lo, hi),
+            LatencyModel::LogNormal { mu, sigma } => {
+                (mu + sigma * rng.normal()).exp()
+            }
+        }
+    }
+
+    /// Parse `zero` | `fixed:S` | `uniform:LO:HI` | `lognormal:MU:SIGMA`.
+    /// Durations must be >= 0 and `lo <= hi` — a negative or inverted
+    /// range must not silently degenerate into an ideal link.
+    pub fn parse(s: &str) -> Result<LatencyModel, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize, what: &str| -> Result<f64, String> {
+            parts
+                .get(i)
+                .ok_or_else(|| format!("{s:?}: missing {what}"))?
+                .parse::<f64>()
+                .map_err(|_| format!("{s:?}: bad {what}"))
+        };
+        let nonneg = |i: usize, what: &str| -> Result<f64, String> {
+            let v = num(i, what)?;
+            if v.is_nan() || v < 0.0 {
+                return Err(format!("{s:?}: {what} must be >= 0"));
+            }
+            Ok(v)
+        };
+        match parts[0] {
+            "zero" => Ok(LatencyModel::zero()),
+            "fixed" => {
+                Ok(LatencyModel::Fixed { secs: nonneg(1, "seconds")? })
+            }
+            "uniform" => {
+                let lo = nonneg(1, "lo")?;
+                let hi = nonneg(2, "hi")?;
+                if hi < lo {
+                    return Err(format!("{s:?}: hi {hi} < lo {lo}"));
+                }
+                Ok(LatencyModel::Uniform { lo, hi })
+            }
+            "lognormal" => Ok(LatencyModel::LogNormal {
+                mu: num(1, "mu")?, // log-space: any sign is valid
+                sigma: nonneg(2, "sigma")?,
+            }),
+            other => Err(format!(
+                "unknown latency model {other:?} (expected zero | fixed:S \
+                 | uniform:LO:HI | lognormal:MU:SIGMA)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            LatencyModel::Fixed { secs } => format!("fixed:{secs}"),
+            LatencyModel::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+            LatencyModel::LogNormal { mu, sigma } => {
+                format!("lognormal:{mu}:{sigma}")
+            }
+        }
+    }
+}
+
+/// Declarative per-link cost model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    pub latency: LatencyModel,
+    /// Bytes per second; `0.0` = infinite (no serialization delay).
+    pub bandwidth: f64,
+    pub loss: LossModel,
+}
+
+impl LinkModel {
+    /// Zero latency, infinite bandwidth, no loss — the model under which
+    /// the sim reproduces the synchronous engine bit-for-bit.
+    pub fn ideal() -> Self {
+        LinkModel {
+            latency: LatencyModel::zero(),
+            bandwidth: 0.0,
+            loss: LossModel::None,
+        }
+    }
+
+    /// Parse a scenario-JSON object:
+    /// `{"latency": "fixed:0.01", "bandwidth": 1e6, "drop": "bernoulli:0.1"}`
+    /// (all fields optional, defaulting to [`Self::ideal`]; unknown keys
+    /// are fatal so a typo cannot silently run an ideal link).
+    pub fn from_json(j: &crate::jsonio::Json) -> Result<LinkModel, String> {
+        use crate::jsonio::Json;
+        if let Some(obj) = j.as_obj() {
+            for key in obj.keys() {
+                if !["latency", "bandwidth", "drop"]
+                    .contains(&key.as_str())
+                {
+                    return Err(format!(
+                        "unknown link key {key:?} (known: latency, \
+                         bandwidth, drop)"
+                    ));
+                }
+            }
+        }
+        let mut m = LinkModel::ideal();
+        if let Some(s) = j.get("latency").and_then(Json::as_str) {
+            m.latency = LatencyModel::parse(s)?;
+        }
+        if let Some(b) = j.get("bandwidth").and_then(Json::as_f64) {
+            if b < 0.0 {
+                return Err(format!("bandwidth must be >= 0, got {b}"));
+            }
+            m.bandwidth = b;
+        }
+        if let Some(s) = j.get("drop").and_then(Json::as_str) {
+            m.loss = LossModel::parse(s)?;
+        }
+        Ok(m)
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "lat={} bw={} loss={}",
+            self.latency.label(),
+            if self.bandwidth > 0.0 {
+                format!("{}B/s", self.bandwidth)
+            } else {
+                "inf".into()
+            },
+            self.loss.label()
+        )
+    }
+}
+
+/// Live per-link state: the model plus loss-chain state and the byte
+/// counters shared with the synchronous engines.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub model: LinkModel,
+    /// Gilbert–Elliott chain state.
+    bad: bool,
+    /// Bytes of a packet dropped at the current round's transmit
+    /// opportunity (cleared by [`Self::mark_round`]) — the same
+    /// reset-supersession accounting rule as
+    /// [`crate::comm::DropChannel::charge_sync`].
+    last_drop: Option<u64>,
+    pub stats: ChannelStats,
+}
+
+impl Link {
+    pub fn new(model: LinkModel) -> Self {
+        Link {
+            model,
+            bad: false,
+            last_drop: None,
+            stats: ChannelStats::default(),
+        }
+    }
+
+    pub fn ideal() -> Self {
+        Link::new(LinkModel::ideal())
+    }
+
+    /// Put `bytes` on the wire: charge the counters, sample the loss
+    /// process and the delivery delay.  `Some(delay)` = the payload
+    /// arrives after `delay` ticks; `None` = lost in flight (the sender
+    /// does not learn — the paper's drop semantics).
+    pub fn transmit(&mut self, bytes: u64, rng: &mut Pcg64) -> Option<SimTime> {
+        self.stats.sent += 1;
+        self.stats.sent_bytes += bytes;
+        if self.model.loss.sample(&mut self.bad, rng) {
+            self.stats.dropped += 1;
+            self.stats.dropped_bytes += bytes;
+            self.last_drop = Some(bytes);
+            return None;
+        }
+        let mut secs = self.model.latency.sample(rng);
+        if self.model.bandwidth > 0.0 {
+            secs += bytes as f64 / self.model.bandwidth;
+        }
+        Some(ticks(secs))
+    }
+
+    /// Open the link's next transmit opportunity (the engine calls this
+    /// before each trigger offer): forget any earlier drop so
+    /// [`Self::charge_sync`] only supersedes a loss from the link's
+    /// *most recent* opportunity — in the async world a link's "round"
+    /// is its own offer cadence, not the leader's.
+    pub fn mark_round(&mut self) {
+        self.last_drop = None;
+    }
+
+    /// Control-plane delay (go-ticks): pure propagation latency, never
+    /// dropped, no bytes charged (a tick is a few bytes of framing the
+    /// accounting ignores by design — see DESIGN.md §9).
+    pub fn control_delay(&self, rng: &mut Pcg64) -> SimTime {
+        ticks(self.model.latency.sample(rng))
+    }
+
+    /// Reliable out-of-band synchronization transfer (periodic resets,
+    /// rejoin resyncs): charged as traffic, never dropped.  A packet
+    /// that triggered but dropped in the same round is superseded by
+    /// the sync — the round bills exactly one dense transfer, never a
+    /// lost delta *plus* a sync (DESIGN.md §9, same rule as
+    /// `DropChannel::charge_sync`).
+    pub fn charge_sync(&mut self, bytes: u64) {
+        if let Some(b) = self.last_drop.take() {
+            self.stats.sent -= 1;
+            self.stats.sent_bytes -= b;
+            self.stats.dropped -= 1;
+            self.stats.dropped_bytes -= b;
+        }
+        self.stats.record_reliable(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_link_is_instant_and_lossless_without_rng_draws() {
+        let mut link = Link::ideal();
+        let mut rng = Pcg64::seed(1);
+        let before = rng.clone().next_u64();
+        for _ in 0..100 {
+            assert_eq!(link.transmit(1000, &mut rng), Some(0));
+        }
+        // the RNG stream must be untouched (sync-equivalence contract)
+        assert_eq!(rng.next_u64(), before);
+        assert_eq!(link.stats.sent, 100);
+        assert_eq!(link.stats.sent_bytes, 100_000);
+        assert_eq!(link.stats.dropped, 0);
+    }
+
+    #[test]
+    fn bandwidth_converts_bytes_into_time() {
+        // 1 MB over 1 MB/s = 1 s = 1e6 ticks, plus 10 ms fixed latency
+        let mut link = Link::new(LinkModel {
+            latency: LatencyModel::Fixed { secs: 0.010 },
+            bandwidth: 1e6,
+            loss: LossModel::None,
+        });
+        let mut rng = Pcg64::seed(2);
+        assert_eq!(link.transmit(1_000_000, &mut rng), Some(1_010_000));
+        // a small packet is latency-dominated
+        assert_eq!(link.transmit(100, &mut rng), Some(10_100));
+    }
+
+    #[test]
+    fn latency_models_sample_in_range() {
+        let mut rng = Pcg64::seed(3);
+        let u = LatencyModel::Uniform { lo: 0.5, hi: 1.5 };
+        for _ in 0..1000 {
+            let s = u.sample(&mut rng);
+            assert!((0.5..1.5).contains(&s), "uniform sample {s}");
+        }
+        let ln = LatencyModel::lognormal_median(0.020, 0.5);
+        let mut med_count = 0;
+        for _ in 0..2000 {
+            let s = ln.sample(&mut rng);
+            assert!(s > 0.0);
+            if s < 0.020 {
+                med_count += 1;
+            }
+        }
+        // median check: about half the samples below the median
+        let frac = med_count as f64 / 2000.0;
+        assert!((frac - 0.5).abs() < 0.05, "median fraction {frac}");
+    }
+
+    #[test]
+    fn lossy_link_drops_and_charges() {
+        let mut link = Link::new(LinkModel {
+            latency: LatencyModel::zero(),
+            bandwidth: 0.0,
+            loss: LossModel::Bernoulli { p: 0.5 },
+        });
+        let mut rng = Pcg64::seed(4);
+        for _ in 0..10_000 {
+            link.transmit(10, &mut rng);
+        }
+        let frac = link.stats.drop_fraction();
+        assert!((frac - 0.5).abs() < 0.02, "drop fraction {frac}");
+        assert_eq!(
+            link.stats.delivered_bytes(),
+            link.stats.delivered() * 10
+        );
+    }
+
+    #[test]
+    fn charge_sync_supersedes_same_round_drop() {
+        let mut link = Link::new(LinkModel {
+            latency: LatencyModel::zero(),
+            bandwidth: 0.0,
+            loss: LossModel::Bernoulli { p: 1.0 },
+        });
+        let mut rng = Pcg64::seed(6);
+        link.mark_round();
+        assert_eq!(link.transmit(100, &mut rng), None);
+        link.charge_sync(800);
+        // exactly one (dense sync) message on the books
+        assert_eq!(link.stats.sent, 1);
+        assert_eq!(link.stats.sent_bytes, 800);
+        assert_eq!(link.stats.dropped, 0);
+        // an earlier-round drop is real traffic and stays charged
+        link.mark_round();
+        assert_eq!(link.transmit(100, &mut rng), None);
+        link.mark_round();
+        link.charge_sync(800);
+        assert_eq!(link.stats.sent, 3);
+        assert_eq!(link.stats.sent_bytes, 1700);
+        assert_eq!(link.stats.dropped, 1);
+    }
+
+    #[test]
+    fn latency_parse_roundtrip() {
+        for s in ["zero", "fixed:0.01", "uniform:0.001:0.02", "lognormal:-4:0.5"]
+        {
+            let m = LatencyModel::parse(s).unwrap();
+            assert_eq!(LatencyModel::parse(&m.label()).unwrap(), m);
+        }
+        assert!(LatencyModel::parse("uniform:1").is_err());
+        assert!(LatencyModel::parse("warp").is_err());
+        // invalid durations must not degenerate into an ideal link
+        assert!(LatencyModel::parse("fixed:-0.01").is_err());
+        assert!(LatencyModel::parse("uniform:0.02:0.005").is_err());
+        assert!(LatencyModel::parse("lognormal:-4:-1").is_err());
+    }
+
+    #[test]
+    fn link_model_from_json() {
+        let j = crate::jsonio::Json::parse(
+            r#"{"latency": "fixed:0.01", "bandwidth": 1000000.0,
+                "drop": "ge:0.02:0.2:0:1"}"#,
+        )
+        .unwrap();
+        let m = LinkModel::from_json(&j).unwrap();
+        assert_eq!(m.latency, LatencyModel::Fixed { secs: 0.01 });
+        assert_eq!(m.bandwidth, 1e6);
+        assert!(matches!(m.loss, LossModel::GilbertElliott { .. }));
+        // empty object = ideal
+        let ideal = LinkModel::from_json(
+            &crate::jsonio::Json::parse("{}").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(ideal, LinkModel::ideal());
+    }
+}

@@ -1,0 +1,41 @@
+//! Deterministic discrete-event network simulator (DESIGN.md §9).
+//!
+//! The synchronous engines in [`crate::admm`] model exactly one failure
+//! mode — i.i.d. packet drops inside a round barrier.  This subsystem
+//! removes the barrier and makes the network a first-class object:
+//!
+//! * [`event`] — virtual clock + binary-heap event queue keyed by
+//!   `(time, tie-break seq)`, plus the FNV-1a trace hash that witnesses
+//!   the determinism contract (same `Scenario` + seed ⇒ bit-identical
+//!   event trace, iterates and counters).
+//! * [`link`] — per-link delivery models: seeded latency distributions,
+//!   bandwidth that converts [`crate::wire::WireMessage`] bytes into
+//!   serialization time, and Bernoulli / Gilbert–Elliott loss via the
+//!   shared [`crate::comm::LossModel`].
+//! * [`scenario`] — the declarative [`Scenario`] (topology, links,
+//!   compute/straggler model, quorum, staleness, resets, fault
+//!   schedule), parseable from JSON and from named CLI builtins.
+//! * [`engine`] — [`AsyncConsensus`]: the asynchronous variant of
+//!   Alg. 1 (delta-as-they-arrive aggregation with a participation
+//!   quorum and a staleness bound, agent churn with resync through the
+//!   reset path).  Under an ideal scenario it reproduces the
+//!   synchronous [`crate::admm::ConsensusAdmm`] bit-for-bit.
+//! * [`sweep`] — the multi-threaded scenario × seed sweep runner used
+//!   by [`crate::experiments::faults`].
+//!
+//! No wall-clock time and no OS threads inside a simulation: a run is a
+//! pure function of `(Scenario, seed)`.
+
+pub mod engine;
+pub mod event;
+pub mod link;
+pub mod scenario;
+pub mod sweep;
+
+pub use engine::AsyncConsensus;
+pub use event::{secs, ticks, EventQueue, SimTime, TraceHash};
+pub use link::{LatencyModel, Link, LinkModel};
+pub use scenario::{
+    ComputeModel, FaultEvent, FaultKind, Scenario, TopologySpec,
+};
+pub use sweep::{default_workers, run_parallel};

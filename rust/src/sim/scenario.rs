@@ -1,0 +1,642 @@
+//! `Scenario` — the declarative description of one simulated run: who
+//! talks (topology), over what (per-direction link models), how agents
+//! compute (stragglers), how the leader aggregates (quorum, staleness),
+//! and what goes wrong when (the fault schedule).
+//!
+//! Scenarios parse from JSON (`deluxe sim --scenario path.json`) with
+//! the same colon syntaxes the CLI flags use, and a few named builtins
+//! cover the common cases.  Same `Scenario` + seed ⇒ bit-identical run
+//! (the determinism contract, DESIGN.md §9).
+
+use std::path::Path;
+
+use crate::comm::{LossModel, Trigger};
+use crate::jsonio::{read_json, Json};
+use crate::rng::{Pcg64, Rng};
+use crate::topology::Graph;
+use crate::wire::CompressorCfg;
+
+use super::link::{LatencyModel, LinkModel};
+
+/// Agent churn: a scheduled leave or (re)join.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    Leave,
+    Join,
+}
+
+/// One entry of the fault schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time of the fault, in seconds.
+    pub at_secs: f64,
+    pub agent: usize,
+    pub kind: FaultKind,
+}
+
+/// Per-agent local-compute time model.  The first
+/// `ceil(straggler_frac * n)` agents are stragglers whose compute time
+/// is multiplied by `straggler_mult` (deterministic membership keeps the
+/// scenario self-describing).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeModel {
+    pub time: LatencyModel,
+    pub straggler_frac: f64,
+    pub straggler_mult: f64,
+}
+
+impl ComputeModel {
+    /// Zero-time computation (the sync-equivalence configuration).
+    pub fn instant() -> Self {
+        ComputeModel {
+            time: LatencyModel::zero(),
+            straggler_frac: 0.0,
+            straggler_mult: 1.0,
+        }
+    }
+
+    /// Sample one local-solve duration in seconds.
+    pub fn sample(&self, straggler: bool, rng: &mut Pcg64) -> f64 {
+        let base = self.time.sample(rng);
+        if straggler {
+            base * self.straggler_mult
+        } else {
+            base
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ComputeModel, String> {
+        reject_unknown_keys(
+            j,
+            &["time", "straggler_frac", "straggler_mult"],
+            "compute",
+        )?;
+        let mut m = ComputeModel::instant();
+        if let Some(s) = j.get("time").and_then(Json::as_str) {
+            m.time = LatencyModel::parse(s)?;
+        }
+        if let Some(v) = j.get("straggler_frac").and_then(Json::as_f64) {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("straggler_frac {v} not in [0,1]"));
+            }
+            m.straggler_frac = v;
+        }
+        if let Some(v) = j.get("straggler_mult").and_then(Json::as_f64) {
+            if v < 1.0 {
+                return Err(format!("straggler_mult {v} must be >= 1"));
+            }
+            m.straggler_mult = v;
+        }
+        Ok(m)
+    }
+}
+
+/// A typo in a scenario key silently running the ideal default would
+/// corrupt a whole sweep (the same reasoning that makes a malformed
+/// `--compressor` fatal), so every object is checked against its schema.
+fn reject_unknown_keys(
+    j: &Json,
+    known: &[&str],
+    what: &str,
+) -> Result<(), String> {
+    if let Some(obj) = j.as_obj() {
+        for key in obj.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(format!(
+                    "unknown {what} key {key:?} (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Named communication topology.  The async engine models the paper's
+/// leader/agent (star) pattern; the other shapes drive the decentralized
+/// [`crate::admm::GraphAdmm`] engine and are validated here so a
+/// scenario can never name a disconnected network.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TopologySpec {
+    Star,
+    Complete,
+    Ring,
+    Grid2d { rows: usize, cols: usize },
+    /// `G(n, p)` resampled until connected.
+    ErdosRenyi { p: f64 },
+}
+
+impl TopologySpec {
+    /// Parse `star` | `complete` | `ring` | `grid2d:R:C` | `er:P`.
+    pub fn parse(s: &str) -> Result<TopologySpec, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "star" => Ok(TopologySpec::Star),
+            "complete" => Ok(TopologySpec::Complete),
+            "ring" => Ok(TopologySpec::Ring),
+            "grid2d" => {
+                let dim = |i: usize| -> Result<usize, String> {
+                    parts
+                        .get(i)
+                        .ok_or_else(|| format!("{s:?}: missing extent"))?
+                        .parse::<usize>()
+                        .map_err(|_| format!("{s:?}: bad extent"))
+                };
+                Ok(TopologySpec::Grid2d { rows: dim(1)?, cols: dim(2)? })
+            }
+            "er" => {
+                let p: f64 = parts
+                    .get(1)
+                    .ok_or_else(|| format!("{s:?}: missing p"))?
+                    .parse()
+                    .map_err(|_| format!("{s:?}: bad p"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("{s:?}: p must be in [0,1]"));
+                }
+                Ok(TopologySpec::ErdosRenyi { p })
+            }
+            other => Err(format!(
+                "unknown topology {other:?} (expected star | complete | \
+                 ring | grid2d:R:C | er:P)"
+            )),
+        }
+    }
+
+    /// Materialize a connected graph on `n` vertices (for the star, the
+    /// hub is vertex 0 = the leader).
+    pub fn build(&self, n: usize, rng: &mut impl Rng) -> Graph {
+        match *self {
+            TopologySpec::Star => Graph::star(n),
+            TopologySpec::Complete => Graph::complete(n),
+            TopologySpec::Ring => Graph::ring(n),
+            TopologySpec::Grid2d { rows, cols } => Graph::grid2d(rows, cols),
+            TopologySpec::ErdosRenyi { p } => {
+                Graph::erdos_renyi_connected(n, p, rng)
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            TopologySpec::Star => "star".into(),
+            TopologySpec::Complete => "complete".into(),
+            TopologySpec::Ring => "ring".into(),
+            TopologySpec::Grid2d { rows, cols } => {
+                format!("grid2d:{rows}:{cols}")
+            }
+            TopologySpec::ErdosRenyi { p } => format!("er:{p}"),
+        }
+    }
+}
+
+/// Full description of one simulated run.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub n_agents: usize,
+    /// Leader z-updates to simulate (the virtual-time horizon follows
+    /// from the link/compute models).
+    pub rounds: usize,
+    pub seed: u64,
+    pub rho: f64,
+    pub alpha: f64,
+    pub topology: TopologySpec,
+    pub trigger_d: Trigger,
+    pub trigger_z: Trigger,
+    pub compressor: CompressorCfg,
+    pub link_up: LinkModel,
+    pub link_down: LinkModel,
+    pub compute: ComputeModel,
+    /// Quorum: fraction of *active* agents whose deltas must arrive
+    /// before the leader updates `z` (1.0 = full participation).
+    pub participation: f64,
+    /// Max leader rounds an uplink delta may lag before the leader
+    /// discards it (`u64::MAX` = unbounded).  A discarded delta acts
+    /// like a packet drop: the periodic resets absorb the drift.
+    pub staleness: u64,
+    /// Reset period in leader rounds; 0 disables.
+    pub reset_period: usize,
+    pub faults: Vec<FaultEvent>,
+}
+
+impl Scenario {
+    /// The sync-equivalent configuration: ideal links, instant compute,
+    /// full participation — the sim reproduces `ConsensusAdmm`
+    /// bit-for-bit under this scenario.
+    pub fn ideal(name: &str, n_agents: usize, rounds: usize) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            n_agents,
+            rounds,
+            seed: 0,
+            rho: 1.0,
+            alpha: 1.0,
+            topology: TopologySpec::Star,
+            trigger_d: Trigger::Always,
+            trigger_z: Trigger::Always,
+            compressor: CompressorCfg::Identity,
+            link_up: LinkModel::ideal(),
+            link_down: LinkModel::ideal(),
+            compute: ComputeModel::instant(),
+            participation: 1.0,
+            staleness: u64::MAX,
+            reset_period: 0,
+            faults: Vec::new(),
+        }
+    }
+
+    /// Named builtin scenarios for the CLI (`deluxe sim --scenario NAME`).
+    pub fn builtin(
+        name: &str,
+        n_agents: usize,
+        rounds: usize,
+        seed: u64,
+    ) -> Option<Scenario> {
+        let mut s = Scenario::ideal(name, n_agents, rounds);
+        s.seed = seed;
+        s.trigger_d = Trigger::vanilla(1e-3);
+        s.trigger_z = Trigger::vanilla(1e-4);
+        match name {
+            "ideal" => {}
+            "lossy" => {
+                // bursty WAN: ~10 ms median latency, Gilbert–Elliott
+                // bursts, periodic resets to absorb the drift
+                let link = LinkModel {
+                    latency: LatencyModel::lognormal_median(0.010, 0.5),
+                    bandwidth: 10e6,
+                    loss: LossModel::GilbertElliott {
+                        p_gb: 0.05,
+                        p_bg: 0.3,
+                        loss_good: 0.01,
+                        loss_bad: 0.8,
+                    },
+                };
+                s.link_up = link;
+                s.link_down = link;
+                s.reset_period = 10;
+            }
+            "stragglers" => {
+                let link = LinkModel {
+                    latency: LatencyModel::Uniform { lo: 0.005, hi: 0.015 },
+                    bandwidth: 0.0,
+                    loss: LossModel::Bernoulli { p: 0.05 },
+                };
+                s.link_up = link;
+                s.link_down = link;
+                s.compute = ComputeModel {
+                    time: LatencyModel::Uniform { lo: 0.005, hi: 0.020 },
+                    straggler_frac: 0.25,
+                    straggler_mult: 10.0,
+                };
+                s.participation = 0.5;
+                s.staleness = 4;
+                s.reset_period = 20;
+            }
+            "churn" => {
+                let link = LinkModel {
+                    latency: LatencyModel::Uniform { lo: 0.005, hi: 0.015 },
+                    bandwidth: 0.0,
+                    loss: LossModel::Bernoulli { p: 0.1 },
+                };
+                s.link_up = link;
+                s.link_down = link;
+                s.compute = ComputeModel {
+                    time: LatencyModel::Fixed { secs: 0.010 },
+                    straggler_frac: 0.0,
+                    straggler_mult: 1.0,
+                };
+                s.participation = 0.75;
+                s.staleness = 8;
+                s.reset_period = 10;
+                // a round-trip is ~40 ms; park two agents for the middle
+                // half of the horizon
+                let horizon = rounds as f64 * 0.040;
+                s.faults = vec![
+                    FaultEvent {
+                        at_secs: 0.25 * horizon,
+                        agent: 0,
+                        kind: FaultKind::Leave,
+                    },
+                    FaultEvent {
+                        at_secs: 0.30 * horizon,
+                        agent: 1,
+                        kind: FaultKind::Leave,
+                    },
+                    FaultEvent {
+                        at_secs: 0.60 * horizon,
+                        agent: 0,
+                        kind: FaultKind::Join,
+                    },
+                    FaultEvent {
+                        at_secs: 0.75 * horizon,
+                        agent: 1,
+                        kind: FaultKind::Join,
+                    },
+                ];
+            }
+            _ => return None,
+        }
+        Some(s)
+    }
+
+    /// Parse a scenario from a JSON object.  Missing keys keep the
+    /// [`Self::ideal`] defaults; unknown keys are fatal (a typoed field
+    /// silently running the ideal default would corrupt a sweep).
+    pub fn from_json(j: &Json) -> Result<Scenario, String> {
+        reject_unknown_keys(
+            j,
+            &[
+                "name",
+                "agents",
+                "rounds",
+                "seed",
+                "rho",
+                "alpha",
+                "topology",
+                "trigger_d",
+                "trigger_z",
+                "compressor",
+                "link_up",
+                "link_down",
+                "compute",
+                "participation",
+                "staleness",
+                "reset_period",
+                "faults",
+            ],
+            "scenario",
+        )?;
+        let mut s = Scenario::ideal("scenario", 16, 100);
+        if let Some(v) = j.get("name").and_then(Json::as_str) {
+            s.name = v.to_string();
+        }
+        if let Some(v) = j.get("agents").and_then(Json::as_usize) {
+            s.n_agents = v;
+        }
+        if let Some(v) = j.get("rounds").and_then(Json::as_usize) {
+            s.rounds = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            s.seed = v as u64;
+        }
+        if let Some(v) = j.get("rho").and_then(Json::as_f64) {
+            s.rho = v;
+        }
+        if let Some(v) = j.get("alpha").and_then(Json::as_f64) {
+            s.alpha = v;
+        }
+        if let Some(v) = j.get("topology").and_then(Json::as_str) {
+            s.topology = TopologySpec::parse(v)?;
+        }
+        if let Some(v) = j.get("trigger_d").and_then(Json::as_str) {
+            s.trigger_d = Trigger::parse(v)?;
+        }
+        if let Some(v) = j.get("trigger_z").and_then(Json::as_str) {
+            s.trigger_z = Trigger::parse(v)?;
+        }
+        if let Some(v) = j.get("compressor").and_then(Json::as_str) {
+            s.compressor = CompressorCfg::parse(v)?;
+        }
+        if let Some(v) = j.get("link_up") {
+            s.link_up = LinkModel::from_json(v)?;
+        }
+        if let Some(v) = j.get("link_down") {
+            s.link_down = LinkModel::from_json(v)?;
+        }
+        if let Some(v) = j.get("compute") {
+            s.compute = ComputeModel::from_json(v)?;
+        }
+        if let Some(v) = j.get("participation").and_then(Json::as_f64) {
+            s.participation = v;
+        }
+        if let Some(v) = j.get("staleness").and_then(Json::as_f64) {
+            s.staleness = v as u64;
+        }
+        if let Some(v) = j.get("reset_period").and_then(Json::as_usize) {
+            s.reset_period = v;
+        }
+        if let Some(arr) = j.get("faults").and_then(Json::as_arr) {
+            s.faults.clear();
+            for f in arr {
+                let at_secs = f
+                    .get("at")
+                    .and_then(Json::as_f64)
+                    .ok_or("fault: missing \"at\" (seconds)")?;
+                let agent = f
+                    .get("agent")
+                    .and_then(Json::as_usize)
+                    .ok_or("fault: missing \"agent\"")?;
+                let kind = match f.get("kind").and_then(Json::as_str) {
+                    Some("leave") => FaultKind::Leave,
+                    Some("join") => FaultKind::Join,
+                    other => {
+                        return Err(format!(
+                            "fault: kind must be \"leave\" or \"join\", \
+                             got {other:?}"
+                        ))
+                    }
+                };
+                s.faults.push(FaultEvent { at_secs, agent, kind });
+            }
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Load a scenario JSON file.
+    pub fn load(path: &Path) -> anyhow::Result<Scenario> {
+        let j = read_json(path)?;
+        Scenario::from_json(&j).map_err(|e| {
+            anyhow::anyhow!("scenario {}: {e}", path.display())
+        })
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_agents == 0 {
+            return Err("need at least one agent".into());
+        }
+        if self.rounds == 0 {
+            return Err("need at least one round".into());
+        }
+        if !(self.participation > 0.0 && self.participation <= 1.0) {
+            return Err(format!(
+                "participation {} not in (0, 1]",
+                self.participation
+            ));
+        }
+        if !(self.alpha > 0.0 && self.alpha < 2.0) {
+            return Err(format!("alpha {} not in (0, 2)", self.alpha));
+        }
+        if self.rho <= 0.0 {
+            return Err(format!("rho {} must be positive", self.rho));
+        }
+        if !(0.0..=1.0).contains(&self.compute.straggler_frac) {
+            return Err("straggler_frac not in [0,1]".into());
+        }
+        for f in &self.faults {
+            if f.agent >= self.n_agents {
+                return Err(format!(
+                    "fault agent {} out of range (n = {})",
+                    f.agent, self.n_agents
+                ));
+            }
+            if f.at_secs.is_nan() || f.at_secs < 0.0 {
+                return Err(format!("fault time {} invalid", f.at_secs));
+            }
+        }
+        Ok(())
+    }
+
+    /// One-line summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} agents over {}, {} rounds, trigger d={} z={}, comp={}, \
+             up[{}], down[{}], quorum {:.0}%, staleness {}, reset {}, \
+             {} faults",
+            self.name,
+            self.n_agents,
+            self.topology.label(),
+            self.rounds,
+            self.trigger_d.label(),
+            self.trigger_z.label(),
+            self.compressor.label(),
+            self.link_up.label(),
+            self.link_down.label(),
+            self.participation * 100.0,
+            if self.staleness == u64::MAX {
+                "inf".to_string()
+            } else {
+                self.staleness.to_string()
+            },
+            self.reset_period,
+            self.faults.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_scenario_validates() {
+        let s = Scenario::ideal("t", 8, 50);
+        assert!(s.validate().is_ok());
+        assert_eq!(s.link_up, LinkModel::ideal());
+        assert_eq!(s.compute, ComputeModel::instant());
+    }
+
+    #[test]
+    fn builtins_exist_and_validate() {
+        for name in ["ideal", "lossy", "stragglers", "churn"] {
+            let s = Scenario::builtin(name, 16, 100, 7)
+                .unwrap_or_else(|| panic!("builtin {name}"));
+            s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(s.seed, 7);
+        }
+        assert!(Scenario::builtin("nope", 4, 10, 0).is_none());
+    }
+
+    #[test]
+    fn from_json_full_roundtrip() {
+        let j = Json::parse(
+            r#"{
+              "name": "wan",
+              "agents": 32,
+              "rounds": 200,
+              "seed": 3,
+              "rho": 0.5,
+              "alpha": 1.5,
+              "topology": "star",
+              "trigger_d": "vanilla:0.001",
+              "trigger_z": "randomized:0.0001:0.05",
+              "compressor": "topk:0.05",
+              "link_up": {"latency": "uniform:0.005:0.02",
+                          "bandwidth": 1000000.0,
+                          "drop": "bernoulli:0.1"},
+              "link_down": {"latency": "fixed:0.002"},
+              "compute": {"time": "fixed:0.01",
+                          "straggler_frac": 0.25,
+                          "straggler_mult": 8.0},
+              "participation": 0.5,
+              "staleness": 4,
+              "reset_period": 20,
+              "faults": [{"at": 1.5, "agent": 3, "kind": "leave"},
+                         {"at": 3.0, "agent": 3, "kind": "join"}]
+            }"#,
+        )
+        .unwrap();
+        let s = Scenario::from_json(&j).unwrap();
+        assert_eq!(s.name, "wan");
+        assert_eq!(s.n_agents, 32);
+        assert_eq!(s.rounds, 200);
+        assert_eq!(s.seed, 3);
+        assert_eq!(s.alpha, 1.5);
+        assert_eq!(s.trigger_d, Trigger::vanilla(0.001));
+        assert_eq!(s.compressor, CompressorCfg::TopK { frac: 0.05 });
+        assert_eq!(s.link_up.bandwidth, 1e6);
+        assert_eq!(
+            s.link_down.latency,
+            LatencyModel::Fixed { secs: 0.002 }
+        );
+        assert_eq!(s.compute.straggler_mult, 8.0);
+        assert_eq!(s.participation, 0.5);
+        assert_eq!(s.staleness, 4);
+        assert_eq!(s.faults.len(), 2);
+        assert_eq!(s.faults[0].kind, FaultKind::Leave);
+        assert_eq!(s.faults[1].kind, FaultKind::Join);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_configs() {
+        for bad in [
+            r#"{"agents": 0}"#,
+            r#"{"agents": 4, "participation": 0.0}"#,
+            r#"{"agents": 4, "alpha": 2.5}"#,
+            r#"{"agents": 4, "trigger_d": "warp:9"}"#,
+            r#"{"agents": 4, "faults": [{"at": 1, "agent": 9,
+                                         "kind": "leave"}]}"#,
+            r#"{"agents": 4, "faults": [{"at": 1, "agent": 0,
+                                         "kind": "explode"}]}"#,
+            // typoed keys must be fatal, not silently ideal
+            r#"{"agents": 4, "particiaption": 0.3}"#,
+            r#"{"agents": 4, "link_up": {"latncy": "fixed:0.01"}}"#,
+            r#"{"agents": 4, "compute": {"stragglers": 0.2}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Scenario::from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn topology_spec_parse_and_build() {
+        let mut rng = Pcg64::seed(5);
+        for (s, n) in [
+            ("star", 9),
+            ("complete", 6),
+            ("ring", 7),
+            ("grid2d:3:4", 12),
+            ("er:0.4", 14),
+        ] {
+            let spec = TopologySpec::parse(s).unwrap();
+            assert_eq!(TopologySpec::parse(&spec.label()).unwrap(), spec);
+            let g = spec.build(n, &mut rng);
+            assert_eq!(g.n, n);
+            assert!(g.is_connected(), "{s} disconnected");
+        }
+        assert!(TopologySpec::parse("er:1.5").is_err());
+        assert!(TopologySpec::parse("moebius").is_err());
+    }
+
+    #[test]
+    fn compute_model_straggler_multiplier() {
+        let m = ComputeModel {
+            time: LatencyModel::Fixed { secs: 0.01 },
+            straggler_frac: 0.5,
+            straggler_mult: 10.0,
+        };
+        let mut rng = Pcg64::seed(6);
+        assert_eq!(m.sample(false, &mut rng), 0.01);
+        assert_eq!(m.sample(true, &mut rng), 0.1);
+    }
+}

@@ -92,6 +92,28 @@ impl Graph {
         Graph { n, edges }
     }
 
+    /// Seeded Erdős–Rényi `G(n, p)` resampled until connected (rejection
+    /// loop).  Above the `ln n / n` connectivity threshold a handful of
+    /// tries suffice; far below it the loop is bounded and the final
+    /// attempt falls back to [`Self::random_connected`] at the same
+    /// expected edge count, so the call always returns a connected graph.
+    pub fn erdos_renyi_connected(
+        n: usize,
+        p: f64,
+        rng: &mut impl Rng,
+    ) -> Self {
+        for _ in 0..64 {
+            let g = Graph::erdos_renyi(n, p, rng);
+            if g.is_connected() {
+                return g;
+            }
+        }
+        let max_edges = n * (n - 1) / 2;
+        let m = ((max_edges as f64 * p).ceil() as usize)
+            .clamp(n.saturating_sub(1), max_edges.max(1));
+        Graph::random_connected(n, m, rng)
+    }
+
     /// Random connected graph with exactly `m >= n-1` edges: random
     /// spanning tree (guarantees connectivity) + random extra edges.
     /// The paper's Fig. 11 uses (10, 70); Fig. 12 uses (50, 1762).
@@ -311,6 +333,98 @@ mod tests {
             let g = Graph::erdos_renyi(20, 0.5, &mut Pcg64::seed(seed));
             assert!(g.is_connected(), "seed {seed} disconnected");
         }
+    }
+
+    #[test]
+    fn prop_erdos_renyi_connected_is_always_connected() {
+        // resample-loop contract: for any (n, p, seed) the helper returns
+        // a connected graph on exactly n vertices — including p far below
+        // the ln(n)/n connectivity threshold, where the fallback plants a
+        // spanning tree
+        crate::proptest::forall(
+            "erdos_renyi_connected",
+            |rng| {
+                let n = 2 + rng.below(30);
+                let p = rng.range(0.01, 0.95);
+                (n, p, rng.next_u64())
+            },
+            |&(n, p, seed)| {
+                let g = Graph::erdos_renyi_connected(
+                    n,
+                    p,
+                    &mut Pcg64::seed(seed),
+                );
+                if g.n != n {
+                    return Err(format!("wrong vertex count {}", g.n));
+                }
+                if !g.is_connected() {
+                    return Err(format!(
+                        "disconnected output (n={n}, p={p}, {} edges)",
+                        g.edges.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_star_degrees_match_closed_form() {
+        crate::proptest::forall(
+            "star_degrees",
+            |rng| 2 + rng.below(60),
+            |&n| {
+                let g = Graph::star(n);
+                if g.edges.len() != n - 1 {
+                    return Err(format!("edge count {}", g.edges.len()));
+                }
+                if g.degree(0) != n - 1 {
+                    return Err(format!("hub degree {}", g.degree(0)));
+                }
+                for v in 1..n {
+                    if g.degree(v) != 1 {
+                        return Err(format!("leaf {v} degree {}", g.degree(v)));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_grid2d_degrees_match_closed_form() {
+        // |E| = rows*(cols-1) + cols*(rows-1); deg(v) counts the in-grid
+        // 4-neighborhood
+        crate::proptest::forall(
+            "grid2d_degrees",
+            |rng| (1 + rng.below(7), 1 + rng.below(7)),
+            |&(rows, cols)| {
+                let g = Graph::grid2d(rows, cols);
+                let expect_edges = rows * (cols - 1) + cols * (rows - 1);
+                if g.edges.len() != expect_edges {
+                    return Err(format!(
+                        "edges {} != {expect_edges}",
+                        g.edges.len()
+                    ));
+                }
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let v = r * cols + c;
+                        let expect = usize::from(r > 0)
+                            + usize::from(r + 1 < rows)
+                            + usize::from(c > 0)
+                            + usize::from(c + 1 < cols);
+                        if g.degree(v) != expect {
+                            return Err(format!(
+                                "({r},{c}) degree {} != {expect}",
+                                g.degree(v)
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
