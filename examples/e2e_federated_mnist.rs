@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
 
     let rt = PjrtRuntime::load(&rc.artifacts_dir)?;
     let backend = Backend::Pjrt(&rt, Variant::Pallas);
-    let cfg = NnExperimentConfig { rounds, eval_every: 5, seed };
+    let cfg = NnExperimentConfig { rounds, eval_every: 5, seed, ..Default::default() };
 
     // Δ calibrated on the surrogate (EXPERIMENTS.md Fig. 8 anchors):
     // ~35% fewer events at ~1% accuracy cost.

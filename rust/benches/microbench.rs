@@ -3,14 +3,19 @@
 //!
 //! `cargo bench --bench microbench`
 
+use deluxe::admm::{ConsensusAdmm, ConsensusConfig};
 use deluxe::benchlib::{black_box, Bench};
-use deluxe::comm::{sub, sub_into, DropChannel, Estimate, Trigger, TriggerState};
+use deluxe::comm::{
+    sub, sub_into, DropChannel, Estimate, Trigger, TriggerState,
+};
 use deluxe::data::regress::{generate, RegressSpec};
-use deluxe::linalg::{soft_threshold, Cholesky, Matrix};
+use deluxe::linalg::{
+    soft_threshold, soft_threshold_into, Cholesky, Matrix,
+};
 use deluxe::model::MlpSpec;
 use deluxe::rng::{Pcg64, Rng};
 use deluxe::sim::EventQueue;
-use deluxe::solver::{ExactQuadratic, LocalSolver};
+use deluxe::solver::{ExactQuadratic, IdentityProx, LocalSolver};
 use deluxe::wire::{Compressor, CompressorCfg, ErrorFeedback, WireMessage};
 
 fn main() {
@@ -111,6 +116,58 @@ fn main() {
     b.bench("soft_threshold 100k f64", || {
         black_box(soft_threshold(&vbig, 0.3));
     });
+    let mut st_buf: Vec<f64> = Vec::with_capacity(100_000);
+    b.bench("soft_threshold_into 100k f64 (reused buffer)", || {
+        soft_threshold_into(&vbig, 0.3, &mut st_buf);
+        black_box(st_buf.len());
+    });
+    let chol64 = Cholesky::factor(&g).unwrap();
+    let b64: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+    b.bench("cholesky.solve 64x64 (allocating)", || {
+        black_box(chol64.solve(&b64));
+    });
+    let mut ch_buf: Vec<f64> = Vec::with_capacity(64);
+    b.bench("cholesky.solve_into 64x64 (reused buffer)", || {
+        chol64.solve_into(&b64, &mut ch_buf);
+        black_box(ch_buf.len());
+    });
+
+    println!("\n== unified round core: sequential vs parallel solves ==");
+    // one Alg. 1 round on the 64-agent faults-frontier shape (exact
+    // per-agent prox solves): the local-solve phase shards across the
+    // worker pool; results are bit-identical for every worker count, so
+    // the delta between these cases is pure wall-clock.
+    let spec64 = RegressSpec {
+        n_agents: 64,
+        rows_per_agent: 40,
+        dim: 128,
+        ..Default::default()
+    };
+    let (blocks64, _) = generate(&spec64, &mut rng);
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = ConsensusConfig {
+            rounds: 1,
+            trigger_d: Trigger::vanilla(1e-9),
+            trigger_z: Trigger::vanilla(1e-9),
+            workers,
+            ..Default::default()
+        };
+        let mut engine: ConsensusAdmm<f64> =
+            ConsensusAdmm::new(cfg, 64, vec![0.0; 128]);
+        let mut solver = ExactQuadratic::new(&blocks64);
+        let mut prox = IdentityProx;
+        let mut r = Pcg64::seed(7);
+        // warm the per-agent factorization caches once
+        engine.round(&mut solver, &mut prox, &mut r);
+        b.bench(
+            &format!(
+                "consensus.round (64 agents, dim 128, workers {workers})"
+            ),
+            || {
+                engine.round(&mut solver, &mut prox, &mut r);
+            },
+        );
+    }
 
     println!("\n== sim event queue / async leader hot path ==");
     // steady-state scheduling: one pop + one push against a 1024-deep

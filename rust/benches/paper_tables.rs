@@ -14,7 +14,7 @@ fn main() {
     println!("== tab1-mnist (scaled: tiny workload, 30 rounds) ==");
     b.once("tab1 (tiny, 6 algorithms x 30 rounds)", || {
         let w = nn::NnWorkload::tiny(0);
-        let cfg = nn::NnExperimentConfig { rounds: 30, eval_every: 2, seed: 0 };
+        let cfg = nn::NnExperimentConfig { rounds: 30, eval_every: 2, seed: 0, ..Default::default() };
         let algos = [
             nn::Algo::Alg1Rand { delta_d: 0.1, delta_z: 0.05, p_trig: 0.1 },
             nn::Algo::Alg1Vanilla { delta_d: 0.1, delta_z: 0.05 },
@@ -42,7 +42,7 @@ fn main() {
     println!("\n== fig3 (scaled) ==");
     b.once("fig3 (tiny, accuracy+load series)", || {
         let w = nn::NnWorkload::tiny(1);
-        let cfg = nn::NnExperimentConfig { rounds: 30, eval_every: 2, seed: 1 };
+        let cfg = nn::NnExperimentConfig { rounds: 30, eval_every: 2, seed: 1, ..Default::default() };
         let rec = nn::run_algo(
             &w,
             nn::Algo::Alg1Vanilla { delta_d: 0.1, delta_z: 0.05 },
@@ -60,7 +60,7 @@ fn main() {
     println!("\n== fig8 (scaled Δ-sweep) ==");
     b.once("fig8 (tiny, 4-point sweep)", || {
         let w = nn::NnWorkload::tiny(2);
-        let cfg = nn::NnExperimentConfig { rounds: 20, eval_every: 5, seed: 2 };
+        let cfg = nn::NnExperimentConfig { rounds: 20, eval_every: 5, seed: 2, ..Default::default() };
         for delta in [0.0, 0.1, 0.3, 1.0] {
             let rec = nn::run_algo(
                 &w,
@@ -124,6 +124,7 @@ fn main() {
             batch: 8,
             eval_every: 10,
             seed: 3,
+            ..Default::default()
         };
         for (label, rec) in fig11::run(&cfg) {
             println!(
@@ -144,6 +145,7 @@ fn main() {
             rounds: 500,
             rho: 0.05,
             seed: 4,
+            ..Default::default()
         };
         for (label, rec) in fig12::run(&cfg) {
             println!(

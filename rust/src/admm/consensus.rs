@@ -20,13 +20,11 @@
 //! 4. if `mod(k+1, T) = 0`: full resynchronization (counted as
 //!    communication).
 
-use crate::comm::{DropChannel, Estimate, Scalar, Trigger, TriggerState};
+use super::core::{self, EventLine, RoundCore};
+use crate::comm::{Estimate, Scalar, Trigger};
 use crate::rng::Pcg64;
 use crate::solver::{LocalSolver, ServerProx};
-use crate::wire::{
-    Compressor, CompressorCfg, ErrorFeedback, LinkStats, WireMessage,
-    WireStats,
-};
+use crate::wire::{CompressorCfg, WireStats};
 
 /// Hyperparameters of Alg. 1.
 #[derive(Clone, Debug)]
@@ -50,6 +48,10 @@ pub struct ConsensusConfig {
     /// per-line error feedback.  `Identity` reproduces the uncompressed
     /// protocol bit-for-bit.
     pub compressor: CompressorCfg,
+    /// Worker threads for the per-agent local-solve phase; 0 = auto
+    /// (`DELUXE_WORKERS`, else one per core).  Trajectories are
+    /// bit-identical for every value (see `admm::core`).
+    pub workers: usize,
 }
 
 impl Default for ConsensusConfig {
@@ -64,6 +66,7 @@ impl Default for ConsensusConfig {
             drop_down: 0.0,
             reset_period: 0,
             compressor: CompressorCfg::Identity,
+            workers: 0,
         }
     }
 }
@@ -74,18 +77,16 @@ struct AgentState<T: Scalar> {
     zhat: Estimate<T>,
     zhat_prev: Vec<T>,
     d: Vec<T>,
-    d_trig: TriggerState<T>,
-    up_ch: DropChannel,
-    z_trig: TriggerState<T>, // server-side per-link trigger for z
-    down_ch: DropChannel,
-    /// Error feedback for the agent's compressed uplink deltas.
-    ef_up: ErrorFeedback<T>,
-    /// Error feedback for the server's compressed downlink (per link).
-    ef_down: ErrorFeedback<T>,
+    /// Agent → server d-line.
+    up: EventLine<T>,
+    /// Server → agent z-line (per-link trigger lives server-side).
+    down: EventLine<T>,
 }
 
 /// The Alg. 1 engine. Generic over scalar type: `f64` for the convex
-/// experiments, `f32` for the neural parameter vectors.
+/// experiments, `f32` for the neural parameter vectors.  The per-line
+/// plumbing, reset accounting, stats aggregation and the parallel
+/// local-solve phase all live in [`crate::admm::core`].
 pub struct ConsensusAdmm<T: Scalar> {
     pub cfg: ConsensusConfig,
     pub n: usize,
@@ -93,13 +94,7 @@ pub struct ConsensusAdmm<T: Scalar> {
     pub z: Vec<T>,
     zeta_hat: Estimate<T>,
     agents: Vec<AgentState<T>>,
-    pub round_idx: usize,
-    /// The compression operator (built once from `cfg.compressor`).
-    comp: Box<dyn Compressor<T>>,
-    /// Reusable delta buffer for the trigger hot path (§Perf: the
-    /// subtract-and-snapshot step allocates nothing; the codec still
-    /// copies the payload it puts on the wire).
-    scratch: Vec<T>,
+    core: RoundCore<T>,
 }
 
 impl<T: Scalar> ConsensusAdmm<T> {
@@ -115,15 +110,15 @@ impl<T: Scalar> ConsensusAdmm<T> {
                 zhat: Estimate::new(z0.clone()),
                 zhat_prev: z0.clone(),
                 d: z0.clone(),
-                d_trig: TriggerState::new(cfg.trigger_d, z0.clone()),
-                up_ch: DropChannel::new(cfg.drop_up),
-                z_trig: TriggerState::new(cfg.trigger_z, z0.clone()),
-                down_ch: DropChannel::new(cfg.drop_down),
-                ef_up: ErrorFeedback::new(),
-                ef_down: ErrorFeedback::new(),
+                up: EventLine::new(cfg.trigger_d, z0.clone(), cfg.drop_up),
+                down: EventLine::new(
+                    cfg.trigger_z,
+                    z0.clone(),
+                    cfg.drop_down,
+                ),
             })
             .collect();
-        let comp = cfg.compressor.build::<T>();
+        let core = RoundCore::new(n, dim, &cfg.compressor, cfg.workers);
         ConsensusAdmm {
             cfg,
             n,
@@ -131,10 +126,13 @@ impl<T: Scalar> ConsensusAdmm<T> {
             zeta_hat: Estimate::new(z0.clone()),
             z: z0,
             agents,
-            round_idx: 0,
-            comp,
-            scratch: Vec::with_capacity(dim),
+            core,
         }
+    }
+
+    /// Rounds completed so far.
+    pub fn round_idx(&self) -> usize {
+        self.core.round_idx
     }
 
     /// Execute one synchronous round.
@@ -147,25 +145,29 @@ impl<T: Scalar> ConsensusAdmm<T> {
         let alpha = self.cfg.alpha;
         let rho = self.cfg.rho;
         let invn = 1.0 / self.n as f64;
+        // per-agent solver streams fork off the round-entry state, so
+        // the solve phase is independent of the communication draws
+        // below and of worker count (see admm::core)
+        let solve_base = rng.clone();
 
         // 1. server -> agents (z line, per-link trigger + EF-compressed
         //    codec + channel with byte accounting)
         for a in &mut self.agents {
             a.zhat_prev.clear();
             a.zhat_prev.extend_from_slice(a.zhat.get());
-            a.down_ch.mark_round();
-            if a.z_trig.offer_into(&self.z, rng, &mut self.scratch) {
-                let msg =
-                    a.ef_down.compress(&self.scratch, self.comp.as_ref(), rng);
-                let bytes = msg.wire_bytes() as u64;
-                if let Some(msg) = a.down_ch.transmit_bytes(msg, bytes, rng) {
-                    a.zhat.apply_msg(&msg);
-                }
+            if let Some(msg) = a.down.offer_send(
+                &self.z,
+                self.core.comp.as_ref(),
+                rng,
+                &mut self.core.scratch,
+            ) {
+                a.zhat.apply_msg(&msg);
             }
         }
 
-        // 2. agents: u update, local prox solve, event send of d
-        for (i, a) in self.agents.iter_mut().enumerate() {
+        // 2a. agents: dual update + prox anchor (sequential, cheap)
+        let mut anchors: Vec<Vec<T>> = Vec::with_capacity(self.n);
+        for a in &mut self.agents {
             // u^i_k = u^i_{k-1} + α x^i_k − ẑ^i_k + (1−α) ẑ^i_{k-1}
             for j in 0..self.dim {
                 let u = a.u[j].to_f64()
@@ -175,15 +177,31 @@ impl<T: Scalar> ConsensusAdmm<T> {
                 a.u[j] = T::from_f64(u);
             }
             // anchor = ẑ − u ; x ← argmin f + (ρ/2)|x − anchor|²
-            let anchor: Vec<T> = a
-                .zhat
-                .get()
-                .iter()
-                .zip(&a.u)
-                .map(|(&z, &u)| T::from_f64(z.to_f64() - u.to_f64()))
-                .collect();
-            a.x = solver.solve(i, &anchor, rho, rng);
-            debug_assert_eq!(a.x.len(), self.dim);
+            anchors.push(
+                a.zhat
+                    .get()
+                    .iter()
+                    .zip(&a.u)
+                    .map(|(&z, &u)| T::from_f64(z.to_f64() - u.to_f64()))
+                    .collect(),
+            );
+        }
+
+        // 2b. the local-solve phase — the round's dominant cost — on the
+        //     worker pool, one forked RNG stream per agent
+        let mut rngs = self.core.round_solve_rngs(&solve_base);
+        let xs = solver.solve_batch(
+            self.core.agent_ids(),
+            &anchors,
+            rho,
+            &mut rngs,
+            &self.core.pool,
+        );
+
+        // 2c. ordered reduction: event send of d in agent order
+        for (a, x) in self.agents.iter_mut().zip(xs) {
+            debug_assert_eq!(x.len(), self.dim);
+            a.x = x;
             // d^i = α x^i_{k+1} + u^i_k
             a.d = a
                 .x
@@ -191,14 +209,13 @@ impl<T: Scalar> ConsensusAdmm<T> {
                 .zip(&a.u)
                 .map(|(&x, &u)| T::from_f64(alpha * x.to_f64() + u.to_f64()))
                 .collect();
-            a.up_ch.mark_round();
-            if a.d_trig.offer_into(&a.d, rng, &mut self.scratch) {
-                let msg =
-                    a.ef_up.compress(&self.scratch, self.comp.as_ref(), rng);
-                let bytes = msg.wire_bytes() as u64;
-                if let Some(msg) = a.up_ch.transmit_bytes(msg, bytes, rng) {
-                    self.zeta_hat.apply_scaled_msg(&msg, invn);
-                }
+            if let Some(msg) = a.up.offer_send(
+                &a.d,
+                self.core.comp.as_ref(),
+                rng,
+                &mut self.core.scratch,
+            ) {
+                self.zeta_hat.apply_scaled_msg(&msg, invn);
             }
         }
 
@@ -216,10 +233,7 @@ impl<T: Scalar> ConsensusAdmm<T> {
         debug_assert_eq!(self.z.len(), self.dim);
 
         // 4. periodic reset (full resynchronization, counted as comm)
-        self.round_idx += 1;
-        if self.cfg.reset_period > 0
-            && self.round_idx % self.cfg.reset_period == 0
-        {
+        if self.core.finish_round(self.cfg.reset_period) {
             self.reset();
         }
     }
@@ -231,7 +245,8 @@ impl<T: Scalar> ConsensusAdmm<T> {
     /// drops any carried compression residual.  A packet that triggered
     /// but *dropped* in the same round is superseded by the sync — the
     /// round bills exactly one dense transfer on that line, never two
-    /// (see [`DropChannel::charge_sync`]).
+    /// (see [`crate::comm::DropChannel::charge_sync`] /
+    /// [`EventLine::resync`]).
     pub fn reset(&mut self) {
         let mut zeta = vec![0.0f64; self.dim];
         for a in &self.agents {
@@ -243,15 +258,10 @@ impl<T: Scalar> ConsensusAdmm<T> {
         let zeta: Vec<T> =
             zeta.into_iter().map(|v| T::from_f64(v * invn)).collect();
         self.zeta_hat.reset_to(&zeta);
-        let sync_bytes = WireMessage::<T>::dense_bytes(self.dim) as u64;
         for a in &mut self.agents {
             a.zhat.reset_to(&self.z);
-            a.d_trig.reset(&a.d);
-            a.z_trig.reset(&self.z);
-            a.ef_up.clear();
-            a.ef_down.clear();
-            a.up_ch.charge_sync(sync_bytes);
-            a.down_ch.charge_sync(sync_bytes);
+            a.up.resync(&a.d);
+            a.down.resync(&self.z);
         }
     }
 
@@ -312,64 +322,51 @@ impl<T: Scalar> ConsensusAdmm<T> {
     /// Total triggered communication events (up + down lines; resets
     /// included via the trigger counters).
     pub fn total_events(&self) -> u64 {
-        self.agents
-            .iter()
-            .map(|a| a.d_trig.events + a.z_trig.events)
-            .sum()
+        core::events_sum(self.agents.iter().map(|a| &a.up))
+            + core::events_sum(self.agents.iter().map(|a| &a.down))
     }
 
     /// Events normalized by full communication (2N links per round).
     pub fn comm_load(&self) -> f64 {
-        if self.round_idx == 0 {
-            return 0.0;
-        }
-        self.total_events() as f64
-            / (2.0 * self.n as f64 * self.round_idx as f64)
+        self.core.comm_load(self.total_events(), 2.0 * self.n as f64)
     }
 
     /// Per-direction event counts `(uplink, downlink)`.
     pub fn events_split(&self) -> (u64, u64) {
-        let up = self.agents.iter().map(|a| a.d_trig.events).sum();
-        let down = self.agents.iter().map(|a| a.z_trig.events).sum();
-        (up, down)
+        (
+            core::events_sum(self.agents.iter().map(|a| &a.up)),
+            core::events_sum(self.agents.iter().map(|a| &a.down)),
+        )
     }
 
     /// Dropped-packet counts `(uplink, downlink)`.
     pub fn drops_split(&self) -> (u64, u64) {
-        let up = self.agents.iter().map(|a| a.up_ch.stats.dropped).sum();
-        let down = self.agents.iter().map(|a| a.down_ch.stats.dropped).sum();
-        (up, down)
+        (
+            core::drops_sum(self.agents.iter().map(|a| &a.up)),
+            core::drops_sum(self.agents.iter().map(|a| &a.down)),
+        )
     }
 
     /// Byte-accurate per-agent wire accounting (both directions).
     pub fn wire_stats(&self) -> WireStats {
-        WireStats {
-            uplink: self
-                .agents
-                .iter()
-                .map(|a| LinkStats::from(&a.up_ch.stats))
-                .collect(),
-            downlink: self
-                .agents
-                .iter()
-                .map(|a| LinkStats::from(&a.down_ch.stats))
-                .collect(),
-        }
+        core::wire_stats(
+            self.agents.iter().map(|a| &a.up),
+            self.agents.iter().map(|a| &a.down),
+        )
     }
 
     /// Total sent bytes `(uplink, downlink)`.
     pub fn bytes_split(&self) -> (u64, u64) {
-        let up = self.agents.iter().map(|a| a.up_ch.stats.sent_bytes).sum();
-        let down =
-            self.agents.iter().map(|a| a.down_ch.stats.sent_bytes).sum();
-        (up, down)
+        (
+            core::bytes_sum(self.agents.iter().map(|a| &a.up)),
+            core::bytes_sum(self.agents.iter().map(|a| &a.down)),
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::dist2;
     use crate::solver::IdentityProx;
 
     /// Scalar quadratic agents: f_i(x) = 0.5 w_i (x - c_i)^2 over R^1.
@@ -684,6 +681,37 @@ mod tests {
             assert_eq!(l.bytes, 6 * dense);
             assert_eq!(l.dropped_msgs, 0);
         }
+    }
+
+    #[test]
+    fn unified_core_reproduces_pre_refactor_counters() {
+        // Pinned against the pre-unification engine's accounting rules:
+        // with Always triggers, reliable links and T = 5 over 20 rounds,
+        // every line fires once per round and each of the 4 resets adds
+        // one event + one dense sync per line.  These closed-form
+        // counters are exactly what the four hand-rolled engines
+        // produced before the round core existed.
+        let cfg = ConsensusConfig {
+            rounds: 20,
+            reset_period: 5,
+            ..Default::default()
+        };
+        let (engine, _) = run(cfg, 17);
+        let per_line: u64 = 20 + 4; // triggered + reset events
+        assert_eq!(engine.events_split(), (4 * per_line, 4 * per_line));
+        assert_eq!(engine.drops_split(), (0, 0));
+        let dense = crate::wire::WireMessage::<f64>::dense_bytes(1) as u64;
+        assert_eq!(
+            engine.bytes_split(),
+            (4 * per_line * dense, 4 * per_line * dense)
+        );
+        let ws = engine.wire_stats();
+        for l in ws.uplink.iter().chain(&ws.downlink) {
+            assert_eq!(l.msgs, per_line);
+            assert_eq!(l.bytes, per_line * dense);
+        }
+        assert_eq!(engine.round_idx(), 20);
+        assert!((engine.comm_load() - 1.2).abs() < 1e-12);
     }
 
     #[test]

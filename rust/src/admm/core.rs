@@ -1,0 +1,516 @@
+//! The shared round core behind every ADMM engine (DESIGN.md §10).
+//!
+//! PRs 1–4 grew four independent engines (Alg. 1 consensus, Alg. 2
+//! general, graph Eq. 7, sharing Eqs. 5–6) that each re-implemented the
+//! same three concerns:
+//!
+//! * **per-line plumbing** — trigger state + lossy channel + error
+//!   feedback + the `mark_round`/`charge_sync` reset accounting, now
+//!   [`EventLine`] (point-to-point) and [`BroadcastLine`] (one trigger
+//!   fanned out over per-neighbor links);
+//! * **round/reset cadence and stats** — round counter, periodic-reset
+//!   scheduling, and the event/drop/byte aggregation behind
+//!   `total_events` / `comm_load` / `wire_stats`, now [`RoundCore`] plus
+//!   the [`events_sum`]/[`drops_sum`]/[`bytes_sum`]/[`link_stats`]
+//!   helpers;
+//! * **the per-agent local-solve phase**, now executed on a
+//!   [`WorkerPool`] with a fixed contiguous agent→shard assignment and a
+//!   deterministic ordered reduction.
+//!
+//! # Determinism contract
+//!
+//! A round is split into three phases: (1) sequential communication on
+//! the caller's RNG stream, (2) the embarrassingly parallel local-solve
+//! phase, (3) a sequential reduction in agent order.  Phase 2 draws
+//! *nothing* from the caller's stream: each agent's solver RNG is forked
+//! from the round's base state via [`crate::rng::Pcg64::fork`] keyed by
+//! `(round, agent)`, and results land in per-agent slots before the
+//! ordered reduction reads them.  Trajectories are therefore
+//! bit-identical for every `--workers` value, including `1` — pinned by
+//! the `determinism` integration tests.
+
+use crate::comm::{ChannelStats, DropChannel, Scalar, Trigger, TriggerState};
+use crate::rng::Pcg64;
+use crate::wire::{
+    Compressor, CompressorCfg, ErrorFeedback, LinkStats, WireMessage,
+    WireStats,
+};
+
+// ---------------------------------------------------------------------------
+// Worker pool
+// ---------------------------------------------------------------------------
+
+/// Resolve a worker-count knob: `0` means "auto" — the `DELUXE_WORKERS`
+/// environment variable if set (the CI matrix pins it to 1 and 4), else
+/// one worker per available core.
+pub fn resolve_workers(workers: usize) -> usize {
+    if workers > 0 {
+        return workers;
+    }
+    if let Ok(v) = std::env::var("DELUXE_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The engines' per-agent worker pool: scoped `std::thread` workers (the
+/// `sim::sweep` pattern — no detached threads, no new dependencies) over
+/// a **fixed contiguous agent→shard assignment**.
+///
+/// [`WorkerPool::run`] executes `f(i, &mut items[i])` for every item:
+/// worker `w` owns items `[w·per, (w+1)·per)`, each item is touched by
+/// exactly one worker, and results land in the item's own slot — so a
+/// sequential pass over the slots afterwards observes the same values no
+/// matter how many workers ran.  `f` must derive any randomness from the
+/// item itself (see [`crate::rng::Pcg64::fork`]), never from shared
+/// state.
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// `workers = 0` resolves via [`resolve_workers`] (env, then cores).
+    pub fn new(workers: usize) -> Self {
+        WorkerPool { workers: resolve_workers(workers) }
+    }
+
+    /// Single-threaded pool (the deterministic reference path).
+    pub fn sequential() -> Self {
+        WorkerPool { workers: 1 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(i, &mut items[i])` for every item, sharded contiguously
+    /// across the pool.  Falls back to a plain loop for one worker or
+    /// one item — bit-identical either way by construction.
+    pub fn run<S, F>(&self, items: &mut [S], f: F)
+    where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        let n = items.len();
+        let w = self.workers.min(n);
+        if w <= 1 {
+            for (i, s) in items.iter_mut().enumerate() {
+                f(i, s);
+            }
+            return;
+        }
+        let per = n.div_ceil(w);
+        std::thread::scope(|scope| {
+            for (ci, chunk) in items.chunks_mut(per).enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    for (j, s) in chunk.iter_mut().enumerate() {
+                        f(ci * per + j, s);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Per-agent solver streams for one round: `base.fork(round, agent)` for
+/// each agent.  `base` is the caller's RNG state at the *start* of the
+/// round (before any communication draws), so the streams are identical
+/// no matter where in the round the solves execute or on how many
+/// workers.
+pub fn solve_rngs(base: &Pcg64, round: u64, n: usize) -> Vec<Pcg64> {
+    (0..n).map(|i| base.fork(round, i as u64)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Lines
+// ---------------------------------------------------------------------------
+
+/// One event-triggered, error-feedback-compressed, lossy transmit line —
+/// the bundle every engine previously hand-rolled per link.
+#[derive(Clone, Debug)]
+pub struct EventLine<T: Scalar> {
+    pub trig: TriggerState<T>,
+    pub ch: DropChannel,
+    pub ef: ErrorFeedback<T>,
+}
+
+impl<T: Scalar> EventLine<T> {
+    pub fn new(trigger: Trigger, init: Vec<T>, drop_rate: f64) -> Self {
+        EventLine {
+            trig: TriggerState::new(trigger, init),
+            ch: DropChannel::new(drop_rate),
+            ef: ErrorFeedback::new(),
+        }
+    }
+
+    /// One round's transmit opportunity: open the channel round
+    /// (`mark_round`), offer `value` to the trigger, compress the fired
+    /// delta with per-line error feedback, and push it through the lossy
+    /// channel with byte-exact accounting.  Returns the delivered
+    /// message, if any; the caller applies it to the receiver estimate.
+    ///
+    /// RNG consumption (trigger decision, compressor, channel) is
+    /// identical to the pre-unification engines, so seeded trajectories
+    /// are unchanged.
+    pub fn offer_send(
+        &mut self,
+        value: &[T],
+        comp: &dyn Compressor<T>,
+        rng: &mut Pcg64,
+        scratch: &mut Vec<T>,
+    ) -> Option<WireMessage<T>> {
+        self.ch.mark_round();
+        if self.trig.offer_into(value, rng, scratch) {
+            let msg = self.ef.compress(scratch, comp, rng);
+            let bytes = msg.wire_bytes() as u64;
+            self.ch.transmit_bytes(msg, bytes, rng)
+        } else {
+            None
+        }
+    }
+
+    /// Reset-path resynchronization: advance the trigger reference to
+    /// `value` (counting one event), drop the carried compression
+    /// residual, and charge one full dense synchronization transfer — a
+    /// same-round triggered-but-dropped packet is superseded by the sync
+    /// (see [`DropChannel::charge_sync`]).
+    pub fn resync(&mut self, value: &[T]) {
+        self.trig.reset(value);
+        self.ef.clear();
+        self.ch
+            .charge_sync(WireMessage::<T>::dense_bytes(value.len()) as u64);
+    }
+
+    pub fn events(&self) -> u64 {
+        self.trig.events
+    }
+
+    pub fn stats(&self) -> &ChannelStats {
+        &self.ch.stats
+    }
+}
+
+/// One event trigger + error feedback fanned out over per-neighbor lossy
+/// links — the decentralized (graph) engine's broadcast pattern: a fired
+/// event compresses once and transmits per link with byte accounting.
+#[derive(Clone, Debug)]
+pub struct BroadcastLine<T: Scalar> {
+    pub trig: TriggerState<T>,
+    pub ef: ErrorFeedback<T>,
+    pub channels: Vec<DropChannel>,
+}
+
+impl<T: Scalar> BroadcastLine<T> {
+    pub fn new(
+        trigger: Trigger,
+        init: Vec<T>,
+        fanout: usize,
+        drop_rate: f64,
+    ) -> Self {
+        BroadcastLine {
+            trig: TriggerState::new(trigger, init),
+            ef: ErrorFeedback::new(),
+            channels: (0..fanout)
+                .map(|_| DropChannel::new(drop_rate))
+                .collect(),
+        }
+    }
+
+    /// Open every link's round, offer `value` to the broadcast trigger
+    /// and compress the fired delta once.  The caller fans the returned
+    /// payload out via [`Self::transmit`].
+    pub fn offer_compress(
+        &mut self,
+        value: &[T],
+        comp: &dyn Compressor<T>,
+        rng: &mut Pcg64,
+        scratch: &mut Vec<T>,
+    ) -> Option<WireMessage<T>> {
+        for ch in &mut self.channels {
+            ch.mark_round();
+        }
+        if self.trig.offer_into(value, rng, scratch) {
+            Some(self.ef.compress(scratch, comp, rng))
+        } else {
+            None
+        }
+    }
+
+    /// Transmit one copy of the broadcast payload over link `li`.
+    pub fn transmit(
+        &mut self,
+        li: usize,
+        msg: WireMessage<T>,
+        bytes: u64,
+        rng: &mut Pcg64,
+    ) -> Option<WireMessage<T>> {
+        self.channels[li].transmit_bytes(msg, bytes, rng)
+    }
+
+    /// Reset-path resynchronization: one dense sync per link, trigger
+    /// advanced, residual dropped (same supersession rule as
+    /// [`EventLine::resync`]).
+    pub fn resync(&mut self, value: &[T]) {
+        self.trig.reset(value);
+        self.ef.clear();
+        let sync = WireMessage::<T>::dense_bytes(value.len()) as u64;
+        for ch in &mut self.channels {
+            ch.charge_sync(sync);
+        }
+    }
+
+    pub fn events(&self) -> u64 {
+        self.trig.events
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats aggregation (shared by every engine's accessors)
+// ---------------------------------------------------------------------------
+
+/// Total triggered events over a set of lines.
+pub fn events_sum<'a, T: Scalar>(
+    lines: impl IntoIterator<Item = &'a EventLine<T>>,
+) -> u64 {
+    lines.into_iter().map(|l| l.trig.events).sum()
+}
+
+/// Total dropped packets over a set of lines.
+pub fn drops_sum<'a, T: Scalar>(
+    lines: impl IntoIterator<Item = &'a EventLine<T>>,
+) -> u64 {
+    lines.into_iter().map(|l| l.ch.stats.dropped).sum()
+}
+
+/// Total sent bytes over a set of lines.
+pub fn bytes_sum<'a, T: Scalar>(
+    lines: impl IntoIterator<Item = &'a EventLine<T>>,
+) -> u64 {
+    lines.into_iter().map(|l| l.ch.stats.sent_bytes).sum()
+}
+
+/// Per-line [`LinkStats`] snapshots over a set of lines.
+pub fn link_stats<'a, T: Scalar>(
+    lines: impl IntoIterator<Item = &'a EventLine<T>>,
+) -> Vec<LinkStats> {
+    lines.into_iter().map(|l| LinkStats::from(&l.ch.stats)).collect()
+}
+
+/// Assemble a [`WireStats`] snapshot from uplink/downlink line sets.
+pub fn wire_stats<'a, 'b, T: Scalar>(
+    uplink: impl IntoIterator<Item = &'a EventLine<T>>,
+    downlink: impl IntoIterator<Item = &'b EventLine<T>>,
+) -> WireStats {
+    WireStats { uplink: link_stats(uplink), downlink: link_stats(downlink) }
+}
+
+// ---------------------------------------------------------------------------
+// Round core
+// ---------------------------------------------------------------------------
+
+/// The engine-agnostic round state: agent count, problem dimension,
+/// round counter, the shared compression operator, the delta scratch
+/// buffer for the allocation-free trigger hot path, and the worker pool
+/// for the local-solve phase.  The reset period stays in each engine's
+/// config (engines allow mutating it between rounds) and is passed to
+/// [`Self::finish_round`] per round.
+pub struct RoundCore<T: Scalar> {
+    pub n: usize,
+    pub dim: usize,
+    pub round_idx: usize,
+    pub comp: Box<dyn Compressor<T>>,
+    pub pool: WorkerPool,
+    pub scratch: Vec<T>,
+    agent_ids: Vec<usize>,
+}
+
+impl<T: Scalar> RoundCore<T> {
+    pub fn new(
+        n: usize,
+        dim: usize,
+        compressor: &CompressorCfg,
+        workers: usize,
+    ) -> Self {
+        RoundCore {
+            n,
+            dim,
+            round_idx: 0,
+            comp: compressor.build::<T>(),
+            pool: WorkerPool::new(workers),
+            scratch: Vec::with_capacity(dim),
+            agent_ids: (0..n).collect(),
+        }
+    }
+
+    /// `[0, n)` — the batch passed to `LocalSolver::solve_batch` by the
+    /// all-agents synchronous engines (cached to keep rounds
+    /// allocation-free).
+    pub fn agent_ids(&self) -> &[usize] {
+        &self.agent_ids
+    }
+
+    /// Per-agent solver streams for this round (see [`solve_rngs`]).
+    pub fn round_solve_rngs(&self, base: &Pcg64) -> Vec<Pcg64> {
+        solve_rngs(base, self.round_idx as u64, self.n)
+    }
+
+    /// Close the round: advance the counter and report whether the
+    /// periodic reset (period `T`, 0 = disabled) is due.
+    pub fn finish_round(&mut self, reset_period: usize) -> bool {
+        self.round_idx += 1;
+        reset_period > 0 && self.round_idx % reset_period == 0
+    }
+
+    /// Events normalized by full communication at `lines_per_round`
+    /// transmit opportunities per round.
+    pub fn comm_load(&self, total_events: u64, lines_per_round: f64) -> f64 {
+        if self.round_idx == 0 {
+            return 0.0;
+        }
+        total_events as f64 / (lines_per_round * self.round_idx as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Trigger;
+    use crate::rng::Rng;
+
+    #[test]
+    fn pool_run_matches_sequential_for_any_worker_count() {
+        let base: Vec<u64> = (0..97).collect();
+        let mut want = base.clone();
+        for (i, v) in want.iter_mut().enumerate() {
+            *v = *v * 3 + i as u64;
+        }
+        for workers in [1, 2, 3, 8, 200] {
+            let pool = WorkerPool { workers };
+            let mut items = base.clone();
+            pool.run(&mut items, |i, v| *v = *v * 3 + i as u64);
+            assert_eq!(items, want, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn pool_run_passes_global_indices() {
+        let pool = WorkerPool { workers: 4 };
+        let mut items = vec![0usize; 10];
+        pool.run(&mut items, |i, v| *v = i);
+        assert_eq!(items, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_run_empty_is_a_noop() {
+        let pool = WorkerPool { workers: 4 };
+        let mut items: Vec<u8> = Vec::new();
+        pool.run(&mut items, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn resolve_workers_prefers_explicit_value() {
+        assert_eq!(resolve_workers(3), 3);
+        assert!(resolve_workers(0) >= 1);
+    }
+
+    #[test]
+    fn solve_rngs_are_stable_and_per_agent() {
+        let base = Pcg64::seed(7);
+        let mut a = solve_rngs(&base, 5, 3);
+        let mut b = solve_rngs(&base, 5, 3);
+        for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+            assert_eq!(x.next_u64(), y.next_u64());
+        }
+        // distinct agents and distinct rounds give distinct streams
+        let mut r0 = solve_rngs(&base, 5, 2);
+        let mut r1 = solve_rngs(&base, 6, 2);
+        let (a0, a1) = (r0[0].next_u64(), r0[1].next_u64());
+        assert_ne!(a0, a1);
+        let mut again = solve_rngs(&base, 5, 1);
+        assert_eq!(again[0].next_u64(), a0);
+        assert_ne!(a0, r1[0].next_u64());
+    }
+
+    #[test]
+    fn event_line_counts_and_resync_accounting() {
+        let comp = CompressorCfg::Identity.build::<f64>();
+        let mut line = EventLine::new(Trigger::Always, vec![0.0; 2], 0.0);
+        let mut rng = Pcg64::seed(1);
+        let mut scratch = Vec::new();
+        let msg = line
+            .offer_send(&[1.0, -1.0], comp.as_ref(), &mut rng, &mut scratch)
+            .expect("Always trigger must fire and deliver");
+        assert_eq!(msg.to_dense(), vec![1.0, -1.0]);
+        assert_eq!(line.events(), 1);
+        let dense = WireMessage::<f64>::dense_bytes(2) as u64;
+        assert_eq!(line.stats().sent_bytes, dense);
+        line.resync(&[2.0, 2.0]);
+        assert_eq!(line.events(), 2, "resync counts one event");
+        assert_eq!(line.stats().sent_bytes, 2 * dense);
+        assert_eq!(line.stats().dropped, 0);
+    }
+
+    #[test]
+    fn event_line_resync_supersedes_same_round_drop() {
+        let comp = CompressorCfg::Identity.build::<f64>();
+        let mut line = EventLine::new(Trigger::Always, vec![0.0], 1.0);
+        let mut rng = Pcg64::seed(2);
+        let mut scratch = Vec::new();
+        assert!(line
+            .offer_send(&[1.0], comp.as_ref(), &mut rng, &mut scratch)
+            .is_none());
+        line.resync(&[1.0]);
+        let dense = WireMessage::<f64>::dense_bytes(1) as u64;
+        assert_eq!(line.stats().sent, 1, "drop superseded by the sync");
+        assert_eq!(line.stats().sent_bytes, dense);
+        assert_eq!(line.stats().dropped, 0);
+    }
+
+    #[test]
+    fn broadcast_line_compresses_once_and_charges_per_link() {
+        let comp = CompressorCfg::Identity.build::<f64>();
+        let mut line =
+            BroadcastLine::new(Trigger::Always, vec![0.0; 2], 3, 0.0);
+        let mut rng = Pcg64::seed(3);
+        let mut scratch = Vec::new();
+        let msg = line
+            .offer_compress(&[1.0, 2.0], comp.as_ref(), &mut rng, &mut scratch)
+            .expect("fires");
+        let bytes = msg.wire_bytes() as u64;
+        for li in 0..3 {
+            assert!(line
+                .transmit(li, msg.clone(), bytes, &mut rng)
+                .is_some());
+        }
+        assert_eq!(line.events(), 1, "one event per broadcast");
+        let total: u64 =
+            line.channels.iter().map(|c| c.stats.sent_bytes).sum();
+        assert_eq!(total, 3 * bytes);
+        line.resync(&[1.0, 2.0]);
+        assert_eq!(line.events(), 2);
+        let dense = WireMessage::<f64>::dense_bytes(2) as u64;
+        let total: u64 =
+            line.channels.iter().map(|c| c.stats.sent_bytes).sum();
+        assert_eq!(total, 3 * (bytes + dense));
+    }
+
+    #[test]
+    fn round_core_cadence_and_load() {
+        let mut core =
+            RoundCore::<f64>::new(4, 2, &CompressorCfg::Identity, 1);
+        assert_eq!(core.agent_ids(), &[0, 1, 2, 3]);
+        assert_eq!(core.comm_load(10, 8.0), 0.0, "no rounds yet");
+        assert!(!core.finish_round(3));
+        assert!(!core.finish_round(3));
+        assert!(core.finish_round(3), "reset due every 3rd round");
+        assert!(!core.finish_round(0), "period 0 disables resets");
+        assert_eq!(core.round_idx, 4);
+        assert!((core.comm_load(16, 8.0) - 0.5).abs() < 1e-15);
+    }
+}

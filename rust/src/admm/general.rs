@@ -12,10 +12,11 @@
 //! validated against this implementation in `experiments::rates` and the
 //! integration tests.
 
-use crate::comm::{DropChannel, Estimate, Trigger, TriggerState};
+use super::core::{self, EventLine, RoundCore};
+use crate::comm::{Estimate, Trigger};
 use crate::linalg::{soft_threshold, Cholesky, Matrix};
 use crate::rng::Pcg64;
-use crate::wire::{Compressor, CompressorCfg, ErrorFeedback, WireMessage};
+use crate::wire::CompressorCfg;
 
 /// Smooth part: `f(x) = ½ xᵀHx + qᵀx` (covers least squares
 /// `½|Dx−b|²` via `H = DᵀD`, `q = −Dᵀb`).  The x-update is the linear
@@ -69,7 +70,10 @@ impl QuadraticF {
         let mut rhs: Vec<f64> = self.q.iter().map(|v| -v).collect();
         let at_rhs = a.tmatvec(rhs_dir);
         crate::linalg::axpy(&mut rhs, rho, &at_rhs);
-        self.cache.as_ref().unwrap().1.solve(&rhs)
+        // rhs doubles as the solution buffer (§Perf: allocation-free
+        // Cholesky::solve_in_place on the per-round x-update)
+        self.cache.as_ref().unwrap().1.solve_in_place(&mut rhs);
+        rhs
     }
 }
 
@@ -142,6 +146,10 @@ pub struct GeneralConfig {
     /// Delta compressor applied on all six lines (per-line error
     /// feedback); `Identity` reproduces the uncompressed protocol.
     pub compressor: CompressorCfg,
+    /// Worker-pool knob threaded for config uniformity; Alg. 2 has one
+    /// monolithic x-update (a single linear solve), so its round has no
+    /// per-agent solve phase to shard.
+    pub workers: usize,
 }
 
 impl Default for GeneralConfig {
@@ -159,6 +167,7 @@ impl Default for GeneralConfig {
             drop_rate: 0.0,
             reset_period: 0,
             compressor: CompressorCfg::Identity,
+            workers: 1,
         }
     }
 }
@@ -177,51 +186,9 @@ impl GeneralConfig {
     }
 }
 
-struct Line {
-    trig: TriggerState<f64>,
-    ch: DropChannel,
-    ef: ErrorFeedback<f64>,
-}
-
-impl Line {
-    fn new(trig: Trigger, init: Vec<f64>, drop_rate: f64) -> Self {
-        Line {
-            trig: TriggerState::new(trig, init),
-            ch: DropChannel::new(drop_rate),
-            ef: ErrorFeedback::new(),
-        }
-    }
-
-    fn send(
-        &mut self,
-        value: &[f64],
-        dest: &mut Estimate<f64>,
-        comp: &dyn Compressor<f64>,
-        rng: &mut Pcg64,
-    ) {
-        self.ch.mark_round();
-        if let Some(delta) = self.trig.offer(value, rng) {
-            let msg = self.ef.compress(&delta, comp, rng);
-            let bytes = msg.wire_bytes() as u64;
-            if let Some(msg) = self.ch.transmit_bytes(msg, bytes, rng) {
-                dest.apply_msg(&msg);
-            }
-        }
-    }
-
-    fn reset(&mut self, value: &[f64], dest: &mut Estimate<f64>) {
-        self.trig.reset(value);
-        dest.reset_to(value);
-        self.ef.clear();
-        // a same-round triggered-but-dropped packet is superseded by the
-        // sync: the round bills exactly one dense transfer
-        self.ch.charge_sync(
-            WireMessage::<f64>::dense_bytes(value.len()) as u64,
-        );
-    }
-}
-
-/// The Alg. 2 engine.
+/// The Alg. 2 engine.  The six transmit lines are
+/// [`EventLine`]s from the shared round core (Alg. 2 was the template
+/// the core's line bundle was extracted from).
 pub struct GeneralAdmm {
     pub cfg: GeneralConfig,
     pub a: Matrix,
@@ -245,17 +212,15 @@ pub struct GeneralAdmm {
     s_at_u_prev: Vec<f64>,
 
     // transmit lines
-    line_rs: Line,
-    line_ru: Line,
-    line_sr: Line,
-    line_su: Line,
-    line_ur: Line,
-    line_us: Line,
+    line_rs: EventLine<f64>,
+    line_ru: EventLine<f64>,
+    line_sr: EventLine<f64>,
+    line_su: EventLine<f64>,
+    line_ur: EventLine<f64>,
+    line_us: EventLine<f64>,
 
-    /// Shared compression operator for all six lines.
-    comp: Box<dyn Compressor<f64>>,
-
-    pub round_idx: usize,
+    /// Round/reset cadence, shared compressor, scratch, stats plumbing.
+    core: RoundCore<f64>,
 }
 
 impl GeneralAdmm {
@@ -280,13 +245,16 @@ impl GeneralAdmm {
         assert_eq!(s0.len(), r0.len(), "B rows must match A rows");
         let u0 = vec![0.0; r0.len()];
         let dr = cfg.drop_rate;
+        // r-, s- and u-agents
+        let core =
+            RoundCore::new(3, r0.len(), &cfg.compressor, cfg.workers);
         GeneralAdmm {
-            line_rs: Line::new(cfg.trig_rs, r0.clone(), dr),
-            line_ru: Line::new(cfg.trig_ru, r0.clone(), dr),
-            line_sr: Line::new(cfg.trig_sr, s0.clone(), dr),
-            line_su: Line::new(cfg.trig_su, s0.clone(), dr),
-            line_ur: Line::new(cfg.trig_ur, u0.clone(), dr),
-            line_us: Line::new(cfg.trig_us, u0.clone(), dr),
+            line_rs: EventLine::new(cfg.trig_rs, r0.clone(), dr),
+            line_ru: EventLine::new(cfg.trig_ru, r0.clone(), dr),
+            line_sr: EventLine::new(cfg.trig_sr, s0.clone(), dr),
+            line_su: EventLine::new(cfg.trig_su, s0.clone(), dr),
+            line_ur: EventLine::new(cfg.trig_ur, u0.clone(), dr),
+            line_us: EventLine::new(cfg.trig_us, u0.clone(), dr),
             s_at_r: Estimate::new(s0.clone()),
             u_at_r: Estimate::new(u0.clone()),
             r_at_s: Estimate::new(r0.clone()),
@@ -294,7 +262,7 @@ impl GeneralAdmm {
             r_at_u: Estimate::new(r0.clone()),
             s_at_u: Estimate::new(s0.clone()),
             s_at_u_prev: s0.clone(),
-            comp: cfg.compressor.build::<f64>(),
+            core,
             cfg,
             a,
             c,
@@ -305,8 +273,12 @@ impl GeneralAdmm {
             r: r0,
             s: s0,
             u: u0,
-            round_idx: 0,
         }
+    }
+
+    /// Rounds completed so far.
+    pub fn round_idx(&self) -> usize {
+        self.core.round_idx
     }
 
     /// One synchronous round of Alg. 2.
@@ -324,8 +296,22 @@ impl GeneralAdmm {
             .collect();
         self.x = self.f.solve_x(&self.a, &dir, rho);
         self.r = self.a.matvec(&self.x);
-        self.line_rs.send(&self.r, &mut self.r_at_s, self.comp.as_ref(), rng);
-        self.line_ru.send(&self.r, &mut self.r_at_u, self.comp.as_ref(), rng);
+        if let Some(msg) = self.line_rs.offer_send(
+            &self.r,
+            self.core.comp.as_ref(),
+            rng,
+            &mut self.core.scratch,
+        ) {
+            self.r_at_s.apply_msg(&msg);
+        }
+        if let Some(msg) = self.line_ru.offer_send(
+            &self.r,
+            self.core.comp.as_ref(),
+            rng,
+            &mut self.core.scratch,
+        ) {
+            self.r_at_u.apply_msg(&msg);
+        }
 
         // ---- s-agent: z-update ----
         // w = α r̂ˢ − (1−α) s_k + û ˢ − α c   (note: uses the s-agent's own
@@ -340,11 +326,25 @@ impl GeneralAdmm {
         let (z, s_new) = self.zprox.update(&w, rho);
         self.z = z;
         self.s = s_new;
-        self.line_sr.send(&self.s, &mut self.s_at_r, self.comp.as_ref(), rng);
+        if let Some(msg) = self.line_sr.offer_send(
+            &self.s,
+            self.core.comp.as_ref(),
+            rng,
+            &mut self.core.scratch,
+        ) {
+            self.s_at_r.apply_msg(&msg);
+        }
         // u-agent needs ŝᵘ_k and ŝᵘ_{k+1}: stash prev before delivery
         self.s_at_u_prev.clear();
         self.s_at_u_prev.extend_from_slice(self.s_at_u.get());
-        self.line_su.send(&self.s, &mut self.s_at_u, self.comp.as_ref(), rng);
+        if let Some(msg) = self.line_su.offer_send(
+            &self.s,
+            self.core.comp.as_ref(),
+            rng,
+            &mut self.core.scratch,
+        ) {
+            self.s_at_u.apply_msg(&msg);
+        }
 
         // ---- u-agent ----
         // u_{k+1} = u_k + α r̂ᵘ_{k+1} − (1−α) ŝᵘ_k + ŝᵘ_{k+1} − α c
@@ -354,25 +354,44 @@ impl GeneralAdmm {
                 + self.s_at_u.get()[j]
                 - alpha * self.c[j];
         }
-        self.line_ur.send(&self.u, &mut self.u_at_r, self.comp.as_ref(), rng);
-        self.line_us.send(&self.u, &mut self.u_at_s, self.comp.as_ref(), rng);
+        if let Some(msg) = self.line_ur.offer_send(
+            &self.u,
+            self.core.comp.as_ref(),
+            rng,
+            &mut self.core.scratch,
+        ) {
+            self.u_at_r.apply_msg(&msg);
+        }
+        if let Some(msg) = self.line_us.offer_send(
+            &self.u,
+            self.core.comp.as_ref(),
+            rng,
+            &mut self.core.scratch,
+        ) {
+            self.u_at_s.apply_msg(&msg);
+        }
 
-        self.round_idx += 1;
-        if self.cfg.reset_period > 0
-            && self.round_idx % self.cfg.reset_period == 0
-        {
+        if self.core.finish_round(self.cfg.reset_period) {
             self.reset();
         }
     }
 
-    /// Full resynchronization of all six lines (each counted as an event).
+    /// Full resynchronization of all six lines (each counted as an
+    /// event; one dense sync charged per line with the same drop
+    /// supersession rule as every engine — see [`EventLine::resync`]).
     pub fn reset(&mut self) {
-        self.line_rs.reset(&self.r, &mut self.r_at_s);
-        self.line_ru.reset(&self.r, &mut self.r_at_u);
-        self.line_sr.reset(&self.s, &mut self.s_at_r);
-        self.line_su.reset(&self.s, &mut self.s_at_u);
-        self.line_ur.reset(&self.u, &mut self.u_at_r);
-        self.line_us.reset(&self.u, &mut self.u_at_s);
+        self.line_rs.resync(&self.r);
+        self.r_at_s.reset_to(&self.r);
+        self.line_ru.resync(&self.r);
+        self.r_at_u.reset_to(&self.r);
+        self.line_sr.resync(&self.s);
+        self.s_at_r.reset_to(&self.s);
+        self.line_su.resync(&self.s);
+        self.s_at_u.reset_to(&self.s);
+        self.line_ur.resync(&self.u);
+        self.u_at_r.reset_to(&self.u);
+        self.line_us.resync(&self.u);
+        self.u_at_s.reset_to(&self.u);
     }
 
     /// Constraint residual `|Ax + Bz − c|`.
@@ -386,8 +405,7 @@ impl GeneralAdmm {
             .sqrt()
     }
 
-    /// Total triggered events over all six lines.
-    pub fn total_events(&self) -> u64 {
+    fn lines(&self) -> [&EventLine<f64>; 6] {
         [
             &self.line_rs,
             &self.line_ru,
@@ -396,32 +414,21 @@ impl GeneralAdmm {
             &self.line_ur,
             &self.line_us,
         ]
-        .iter()
-        .map(|l| l.trig.events)
-        .sum()
+    }
+
+    /// Total triggered events over all six lines.
+    pub fn total_events(&self) -> u64 {
+        core::events_sum(self.lines())
     }
 
     /// Load normalized by full communication (6 lines per round).
     pub fn comm_load(&self) -> f64 {
-        if self.round_idx == 0 {
-            return 0.0;
-        }
-        self.total_events() as f64 / (6.0 * self.round_idx as f64)
+        self.core.comm_load(self.total_events(), 6.0)
     }
 
     /// Total bytes put on the wire across all six lines.
     pub fn total_wire_bytes(&self) -> u64 {
-        [
-            &self.line_rs,
-            &self.line_ru,
-            &self.line_sr,
-            &self.line_su,
-            &self.line_ur,
-            &self.line_us,
-        ]
-        .iter()
-        .map(|l| l.ch.stats.sent_bytes)
-        .sum()
+        core::bytes_sum(self.lines())
     }
 
     /// Per-line `(label, ChannelStats)` snapshot for byte accounting.
@@ -458,6 +465,7 @@ impl GeneralAdmm {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+    use crate::wire::WireMessage;
 
     /// min ½|Dx−b|² s.t. x − z = 0, g = 0  →  x* = argmin ½|Dx−b|².
     fn ls_consensus(

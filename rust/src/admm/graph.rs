@@ -18,11 +18,12 @@
 //! randomized/participation variants — App. G.3 compares against a purely
 //! random selection).
 
-use crate::comm::{DropChannel, Estimate, Scalar, Trigger, TriggerState};
+use super::core::{BroadcastLine, RoundCore};
+use crate::comm::{Estimate, Scalar, Trigger};
 use crate::rng::Pcg64;
 use crate::solver::LocalSolver;
 use crate::topology::Graph;
-use crate::wire::{Compressor, CompressorCfg, ErrorFeedback};
+use crate::wire::CompressorCfg;
 
 #[derive(Clone, Debug)]
 pub struct GraphConfig {
@@ -35,6 +36,10 @@ pub struct GraphConfig {
     /// Broadcast compressor (one compressed message per event, fanned out
     /// to every neighbor); `Identity` reproduces the uncompressed engine.
     pub compressor: CompressorCfg,
+    /// Worker threads for the per-agent local-solve phase; 0 = auto
+    /// (`DELUXE_WORKERS`, else one per core).  Trajectories are
+    /// bit-identical for every value (see `admm::core`).
+    pub workers: usize,
 }
 
 impl Default for GraphConfig {
@@ -46,6 +51,7 @@ impl Default for GraphConfig {
             drop_rate: 0.0,
             reset_period: 0,
             compressor: CompressorCfg::Identity,
+            workers: 0,
         }
     }
 }
@@ -56,24 +62,71 @@ struct GraphAgent<T: Scalar> {
     xbar: Vec<T>,
     /// Estimates of each neighbor's model, keyed by position in `nbrs`.
     nbr_est: Vec<Estimate<T>>,
-    /// One broadcast trigger (an event sends to ALL neighbors, as in the
+    /// One broadcast trigger + error feedback fanned out over per-link
+    /// lossy channels (an event sends to ALL neighbors, as in the
     /// paper's Fig. 6 diagram).
-    x_trig: TriggerState<T>,
-    /// One lossy channel per neighbor link.
-    channels: Vec<DropChannel>,
-    /// Error feedback for the broadcast compressor.
-    ef: ErrorFeedback<T>,
+    bcast: BroadcastLine<T>,
 }
 
-/// Decentralized event-based consensus ADMM.
+/// Group agents by degree — the static partition behind the
+/// degree-dependent prox weights `ρ_i = |N_i|·ρ` (computed once at
+/// engine construction; ascending ids within each class).
+fn degree_classes(nbrs: &[Vec<usize>]) -> Vec<(usize, Vec<usize>)> {
+    let mut by_deg: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for (i, nb) in nbrs.iter().enumerate() {
+        by_deg.entry(nb.len().max(1)).or_default().push(i);
+    }
+    by_deg.into_iter().collect()
+}
+
+/// Run the per-agent prox solves class-by-class: each degree class runs
+/// as one `solve_batch` on the worker pool with its own weight.  Every
+/// agent still draws from its own forked stream, so the result is
+/// bit-identical for any worker count and any class interleaving.
+fn solve_degree_weighted<T: Scalar>(
+    solver: &mut dyn LocalSolver<T>,
+    classes: &[(usize, Vec<usize>)],
+    anchors: Vec<Vec<T>>,
+    rho: f64,
+    rngs: &[Pcg64],
+    core: &RoundCore<T>,
+) -> Vec<Vec<T>> {
+    let n = anchors.len();
+    let mut anchors: Vec<Option<Vec<T>>> =
+        anchors.into_iter().map(Some).collect();
+    let mut out: Vec<Option<Vec<T>>> = (0..n).map(|_| None).collect();
+    for (deg, agents) in classes {
+        let sub_anchors: Vec<Vec<T>> = agents
+            .iter()
+            .map(|&i| anchors[i].take().expect("one class per agent"))
+            .collect();
+        let mut sub_rngs: Vec<Pcg64> =
+            agents.iter().map(|&i| rngs[i].clone()).collect();
+        let xs = solver.solve_batch(
+            agents,
+            &sub_anchors,
+            *deg as f64 * rho,
+            &mut sub_rngs,
+            &core.pool,
+        );
+        for (&i, x) in agents.iter().zip(xs) {
+            out[i] = Some(x);
+        }
+    }
+    out.into_iter().map(|x| x.expect("every agent solved")).collect()
+}
+
+/// Decentralized event-based consensus ADMM, on the shared round core.
 pub struct GraphAdmm<T: Scalar> {
     pub cfg: GraphConfig,
     pub graph: Graph,
     nbrs: Vec<Vec<usize>>,
+    /// Agents grouped by degree (fixed topology ⇒ computed once).
+    deg_classes: Vec<(usize, Vec<usize>)>,
     agents: Vec<GraphAgent<T>>,
     pub dim: usize,
-    pub round_idx: usize,
-    comp: Box<dyn Compressor<T>>,
+    core: RoundCore<T>,
 }
 
 impl<T: Scalar> GraphAdmm<T> {
@@ -99,41 +152,59 @@ impl<T: Scalar> GraphAdmm<T> {
                     .iter()
                     .map(|_| Estimate::new(x0.clone()))
                     .collect(),
-                x_trig: TriggerState::new(cfg.trigger_x, x0.clone()),
-                channels: nbrs[i]
-                    .iter()
-                    .map(|_| DropChannel::new(cfg.drop_rate))
-                    .collect(),
-                ef: ErrorFeedback::new(),
+                bcast: BroadcastLine::new(
+                    cfg.trigger_x,
+                    x0.clone(),
+                    nbrs[i].len(),
+                    cfg.drop_rate,
+                ),
             })
             .collect();
-        let comp = cfg.compressor.build::<T>();
-        GraphAdmm { cfg, graph, nbrs, agents, dim, round_idx: 0, comp }
+        let core =
+            RoundCore::new(graph.n, dim, &cfg.compressor, cfg.workers);
+        let deg_classes = degree_classes(&nbrs);
+        GraphAdmm { cfg, graph, nbrs, deg_classes, agents, dim, core }
+    }
+
+    /// Rounds completed so far.
+    pub fn round_idx(&self) -> usize {
+        self.core.round_idx
     }
 
     /// One synchronous round over the whole network.
     pub fn round(&mut self, solver: &mut dyn LocalSolver<T>, rng: &mut Pcg64) {
         let rho = self.cfg.rho;
         let n = self.graph.n;
+        let solve_base = rng.clone();
 
-        // 1. local prox solves
-        let mut new_x: Vec<Vec<T>> = Vec::with_capacity(n);
-        for i in 0..n {
-            let deg = self.nbrs[i].len().max(1) as f64;
-            let a = &self.agents[i];
+        // 1. local prox solves: anchors sequentially, then the solve
+        //    phase on the worker pool (one forked RNG stream per agent,
+        //    deterministic for every worker count — see admm::core)
+        let mut anchors: Vec<Vec<T>> = Vec::with_capacity(n);
+        for a in &self.agents {
             // anchor = ½(x_i + x̄_i) − p_i/ρ
-            let anchor: Vec<T> = (0..self.dim)
-                .map(|j| {
-                    T::from_f64(
-                        0.5 * (a.x[j].to_f64() + a.xbar[j].to_f64())
-                            - a.p[j].to_f64() / rho,
-                    )
-                })
-                .collect();
-            new_x.push(solver.solve(i, &anchor, deg * rho, rng));
+            anchors.push(
+                (0..self.dim)
+                    .map(|j| {
+                        T::from_f64(
+                            0.5 * (a.x[j].to_f64() + a.xbar[j].to_f64())
+                                - a.p[j].to_f64() / rho,
+                        )
+                    })
+                    .collect(),
+            );
         }
-        for i in 0..n {
-            self.agents[i].x = new_x[i].clone();
+        let rngs = self.core.round_solve_rngs(&solve_base);
+        let new_x = solve_degree_weighted(
+            solver,
+            &self.deg_classes,
+            anchors,
+            rho,
+            &rngs,
+            &self.core,
+        );
+        for (a, x) in self.agents.iter_mut().zip(new_x) {
+            a.x = x;
         }
 
         // 2. event-based broadcast of x to neighbors: one compressed
@@ -141,19 +212,19 @@ impl<T: Scalar> GraphAdmm<T> {
         //    accounting
         for i in 0..n {
             let xi = self.agents[i].x.clone();
-            for ch in &mut self.agents[i].channels {
-                ch.mark_round();
-            }
-            if let Some(delta) = self.agents[i].x_trig.offer(&xi, rng) {
-                let msg = {
-                    let comp = self.comp.as_ref();
-                    self.agents[i].ef.compress(&delta, comp, rng)
-                };
+            let msg = self.agents[i].bcast.offer_compress(
+                &xi,
+                self.core.comp.as_ref(),
+                rng,
+                &mut self.core.scratch,
+            );
+            if let Some(msg) = msg {
                 let bytes = msg.wire_bytes() as u64;
                 // deliver to each neighbor j over the (i -> j) link
                 for (li, &j) in self.nbrs[i].clone().iter().enumerate() {
-                    let sent = self.agents[i].channels[li]
-                        .transmit_bytes(msg.clone(), bytes, rng);
+                    let sent = self.agents[i]
+                        .bcast
+                        .transmit(li, msg.clone(), bytes, rng);
                     if let Some(m) = sent {
                         // neighbor j's estimate slot for i
                         let slot = self.nbrs[j]
@@ -186,10 +257,7 @@ impl<T: Scalar> GraphAdmm<T> {
             }
         }
 
-        self.round_idx += 1;
-        if self.cfg.reset_period > 0
-            && self.round_idx % self.cfg.reset_period == 0
-        {
+        if self.core.finish_round(self.cfg.reset_period) {
             self.reset();
         }
     }
@@ -198,16 +266,13 @@ impl<T: Scalar> GraphAdmm<T> {
     /// agent; charges one dense message per link and drops any carried
     /// compression residual).  A broadcast that triggered but dropped on
     /// a link in the same round is superseded by the sync on that link
-    /// (see [`DropChannel::charge_sync`]).
+    /// (see [`crate::comm::DropChannel::charge_sync`] /
+    /// [`BroadcastLine::resync`]).
     pub fn reset(&mut self) {
-        let sync_bytes =
-            crate::wire::WireMessage::<T>::dense_bytes(self.dim) as u64;
         for i in 0..self.graph.n {
             let xi = self.agents[i].x.clone();
-            self.agents[i].x_trig.reset(&xi);
-            self.agents[i].ef.clear();
-            for (li, &j) in self.nbrs[i].clone().iter().enumerate() {
-                self.agents[i].channels[li].charge_sync(sync_bytes);
+            self.agents[i].bcast.resync(&xi);
+            for &j in self.nbrs[i].clone().iter() {
                 let slot = self.nbrs[j]
                     .iter()
                     .position(|&v| v == i)
@@ -257,7 +322,7 @@ impl<T: Scalar> GraphAdmm<T> {
     /// Total broadcast events (each event = one neighborhood broadcast;
     /// multiply by degree for link-level counting).
     pub fn total_events(&self) -> u64 {
-        self.agents.iter().map(|a| a.x_trig.events).sum()
+        self.agents.iter().map(|a| a.bcast.events()).sum()
     }
 
     /// Link-level events: Σ_i events_i * deg_i.
@@ -265,18 +330,14 @@ impl<T: Scalar> GraphAdmm<T> {
         self.agents
             .iter()
             .enumerate()
-            .map(|(i, a)| a.x_trig.events * self.nbrs[i].len() as u64)
+            .map(|(i, a)| a.bcast.events() * self.nbrs[i].len() as u64)
             .sum()
     }
 
     /// Load normalized by full communication (every agent broadcasting
     /// every round).
     pub fn comm_load(&self) -> f64 {
-        if self.round_idx == 0 {
-            return 0.0;
-        }
-        self.total_events() as f64
-            / (self.graph.n as f64 * self.round_idx as f64)
+        self.core.comm_load(self.total_events(), self.graph.n as f64)
     }
 
     /// Total bytes put on the wire across every directed link.
@@ -284,7 +345,11 @@ impl<T: Scalar> GraphAdmm<T> {
         self.agents
             .iter()
             .map(|a| {
-                a.channels.iter().map(|c| c.stats.sent_bytes).sum::<u64>()
+                a.bcast
+                    .channels
+                    .iter()
+                    .map(|c| c.stats.sent_bytes)
+                    .sum::<u64>()
             })
             .sum()
     }

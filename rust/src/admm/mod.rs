@@ -1,5 +1,10 @@
-//! The paper's algorithms.
+//! The paper's algorithms, all built on one shared round core.
 //!
+//! * [`core`] — the unified engine substrate: [`core::EventLine`] /
+//!   [`core::BroadcastLine`] communication lines, [`core::RoundCore`]
+//!   round/reset cadence + stats aggregation, and the deterministic
+//!   [`core::WorkerPool`] executing the per-agent local-solve phase in
+//!   parallel (bit-identical for every `--workers` value).
 //! * [`consensus`] — Alg. 1: event-based consensus ADMM (server–client).
 //! * [`general`] — Alg. 2: event-based over-relaxed ADMM for
 //!   `min f(x) + g(z) s.t. Ax + Bz = c` with r/s/u agents (App. C).
@@ -8,11 +13,13 @@
 //! * [`sharing`] — the sharing problem (Eqs. 5–6, App. A.1).
 
 pub mod consensus;
+pub mod core;
 pub mod general;
 pub mod graph;
 pub mod sharing;
 
 pub use consensus::{ConsensusAdmm, ConsensusConfig};
 pub use general::{GeneralAdmm, GeneralConfig, QuadraticF, ZProx};
+pub use self::core::{BroadcastLine, EventLine, RoundCore, WorkerPool};
 pub use graph::{GraphAdmm, GraphConfig};
 pub use sharing::{SharingAdmm, SharingConfig};

@@ -10,9 +10,11 @@
 //! proxes `g`, updates the dual and broadcasts `h = x̄ − z + u/ρ`
 //! event-wise.
 
-use crate::comm::{DropChannel, Estimate, Trigger, TriggerState};
+use super::core::{self, EventLine, RoundCore};
+use crate::comm::{Estimate, Trigger};
 use crate::rng::Pcg64;
 use crate::solver::LocalSolver;
+use crate::wire::{CompressorCfg, WireStats};
 
 /// The coupling function `g` applied to the *sum* `y = Σ_i x_i = N z`.
 #[derive(Clone, Copy, Debug)]
@@ -52,6 +54,15 @@ pub struct SharingConfig {
     pub drop_rate: f64,
     pub reset_period: usize,
     pub g: SharingG,
+    /// Delta compressor on both lines (unification bonus: the sharing
+    /// engine now rides the same codec path as the other engines, so it
+    /// gets byte accounting and compression for free).  `Identity`
+    /// reproduces the uncompressed protocol bit-for-bit.
+    pub compressor: CompressorCfg,
+    /// Worker threads for the per-agent local-solve phase; 0 = auto
+    /// (`DELUXE_WORKERS`, else one per core).  Trajectories are
+    /// bit-identical for every value (see `admm::core`).
+    pub workers: usize,
 }
 
 impl Default for SharingConfig {
@@ -64,6 +75,8 @@ impl Default for SharingConfig {
             drop_rate: 0.0,
             reset_period: 0,
             g: SharingG::Zero,
+            compressor: CompressorCfg::Identity,
+            workers: 0,
         }
     }
 }
@@ -71,15 +84,15 @@ impl Default for SharingConfig {
 struct ShareAgent {
     x: Vec<f64>,
     hhat: Estimate<f64>,
-    x_trig: TriggerState<f64>,
-    up_ch: DropChannel,
-    h_trig: TriggerState<f64>,
-    down_ch: DropChannel,
+    /// Agent → server x-line.
+    up: EventLine<f64>,
+    /// Server → agent h-line.
+    down: EventLine<f64>,
     /// server-side estimate of this agent's x
     xhat: Estimate<f64>,
 }
 
-/// Event-based ADMM for the sharing problem.
+/// Event-based ADMM for the sharing problem, on the shared round core.
 pub struct SharingAdmm {
     pub cfg: SharingConfig,
     pub n: usize,
@@ -88,7 +101,7 @@ pub struct SharingAdmm {
     pub u: Vec<f64>,
     pub h: Vec<f64>,
     agents: Vec<ShareAgent>,
-    pub round_idx: usize,
+    core: RoundCore<f64>,
 }
 
 impl SharingAdmm {
@@ -98,13 +111,20 @@ impl SharingAdmm {
             .map(|_| ShareAgent {
                 x: zeros.clone(),
                 hhat: Estimate::new(zeros.clone()),
-                x_trig: TriggerState::new(cfg.trigger_x, zeros.clone()),
-                up_ch: DropChannel::new(cfg.drop_rate),
-                h_trig: TriggerState::new(cfg.trigger_h, zeros.clone()),
-                down_ch: DropChannel::new(cfg.drop_rate),
+                up: EventLine::new(
+                    cfg.trigger_x,
+                    zeros.clone(),
+                    cfg.drop_rate,
+                ),
+                down: EventLine::new(
+                    cfg.trigger_h,
+                    zeros.clone(),
+                    cfg.drop_rate,
+                ),
                 xhat: Estimate::new(zeros.clone()),
             })
             .collect();
+        let core = RoundCore::new(n, dim, &cfg.compressor, cfg.workers);
         SharingAdmm {
             cfg,
             n,
@@ -113,8 +133,13 @@ impl SharingAdmm {
             u: zeros.clone(),
             h: zeros,
             agents,
-            round_idx: 0,
+            core,
         }
+    }
+
+    /// Rounds completed so far.
+    pub fn round_idx(&self) -> usize {
+        self.core.round_idx
     }
 
     pub fn round(
@@ -123,22 +148,40 @@ impl SharingAdmm {
         rng: &mut Pcg64,
     ) {
         let rho = self.cfg.rho;
+        let solve_base = rng.clone();
 
-        // agents: x_i ← argmin f_i(x) + (ρ/2)|x − x_i + ĥ|²
-        for (i, a) in self.agents.iter_mut().enumerate() {
-            let anchor: Vec<f64> = a
-                .x
-                .iter()
-                .zip(a.hhat.get())
-                .map(|(&x, &h)| x - h)
-                .collect();
-            a.x = solver.solve(i, &anchor, rho, rng);
-            // event send x_i to the server
+        // agents: x_i ← argmin f_i(x) + (ρ/2)|x − x_i + ĥ|² — anchors
+        // sequentially, the solve phase on the worker pool (one forked
+        // RNG stream per agent, bit-identical for any worker count)
+        let anchors: Vec<Vec<f64>> = self
+            .agents
+            .iter()
+            .map(|a| {
+                a.x.iter()
+                    .zip(a.hhat.get())
+                    .map(|(&x, &h)| x - h)
+                    .collect()
+            })
+            .collect();
+        let mut rngs = self.core.round_solve_rngs(&solve_base);
+        let xs = solver.solve_batch(
+            self.core.agent_ids(),
+            &anchors,
+            rho,
+            &mut rngs,
+            &self.core.pool,
+        );
+        // ordered reduction: event send x_i to the server, agent order
+        for (a, x) in self.agents.iter_mut().zip(xs) {
+            a.x = x;
             let xi = a.x.clone();
-            if let Some(delta) = a.x_trig.offer(&xi, rng) {
-                if let Some(delta) = a.up_ch.transmit(delta, rng) {
-                    a.xhat.apply(&delta);
-                }
+            if let Some(msg) = a.up.offer_send(
+                &xi,
+                self.core.comp.as_ref(),
+                rng,
+                &mut self.core.scratch,
+            ) {
+                a.xhat.apply_msg(&msg);
             }
         }
 
@@ -165,25 +208,32 @@ impl SharingAdmm {
         // event broadcast of h on each downlink
         let h = self.h.clone();
         for a in &mut self.agents {
-            if let Some(delta) = a.h_trig.offer(&h, rng) {
-                if let Some(delta) = a.down_ch.transmit(delta, rng) {
-                    a.hhat.apply(&delta);
-                }
+            if let Some(msg) = a.down.offer_send(
+                &h,
+                self.core.comp.as_ref(),
+                rng,
+                &mut self.core.scratch,
+            ) {
+                a.hhat.apply_msg(&msg);
             }
         }
 
-        self.round_idx += 1;
-        if self.cfg.reset_period > 0
-            && self.round_idx % self.cfg.reset_period == 0
-        {
-            let h = self.h.clone();
-            for a in &mut self.agents {
-                let xi = a.x.clone();
-                a.x_trig.reset(&xi);
-                a.xhat.reset_to(&xi);
-                a.h_trig.reset(&h);
-                a.hhat.reset_to(&h);
-            }
+        if self.core.finish_round(self.cfg.reset_period) {
+            self.reset();
+        }
+    }
+
+    /// Full resynchronization of both lines for every agent (one dense
+    /// sync per line, triggers advanced, residuals dropped — see
+    /// [`EventLine::resync`]).
+    pub fn reset(&mut self) {
+        let h = self.h.clone();
+        for a in &mut self.agents {
+            let xi = a.x.clone();
+            a.up.resync(&xi);
+            a.xhat.reset_to(&xi);
+            a.down.resync(&h);
+            a.hhat.reset_to(&h);
         }
     }
 
@@ -203,25 +253,35 @@ impl SharingAdmm {
     }
 
     pub fn total_events(&self) -> u64 {
-        self.agents
-            .iter()
-            .map(|a| a.x_trig.events + a.h_trig.events)
-            .sum()
+        core::events_sum(self.agents.iter().map(|a| &a.up))
+            + core::events_sum(self.agents.iter().map(|a| &a.down))
     }
 
     pub fn comm_load(&self) -> f64 {
-        if self.round_idx == 0 {
-            return 0.0;
-        }
-        self.total_events() as f64
-            / (2.0 * self.n as f64 * self.round_idx as f64)
+        self.core.comm_load(self.total_events(), 2.0 * self.n as f64)
+    }
+
+    /// Total sent bytes `(uplink, downlink)` — new with the unified
+    /// codec path: the sharing engine's traffic is now byte-accurate.
+    pub fn bytes_split(&self) -> (u64, u64) {
+        (
+            core::bytes_sum(self.agents.iter().map(|a| &a.up)),
+            core::bytes_sum(self.agents.iter().map(|a| &a.down)),
+        )
+    }
+
+    /// Byte-accurate per-agent wire accounting (both directions).
+    pub fn wire_stats(&self) -> WireStats {
+        core::wire_stats(
+            self.agents.iter().map(|a| &a.up),
+            self.agents.iter().map(|a| &a.down),
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::dist2;
 
     /// f_i(x) = 0.5 w_i |x − c_i|² over R^1.
     struct Quad {

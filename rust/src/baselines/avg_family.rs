@@ -4,14 +4,21 @@
 //! `f_i(x) + (μ/2)|x − z|²` with `μ = 0` for FedAvg; the server averages
 //! the models of the randomly selected cohort.
 
+use crate::admm::core::WorkerPool;
 use crate::data::synth::ClassDataset;
 use crate::model::MlpSpec;
 use crate::rng::{Pcg64, Rng};
+use crate::solver::draw_round_batches;
 use crate::wire::{ByteTally, WireMessage};
 
 /// Local-update backend shared by every baseline: runs S (prox-/corrected-)
 /// SGD steps *starting from a given point* (baselines restart from the
 /// global model each round, unlike ADMM's warm-started agents).
+///
+/// The `*_batch` methods follow the same determinism contract as
+/// `LocalSolver::solve_batch` (see `solver`'s module docs): one forked
+/// RNG stream per cohort member, results in cohort order, bit-identical
+/// for every worker count.
 pub trait FedLocal {
     fn dim(&self) -> usize;
     fn n_agents(&self) -> usize;
@@ -34,6 +41,45 @@ pub trait FedLocal {
         corr: &[f32],
         rng: &mut Pcg64,
     ) -> Vec<f32>;
+
+    /// Run [`Self::sgd_prox`] for a whole cohort; `rngs[j]` drives
+    /// `cohort[j]`.  Default: sequential on the caller's thread.
+    fn sgd_prox_batch(
+        &mut self,
+        cohort: &[usize],
+        start: &[f32],
+        anchor: &[f32],
+        mu: f64,
+        rngs: &mut [Pcg64],
+        _pool: &WorkerPool,
+    ) -> Vec<Vec<f32>> {
+        debug_assert_eq!(cohort.len(), rngs.len());
+        cohort
+            .iter()
+            .zip(rngs.iter_mut())
+            .map(|(&i, rng)| self.sgd_prox(i, start, anchor, mu, rng))
+            .collect()
+    }
+
+    /// Run [`Self::sgd_corr`] for a whole cohort with per-member
+    /// corrections; `rngs[j]` drives `cohort[j]`.  Default: sequential.
+    fn sgd_corr_batch(
+        &mut self,
+        cohort: &[usize],
+        start: &[f32],
+        corrs: &[Vec<f32>],
+        rngs: &mut [Pcg64],
+        _pool: &WorkerPool,
+    ) -> Vec<Vec<f32>> {
+        debug_assert_eq!(cohort.len(), corrs.len());
+        debug_assert_eq!(cohort.len(), rngs.len());
+        cohort
+            .iter()
+            .zip(corrs)
+            .zip(rngs.iter_mut())
+            .map(|((&i, corr), rng)| self.sgd_corr(i, start, corr, rng))
+            .collect()
+    }
 }
 
 /// Native-MLP backend (the PJRT twin lives in `runtime::PjrtFed`).
@@ -57,16 +103,13 @@ impl NativeFed {
     }
 
     fn batches(&self, agent: usize, rng: &mut Pcg64) -> (Vec<f32>, Vec<f32>) {
-        let d = self.spec.input_dim();
-        let c = self.spec.classes();
-        let mut xs = Vec::with_capacity(self.steps * self.batch * d);
-        let mut ys = Vec::with_capacity(self.steps * self.batch * c);
-        for _ in 0..self.steps {
-            let (bx, by) = self.shards[agent].sample_batch(self.batch, rng);
-            xs.extend_from_slice(&bx);
-            ys.extend_from_slice(&by);
-        }
-        (xs, ys)
+        draw_round_batches(
+            &self.spec,
+            &self.shards[agent],
+            self.steps,
+            self.batch,
+            rng,
+        )
     }
 }
 
@@ -113,6 +156,95 @@ impl FedLocal for NativeFed {
         self.spec
             .local_scaffold(start, corr, &xs, &ys, self.lr, self.steps, self.batch)
     }
+
+    /// Pool-sharded cohort: the native backend has no per-agent mutable
+    /// state (baselines restart from the global model), so workers share
+    /// the spec/shards read-only and each member draws from its own
+    /// stream.
+    fn sgd_prox_batch(
+        &mut self,
+        cohort: &[usize],
+        start: &[f32],
+        anchor: &[f32],
+        mu: f64,
+        rngs: &mut [Pcg64],
+        pool: &WorkerPool,
+    ) -> Vec<Vec<f32>> {
+        debug_assert_eq!(cohort.len(), rngs.len());
+        struct Job<'a> {
+            agent: usize,
+            rng: &'a mut Pcg64,
+            out: Vec<f32>,
+        }
+        let mut jobs: Vec<Job> = cohort
+            .iter()
+            .zip(rngs.iter_mut())
+            .map(|(&agent, rng)| Job { agent, rng, out: Vec::new() })
+            .collect();
+        let spec = &self.spec;
+        let shards = &self.shards;
+        let (lr, steps, batch) = (self.lr, self.steps, self.batch);
+        pool.run(&mut jobs, |_, job| {
+            let (xs, ys) = draw_round_batches(
+                spec,
+                &shards[job.agent],
+                steps,
+                batch,
+                job.rng,
+            );
+            let zeros = vec![0.0f32; start.len()];
+            job.out = spec.local_admm(
+                start, anchor, &zeros, &xs, &ys, lr, mu as f32, steps,
+                batch,
+            );
+        });
+        jobs.into_iter().map(|j| j.out).collect()
+    }
+
+    fn sgd_corr_batch(
+        &mut self,
+        cohort: &[usize],
+        start: &[f32],
+        corrs: &[Vec<f32>],
+        rngs: &mut [Pcg64],
+        pool: &WorkerPool,
+    ) -> Vec<Vec<f32>> {
+        debug_assert_eq!(cohort.len(), corrs.len());
+        debug_assert_eq!(cohort.len(), rngs.len());
+        struct Job<'a> {
+            agent: usize,
+            corr: &'a [f32],
+            rng: &'a mut Pcg64,
+            out: Vec<f32>,
+        }
+        let mut jobs: Vec<Job> = cohort
+            .iter()
+            .zip(corrs)
+            .zip(rngs.iter_mut())
+            .map(|((&agent, corr), rng)| Job {
+                agent,
+                corr,
+                rng,
+                out: Vec::new(),
+            })
+            .collect();
+        let spec = &self.spec;
+        let shards = &self.shards;
+        let (lr, steps, batch) = (self.lr, self.steps, self.batch);
+        pool.run(&mut jobs, |_, job| {
+            let (xs, ys) = draw_round_batches(
+                spec,
+                &shards[job.agent],
+                steps,
+                batch,
+                job.rng,
+            );
+            job.out = spec.local_scaffold(
+                start, job.corr, &xs, &ys, lr, steps, batch,
+            );
+        });
+        jobs.into_iter().map(|j| j.out).collect()
+    }
 }
 
 /// FedAvg (`mu = 0`) / FedProx (`mu > 0`) engine.
@@ -127,6 +259,9 @@ pub struct AvgFamily {
     /// dense model uplink per round (the family transmits full models,
     /// not deltas, so the dense layout is the honest charge).
     pub wire: ByteTally,
+    /// Worker pool for the cohort's local solves (same contract as the
+    /// ADMM round core: bit-identical for every worker count).
+    pub pool: WorkerPool,
 }
 
 impl AvgFamily {
@@ -138,22 +273,25 @@ impl AvgFamily {
             events: 0,
             round_idx: 0,
             wire: ByteTally::default(),
+            pool: WorkerPool::new(0),
         }
     }
 
     pub fn fedprox(init: Vec<f32>, part_rate: f64, mu: f64) -> Self {
-        AvgFamily {
-            z: init,
-            mu,
-            part_rate,
-            events: 0,
-            round_idx: 0,
-            wire: ByteTally::default(),
-        }
+        AvgFamily { mu, ..AvgFamily::fedavg(init, part_rate) }
+    }
+
+    /// Set the local-solve worker count (0 = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.pool = WorkerPool::new(workers);
+        self
     }
 
     pub fn round(&mut self, local: &mut dyn FedLocal, rng: &mut Pcg64) {
         let n = local.n_agents();
+        // cohort selection stays on the caller's stream; the solves fork
+        // per-member streams off the round-entry state
+        let solve_base = rng.clone();
         let selected: Vec<usize> =
             (0..n).filter(|_| rng.bernoulli(self.part_rate)).collect();
         self.round_idx += 1;
@@ -163,9 +301,20 @@ impl AvgFamily {
         let model_bytes = WireMessage::<f32>::dense_bytes(self.z.len()) as u64;
         let mut acc = vec![0.0f64; self.z.len()];
         let anchor = self.z.clone();
-        for &i in &selected {
-            let y = local.sgd_prox(i, &self.z, &anchor, self.mu, rng);
-            for (a, &v) in acc.iter_mut().zip(&y) {
+        let mut rngs: Vec<Pcg64> = selected
+            .iter()
+            .map(|&i| solve_base.fork(self.round_idx as u64, i as u64))
+            .collect();
+        let ys = local.sgd_prox_batch(
+            &selected,
+            &self.z,
+            &anchor,
+            self.mu,
+            &mut rngs,
+            &self.pool,
+        );
+        for y in &ys {
+            for (a, &v) in acc.iter_mut().zip(y) {
                 *a += v as f64;
             }
             self.events += 2; // down (model) + up (update)

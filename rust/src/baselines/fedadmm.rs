@@ -24,12 +24,27 @@ impl<T: Scalar> FedAdmm<T> {
         part_rate: f64,
         rounds: usize,
     ) -> Self {
+        Self::with_workers(n, init, rho, part_rate, rounds, 0)
+    }
+
+    /// Like [`Self::new`] with an explicit local-solve worker count —
+    /// FedADMM rides the unified round core through [`ConsensusAdmm`],
+    /// so its cohort solves shard across the same pool.
+    pub fn with_workers(
+        n: usize,
+        init: Vec<T>,
+        rho: f64,
+        part_rate: f64,
+        rounds: usize,
+        workers: usize,
+    ) -> Self {
         let cfg = ConsensusConfig {
             rho,
             alpha: 1.0,
             rounds,
             trigger_d: Trigger::participation(part_rate),
             trigger_z: Trigger::participation(part_rate),
+            workers,
             ..Default::default()
         };
         FedAdmm { engine: ConsensusAdmm::new(cfg, n, init) }

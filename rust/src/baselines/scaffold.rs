@@ -14,6 +14,7 @@
 //! control variate) — the ×2 communication factor the paper charges it.
 
 use super::avg_family::FedLocal;
+use crate::admm::core::WorkerPool;
 use crate::rng::{Pcg64, Rng};
 use crate::wire::{ByteTally, WireMessage};
 
@@ -28,6 +29,9 @@ pub struct Scaffold {
     /// packages per direction per participating agent — model + control
     /// variate, the paper's ×2 factor made byte-exact.
     pub wire: ByteTally,
+    /// Worker pool for the cohort's local solves (same contract as the
+    /// ADMM round core: bit-identical for every worker count).
+    pub pool: WorkerPool,
 }
 
 impl Scaffold {
@@ -41,11 +45,19 @@ impl Scaffold {
             events: 0,
             round_idx: 0,
             wire: ByteTally::default(),
+            pool: WorkerPool::new(0),
         }
+    }
+
+    /// Set the local-solve worker count (0 = auto).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.pool = WorkerPool::new(workers);
+        self
     }
 
     pub fn round(&mut self, local: &mut dyn FedLocal, rng: &mut Pcg64) {
         let n = local.n_agents();
+        let solve_base = rng.clone();
         let selected: Vec<usize> =
             (0..n).filter(|_| rng.bernoulli(self.part_rate)).collect();
         self.round_idx += 1;
@@ -56,15 +68,30 @@ impl Scaffold {
         let dim = self.z.len();
         let mut dz = vec![0.0f64; dim];
         let mut dc = vec![0.0f64; dim];
-        for &i in &selected {
-            // corr = c − c_i
-            let corr: Vec<f32> = self
-                .c
-                .iter()
-                .zip(&self.ci[i])
-                .map(|(&c, &ci)| c - ci)
-                .collect();
-            let y = local.sgd_corr(i, &self.z, &corr, rng);
+        // corr_i = c − c_i, snapshotted per member before the solves
+        let corrs: Vec<Vec<f32>> = selected
+            .iter()
+            .map(|&i| {
+                self.c
+                    .iter()
+                    .zip(&self.ci[i])
+                    .map(|(&c, &ci)| c - ci)
+                    .collect()
+            })
+            .collect();
+        let mut rngs: Vec<Pcg64> = selected
+            .iter()
+            .map(|&i| solve_base.fork(self.round_idx as u64, i as u64))
+            .collect();
+        let ys = local.sgd_corr_batch(
+            &selected,
+            &self.z,
+            &corrs,
+            &mut rngs,
+            &self.pool,
+        );
+        // ordered reduction in cohort order
+        for (&i, y) in selected.iter().zip(&ys) {
             for j in 0..dim {
                 let ci_new = (self.ci[i][j] - self.c[j]) as f64
                     + (self.z[j] - y[j]) as f64 / k_lr;

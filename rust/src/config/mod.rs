@@ -17,7 +17,10 @@ pub struct RunConfig {
     pub seed: u64,
     /// Wire compressor (`--compressor none|topk:F|randk:F|quant:B|topkq:F:B`).
     pub compressor: CompressorCfg,
-    /// Sweep worker threads (`--workers N`); 0 = one per core.
+    /// Worker threads (`--workers N`) — both the scenario-sweep cells
+    /// and every engine's per-agent local-solve pool; 0 = auto (the
+    /// `DELUXE_WORKERS` env var if set, else one per core).  Results
+    /// are bit-identical for every value.
     pub workers: usize,
 }
 

@@ -23,6 +23,8 @@ pub struct Fig10Config {
     pub drop_rate: f64,
     pub lambda: f64,
     pub seed: u64,
+    /// Local-solve worker threads (0 = auto; bit-identical results).
+    pub workers: usize,
 }
 
 impl Default for Fig10Config {
@@ -39,6 +41,7 @@ impl Default for Fig10Config {
             drop_rate: 0.3,
             lambda: 0.1,
             seed: 0,
+            workers: 0,
         }
     }
 }
@@ -58,6 +61,7 @@ pub fn run_reset_period(
         trigger_z: Trigger::vanilla(cfg.delta),
         drop_up: cfg.drop_rate,
         reset_period,
+        workers: cfg.workers,
         ..Default::default()
     };
     let mut engine: ConsensusAdmm<f64> =

@@ -26,6 +26,8 @@ pub struct Fig11Config {
     pub batch: usize,
     pub eval_every: usize,
     pub seed: u64,
+    /// Local-solve worker threads (0 = auto; bit-identical results).
+    pub workers: usize,
 }
 
 impl Default for Fig11Config {
@@ -43,6 +45,7 @@ impl Default for Fig11Config {
             batch: 32,
             eval_every: 10,
             seed: 0,
+            workers: 0,
         }
     }
 }
@@ -96,6 +99,7 @@ pub fn run_strategy(
         rho: cfg.rho,
         rounds: cfg.rounds,
         trigger_x: strategy.trigger(),
+        workers: cfg.workers,
         ..Default::default()
     };
     let mut engine: GraphAdmm<f32> = GraphAdmm::new(gcfg, graph, init.clone());
@@ -158,6 +162,7 @@ mod tests {
             batch: 8,
             eval_every: 10,
             seed: 1,
+            ..Default::default()
         }
     }
 

@@ -24,6 +24,8 @@ pub struct Fig12Config {
     pub rounds: usize,
     pub rho: f64,
     pub seed: u64,
+    /// Local-solve worker threads (0 = auto; bit-identical results).
+    pub workers: usize,
 }
 
 impl Default for Fig12Config {
@@ -40,6 +42,7 @@ impl Default for Fig12Config {
             rounds: 2000,
             rho: 1e-5,
             seed: 0,
+            workers: 0,
         }
     }
 }
@@ -66,6 +69,7 @@ pub fn run_strategy(
         rho: cfg.rho,
         rounds: cfg.rounds,
         trigger_x: trigger,
+        workers: cfg.workers,
         ..Default::default()
     };
     let mut engine: GraphAdmm<f64> =
@@ -128,6 +132,7 @@ mod tests {
             rounds: 800,
             rho: 0.05,
             seed: 1,
+            ..Default::default()
         };
         let mut rng = Pcg64::seed(2);
         let prob = LassoProblem::generate(

@@ -21,6 +21,8 @@ pub struct Fig9Config {
     pub rho: f64,
     pub alpha: f64,
     pub seed: u64,
+    /// Local-solve worker threads (0 = auto; bit-identical results).
+    pub workers: usize,
 }
 
 impl Default for Fig9Config {
@@ -34,6 +36,7 @@ impl Default for Fig9Config {
             rho: 1.0,
             alpha: 1.0,
             seed: 0,
+            workers: 0,
         }
     }
 }
@@ -93,6 +96,7 @@ pub fn run_convex(
         rounds: cfg.rounds,
         trigger_d: td,
         trigger_z: tz,
+        workers: cfg.workers,
         ..Default::default()
     };
     let mut engine: ConsensusAdmm<f64> =

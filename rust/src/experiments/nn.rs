@@ -150,11 +150,16 @@ pub struct NnExperimentConfig {
     pub rounds: usize,
     pub eval_every: usize,
     pub seed: u64,
+    /// Local-solve worker threads (0 = auto; bit-identical results).
+    /// The PJRT backend keeps its sequential `solve_batch` default (the
+    /// runtime is single-threaded by design), so the knob only shards
+    /// the native backend.
+    pub workers: usize,
 }
 
 impl Default for NnExperimentConfig {
     fn default() -> Self {
-        NnExperimentConfig { rounds: 100, eval_every: 2, seed: 0 }
+        NnExperimentConfig { rounds: 100, eval_every: 2, seed: 0, workers: 0 }
     }
 }
 
@@ -178,6 +183,7 @@ pub fn run_algo(
         rounds: cfg.rounds,
         trigger_d,
         trigger_z,
+        workers: cfg.workers,
         ..Default::default()
     };
 
@@ -267,14 +273,16 @@ pub fn run_algo(
                 AvgFamily::fedprox(init.clone(), part, mu)
             } else {
                 AvgFamily::fedavg(init.clone(), part)
-            };
+            }
+            .with_workers(cfg.workers);
             run_fed(&mut rec, w, backend, cfg, &mut rng, |local, rng| {
                 eng.round(local, rng);
                 (eng.z.clone(), eng.events)
             });
         }
         Algo::Scaffold { part } => {
-            let mut eng = Scaffold::new(init.clone(), n, part);
+            let mut eng = Scaffold::new(init.clone(), n, part)
+                .with_workers(cfg.workers);
             run_fed(&mut rec, w, backend, cfg, &mut rng, |local, rng| {
                 eng.round(local, rng);
                 (eng.z.clone(), eng.events)
@@ -453,7 +461,7 @@ mod tests {
     #[test]
     fn tiny_alg1_learns_under_extreme_noniid() {
         let w = NnWorkload::tiny(1);
-        let cfg = NnExperimentConfig { rounds: 40, eval_every: 5, seed: 1 };
+        let cfg = NnExperimentConfig { rounds: 40, eval_every: 5, seed: 1, ..Default::default() };
         let rec = run_algo(
             &w,
             Algo::Alg1Vanilla { delta_d: 0.05, delta_z: 0.05 },
@@ -471,7 +479,7 @@ mod tests {
         // the paper's core claim: under one-class-per-agent splits,
         // ADMM-family >> FedAvg at equal budgets
         let w = NnWorkload::tiny(1);
-        let cfg = NnExperimentConfig { rounds: 40, eval_every: 5, seed: 1 };
+        let cfg = NnExperimentConfig { rounds: 40, eval_every: 5, seed: 1, ..Default::default() };
         let rec_admm = run_algo(
             &w,
             Algo::Alg1Vanilla { delta_d: 0.05, delta_z: 0.05 },
@@ -491,7 +499,7 @@ mod tests {
     #[test]
     fn events_to_targets_reports_na_for_unreachable() {
         let w = NnWorkload::tiny(2);
-        let cfg = NnExperimentConfig { rounds: 10, eval_every: 2, seed: 2 };
+        let cfg = NnExperimentConfig { rounds: 10, eval_every: 2, seed: 2, ..Default::default() };
         let rows = events_to_targets(
             &w,
             &[Algo::FedAvg { part: 0.5 }],
@@ -506,7 +514,7 @@ mod tests {
     #[test]
     fn scaffold_and_fedprox_run() {
         let w = NnWorkload::tiny(3);
-        let cfg = NnExperimentConfig { rounds: 10, eval_every: 5, seed: 3 };
+        let cfg = NnExperimentConfig { rounds: 10, eval_every: 5, seed: 3, ..Default::default() };
         for algo in [
             Algo::Scaffold { part: 0.8 },
             Algo::FedProx { part: 0.8, mu: 0.1 },

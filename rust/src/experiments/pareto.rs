@@ -35,6 +35,8 @@ pub struct ParetoConfig {
     pub deltas: Vec<f64>,
     /// Compressors swept against each threshold.
     pub compressors: Vec<CompressorCfg>,
+    /// Local-solve worker threads (0 = auto; bit-identical results).
+    pub workers: usize,
 }
 
 impl Default for ParetoConfig {
@@ -53,6 +55,7 @@ impl Default for ParetoConfig {
                 CompressorCfg::Quant { bits: 8 },
                 CompressorCfg::TopKQuant { frac: 0.05, bits: 8 },
             ],
+            workers: 0,
         }
     }
 }
@@ -90,6 +93,7 @@ pub fn run_point(
         trigger_d: Trigger::vanilla(delta),
         trigger_z: Trigger::vanilla(delta * 0.1),
         compressor,
+        workers: cfg.workers,
         ..Default::default()
     };
     let mut engine: ConsensusAdmm<f64> =

@@ -18,11 +18,14 @@ pub struct RatesConfig {
     pub rows: usize,
     pub rounds: usize,
     pub seed: u64,
+    /// Worker-pool knob threaded for CLI uniformity (Alg. 2 itself has
+    /// no per-agent solve phase).
+    pub workers: usize,
 }
 
 impl Default for RatesConfig {
     fn default() -> Self {
-        RatesConfig { dim: 8, rows: 60, rounds: 400, seed: 0 }
+        RatesConfig { dim: 8, rows: 60, rounds: 400, seed: 0, workers: 0 }
     }
 }
 
@@ -54,6 +57,7 @@ pub fn measure(delta: f64, alpha: f64, cfg: &RatesConfig) -> RateResult {
         rho,
         alpha,
         rounds: cfg.rounds,
+        workers: cfg.workers.max(1),
         ..Default::default()
     };
     if delta > 0.0 {

@@ -228,27 +228,45 @@ impl Cholesky {
 
     /// Solve `M x = b`.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        assert_eq!(b.len(), self.n);
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// Solve `M x = b` into a reusable output buffer — the
+    /// allocation-free twin of [`Self::solve`] for the per-agent prox
+    /// hot path (§Perf): identical arithmetic, zero intermediate
+    /// allocations.
+    pub fn solve_into(&self, b: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(b);
+        self.solve_in_place(out);
+    }
+
+    /// Solve `M x = b` in place (`x` holds `b` on entry, the solution on
+    /// exit).  Both triangular passes run in the buffer itself: the
+    /// forward pass reads `x[k < i]` (already `y`) and `x[i]` (still
+    /// `b`); the backward pass reads `x[k > i]` (already the solution)
+    /// and `x[i]` (still `y`) — bit-identical to the two-buffer form.
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
         let n = self.n;
         // forward: L y = b
-        let mut y = vec![0.0; n];
         for i in 0..n {
-            let mut sum = b[i];
+            let mut sum = x[i];
             for k in 0..i {
-                sum -= self.l[i * n + k] * y[k];
+                sum -= self.l[i * n + k] * x[k];
             }
-            y[i] = sum / self.l[i * n + i];
+            x[i] = sum / self.l[i * n + i];
         }
         // backward: Lᵀ x = y
-        let mut x = vec![0.0; n];
         for i in (0..n).rev() {
-            let mut sum = y[i];
+            let mut sum = x[i];
             for k in i + 1..n {
                 sum -= self.l[k * n + i] * x[k];
             }
             x[i] = sum / self.l[i * n + i];
         }
-        x
     }
 }
 
@@ -308,6 +326,15 @@ pub fn soft_threshold(v: &[f64], tau: f64) -> Vec<f64> {
     v.iter()
         .map(|&x| x.signum() * (x.abs() - tau).max(0.0))
         .collect()
+}
+
+/// Elementwise soft-threshold into a reusable buffer — the
+/// allocation-free twin of [`soft_threshold`] for hot loops (the FISTA
+/// reference solver and the per-round z-prox paths).  Identical values.
+pub fn soft_threshold_into(v: &[f64], tau: f64, out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(v.len());
+    out.extend(v.iter().map(|&x| x.signum() * (x.abs() - tau).max(0.0)));
 }
 
 #[cfg(test)]
@@ -422,6 +449,40 @@ mod tests {
         for (a, b) in out.iter().zip(&want) {
             assert!((a - b).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn soft_threshold_into_matches_and_reuses_capacity() {
+        let mut rng = Pcg64::seed(9);
+        let v: Vec<f64> = (0..64).map(|_| 3.0 * rng.normal()).collect();
+        let mut buf = Vec::with_capacity(64);
+        let cap = buf.capacity();
+        for tau in [0.0, 0.1, 1.0] {
+            soft_threshold_into(&v, tau, &mut buf);
+            assert_eq!(buf, soft_threshold(&v, tau), "tau = {tau}");
+        }
+        assert_eq!(buf.capacity(), cap, "hot path must not reallocate");
+    }
+
+    #[test]
+    fn cholesky_solve_into_matches_solve() {
+        let mut rng = Pcg64::seed(10);
+        let a = Matrix::randn(9, 6, &mut rng);
+        let mut g = a.gram();
+        g.add_diag(0.7);
+        let chol = Cholesky::factor(&g).unwrap();
+        let b: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let want = chol.solve(&b);
+        let mut out = Vec::with_capacity(6);
+        let cap = out.capacity();
+        chol.solve_into(&b, &mut out);
+        assert_eq!(out, want, "solve_into must be bit-identical");
+        chol.solve_into(&b, &mut out);
+        assert_eq!(out, want);
+        assert_eq!(out.capacity(), cap, "hot path must not reallocate");
+        let mut in_place = b.clone();
+        chol.solve_in_place(&mut in_place);
+        assert_eq!(in_place, want);
     }
 
     #[test]

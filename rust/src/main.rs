@@ -23,11 +23,15 @@ deluxe — Distributed Event-based Learning via ADMM (ICML 2025 reproduction)
 
 USAGE:
   deluxe exp <id> [--rounds N] [--agents N] [--seed S] [--backend native|pjrt|pjrt-ref]
-             [--results DIR] [--artifacts DIR]
+             [--results DIR] [--artifacts DIR] [--workers N]
              [--compressor none|topk:F|randk:F|quant:B|topkq:F:B]
+             (--workers N shards every engine's per-agent local solves;
+              0 = one per core, env DELUXE_WORKERS overrides the default;
+              results are bit-identical for every worker count)
   deluxe train [--rounds N] [--delta D] [--seed S] [--compressor C]
                                                        threaded e2e run
   deluxe sim --scenario NAME|file.json [--agents N] [--rounds N] [--seed S]
+             [--workers N]
              discrete-event network simulation (builtins: ideal | lossy |
              stragglers | churn); scenario JSON schema in DESIGN.md §9
   deluxe info                                          artifact manifest
@@ -172,6 +176,7 @@ fn exp_tab1(id: &str, args: &Args, rc: &RunConfig) -> Result<()> {
         rounds: args.usize_or("rounds", default_rounds),
         eval_every: 2,
         seed: rc.seed,
+        workers: rc.workers,
     };
     let targets: Vec<f64> = if id.contains("cifar") {
         vec![0.60, 0.70, 0.75]
@@ -237,6 +242,7 @@ fn exp_fig3(args: &Args, rc: &RunConfig) -> Result<()> {
         rounds: args.usize_or("rounds", 150),
         eval_every: 2,
         seed: rc.seed,
+        workers: rc.workers,
     };
     println!("== Fig. 3: accuracy + smoothed comm load per round ==");
     for algo in tab_algos("cifar") {
@@ -265,6 +271,7 @@ fn exp_fig8(id: &str, args: &Args, rc: &RunConfig) -> Result<()> {
         rounds: args.usize_or("rounds", default_rounds),
         eval_every: 5,
         seed: rc.seed,
+        workers: rc.workers,
     };
     println!("== Fig. 8 ({id}): Δ-sweep trade-off (events vs final accuracy) ==");
     let deltas: Vec<f64> = if id.contains("cifar") {
@@ -315,6 +322,7 @@ fn exp_fig9(args: &Args, rc: &RunConfig) -> Result<()> {
         n_agents: args.usize_or("agents", 50),
         rounds: args.usize_or("rounds", 50),
         seed: rc.seed,
+        workers: rc.workers,
         ..Default::default()
     };
     println!("== Fig. 9: comm load vs |f − f*| (linreg α=1.5, LASSO λ=0.1) ==");
@@ -335,6 +343,7 @@ fn exp_fig10(args: &Args, rc: &RunConfig) -> Result<()> {
         rounds: args.usize_or("rounds", 50),
         drop_rate: args.f64_or("drop", 0.3),
         seed: rc.seed,
+        workers: rc.workers,
         ..Default::default()
     };
     println!(
@@ -357,6 +366,7 @@ fn exp_fig11(args: &Args, rc: &RunConfig) -> Result<()> {
         rounds: args.usize_or("rounds", 300),
         n_agents: args.usize_or("agents", 10),
         seed: rc.seed,
+        workers: rc.workers,
         ..Default::default()
     };
     println!("== Fig. 11: MNIST over a graph ({} agents) ==", cfg.n_agents);
@@ -378,6 +388,7 @@ fn exp_fig12(args: &Args, rc: &RunConfig) -> Result<()> {
         rounds: args.usize_or("rounds", 2000),
         n_agents: args.usize_or("agents", 50),
         seed: rc.seed,
+        workers: rc.workers,
         ..Default::default()
     };
     println!(
@@ -399,6 +410,7 @@ fn exp_rates(args: &Args, rc: &RunConfig) -> Result<()> {
     let cfg = rates::RatesConfig {
         rounds: args.usize_or("rounds", 400),
         seed: rc.seed,
+        workers: rc.workers,
         ..Default::default()
     };
     println!("== Thm 4.1 / Cor 2.2 validation ==");
@@ -425,6 +437,7 @@ fn exp_pareto(args: &Args, rc: &RunConfig) -> Result<()> {
         n_agents: args.usize_or("agents", 20),
         rounds: args.usize_or("rounds", 400),
         seed: rc.seed,
+        workers: rc.workers,
         ..Default::default()
     };
     println!(
@@ -650,7 +663,8 @@ fn run_sim(args: &Args) -> Result<()> {
         &mut rng,
     );
     let (_, fstar) = prob.reference_solution(&mut rng);
-    let mut engine = AsyncConsensus::<f64>::new(scn, vec![0.0; prob.dim]);
+    let mut engine = AsyncConsensus::<f64>::new(scn, vec![0.0; prob.dim])
+        .with_workers(rc.workers);
     let mut solver = ExactQuadratic::new(&prob.blocks);
     let mut prox = L1Prox { lambda: prob.lambda };
     let rounds = engine.scn.rounds as u64;

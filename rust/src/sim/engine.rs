@@ -35,6 +35,7 @@
 //! `Pcg64`, and virtual time is integer microseconds — same `Scenario` +
 //! seed ⇒ identical iterates, counters and event-trace hash.
 
+use crate::admm::core::WorkerPool;
 use crate::comm::{Estimate, Scalar, TriggerState};
 use crate::rng::Pcg64;
 use crate::solver::{LocalSolver, ServerProx};
@@ -109,6 +110,21 @@ struct AsyncAgent<T: Scalar> {
     straggler: bool,
 }
 
+/// A local solve whose *virtual* start already happened (the tick ran
+/// the dual update, captured the anchor and forked the solver stream)
+/// but whose numeric result is not needed until the agent's `Finish`
+/// event.  Deferring the numeric work lets the engine batch every
+/// overlapping compute window into one `solve_batch` on the worker pool
+/// — the async engine's compute-phase parallelism.  Results are a pure
+/// function of the captured `(anchor, rng)`, so flush timing and worker
+/// count cannot change the trajectory.
+struct PendingSolve<T: Scalar> {
+    agent: usize,
+    epoch: u64,
+    anchor: Vec<T>,
+    rng: Pcg64,
+}
+
 /// Asynchronous event-based consensus ADMM on the discrete-event queue.
 /// Generic over the scalar type like the synchronous engine.
 pub struct AsyncConsensus<T: Scalar> {
@@ -122,6 +138,18 @@ pub struct AsyncConsensus<T: Scalar> {
     comp: Box<dyn Compressor<T>>,
     scratch: Vec<T>,
     rng: Pcg64,
+    /// RNG state snapshotted at each broadcast — the fork base for the
+    /// per-agent solver streams, mirroring the synchronous engine's
+    /// round-entry snapshot so the sync-equivalence contract extends to
+    /// RNG-consuming solvers.
+    solve_base: Pcg64,
+    /// Solves started (virtually) but not yet materialized; batched onto
+    /// the pool at the first event that needs a result.
+    pending: Vec<PendingSolve<T>>,
+    /// Worker pool for the batched compute phase (default sequential —
+    /// sweeps parallelize over cells; `with_workers` enables per-agent
+    /// sharding for single-scenario runs).
+    pool: WorkerPool,
     /// Number of `z` updates performed so far.
     pub leader_round: u64,
     /// Distinct agents heard from since the last `z` update.
@@ -187,6 +215,9 @@ impl<T: Scalar> AsyncConsensus<T> {
             queue,
             comp,
             scratch: Vec::with_capacity(dim),
+            solve_base: rng.clone(),
+            pending: Vec::new(),
+            pool: WorkerPool::sequential(),
             rng,
             leader_round: 0,
             arrived: vec![false; n],
@@ -196,6 +227,13 @@ impl<T: Scalar> AsyncConsensus<T> {
             trace: TraceHash::new(),
             scn,
         }
+    }
+
+    /// Set the compute-phase worker count (0 = auto): overlapping local
+    /// solves batch onto the pool.  Bit-identical for every value.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.pool = WorkerPool::new(workers);
+        self
     }
 
     /// Run the simulation to the scenario horizon.
@@ -221,7 +259,12 @@ impl<T: Scalar> AsyncConsensus<T> {
         while self.leader_round < target {
             let (t, ev) = match self.queue.pop() {
                 Some(e) => e,
-                None => return,
+                None => {
+                    // queue drained (e.g. quorum unreachable): leave no
+                    // stale iterates behind
+                    self.flush_solves(solver);
+                    return;
+                }
             };
             self.trace_event(t, &ev);
             match ev {
@@ -229,15 +272,61 @@ impl<T: Scalar> AsyncConsensus<T> {
                 SimEvent::DeliverDown { agent, epoch, msg } => {
                     self.on_deliver_down(agent, epoch, &msg)
                 }
-                SimEvent::Tick { agent } => self.on_tick(agent, solver),
+                SimEvent::Tick { agent } => self.on_tick(agent),
                 SimEvent::Finish { agent, epoch } => {
-                    self.on_finish(agent, epoch)
+                    self.on_finish(agent, epoch, solver)
                 }
                 SimEvent::DeliverUp { agent, epoch, msg, tag } => {
-                    self.on_deliver_up(agent, epoch, &msg, tag, prox);
+                    self.on_deliver_up(agent, epoch, &msg, tag, solver, prox);
                 }
-                SimEvent::Fault { idx } => self.on_fault(idx, prox),
+                SimEvent::Fault { idx } => {
+                    self.on_fault(idx, solver, prox)
+                }
             }
+        }
+        // materialize any solves still in flight so external observers
+        // (metrics, tests) see the post-round iterates
+        self.flush_solves(solver);
+    }
+
+    /// Materialize every pending local solve in one `solve_batch` on the
+    /// worker pool.  Called lazily at the first point a result can be
+    /// observed (an agent's `Finish`, a reset, a fault, or run exit), so
+    /// every compute window that overlaps in virtual time lands in the
+    /// same batch.  Each result is a pure function of its captured
+    /// `(anchor, rng)` — flush timing and worker count cannot change it.
+    fn flush_solves(&mut self, solver: &mut dyn LocalSolver<T>) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let alpha = self.scn.alpha;
+        let rho = self.scn.rho;
+        let pending = std::mem::take(&mut self.pending);
+        let mut ids = Vec::with_capacity(pending.len());
+        let mut epochs = Vec::with_capacity(pending.len());
+        let mut anchors = Vec::with_capacity(pending.len());
+        let mut rngs = Vec::with_capacity(pending.len());
+        for p in pending {
+            ids.push(p.agent);
+            epochs.push(p.epoch);
+            anchors.push(p.anchor);
+            rngs.push(p.rng);
+        }
+        let xs = solver.solve_batch(&ids, &anchors, rho, &mut rngs, &self.pool);
+        for ((i, epoch), x) in ids.into_iter().zip(epochs).zip(xs) {
+            let a = &mut self.agents[i];
+            if epoch != a.epoch {
+                // the incarnation that started this solve has left
+                continue;
+            }
+            debug_assert_eq!(x.len(), self.dim);
+            a.x = x;
+            a.d = a
+                .x
+                .iter()
+                .zip(&a.u)
+                .map(|(&x, &u)| T::from_f64(alpha * x.to_f64() + u.to_f64()))
+                .collect();
         }
     }
 
@@ -260,6 +349,9 @@ impl<T: Scalar> AsyncConsensus<T> {
     /// Mirrors the synchronous step 1 agent-by-agent, so the ideal
     /// scenario consumes the RNG in the same order.
     fn on_broadcast(&mut self) {
+        // fork base for this round's solver streams: the pre-broadcast
+        // state, matching the sync engine's round-entry snapshot
+        self.solve_base = self.rng.clone();
         let now = self.queue.now();
         for i in 0..self.n {
             if !self.agents[i].active {
@@ -306,7 +398,7 @@ impl<T: Scalar> AsyncConsensus<T> {
         a.zhat.apply_msg(msg);
     }
 
-    fn on_tick(&mut self, agent: usize, solver: &mut dyn LocalSolver<T>) {
+    fn on_tick(&mut self, agent: usize) {
         if !self.agents[agent].active {
             return;
         }
@@ -314,17 +406,19 @@ impl<T: Scalar> AsyncConsensus<T> {
             self.agents[agent].tick_pending = true;
             return;
         }
-        self.start_compute(agent, solver);
+        self.start_compute(agent);
     }
 
     /// Alg. 1 step 2, agent side: dual update against the current `ẑ`,
-    /// local prox solve, then the uplink offer is scheduled after the
+    /// then the local prox solve is *deferred* — its anchor and forked
+    /// RNG stream are captured here and the numeric work batches onto
+    /// the pool at the first event that needs the result (see
+    /// [`PendingSolve`]).  The uplink offer is scheduled after the
     /// modeled compute time.  The arithmetic mirrors
     /// `ConsensusAdmm::round` expression-for-expression — the
     /// sync-equivalence test pins this bit-for-bit.
-    fn start_compute(&mut self, i: usize, solver: &mut dyn LocalSolver<T>) {
+    fn start_compute(&mut self, i: usize) {
         let alpha = self.scn.alpha;
-        let rho = self.scn.rho;
         let a = &mut self.agents[i];
         a.busy = true;
         a.tick_pending = false;
@@ -347,22 +441,28 @@ impl<T: Scalar> AsyncConsensus<T> {
             .zip(&a.u)
             .map(|(&z, &u)| T::from_f64(z.to_f64() - u.to_f64()))
             .collect();
-        a.x = solver.solve(i, &anchor, rho, &mut self.rng);
-        debug_assert_eq!(a.x.len(), self.dim);
-        a.d = a
-            .x
-            .iter()
-            .zip(&a.u)
-            .map(|(&x, &u)| T::from_f64(alpha * x.to_f64() + u.to_f64()))
-            .collect();
         let straggler = a.straggler;
         let epoch = a.epoch;
+        self.pending.push(PendingSolve {
+            agent: i,
+            epoch,
+            anchor,
+            rng: self.solve_base.fork(self.leader_round, i as u64),
+        });
         let dt = self.scn.compute.sample(straggler, &mut self.rng);
         self.queue
             .push_after(ticks(dt), SimEvent::Finish { agent: i, epoch });
     }
 
-    fn on_finish(&mut self, i: usize, epoch: u64) {
+    fn on_finish(
+        &mut self,
+        i: usize,
+        epoch: u64,
+        solver: &mut dyn LocalSolver<T>,
+    ) {
+        // the agent's d is read below: materialize every pending solve
+        // (one pooled batch across all overlapping compute windows)
+        self.flush_solves(solver);
         let now = self.queue.now();
         let a = &mut self.agents[i];
         if epoch != a.epoch {
@@ -421,6 +521,7 @@ impl<T: Scalar> AsyncConsensus<T> {
         epoch: u64,
         msg: &Option<WireMessage<T>>,
         tag: u64,
+        solver: &mut dyn LocalSolver<T>,
         prox: &mut dyn ServerProx<T>,
     ) {
         if !self.agents[i].active || epoch != self.agents[i].epoch {
@@ -445,7 +546,7 @@ impl<T: Scalar> AsyncConsensus<T> {
             self.arrived[i] = true;
             self.arrival_count += 1;
         }
-        self.maybe_update(prox);
+        self.maybe_update(solver, prox);
     }
 
     fn active_count(&self) -> usize {
@@ -459,15 +560,23 @@ impl<T: Scalar> AsyncConsensus<T> {
             .clamp(1, active.max(1))
     }
 
-    fn maybe_update(&mut self, prox: &mut dyn ServerProx<T>) {
+    fn maybe_update(
+        &mut self,
+        solver: &mut dyn LocalSolver<T>,
+        prox: &mut dyn ServerProx<T>,
+    ) {
         if self.arrival_count >= self.quorum_size() {
-            self.leader_update(prox);
+            self.leader_update(solver, prox);
         }
     }
 
     /// Alg. 1 step 3: `z ← prox_g(ζ̂ + (1−α) z; Nρ)`, then the next
     /// broadcast (and a periodic reset when due).
-    fn leader_update(&mut self, prox: &mut dyn ServerProx<T>) {
+    fn leader_update(
+        &mut self,
+        solver: &mut dyn LocalSolver<T>,
+        prox: &mut dyn ServerProx<T>,
+    ) {
         let alpha = self.scn.alpha;
         let v: Vec<T> = self
             .zeta_hat
@@ -486,7 +595,7 @@ impl<T: Scalar> AsyncConsensus<T> {
         if self.scn.reset_period > 0
             && self.leader_round as usize % self.scn.reset_period == 0
         {
-            self.resync();
+            self.resync(solver);
         }
         if self.leader_round < self.scn.rounds as u64 {
             let now = self.queue.now();
@@ -500,7 +609,9 @@ impl<T: Scalar> AsyncConsensus<T> {
     /// out-of-band (reliable, instantaneous, charged as one dense sync
     /// per direction; see DESIGN.md §9 for why the sync transfer is
     /// modeled as out-of-band).
-    fn resync(&mut self) {
+    fn resync(&mut self, solver: &mut dyn LocalSolver<T>) {
+        // ζ̂ snaps to the true mean of the d^i: every d must be current
+        self.flush_solves(solver);
         let mut zeta = vec![0.0f64; self.dim];
         for a in &self.agents {
             for (s, &d) in zeta.iter_mut().zip(&a.d) {
@@ -531,7 +642,16 @@ impl<T: Scalar> AsyncConsensus<T> {
         }
     }
 
-    fn on_fault(&mut self, idx: usize, prox: &mut dyn ServerProx<T>) {
+    fn on_fault(
+        &mut self,
+        idx: usize,
+        solver: &mut dyn LocalSolver<T>,
+        prox: &mut dyn ServerProx<T>,
+    ) {
+        // epoch bumps below invalidate captured solves: materialize them
+        // first so the leaving incarnation's state matches the
+        // solve-at-tick semantics
+        self.flush_solves(solver);
         let f = self.scn.faults[idx];
         match f.kind {
             FaultKind::Leave => {
@@ -549,7 +669,7 @@ impl<T: Scalar> AsyncConsensus<T> {
                 }
                 // a shrinking quorum may already be satisfied
                 if self.active_count() > 0 {
-                    self.maybe_update(prox);
+                    self.maybe_update(solver, prox);
                 }
             }
             FaultKind::Join => {

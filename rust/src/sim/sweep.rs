@@ -48,9 +48,13 @@ where
         .collect()
 }
 
-/// Default worker count: one per available core (at least 1).
+/// Default worker count: the `DELUXE_WORKERS` environment variable if
+/// set (the CI matrix pins it to 1 and 4 to exercise both the
+/// sequential and the sharded paths across the whole suite), else one
+/// per available core (at least 1).  Shared with the engines' per-agent
+/// pools via [`crate::admm::core::resolve_workers`].
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    crate::admm::core::resolve_workers(0)
 }
 
 #[cfg(test)]

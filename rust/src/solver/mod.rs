@@ -9,7 +9,36 @@
 //!   paper replaces the exact minimization by a few SGD steps).
 //! * `PjrtSgd` (in [`crate::runtime`]) — the production path: the same S
 //!   steps executed by the AOT-compiled JAX/Pallas artifact.
+//!
+//! # Determinism contract (parallel solves)
+//!
+//! The engines execute the per-agent solve phase through
+//! [`LocalSolver::solve_batch`] on the shared
+//! [`crate::admm::core::WorkerPool`].  The contract every implementation
+//! must uphold for trajectories to be **bit-identical across worker
+//! counts**:
+//!
+//! * `solve(agent, …, rng)` may mutate only *per-agent* state (the
+//!   cached factorization of `agent`, the warm-started iterate of
+//!   `agent`) plus read-only shared state — never state another agent's
+//!   concurrent solve touches;
+//! * all randomness comes from the passed `rng` — one independent
+//!   stream per agent per round, forked by the engine via
+//!   [`crate::rng::Pcg64::fork`] keyed by `(round, agent)`, so the draw
+//!   sequence each agent sees is a pure function of `(seed, round,
+//!   agent)` and **independent of worker count and execution order**
+//!   ([`NativeSgd`]'s minibatch sampling is the audited case);
+//! * results are returned in batch order (the engines then reduce them
+//!   sequentially in agent order).
+//!
+//! [`ExactQuadratic`] and [`NativeSgd`] are plain-data (`Send`) and
+//! override `solve_batch` with a sharded parallel implementation.
+//! `PjrtSgd` holds non-`Send` PJRT handles and keeps the sequential
+//! default — the trait deliberately does *not* require `Send` so the
+//! PJRT backend keeps compiling; a non-`Send` solver simply runs its
+//! batch on the caller's thread.
 
+use crate::admm::core::WorkerPool;
 use crate::data::synth::ClassDataset;
 use crate::linalg::{Cholesky, Matrix};
 use crate::model::MlpSpec;
@@ -33,6 +62,32 @@ pub trait LocalSolver<T> {
 
     /// Number of agents this solver serves.
     fn n_agents(&self) -> usize;
+
+    /// Solve a whole round's batch: `agents[j]` (distinct ids) against
+    /// `anchors[j]`, drawing from `rngs[j]`; results in batch order.
+    ///
+    /// The default runs sequentially on the caller's thread — correct
+    /// for every implementation.  `Send` solvers with per-agent state
+    /// override it to fan the batch across `pool` (see the module docs
+    /// for the determinism contract; the override must be observably
+    /// identical to this default).
+    fn solve_batch(
+        &mut self,
+        agents: &[usize],
+        anchors: &[Vec<T>],
+        rho: f64,
+        rngs: &mut [Pcg64],
+        _pool: &WorkerPool,
+    ) -> Vec<Vec<T>> {
+        debug_assert_eq!(agents.len(), anchors.len());
+        debug_assert_eq!(agents.len(), rngs.len());
+        agents
+            .iter()
+            .zip(anchors)
+            .zip(rngs.iter_mut())
+            .map(|((&a, anchor), rng)| self.solve(a, anchor, rho, rng))
+            .collect()
+    }
 }
 
 /// Server-side prox for the (possibly nonsmooth) `g`:
@@ -87,20 +142,27 @@ impl ExactQuadratic {
             cache: vec![None; blocks.len()],
         }
     }
+}
 
-    fn chol(&mut self, agent: usize, rho: f64) -> &Cholesky {
-        let stale = match &self.cache[agent] {
-            Some((r, _)) => (*r - rho).abs() > 1e-12 * rho.abs().max(1.0),
-            None => true,
-        };
-        if stale {
-            let mut m = self.grams[agent].clone();
-            m.add_diag(rho);
-            let c = Cholesky::factor(&m).expect("gram + rho I must be PD");
-            self.cache[agent] = Some((rho, c));
-        }
-        &self.cache[agent].as_ref().unwrap().1
+/// Cached `(AᵀA + ρI)` factorization for one agent — free function over
+/// the agent's own cache slot so the sequential and pool-sharded paths
+/// share it.
+fn chol_for<'c>(
+    gram: &Matrix,
+    cache: &'c mut Option<(f64, Cholesky)>,
+    rho: f64,
+) -> &'c Cholesky {
+    let stale = match cache {
+        Some((r, _)) => (*r - rho).abs() > 1e-12 * rho.abs().max(1.0),
+        None => true,
+    };
+    if stale {
+        let mut m = gram.clone();
+        m.add_diag(rho);
+        let c = Cholesky::factor(&m).expect("gram + rho I must be PD");
+        *cache = Some((rho, c));
     }
+    &cache.as_ref().unwrap().1
 }
 
 impl LocalSolver<f64> for ExactQuadratic {
@@ -111,9 +173,13 @@ impl LocalSolver<f64> for ExactQuadratic {
         rho: f64,
         _rng: &mut Pcg64,
     ) -> Vec<f64> {
-        let mut rhs = self.atbs[agent].clone();
-        crate::linalg::axpy(&mut rhs, rho, anchor);
-        self.chol(agent, rho).solve(&rhs)
+        // one allocation total: rhs doubles as the in-place solution
+        // buffer (§Perf — Cholesky::solve_in_place)
+        let mut x = self.atbs[agent].clone();
+        crate::linalg::axpy(&mut x, rho, anchor);
+        chol_for(&self.grams[agent], &mut self.cache[agent], rho)
+            .solve_in_place(&mut x);
+        x
     }
 
     fn dim(&self) -> usize {
@@ -123,6 +189,72 @@ impl LocalSolver<f64> for ExactQuadratic {
     fn n_agents(&self) -> usize {
         self.grams.len()
     }
+
+    /// Pool-sharded batch: per-agent state is each agent's cache slot;
+    /// `grams`/`atbs` are shared read-only.  Draws nothing from the
+    /// RNGs, so results are trivially order-independent.
+    fn solve_batch(
+        &mut self,
+        agents: &[usize],
+        anchors: &[Vec<f64>],
+        rho: f64,
+        _rngs: &mut [Pcg64],
+        pool: &WorkerPool,
+    ) -> Vec<Vec<f64>> {
+        debug_assert_eq!(agents.len(), anchors.len());
+        struct Job<'a> {
+            agent: usize,
+            anchor: &'a [f64],
+            cache: &'a mut Option<(f64, Cholesky)>,
+            out: Vec<f64>,
+        }
+        let mut jobs =
+            pick_jobs(agents, &mut self.cache, |j, agent, cache| Job {
+                agent,
+                anchor: &anchors[j],
+                cache,
+                out: Vec::new(),
+            });
+        let grams = &self.grams;
+        let atbs = &self.atbs;
+        pool.run(&mut jobs, |_, job| {
+            let mut x = atbs[job.agent].clone();
+            crate::linalg::axpy(&mut x, rho, job.anchor);
+            chol_for(&grams[job.agent], job.cache, rho)
+                .solve_in_place(&mut x);
+            job.out = x;
+        });
+        jobs.into_iter().map(|j| j.out).collect()
+    }
+}
+
+/// Pair each batch entry `j` with a `&mut` borrow of that agent's slot
+/// in `state` (distinct agent ids, any order).  The walk visits `state`
+/// once in ascending-agent order, so the borrows are provably disjoint
+/// without unsafe code.
+fn pick_jobs<'a, S, J>(
+    agents: &[usize],
+    state: &'a mut [S],
+    mut make: impl FnMut(usize, usize, &'a mut S) -> J,
+) -> Vec<J> {
+    let mut order: Vec<usize> = (0..agents.len()).collect();
+    order.sort_unstable_by_key(|&j| agents[j]);
+    let mut slots: Vec<Option<J>> =
+        (0..agents.len()).map(|_| None).collect();
+    let mut iter = state.iter_mut().enumerate();
+    for &j in &order {
+        let target = agents[j];
+        let slot = loop {
+            let (i, s) = iter
+                .next()
+                .expect("batch agent ids must be distinct and < n_agents");
+            if i == target {
+                break s;
+            }
+        };
+        slots[j] = Some(make(j, target, slot));
+    }
+    slots.into_iter().map(|s| s.expect("every entry filled")).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -160,17 +292,37 @@ impl NativeSgd {
         agent: usize,
         rng: &mut Pcg64,
     ) -> (Vec<f32>, Vec<f32>) {
-        let d = self.spec.input_dim();
-        let c = self.spec.classes();
-        let mut xs = Vec::with_capacity(self.steps * self.batch * d);
-        let mut ys = Vec::with_capacity(self.steps * self.batch * c);
-        for _ in 0..self.steps {
-            let (bx, by) = self.shards[agent].sample_batch(self.batch, rng);
-            xs.extend_from_slice(&bx);
-            ys.extend_from_slice(&by);
-        }
-        (xs, ys)
+        draw_round_batches(
+            &self.spec,
+            &self.shards[agent],
+            self.steps,
+            self.batch,
+            rng,
+        )
     }
+}
+
+/// Draw S flat minibatches from one agent's shard — the shared sampling
+/// routine behind [`NativeSgd`] and the federated baselines.  All
+/// randomness comes from `rng`, so per-agent streams stay independent of
+/// worker count (the determinism contract's audited path).
+pub fn draw_round_batches(
+    spec: &MlpSpec,
+    shard: &ClassDataset,
+    steps: usize,
+    batch: usize,
+    rng: &mut Pcg64,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = spec.input_dim();
+    let c = spec.classes();
+    let mut xs = Vec::with_capacity(steps * batch * d);
+    let mut ys = Vec::with_capacity(steps * batch * c);
+    for _ in 0..steps {
+        let (bx, by) = shard.sample_batch(batch, rng);
+        xs.extend_from_slice(&bx);
+        ys.extend_from_slice(&by);
+    }
+    (xs, ys)
 }
 
 impl LocalSolver<f32> for NativeSgd {
@@ -206,6 +358,58 @@ impl LocalSolver<f32> for NativeSgd {
 
     fn n_agents(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Pool-sharded batch: per-agent state is the warm-started iterate
+    /// `xs[agent]`; the spec and shards are shared read-only; every
+    /// minibatch draw comes from that agent's own `rngs[j]` stream.
+    fn solve_batch(
+        &mut self,
+        agents: &[usize],
+        anchors: &[Vec<f32>],
+        rho: f64,
+        rngs: &mut [Pcg64],
+        pool: &WorkerPool,
+    ) -> Vec<Vec<f32>> {
+        debug_assert_eq!(agents.len(), anchors.len());
+        debug_assert_eq!(agents.len(), rngs.len());
+        struct Job<'a> {
+            agent: usize,
+            anchor: &'a [f32],
+            x: &'a mut Vec<f32>,
+            rng: &'a mut Pcg64,
+            out: Vec<f32>,
+        }
+        let mut rng_refs: Vec<Option<&mut Pcg64>> =
+            rngs.iter_mut().map(Some).collect();
+        let mut jobs =
+            pick_jobs(agents, &mut self.xs, |j, agent, x| Job {
+                agent,
+                anchor: &anchors[j],
+                x,
+                rng: rng_refs[j].take().expect("one rng per entry"),
+                out: Vec::new(),
+            });
+        let spec = &self.spec;
+        let shards = &self.shards;
+        let (lr, steps, batch) = (self.lr, self.steps, self.batch);
+        pool.run(&mut jobs, |_, job| {
+            let (bx, by) = draw_round_batches(
+                spec,
+                &shards[job.agent],
+                steps,
+                batch,
+                job.rng,
+            );
+            let zeros = vec![0.0f32; job.anchor.len()];
+            let x = spec.local_admm(
+                &*job.x, job.anchor, &zeros, &bx, &by, lr, rho as f32,
+                steps, batch,
+            );
+            *job.x = x.clone();
+            job.out = x;
+        });
+        jobs.into_iter().map(|j| j.out).collect()
     }
 }
 

@@ -1,0 +1,549 @@
+//! The unified round core's determinism contract (DESIGN.md §10):
+//!
+//! * **workers-invariance** — every engine (Alg. 1 consensus, Alg. 2
+//!   general, graph, sharing) and every baseline (FedAvg, FedProx,
+//!   SCAFFOLD, FedADMM) produces bit-identical trajectories — trace
+//!   hash over the full per-round iterate/counter stream plus exact
+//!   final iterates — for `workers = 1` and `workers = N`, under spicy
+//!   configurations (stochastic triggers, drops, resets, compression,
+//!   RNG-consuming SGD solvers);
+//! * **pinned pre-refactor counters** — on deterministic
+//!   configurations the unified core reproduces the closed-form
+//!   event/drop/byte books the four hand-rolled engines produced
+//!   before the unification.
+
+use deluxe::admm::{
+    ConsensusAdmm, ConsensusConfig, GeneralAdmm, GeneralConfig, GraphAdmm,
+    GraphConfig, QuadraticF, SharingAdmm, SharingConfig, ZProx,
+};
+use deluxe::admm::sharing::SharingG;
+use deluxe::baselines::{AvgFamily, FedAdmm, NativeFed, Scaffold};
+use deluxe::comm::Trigger;
+use deluxe::data::partition::iid_split;
+use deluxe::data::regress::{generate, RegressSpec};
+use deluxe::data::synth::{self, SynthSpec};
+use deluxe::linalg::Matrix;
+use deluxe::model::MlpSpec;
+use deluxe::rng::{Pcg64, Rng};
+use deluxe::sim::TraceHash;
+use deluxe::solver::{ExactQuadratic, IdentityProx, NativeSgd};
+use deluxe::wire::{CompressorCfg, WireMessage};
+
+/// Fold a float slice into a trace hash bit-exactly.
+fn mix_slice(h: &mut TraceHash, xs: &[f64]) {
+    for &x in xs {
+        h.mix(x.to_bits());
+    }
+}
+
+fn mix_slice_f32(h: &mut TraceHash, xs: &[f32]) {
+    for &x in xs {
+        h.mix(x.to_bits() as u64);
+    }
+}
+
+const WORKER_GRID: [usize; 3] = [1, 3, 8];
+
+// ---------------------------------------------------------------------------
+// workers-invariance: the four engines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn consensus_engine_is_bit_identical_across_worker_counts() {
+    let run = |workers: usize| {
+        let mut rng = Pcg64::seed(71);
+        let (blocks, _) = generate(
+            &RegressSpec {
+                n_agents: 12,
+                rows_per_agent: 6,
+                dim: 7,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let cfg = ConsensusConfig {
+            rounds: 60,
+            alpha: 1.3,
+            trigger_d: Trigger::randomized(1e-3, 0.2),
+            trigger_z: Trigger::vanilla(1e-4),
+            drop_up: 0.2,
+            drop_down: 0.1,
+            reset_period: 9,
+            compressor: CompressorCfg::Quant { bits: 10 },
+            workers,
+            ..Default::default()
+        };
+        let mut engine = ConsensusAdmm::new(cfg, 12, vec![0.0; 7]);
+        let mut solver = ExactQuadratic::new(&blocks);
+        let mut prox = IdentityProx;
+        let mut h = TraceHash::new();
+        for _ in 0..60 {
+            engine.round(&mut solver, &mut prox, &mut rng);
+            mix_slice(&mut h, &engine.z);
+            h.mix(engine.total_events());
+            let (ub, db) = engine.bytes_split();
+            h.mix(ub);
+            h.mix(db);
+        }
+        for i in 0..12 {
+            mix_slice(&mut h, engine.agent_x(i));
+            mix_slice(&mut h, engine.agent_u(i));
+        }
+        let (du, dd) = engine.drops_split();
+        (h.value(), du, dd)
+    };
+    let base = run(WORKER_GRID[0]);
+    for &w in &WORKER_GRID[1..] {
+        assert_eq!(run(w), base, "consensus diverged at workers = {w}");
+    }
+}
+
+#[test]
+fn general_engine_is_bit_identical_across_worker_counts() {
+    let run = |workers: usize| {
+        let mut rng = Pcg64::seed(72);
+        let d = Matrix::randn(20, 5, &mut rng);
+        let xtrue: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let b = d.matvec(&xtrue);
+        let f = QuadraticF::least_squares(&d, &b);
+        let cfg = GeneralConfig {
+            rounds: 80,
+            drop_rate: 0.2,
+            reset_period: 7,
+            compressor: CompressorCfg::Quant { bits: 9 },
+            workers,
+            ..Default::default()
+        }
+        .with_uniform_delta(1e-4);
+        let mut eng = GeneralAdmm::new(
+            cfg,
+            Matrix::eye(5),
+            vec![0.0; 5],
+            f,
+            ZProx::diag(-1.0, 0.1),
+            vec![0.0; 5],
+            vec![0.0; 5],
+        );
+        let mut h = TraceHash::new();
+        for _ in 0..80 {
+            eng.round(&mut rng);
+            mix_slice(&mut h, &eng.x);
+            mix_slice(&mut h, &eng.u);
+            h.mix(eng.total_events());
+            h.mix(eng.total_wire_bytes());
+        }
+        h.value()
+    };
+    let base = run(1);
+    assert_eq!(run(4), base, "general engine diverged across workers");
+}
+
+#[test]
+fn graph_engine_is_bit_identical_across_worker_counts() {
+    let run = |workers: usize| {
+        let mut rng = Pcg64::seed(73);
+        let graph = deluxe::topology::Graph::random_connected(10, 18, &mut rng);
+        let (blocks, _) = generate(
+            &RegressSpec {
+                n_agents: 10,
+                rows_per_agent: 6,
+                dim: 4,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let cfg = GraphConfig {
+            rounds: 50,
+            trigger_x: Trigger::randomized(1e-3, 0.15),
+            drop_rate: 0.25,
+            reset_period: 8,
+            compressor: CompressorCfg::Quant { bits: 8 },
+            workers,
+            ..Default::default()
+        };
+        let mut eng = GraphAdmm::new(cfg, graph, vec![0.0; 4]);
+        let mut solver = ExactQuadratic::new(&blocks);
+        let mut h = TraceHash::new();
+        for _ in 0..50 {
+            eng.round(&mut solver, &mut rng);
+            mix_slice(&mut h, &eng.mean_x());
+            h.mix(eng.total_events());
+            h.mix(eng.total_wire_bytes());
+        }
+        for i in 0..10 {
+            mix_slice(&mut h, eng.agent_x(i));
+        }
+        h.value()
+    };
+    let base = run(WORKER_GRID[0]);
+    for &w in &WORKER_GRID[1..] {
+        assert_eq!(run(w), base, "graph engine diverged at workers = {w}");
+    }
+}
+
+#[test]
+fn sharing_engine_is_bit_identical_across_worker_counts() {
+    let run = |workers: usize| {
+        let mut rng = Pcg64::seed(74);
+        let (blocks, _) = generate(
+            &RegressSpec {
+                n_agents: 8,
+                rows_per_agent: 5,
+                dim: 3,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let cfg = SharingConfig {
+            rounds: 70,
+            trigger_x: Trigger::randomized(1e-3, 0.2),
+            trigger_h: Trigger::vanilla(1e-4),
+            drop_rate: 0.2,
+            reset_period: 6,
+            g: SharingG::Quad { gamma: 0.4 },
+            workers,
+            ..Default::default()
+        };
+        let mut eng = SharingAdmm::new(cfg, 8, 3);
+        let mut solver = ExactQuadratic::new(&blocks);
+        let mut h = TraceHash::new();
+        for _ in 0..70 {
+            eng.round(&mut solver, &mut rng);
+            mix_slice(&mut h, &eng.z);
+            mix_slice(&mut h, &eng.aggregate());
+            h.mix(eng.total_events());
+            let (ub, db) = eng.bytes_split();
+            h.mix(ub);
+            h.mix(db);
+        }
+        h.value()
+    };
+    let base = run(1);
+    assert_eq!(run(5), base, "sharing engine diverged across workers");
+}
+
+// ---------------------------------------------------------------------------
+// workers-invariance: the four baselines (RNG-consuming SGD solvers)
+// ---------------------------------------------------------------------------
+
+fn tiny_fed(seed: u64) -> (NativeFed, Vec<f32>) {
+    let mut rng = Pcg64::seed(seed);
+    let (train, _) = synth::generate(&SynthSpec::tiny(), &mut rng);
+    let shards = iid_split(&train, 6, &mut rng);
+    let spec = MlpSpec::new(vec![8, 16, 4]);
+    let init = spec.init(&mut rng);
+    (NativeFed::new(spec, shards, 0.1, 3, 8), init)
+}
+
+#[test]
+fn fedavg_and_fedprox_are_bit_identical_across_worker_counts() {
+    for mu in [0.0, 0.5] {
+        let run = |workers: usize| {
+            let (mut local, init) = tiny_fed(81);
+            let mut eng = if mu > 0.0 {
+                AvgFamily::fedprox(init, 0.6, mu)
+            } else {
+                AvgFamily::fedavg(init, 0.6)
+            }
+            .with_workers(workers);
+            let mut rng = Pcg64::seed(82);
+            let mut h = TraceHash::new();
+            for _ in 0..15 {
+                eng.round(&mut local, &mut rng);
+                mix_slice_f32(&mut h, &eng.z);
+                h.mix(eng.events);
+                h.mix(eng.wire.total());
+            }
+            h.value()
+        };
+        let base = run(1);
+        for &w in &WORKER_GRID[1..] {
+            assert_eq!(
+                run(w),
+                base,
+                "avg-family (mu = {mu}) diverged at workers = {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scaffold_is_bit_identical_across_worker_counts() {
+    let run = |workers: usize| {
+        let (mut local, init) = tiny_fed(83);
+        let mut eng = Scaffold::new(init, 6, 0.7).with_workers(workers);
+        let mut rng = Pcg64::seed(84);
+        let mut h = TraceHash::new();
+        for _ in 0..12 {
+            eng.round(&mut local, &mut rng);
+            mix_slice_f32(&mut h, &eng.z);
+            mix_slice_f32(&mut h, &eng.c);
+            h.mix(eng.events);
+        }
+        h.value()
+    };
+    let base = run(1);
+    for &w in &WORKER_GRID[1..] {
+        assert_eq!(run(w), base, "scaffold diverged at workers = {w}");
+    }
+}
+
+#[test]
+fn fedadmm_with_sgd_solver_is_bit_identical_across_worker_counts() {
+    let run = |workers: usize| {
+        let mut rng = Pcg64::seed(85);
+        let (train, _) = synth::generate(&SynthSpec::tiny(), &mut rng);
+        let shards = iid_split(&train, 4, &mut rng);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+        let mut solver =
+            NativeSgd::new(spec, shards, 0.1, 2, 4, &init);
+        let mut eng =
+            FedAdmm::<f32>::with_workers(4, init, 1.0, 0.6, 12, workers);
+        let mut prox = IdentityProx;
+        let mut h = TraceHash::new();
+        for _ in 0..12 {
+            eng.round(&mut solver, &mut prox, &mut rng);
+            mix_slice_f32(&mut h, eng.z());
+            h.mix(eng.total_events());
+        }
+        h.value()
+    };
+    let base = run(1);
+    for &w in &WORKER_GRID[1..] {
+        assert_eq!(run(w), base, "fedadmm diverged at workers = {w}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// workers-invariance: the async sim engine's batched compute phase
+// ---------------------------------------------------------------------------
+
+#[test]
+fn async_sim_engine_is_bit_identical_across_worker_counts() {
+    use deluxe::sim::{AsyncConsensus, Scenario};
+    let run = |workers: usize| {
+        let mut rng = Pcg64::seed(91);
+        let (blocks, _) = generate(
+            &RegressSpec {
+                n_agents: 8,
+                rows_per_agent: 6,
+                dim: 5,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut scn = Scenario::ideal("det", 8, 40);
+        scn.seed = 91;
+        scn.trigger_d = Trigger::vanilla(1e-3);
+        scn.trigger_z = Trigger::vanilla(1e-4);
+        scn.participation = 0.6;
+        scn.reset_period = 10;
+        let mut sim = AsyncConsensus::<f64>::new(scn, vec![0.0; 5])
+            .with_workers(workers);
+        let mut solver = ExactQuadratic::new(&blocks);
+        let mut prox = IdentityProx;
+        sim.run(&mut solver, &mut prox);
+        let mut h = TraceHash::new();
+        mix_slice(&mut h, &sim.z);
+        for i in 0..8 {
+            mix_slice(&mut h, sim.agent_x(i));
+            mix_slice(&mut h, sim.agent_u(i));
+        }
+        h.mix(sim.trace_hash());
+        h.mix(sim.total_events());
+        let (ub, db) = sim.bytes_split();
+        h.mix(ub);
+        h.mix(db);
+        h.value()
+    };
+    let base = run(1);
+    for &w in &WORKER_GRID[1..] {
+        assert_eq!(run(w), base, "async engine diverged at workers = {w}");
+    }
+}
+
+#[test]
+fn async_sim_matches_sync_engine_with_rng_consuming_solver() {
+    // The §9 sync-equivalence contract extended by the round core's fork
+    // protocol: under an ideal scenario, the async engine must reproduce
+    // ConsensusAdmm bit-for-bit *including the per-agent solver RNG
+    // streams* — pinned here with NativeSgd, whose minibatch draws come
+    // entirely from the forked streams.
+    use deluxe::sim::{AsyncConsensus, Scenario};
+    let n = 4;
+    let rounds = 10;
+    let mk_solver = || {
+        let mut rng = Pcg64::seed(95);
+        let (train, _) = synth::generate(&SynthSpec::tiny(), &mut rng);
+        let shards = iid_split(&train, n, &mut rng);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+        (NativeSgd::new(spec, shards, 0.1, 2, 4, &init), init)
+    };
+
+    let mut scn = Scenario::ideal("nn-equiv", n, rounds);
+    scn.seed = 96;
+    scn.rho = 2.0;
+    scn.trigger_d = Trigger::vanilla(1e-3);
+    scn.trigger_z = Trigger::vanilla(1e-4);
+    let (mut solver_a, init) = mk_solver();
+    let mut sim = AsyncConsensus::<f32>::new(scn, init.clone());
+    let mut prox_a = IdentityProx;
+    sim.run(&mut solver_a, &mut prox_a);
+
+    let cfg = ConsensusConfig {
+        rho: 2.0,
+        rounds,
+        trigger_d: Trigger::vanilla(1e-3),
+        trigger_z: Trigger::vanilla(1e-4),
+        workers: 1,
+        ..Default::default()
+    };
+    let (mut solver_b, _) = mk_solver();
+    let mut sync = ConsensusAdmm::new(cfg, n, init);
+    let mut prox_b = IdentityProx;
+    let mut rng = Pcg64::seed(96);
+    for _ in 0..rounds {
+        sync.round(&mut solver_b, &mut prox_b, &mut rng);
+    }
+
+    assert_eq!(sim.z, sync.z, "z diverged under NativeSgd");
+    for i in 0..n {
+        assert_eq!(sim.agent_x(i), sync.agent_x(i), "x[{i}]");
+        assert_eq!(sim.agent_u(i), sync.agent_u(i), "u[{i}]");
+    }
+    assert_eq!(sim.total_events(), sync.total_events());
+    assert_eq!(sim.bytes_split(), sync.bytes_split());
+}
+
+// ---------------------------------------------------------------------------
+// pinned pre-refactor counters (closed-form books on deterministic configs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graph_engine_reproduces_pre_refactor_counters() {
+    // complete(4): degree 3 everywhere, Always triggers, reliable links,
+    // resets every 5 of 20 rounds.  Broadcast events: 20 + 4 resets per
+    // agent; link bytes: one dense dim-2 message per link event plus one
+    // dense sync per link per reset — exactly the hand-rolled engine's
+    // books.
+    struct Pull;
+    impl deluxe::solver::LocalSolver<f64> for Pull {
+        fn solve(
+            &mut self,
+            _a: usize,
+            anchor: &[f64],
+            _rho: f64,
+            _rng: &mut Pcg64,
+        ) -> Vec<f64> {
+            anchor.iter().map(|v| 0.5 * v + 1.0).collect()
+        }
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_agents(&self) -> usize {
+            4
+        }
+    }
+    let g = deluxe::topology::Graph::complete(4);
+    let cfg = GraphConfig {
+        rounds: 20,
+        reset_period: 5,
+        ..Default::default()
+    };
+    let mut eng = GraphAdmm::new(cfg, g, vec![0.0; 2]);
+    let mut rng = Pcg64::seed(5);
+    for _ in 0..20 {
+        eng.round(&mut Pull, &mut rng);
+    }
+    let per_agent: u64 = 20 + 4;
+    assert_eq!(eng.total_events(), 4 * per_agent);
+    assert_eq!(eng.total_link_events(), 4 * per_agent * 3);
+    let dense = WireMessage::<f64>::dense_bytes(2) as u64;
+    assert_eq!(eng.total_wire_bytes(), 4 * per_agent * 3 * dense);
+}
+
+#[test]
+fn general_engine_reproduces_pre_refactor_counters() {
+    let mut rng = Pcg64::seed(11);
+    let d = Matrix::randn(20, 5, &mut rng);
+    let xtrue: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+    let b = d.matvec(&xtrue);
+    let f = QuadraticF::least_squares(&d, &b);
+    let cfg = GeneralConfig {
+        rounds: 30,
+        reset_period: 10,
+        ..Default::default()
+    };
+    let mut eng = GeneralAdmm::new(
+        cfg,
+        Matrix::eye(5),
+        vec![0.0; 5],
+        f,
+        ZProx::diag(-1.0, 0.0),
+        vec![0.0; 5],
+        vec![0.0; 5],
+    );
+    for _ in 0..30 {
+        eng.round(&mut rng);
+    }
+    // 6 lines x (30 triggered + 3 reset) events, each one dense dim-5
+    // transfer on a reliable link
+    assert_eq!(eng.total_events(), 6 * 33);
+    let dense = WireMessage::<f64>::dense_bytes(5) as u64;
+    assert_eq!(eng.total_wire_bytes(), 6 * 33 * dense);
+    for (_, st) in eng.line_stats() {
+        assert_eq!(st.sent, 33);
+        assert_eq!(st.dropped, 0);
+    }
+}
+
+#[test]
+fn sharing_engine_reproduces_pre_refactor_event_counters() {
+    // Always triggers, reliable links, resets every 4 of 16 rounds: the
+    // event books match the pre-refactor engine; the byte books are new
+    // (the old sharing engine had no wire accounting) and must equal
+    // one dense dim-2 transfer per event.
+    struct Pull;
+    impl deluxe::solver::LocalSolver<f64> for Pull {
+        fn solve(
+            &mut self,
+            _a: usize,
+            anchor: &[f64],
+            _rho: f64,
+            _rng: &mut Pcg64,
+        ) -> Vec<f64> {
+            anchor.iter().map(|v| 0.9 * v + 0.1).collect()
+        }
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_agents(&self) -> usize {
+            3
+        }
+    }
+    let cfg = SharingConfig {
+        rounds: 16,
+        reset_period: 4,
+        ..Default::default()
+    };
+    let mut eng = SharingAdmm::new(cfg, 3, 2);
+    let mut rng = Pcg64::seed(6);
+    for _ in 0..16 {
+        eng.round(&mut Pull, &mut rng);
+    }
+    let per_line: u64 = 16 + 4;
+    assert_eq!(eng.total_events(), 2 * 3 * per_line);
+    let dense = WireMessage::<f64>::dense_bytes(2) as u64;
+    assert_eq!(
+        eng.bytes_split(),
+        (3 * per_line * dense, 3 * per_line * dense)
+    );
+    let ws = eng.wire_stats();
+    assert_eq!(ws.uplink.len(), 3);
+    for l in ws.uplink.iter().chain(&ws.downlink) {
+        assert_eq!(l.msgs, per_line);
+        assert_eq!(l.dropped_msgs, 0);
+    }
+}

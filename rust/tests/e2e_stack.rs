@@ -19,7 +19,7 @@ fn runtime() -> Option<PjrtRuntime> {
 fn tiny_alg1_learns_through_pjrt_pallas() {
     let Some(rt) = runtime() else { return };
     let w = NnWorkload::tiny(5);
-    let cfg = NnExperimentConfig { rounds: 25, eval_every: 5, seed: 5 };
+    let cfg = NnExperimentConfig { rounds: 25, eval_every: 5, seed: 5, ..Default::default() };
     let rec = run_algo(
         &w,
         Algo::Alg1Vanilla { delta_d: 0.05, delta_z: 0.05 },
@@ -37,7 +37,7 @@ fn pjrt_variants_agree_with_native_under_same_seed() {
     // (small f32 divergence amplified over rounds is tolerated).
     let Some(rt) = runtime() else { return };
     let seed = 9;
-    let cfg = NnExperimentConfig { rounds: 6, eval_every: 6, seed };
+    let cfg = NnExperimentConfig { rounds: 6, eval_every: 6, seed, ..Default::default() };
     let algo = Algo::Alg1Vanilla { delta_d: 0.05, delta_z: 0.05 };
 
     let w = NnWorkload::tiny(seed);
@@ -71,7 +71,7 @@ fn pjrt_variants_agree_with_native_under_same_seed() {
 fn scaffold_runs_through_pjrt() {
     let Some(rt) = runtime() else { return };
     let w = NnWorkload::tiny(11);
-    let cfg = NnExperimentConfig { rounds: 10, eval_every: 5, seed: 11 };
+    let cfg = NnExperimentConfig { rounds: 10, eval_every: 5, seed: 11, ..Default::default() };
     let rec = run_algo(
         &w,
         Algo::Scaffold { part: 1.0 },
@@ -87,7 +87,7 @@ fn scaffold_runs_through_pjrt() {
 fn fedavg_and_fedprox_run_through_pjrt() {
     let Some(rt) = runtime() else { return };
     let w = NnWorkload::tiny(12);
-    let cfg = NnExperimentConfig { rounds: 8, eval_every: 4, seed: 12 };
+    let cfg = NnExperimentConfig { rounds: 8, eval_every: 4, seed: 12, ..Default::default() };
     for algo in [
         Algo::FedAvg { part: 1.0 },
         Algo::FedProx { part: 1.0, mu: 0.1 },
