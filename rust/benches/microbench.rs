@@ -2,6 +2,11 @@
 //! estimate integration, linalg prox solves, native MLP step.
 //!
 //! `cargo bench --bench microbench`
+//!
+//! `-- --trajectory PATH` instead writes the per-PR perf-trajectory
+//! snapshot (the `BENCH_pr<k>.json` series): the 64-agent pooled
+//! consensus round at workers 1/2/4/8, with per-round µs and
+//! agents/sec derived from the median sample.
 
 use deluxe::admm::{ConsensusAdmm, ConsensusConfig};
 use deluxe::benchlib::{black_box, Bench};
@@ -19,6 +24,15 @@ use deluxe::solver::{ExactQuadratic, IdentityProx, LocalSolver};
 use deluxe::wire::{Compressor, CompressorCfg, ErrorFeedback, WireMessage};
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--trajectory") {
+        let path = args
+            .get(i + 1)
+            .cloned()
+            .unwrap_or_else(|| "BENCH_head.json".to_string());
+        trajectory(&path);
+        return;
+    }
     let mut b = Bench::default();
     println!("== comm hot path ==");
 
@@ -225,4 +239,77 @@ fn main() {
     });
 
     println!("\ndone: {} benchmarks", b.results.len());
+}
+
+/// Write the perf-trajectory snapshot (see module docs) to `path`.
+fn trajectory(path: &str) {
+    use deluxe::jsonio::{write_json, Json};
+    let mut b = Bench::default();
+    let mut rng = Pcg64::seed(1);
+    let spec64 = RegressSpec {
+        n_agents: 64,
+        rows_per_agent: 40,
+        dim: 128,
+        ..Default::default()
+    };
+    let (blocks64, _) = generate(&spec64, &mut rng);
+    let mut cases = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = ConsensusConfig {
+            rounds: 1,
+            trigger_d: Trigger::vanilla(1e-9),
+            trigger_z: Trigger::vanilla(1e-9),
+            workers,
+            ..Default::default()
+        };
+        let mut engine: ConsensusAdmm<f64> =
+            ConsensusAdmm::new(cfg, 64, vec![0.0; 128]);
+        let mut solver = ExactQuadratic::new(&blocks64);
+        let mut prox = IdentityProx;
+        let mut r = Pcg64::seed(7);
+        // warm the per-agent factorization caches once
+        engine.round(&mut solver, &mut prox, &mut r);
+        let res = b.bench(
+            &format!(
+                "consensus.round (64 agents, dim 128, workers {workers})"
+            ),
+            || {
+                engine.round(&mut solver, &mut prox, &mut r);
+            },
+        );
+        let med_ns = res.median_ns();
+        cases.push(Json::obj(vec![
+            ("workers", Json::Num(workers as f64)),
+            ("per_round_us", Json::Num(med_ns / 1e3)),
+            ("agents_per_sec", Json::Num(64.0 / (med_ns / 1e9))),
+            ("result", res.to_json()),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        (
+            "series",
+            Json::Str(
+                "perf trajectory: one BENCH_pr<k>.json per PR".to_string(),
+            ),
+        ),
+        (
+            "bench",
+            Json::Str(
+                "consensus.round (64 agents, dim 128), pooled exact prox"
+                    .to_string(),
+            ),
+        ),
+        (
+            "command",
+            Json::Str(
+                "cargo bench --bench microbench -- --trajectory <path>"
+                    .to_string(),
+            ),
+        ),
+        ("measured", Json::Bool(true)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    write_json(std::path::Path::new(path), &doc)
+        .expect("write trajectory file");
+    println!("trajectory written to {path}");
 }

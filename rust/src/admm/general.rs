@@ -64,6 +64,7 @@ impl QuadraticF {
                 }
             }
             let chol =
+                // lint:allow(panic-in-library): H ⪰ 0 plus ρAᵀA with ρ > 0 is PD for the full-rank problems this engine accepts; failure means malformed problem data
                 Cholesky::factor(&m).expect("H + rho A'A must be PD");
             self.cache = Some((rho, chol));
         }
@@ -72,6 +73,7 @@ impl QuadraticF {
         crate::linalg::axpy(&mut rhs, rho, &at_rhs);
         // rhs doubles as the solution buffer (§Perf: allocation-free
         // Cholesky::solve_in_place on the per-round x-update)
+        // lint:allow(panic-in-library): the stale-branch above just filled the cache, so as_ref() cannot be None
         self.cache.as_ref().unwrap().1.solve_in_place(&mut rhs);
         rhs
     }
@@ -92,6 +94,7 @@ impl ZProx {
     }
 
     pub fn dense(b: Matrix) -> Self {
+        // lint:allow(panic-in-library): full column rank of B is this constructor's documented precondition; failing fast at construction beats a wrong fixed point later
         let chol = Cholesky::factor(&b.gram()).expect("B must be full rank");
         ZProx::Dense { b, chol }
     }

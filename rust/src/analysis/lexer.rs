@@ -1,0 +1,573 @@
+//! Hand-rolled Rust lexer for the lint pass.
+//!
+//! The offline environment has no crates.io access, so there is no `syn`
+//! to lean on; the rules only need a token stream with line/column
+//! positions plus the set of suppression comments, and that much of Rust
+//! lexes with ~200 lines: line/block comments (nested), strings with
+//! escapes (including backslash-newline continuations, which still count
+//! their newline), raw/byte strings, char-vs-lifetime disambiguation,
+//! numbers, identifiers (incl. `r#raw`), and single-character punctuation.
+//! Literal *contents* are deliberately dropped (`text` is empty for
+//! strings) so rule keywords inside messages never trigger findings.
+
+/// Lexical class of a [`Token`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Lit,
+    Lifetime,
+}
+
+/// One lexed token with its 1-based source position.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// A parsed suppression comment.
+///
+/// `trailing` marks a comment that shares its line with code (it then
+/// covers that same line); a standalone comment covers the next line
+/// only.  `malformed` carries the diagnostic for syntactically broken
+/// directives, which become `bad-suppression` findings downstream.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub line: usize,
+    pub col: usize,
+    pub trailing: bool,
+    pub rules: Vec<String>,
+    pub malformed: Option<String>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Parse a line comment (text includes the leading `//`) into a
+/// [`Suppression`] if it carries a `lint:` directive.  Doc comments
+/// (`///`, `//!`) are never directives.
+pub fn parse_suppression(
+    text: &str,
+    line: usize,
+    col: usize,
+    trailing: bool,
+) -> Option<Suppression> {
+    let body = &text[2..];
+    if body.starts_with('/') || body.starts_with('!') {
+        return None;
+    }
+    let body = body.trim();
+    if !body.starts_with("lint:") {
+        return None;
+    }
+    let broken = |rules: Vec<String>, msg: &str| {
+        Some(Suppression {
+            line,
+            col,
+            trailing,
+            rules,
+            malformed: Some(msg.to_string()),
+        })
+    };
+    if !body.starts_with("lint:allow") {
+        return broken(
+            Vec::new(),
+            "unknown lint directive; expected lint:allow(<rule>): \
+             <justification>",
+        );
+    }
+    let rest = &body["lint:allow".len()..];
+    if !rest.starts_with('(') {
+        return broken(
+            Vec::new(),
+            "malformed suppression; expected lint:allow(<rule>): \
+             <justification>",
+        );
+    }
+    let close = match rest.find(')') {
+        Some(c) => c,
+        None => {
+            return broken(
+                Vec::new(),
+                "malformed suppression; expected lint:allow(<rule>): \
+                 <justification>",
+            )
+        }
+    };
+    let rules: Vec<String> =
+        rest[1..close].split(',').map(|r| r.trim().to_string()).collect();
+    if rules.iter().any(String::is_empty) {
+        return broken(Vec::new(), "empty rule name in suppression");
+    }
+    let tail = rest[close + 1..].trim_start();
+    if !tail.starts_with(':') || tail[1..].trim().is_empty() {
+        return broken(
+            rules,
+            "suppression is missing its mandatory justification \
+             (lint:allow(<rule>): <justification>)",
+        );
+    }
+    Some(Suppression { line, col, trailing, rules, malformed: None })
+}
+
+/// Column one past a just-consumed span that may contain newlines.
+fn col_after_span(span: &[char], start_col: usize) -> usize {
+    match span.iter().rposition(|&ch| ch == '\n') {
+        Some(idx) => span.len() - idx,
+        None => start_col + span.len(),
+    }
+}
+
+/// Lex `src` into tokens plus the suppression comments encountered.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Suppression>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut col = 1usize;
+    let mut toks: Vec<Token> = Vec::new();
+    let mut sups: Vec<Suppression> = Vec::new();
+    let peek = |k: usize| if k < n { chars[k] } else { '\0' };
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            col = 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            col += 1;
+            continue;
+        }
+        // line comment (the only place suppressions live)
+        if c == '/' && peek(i + 1) == '/' {
+            let mut j = i;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            let trailing = matches!(toks.last(), Some(t) if t.line == line);
+            if let Some(s) = parse_suppression(&text, line, col, trailing) {
+                sups.push(s);
+            }
+            col += j - i;
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && peek(i + 1) == '*' {
+            let mut depth = 1i32;
+            i += 2;
+            col += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && peek(i + 1) == '*' {
+                    depth += 1;
+                    i += 2;
+                    col += 2;
+                } else if chars[i] == '*' && peek(i + 1) == '/' {
+                    depth -= 1;
+                    i += 2;
+                    col += 2;
+                } else if chars[i] == '\n' {
+                    line += 1;
+                    col = 1;
+                    i += 1;
+                } else {
+                    i += 1;
+                    col += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings / byte strings / raw identifiers
+        if c == 'r' || c == 'b' {
+            // raw identifier r#name
+            if c == 'r' && peek(i + 1) == '#' && is_ident_start(peek(i + 2)) {
+                let start_col = col;
+                i += 2;
+                col += 2;
+                let mut j = i;
+                while j < n && is_ident_char(chars[j]) {
+                    j += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Ident,
+                    text: chars[i..j].iter().collect(),
+                    line,
+                    col: start_col,
+                });
+                col += j - i;
+                i = j;
+                continue;
+            }
+            let raw_str = (c == 'r'
+                && (peek(i + 1) == '"' || peek(i + 1) == '#'))
+                || (c == 'b'
+                    && peek(i + 1) == 'r'
+                    && (peek(i + 2) == '"' || peek(i + 2) == '#'));
+            if raw_str {
+                let start_col = col;
+                let mut p = i + if c == 'b' { 2 } else { 1 };
+                let mut nh = 0usize;
+                while peek(p) == '#' {
+                    nh += 1;
+                    p += 1;
+                }
+                if peek(p) == '"' {
+                    p += 1;
+                    while p < n {
+                        if chars[p] == '"'
+                            && p + 1 + nh <= n
+                            && chars[p + 1..p + 1 + nh]
+                                .iter()
+                                .all(|&h| h == '#')
+                        {
+                            p += 1 + nh;
+                            break;
+                        }
+                        if chars[p] == '\n' {
+                            line += 1;
+                        }
+                        p += 1;
+                    }
+                    col = col_after_span(&chars[i..p], start_col);
+                    toks.push(Token {
+                        kind: TokKind::Lit,
+                        text: String::new(),
+                        line,
+                        col: start_col,
+                    });
+                    i = p;
+                    continue;
+                }
+                // not actually a raw string: fall through to ident
+            }
+            // byte string b"..."
+            if c == 'b' && peek(i + 1) == '"' {
+                let start_col = col;
+                let mut p = i + 2;
+                while p < n {
+                    if chars[p] == '\\' {
+                        if peek(p + 1) == '\n' {
+                            line += 1;
+                        }
+                        p += 2;
+                        continue;
+                    }
+                    if chars[p] == '"' {
+                        p += 1;
+                        break;
+                    }
+                    if chars[p] == '\n' {
+                        line += 1;
+                    }
+                    p += 1;
+                }
+                col = col_after_span(&chars[i..p.min(n)], start_col);
+                toks.push(Token {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                    col: start_col,
+                });
+                i = p;
+                continue;
+            }
+            // byte char literal b'x' / b'\n'
+            if c == 'b' && peek(i + 1) == '\'' {
+                let start_col = col;
+                let mut p = i + 2;
+                if peek(p) == '\\' {
+                    p += 2;
+                } else {
+                    p += 1;
+                }
+                if peek(p) == '\'' {
+                    p += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                    col: start_col,
+                });
+                col += p - i;
+                i = p;
+                continue;
+            }
+            // plain identifier starting with r/b: fall through
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_char(chars[j]) {
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Ident,
+                text: chars[i..j].iter().collect(),
+                line,
+                col,
+            });
+            col += j - i;
+            i = j;
+            continue;
+        }
+        // string literal (escapes may hide quotes and span lines)
+        if c == '"' {
+            let start_col = col;
+            let mut p = i + 1;
+            while p < n {
+                if chars[p] == '\\' {
+                    // a backslash-newline continuation still advances the
+                    // line counter even though the newline is "escaped"
+                    if peek(p + 1) == '\n' {
+                        line += 1;
+                    }
+                    p += 2;
+                    continue;
+                }
+                if chars[p] == '"' {
+                    p += 1;
+                    break;
+                }
+                if chars[p] == '\n' {
+                    line += 1;
+                }
+                p += 1;
+            }
+            col = col_after_span(&chars[i..p.min(n)], start_col);
+            toks.push(Token {
+                kind: TokKind::Lit,
+                text: String::new(),
+                line,
+                col: start_col,
+            });
+            i = p;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let n1 = peek(i + 1);
+            let n2 = peek(i + 2);
+            if n1 == '\\' {
+                // escaped char literal: scan to the closing quote
+                let start_col = col;
+                let mut p = i + 2;
+                if p < n {
+                    p += 1;
+                }
+                while p < n && chars[p] != '\'' {
+                    p += 1;
+                }
+                p += 1;
+                toks.push(Token {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                    col: start_col,
+                });
+                col += p - i;
+                i = p;
+                continue;
+            }
+            if n2 == '\'' && n1 != '\0' {
+                toks.push(Token {
+                    kind: TokKind::Lit,
+                    text: String::new(),
+                    line,
+                    col,
+                });
+                col += 3;
+                i += 3;
+                continue;
+            }
+            // lifetime
+            let start_col = col;
+            let mut j = i + 1;
+            while j < n && is_ident_char(chars[j]) {
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Lifetime,
+                text: chars[i + 1..j].iter().collect(),
+                line,
+                col: start_col,
+            });
+            col += j - i;
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start_col = col;
+            let mut j = i;
+            loop {
+                if j >= n {
+                    break;
+                }
+                let cj = chars[j];
+                let cont = is_ident_char(cj)
+                    || (cj == '.'
+                        && j + 1 < n
+                        && chars[j + 1].is_ascii_digit()
+                        && !(j > i && chars[j - 1] == '.'));
+                if !cont {
+                    break;
+                }
+                if cj == '.' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Lit,
+                text: chars[i..j].iter().collect(),
+                line,
+                col: start_col,
+            });
+            col += j - i;
+            i = j;
+            continue;
+        }
+        toks.push(Token {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+            col,
+        });
+        col += 1;
+        i += 1;
+    }
+    (toks, sups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let toks = lex("let s = \"HashMap panic! unwrap\";").0;
+        assert_eq!(idents("let s = \"HashMap panic! unwrap\";"), ["let", "s"]);
+        assert!(toks
+            .iter()
+            .any(|t| t.kind == TokKind::Lit && t.text.is_empty()));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        assert_eq!(idents(r#"let s = "a\"HashMap"; x"#), ["let", "s", "x"]);
+    }
+
+    #[test]
+    fn backslash_newline_continuation_counts_its_line() {
+        let src = "let s = \"a\\\n   b\";\nfoo();";
+        let toks = lex(src).0;
+        let foo = toks.iter().find(|t| t.text == "foo").unwrap();
+        assert_eq!(foo.line, 3);
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        assert_eq!(idents(r##"let x = r#"HashMap"#; y"##), ["let", "x", "y"]);
+        assert_eq!(idents("let r#type = 1;"), ["let", "type"]);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = lex("let c = 'x'; fn f<'a>(v: &'a str) {}").0;
+        let lits: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Lit).collect();
+        assert_eq!(lits.len(), 1);
+        let lifes: Vec<_> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lifes, ["a", "a"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        assert_eq!(idents("/* a /* b */ HashMap */ x"), ["x"]);
+    }
+
+    #[test]
+    fn line_and_col_positions() {
+        let toks = lex("ab cd\n  ef").0;
+        assert_eq!(
+            toks.iter()
+                .map(|t| (t.text.as_str(), t.line, t.col))
+                .collect::<Vec<_>>(),
+            [("ab", 1, 1), ("cd", 1, 4), ("ef", 2, 3)]
+        );
+    }
+
+    #[test]
+    fn suppression_trailing_vs_standalone() {
+        let src = "\
+let a = 1; // lint:allow(wall-clock): trailing covers this line
+// lint:allow(ambient-rng): standalone covers the next line
+let b = 2;
+";
+        let sups = lex(src).1;
+        assert_eq!(sups.len(), 2);
+        assert!(sups[0].trailing);
+        assert_eq!(sups[0].rules, ["wall-clock"]);
+        assert!(!sups[1].trailing);
+        assert_eq!(sups[1].rules, ["ambient-rng"]);
+        assert!(sups.iter().all(|s| s.malformed.is_none()));
+    }
+
+    #[test]
+    fn suppression_requires_justification() {
+        let s = parse_suppression("// lint:allow(wall-clock)", 1, 1, false)
+            .unwrap();
+        assert!(s.malformed.is_some());
+        let s2 =
+            parse_suppression("// lint:allow(wall-clock):   ", 1, 1, false)
+                .unwrap();
+        assert!(s2.malformed.is_some());
+    }
+
+    #[test]
+    fn doc_comments_are_not_directives() {
+        assert!(parse_suppression("/// lint:allow(x): y", 1, 1, false)
+            .is_none());
+        assert!(parse_suppression("//! lint:allow(x): y", 1, 1, false)
+            .is_none());
+    }
+
+    #[test]
+    fn multi_rule_suppression_parses() {
+        let s = parse_suppression(
+            "// lint:allow(wall-clock, ambient-rng): both justified here",
+            4,
+            9,
+            true,
+        )
+        .unwrap();
+        assert_eq!(s.rules, ["wall-clock", "ambient-rng"]);
+        assert!(s.malformed.is_none());
+        assert_eq!((s.line, s.col, s.trailing), (4, 9, true));
+    }
+}

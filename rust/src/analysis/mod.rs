@@ -1,0 +1,296 @@
+//! `deluxe lint` — a house-invariant static-analysis pass.
+//!
+//! The repo's determinism story (bit-exact identity compression,
+//! async≡sync, workers-invariance, per-(round, agent) forked RNG
+//! streams, the sim's integer-µs virtual clock) is enforced by tests
+//! after the fact, but nothing stops a future change from silently
+//! breaking it with a `HashMap` iteration, an ambient RNG or a
+//! wall-clock read.  This module makes those contracts machine-checked
+//! at CI time: a hand-rolled lexer ([`lexer`]), five syntactic rules
+//! plus suppression handling ([`rules`]), and a tree walker — all
+//! dependency-free, since the offline environment has no `syn`.
+//!
+//! The rule catalogue, the per-module scoping and the suppression
+//! grammar (`lint:allow(<rule>): <justification>`, justification
+//! mandatory) are documented in `DESIGN.md` §11.  The pass runs as
+//! `deluxe lint [--json] [--root DIR]` and exits nonzero on findings;
+//! `rust/tests/lint.rs` pins each rule against a fixture corpus and
+//! asserts the repo tree itself is clean.
+
+pub mod lexer;
+pub mod rules;
+
+use anyhow::Context;
+use std::path::Path;
+
+use crate::jsonio::Json;
+
+/// The five enforceable rules, in catalogue order.
+pub const RULES: [&str; 5] = [
+    "nondet-iteration",
+    "wall-clock",
+    "ambient-rng",
+    "panic-in-library",
+    "unaccounted-send",
+];
+
+/// Pseudo-rule reported for broken suppression comments; it cannot
+/// itself be suppressed.
+pub const BAD_SUPPRESSION: &str = "bad-suppression";
+
+/// Library modules whose iteration order / sends feed trajectories.
+pub const RESTRICTED: [&str; 7] =
+    ["admm", "sim", "comm", "wire", "baselines", "coordinator", "runtime"];
+
+/// Modules allowed to read the wall clock (they measure, not simulate).
+pub const WALL_CLOCK_ALLOW: [&str; 2] = ["benchlib", "metrics"];
+
+/// Identifiers that construct RNG state from ambient entropy.
+pub const RNG_IDENTS: [&str; 5] =
+    ["thread_rng", "from_entropy", "OsRng", "RandomState", "getrandom"];
+
+/// Diverging macros covered by `panic-in-library` (when followed by `!`).
+pub const PANIC_MACROS: [&str; 4] =
+    ["panic", "unreachable", "todo", "unimplemented"];
+
+/// What a file is, which decides the rule set applied to it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileKind {
+    /// `rust/src/**` except the CLI entry points: all rules apply.
+    Library,
+    /// `rust/src/main.rs` / `rust/src/cli.rs`: exempt (a CLI may panic).
+    Cli,
+    /// `rust/tests/**`: exempt.
+    Test,
+    /// `rust/benches/**`: exempt (benches legitimately read the clock).
+    Bench,
+    /// `examples/**`: exempt.
+    Example,
+}
+
+/// One lint finding at a repo-relative `/`-separated path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    pub path: String,
+    pub rule: String,
+    pub line: usize,
+    pub col: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub(crate) fn new(
+        rule: &str,
+        line: usize,
+        col: usize,
+        message: String,
+    ) -> Finding {
+        Finding { path: String::new(), rule: rule.to_string(), line, col, message }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: [{}] {}",
+            self.path, self.line, self.col, self.rule, self.message
+        )
+    }
+}
+
+/// Classify a repo-relative path into its [`FileKind`] and module (the
+/// first path component under `rust/src/`, or `""` for root files).
+/// Returns `None` for paths the pass skips entirely (vendored crates,
+/// the lint fixture corpus, non-Rust files, everything outside the
+/// source roots).
+pub fn classify(path: &str) -> Option<(FileKind, String)> {
+    let p = path.replace('\\', "/");
+    if !p.ends_with(".rs") {
+        return None;
+    }
+    if p.contains("/vendor/")
+        || p.starts_with("rust/vendor/")
+        || p.contains("lint_fixtures")
+    {
+        return None;
+    }
+    if let Some(rest) = p.strip_prefix("rust/src/") {
+        if rest == "main.rs" || rest == "cli.rs" {
+            return Some((FileKind::Cli, String::new()));
+        }
+        let module = match rest.find('/') {
+            Some(idx) => rest[..idx].to_string(),
+            None => String::new(),
+        };
+        return Some((FileKind::Library, module));
+    }
+    if p.starts_with("rust/tests/") {
+        return Some((FileKind::Test, String::new()));
+    }
+    if p.starts_with("rust/benches/") {
+        return Some((FileKind::Bench, String::new()));
+    }
+    if p.starts_with("examples/") {
+        return Some((FileKind::Example, String::new()));
+    }
+    None
+}
+
+/// Analyze one file's source under its repo-relative path.  Findings
+/// come back sorted by (line, col, rule) with `path` filled in.
+pub fn analyze_source(path: &str, src: &str) -> Vec<Finding> {
+    let (kind, module) = match classify(path) {
+        Some(c) => c,
+        None => return Vec::new(),
+    };
+    let (toks, sups) = lexer::lex(src);
+    let mask = rules::cfg_test_mask(&toks);
+    let raw = rules::scan_rules(kind, &module, &toks, &mask);
+    let mut findings = rules::apply_suppressions(raw, &sups);
+    for f in &mut findings {
+        f.path = path.to_string();
+    }
+    findings
+}
+
+/// Walk the repo tree under `root` (the four source roots, skipping
+/// `vendor/` and `lint_fixtures/`) and analyze every `.rs` file.  The
+/// walk sorts directory entries so finding order is deterministic.
+pub fn run_on_tree(root: &Path) -> anyhow::Result<Vec<Finding>> {
+    let mut files: Vec<String> = Vec::new();
+    for top in ["rust/src", "rust/benches", "rust/tests", "examples"] {
+        let base = root.join(top);
+        if base.is_dir() {
+            collect_rs(root, &base, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        let src = std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("reading {rel}"))?;
+        findings.extend(analyze_source(rel, &src));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(
+    root: &Path,
+    dir: &Path,
+    files: &mut Vec<String>,
+) -> anyhow::Result<()> {
+    let mut entries: Vec<std::path::PathBuf> = Vec::new();
+    let iter = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?;
+    for entry in iter {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        let name = match path.file_name().and_then(|s| s.to_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        if path.is_dir() {
+            if name == "vendor" || name == "lint_fixtures" {
+                continue;
+            }
+            collect_rs(root, &path, files)?;
+        } else if name.ends_with(".rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path);
+            files.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+/// JSON export of a finding list (the `deluxe lint --json` payload).
+pub fn findings_to_json(findings: &[Finding]) -> Json {
+    Json::obj(vec![
+        ("findings", Json::Arr(
+            findings
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("path", Json::Str(f.path.clone())),
+                        ("line", Json::Num(f.line as f64)),
+                        ("col", Json::Num(f.col as f64)),
+                        ("rule", Json::Str(f.rule.clone())),
+                        ("message", Json::Str(f.message.clone())),
+                    ])
+                })
+                .collect(),
+        )),
+        ("count", Json::Num(findings.len() as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_kinds() {
+        assert_eq!(
+            classify("rust/src/admm/core.rs"),
+            Some((FileKind::Library, "admm".to_string()))
+        );
+        assert_eq!(
+            classify("rust/src/lib.rs"),
+            Some((FileKind::Library, String::new()))
+        );
+        assert_eq!(
+            classify("rust/src/main.rs"),
+            Some((FileKind::Cli, String::new()))
+        );
+        assert_eq!(
+            classify("rust/src/cli.rs"),
+            Some((FileKind::Cli, String::new()))
+        );
+        assert_eq!(
+            classify("rust/tests/determinism.rs"),
+            Some((FileKind::Test, String::new()))
+        );
+        assert_eq!(
+            classify("rust/benches/microbench.rs"),
+            Some((FileKind::Bench, String::new()))
+        );
+        assert_eq!(
+            classify("examples/quickstart.rs"),
+            Some((FileKind::Example, String::new()))
+        );
+    }
+
+    #[test]
+    fn classify_skips() {
+        assert_eq!(classify("rust/vendor/anyhow/src/lib.rs"), None);
+        assert_eq!(classify("rust/tests/lint_fixtures/panic.rs"), None);
+        assert_eq!(classify("python/export.py"), None);
+        assert_eq!(classify("DESIGN.md"), None);
+    }
+
+    #[test]
+    fn findings_sorted_and_pathed() {
+        let src = "pub fn f(m: &std::collections::HashMap<u8, u8>) -> u8 {\n    *m.values().next().unwrap()\n}\n";
+        let fs = analyze_source("rust/src/sim/x.rs", src);
+        assert_eq!(fs.len(), 2);
+        assert_eq!(fs[0].rule, "nondet-iteration");
+        assert_eq!(fs[1].rule, "panic-in-library");
+        assert!(fs.iter().all(|f| f.path == "rust/src/sim/x.rs"));
+        assert!(fs[0].line <= fs[1].line);
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let src = "pub fn f() { let x: Option<u8> = None; x.unwrap(); }\n";
+        let fs = analyze_source("rust/src/model/x.rs", src);
+        let j = findings_to_json(&fs);
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(1.0));
+        let arr = j.get("findings").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            arr[0].get("rule").and_then(Json::as_str),
+            Some("panic-in-library")
+        );
+    }
+}

@@ -1,0 +1,348 @@
+//! The per-file rule engine: `#[cfg(test)]` masking, the five
+//! house-invariant rules, and suppression application.
+//!
+//! Rules operate on the token stream from [`crate::analysis::lexer`]; no
+//! type information exists, so each rule is a conservative syntactic
+//! pattern tuned against this crate (see `DESIGN.md` §11 for the
+//! catalogue and the reasoning behind each pattern).
+
+use crate::analysis::lexer::{Suppression, TokKind, Token};
+use crate::analysis::{
+    FileKind, Finding, BAD_SUPPRESSION, PANIC_MACROS, RESTRICTED,
+    RNG_IDENTS, RULES, WALL_CLOCK_ALLOW,
+};
+
+/// Mark every token covered by a `#[cfg(test)]`-gated item (the
+/// attribute itself, any stacked attributes, and the item body through
+/// its matching `}` or a top-level `;`).  `#[cfg(not(test))]` and other
+/// predicates are left unmasked.
+pub fn cfg_test_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_attr = toks[i].kind == TokKind::Punct
+            && toks[i].text == "#"
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "[";
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        // find the attribute's matching `]`, collecting its idents
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut idents: Vec<&str> = Vec::new();
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct && t.text == "[" {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && t.text == "]" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if t.kind == TokKind::Ident {
+                idents.push(&t.text);
+            }
+            j += 1;
+        }
+        if j >= toks.len() {
+            break;
+        }
+        let gated = idents.iter().any(|s| *s == "cfg")
+            && idents.iter().any(|s| *s == "test")
+            && !idents.iter().any(|s| *s == "not");
+        if !gated {
+            i = j + 1;
+            continue;
+        }
+        // skip further stacked attributes
+        let mut k = j + 1;
+        while k + 1 < toks.len()
+            && toks[k].text == "#"
+            && toks[k + 1].text == "["
+        {
+            let mut d2 = 0i32;
+            k += 1;
+            while k < toks.len() {
+                if toks[k].text == "[" {
+                    d2 += 1;
+                } else if toks[k].text == "]" {
+                    d2 -= 1;
+                    if d2 == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            k += 1;
+        }
+        // walk to the item's end: first `;` at brace depth 0, or the
+        // matching `}` of the first `{`
+        let mut bd = 0i32;
+        let mut end = k;
+        while end < toks.len() {
+            let t = &toks[end];
+            if t.kind == TokKind::Punct && t.text == "{" {
+                bd += 1;
+            } else if t.kind == TokKind::Punct && t.text == "}" {
+                bd -= 1;
+                if bd == 0 {
+                    break;
+                }
+            } else if t.kind == TokKind::Punct && t.text == ";" && bd == 0 {
+                break;
+            }
+            end += 1;
+        }
+        let stop = (end + 1).min(toks.len());
+        for m in mask.iter_mut().take(stop).skip(i) {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Run the five rules over an (unmasked) token stream.
+pub fn scan_rules(
+    kind: FileKind,
+    module: &str,
+    toks: &[Token],
+    mask: &[bool],
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let lib = kind == FileKind::Library;
+    let restricted = lib && RESTRICTED.contains(&module);
+    let get = |k: usize| toks.get(k);
+
+    for (i, tok) in toks.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let is_dot = tok.kind == TokKind::Punct && tok.text == ".";
+        if tok.kind != TokKind::Ident && !is_dot {
+            continue;
+        }
+        // nondet-iteration
+        if restricted
+            && tok.kind == TokKind::Ident
+            && (tok.text == "HashMap" || tok.text == "HashSet")
+        {
+            out.push(Finding::new(
+                "nondet-iteration",
+                tok.line,
+                tok.col,
+                format!(
+                    "{} in `{}/` — iteration order is nondeterministic \
+                     and feeds trajectories; use BTreeMap or an indexed \
+                     Vec",
+                    tok.text, module
+                ),
+            ));
+            continue;
+        }
+        // wall-clock
+        if lib
+            && !WALL_CLOCK_ALLOW.contains(&module)
+            && tok.kind == TokKind::Ident
+        {
+            if tok.text == "SystemTime" {
+                out.push(Finding::new(
+                    "wall-clock",
+                    tok.line,
+                    tok.col,
+                    "SystemTime in library code; the sim's integer-µs \
+                     virtual clock is the only admissible time source"
+                        .to_string(),
+                ));
+                continue;
+            }
+            if tok.text == "Instant" {
+                if let (Some(a), Some(b), Some(c)) =
+                    (get(i + 1), get(i + 2), get(i + 3))
+                {
+                    if a.text == ":"
+                        && b.text == ":"
+                        && c.kind == TokKind::Ident
+                        && c.text == "now"
+                    {
+                        out.push(Finding::new(
+                            "wall-clock",
+                            tok.line,
+                            tok.col,
+                            "Instant::now in library code; the sim's \
+                             integer-µs virtual clock is the only \
+                             admissible time source"
+                                .to_string(),
+                        ));
+                        continue;
+                    }
+                }
+            }
+        }
+        // ambient-rng
+        if lib
+            && module != "rng"
+            && tok.kind == TokKind::Ident
+            && RNG_IDENTS.contains(&tok.text.as_str())
+        {
+            out.push(Finding::new(
+                "ambient-rng",
+                tok.line,
+                tok.col,
+                format!(
+                    "`{}` constructs RNG state from ambient entropy; all \
+                     streams must flow through Pcg64::fork(round, agent)",
+                    tok.text
+                ),
+            ));
+            continue;
+        }
+        // `.method(` patterns: panic-in-library and unaccounted-send
+        if lib && is_dot {
+            if let (Some(m), Some(p)) = (get(i + 1), get(i + 2)) {
+                if m.kind == TokKind::Ident
+                    && (m.text == "unwrap" || m.text == "expect")
+                    && p.kind == TokKind::Punct
+                    && p.text == "("
+                {
+                    out.push(Finding::new(
+                        "panic-in-library",
+                        m.line,
+                        m.col,
+                        format!(
+                            "`.{}()` in a library path; propagate with \
+                             anyhow::Result instead",
+                            m.text
+                        ),
+                    ));
+                }
+                if restricted
+                    && m.kind == TokKind::Ident
+                    && (m.text == "send" || m.text == "try_send")
+                    && p.kind == TokKind::Punct
+                    && p.text == "("
+                {
+                    out.push(Finding::new(
+                        "unaccounted-send",
+                        m.line,
+                        m.col,
+                        format!(
+                            "raw channel `.{}()` bypasses WireStats byte \
+                             accounting; charge via \
+                             DropChannel::transmit_bytes / \
+                             ChannelStats::record_reliable or justify",
+                            m.text
+                        ),
+                    ));
+                }
+                if restricted
+                    && m.kind == TokKind::Ident
+                    && m.text == "transmit"
+                    && p.kind == TokKind::Punct
+                    && p.text == "("
+                {
+                    // scan the balanced argument list for a *bytes* ident
+                    let mut depth = 0i32;
+                    let mut k = i + 2;
+                    let mut has_bytes = false;
+                    while k < toks.len() {
+                        let tk = &toks[k];
+                        if tk.kind == TokKind::Punct && tk.text == "(" {
+                            depth += 1;
+                        } else if tk.kind == TokKind::Punct && tk.text == ")"
+                        {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        } else if tk.kind == TokKind::Ident
+                            && (tk.text == "bytes"
+                                || tk.text.ends_with("_bytes"))
+                        {
+                            has_bytes = true;
+                        }
+                        k += 1;
+                    }
+                    if !has_bytes {
+                        out.push(Finding::new(
+                            "unaccounted-send",
+                            m.line,
+                            m.col,
+                            "`.transmit()` without a byte-size argument \
+                             charges zero wire bytes; use transmit_bytes \
+                             or justify"
+                                .to_string(),
+                        ));
+                    }
+                }
+            }
+            continue;
+        }
+        // panic!/unreachable!/todo!/unimplemented!
+        if lib
+            && tok.kind == TokKind::Ident
+            && PANIC_MACROS.contains(&tok.text.as_str())
+        {
+            if let Some(nxt) = get(i + 1) {
+                if nxt.kind == TokKind::Punct && nxt.text == "!" {
+                    out.push(Finding::new(
+                        "panic-in-library",
+                        tok.line,
+                        tok.col,
+                        format!(
+                            "`{}!` in a library path; propagate with \
+                             anyhow::Result instead",
+                            tok.text
+                        ),
+                    ));
+                }
+            }
+            continue;
+        }
+    }
+    out
+}
+
+/// Drop findings covered by a well-formed suppression on the same line
+/// (trailing) or the line above (standalone), then append
+/// `bad-suppression` findings for malformed directives and unknown rule
+/// names.  `bad-suppression` itself cannot be suppressed.
+pub fn apply_suppressions(
+    raw: Vec<Finding>,
+    sups: &[Suppression],
+) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    for f in raw {
+        let covered = sups.iter().any(|s| {
+            s.malformed.is_none()
+                && ((s.trailing && s.line == f.line)
+                    || (!s.trailing && s.line + 1 == f.line))
+                && s.rules.iter().any(|r| r == &f.rule)
+        });
+        if !covered {
+            out.push(f);
+        }
+    }
+    for s in sups {
+        if let Some(msg) = &s.malformed {
+            out.push(Finding::new(BAD_SUPPRESSION, s.line, s.col, msg.clone()));
+        } else {
+            for r in &s.rules {
+                if !RULES.contains(&r.as_str()) {
+                    out.push(Finding::new(
+                        BAD_SUPPRESSION,
+                        s.line,
+                        s.col,
+                        format!("suppression names unknown rule `{r}`"),
+                    ));
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        (a.line, a.col, &a.rule).cmp(&(b.line, b.col, &b.rule))
+    });
+    out
+}

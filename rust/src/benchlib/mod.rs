@@ -30,7 +30,7 @@ impl BenchResult {
 
     pub fn median_ns(&self) -> f64 {
         let mut xs = self.per_iter_ns();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         if xs.is_empty() {
             return 0.0;
         }
@@ -58,6 +58,20 @@ impl BenchResult {
             self.samples.len(),
             self.iters_per_sample,
         )
+    }
+
+    /// JSON row for the `BENCH_*.json` perf-trajectory series (see
+    /// `rust/benches/microbench.rs --trajectory`).
+    pub fn to_json(&self) -> crate::jsonio::Json {
+        use crate::jsonio::Json;
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_ns", Json::Num(self.mean_ns())),
+            ("median_ns", Json::Num(self.median_ns())),
+            ("stddev_ns", Json::Num(self.stddev_ns())),
+            ("samples", Json::Num(self.samples.len() as f64)),
+            ("iters_per_sample", Json::Num(self.iters_per_sample as f64)),
+        ])
     }
 }
 
@@ -144,7 +158,8 @@ impl Bench {
         };
         println!("{}", res.report());
         self.results.push(res);
-        self.results.last().unwrap()
+        let n = self.results.len();
+        &self.results[n - 1]
     }
 
     /// Time a single invocation (for long end-to-end drivers).
@@ -158,7 +173,8 @@ impl Bench {
         };
         println!("{}", res.report());
         self.results.push(res);
-        self.results.last().unwrap()
+        let n = self.results.len();
+        &self.results[n - 1]
     }
 }
 

@@ -66,6 +66,7 @@ impl RunConfig {
             // whole sweep — malformed values are fatal, same as the JSON
             // config path
             cfg.compressor = CompressorCfg::parse(spec)
+                // lint:allow(panic-in-library): a malformed --compressor silently measuring the dense baseline would corrupt a whole sweep; fatal-by-design for CLI input
                 .unwrap_or_else(|e| panic!("--compressor: {e}"));
         }
         cfg

@@ -145,6 +145,7 @@ impl Coordinator {
                 let join = std::thread::Builder::new()
                     .name(format!("dela-agent-{i}"))
                     .spawn(move || worker.run(rx))
+                    // lint:allow(panic-in-library): thread spawn fails only on OS resource exhaustion; no meaningful recovery exists here
                     .expect("spawn agent thread");
                 AgentHandle {
                     tx,
@@ -187,13 +188,16 @@ impl Coordinator {
                 let bytes = msg.wire_bytes() as u64;
                 payload = a.down_ch.transmit_bytes(msg, bytes, &mut self.rng);
             }
+            // lint:allow(unaccounted-send): downlink bytes were charged via transmit_bytes above; this mpsc send is the thread-boundary transfer, not a wire hop
             a.tx.send(ToAgent::Round { zdelta: payload })
+                // lint:allow(panic-in-library): a closed channel means the agent thread already panicked; propagating that panic is intended
                 .expect("agent thread alive");
         }
         // gather uplink
         let mut got = 0;
         let mut uplink_events = 0;
         while got < n {
+            // lint:allow(panic-in-library): a closed channel means an agent thread already panicked; propagating that panic is intended
             let msg = self.from_rx.recv().expect("agent reply");
             if let Some(wire_msg) = msg.delta {
                 self.zeta_hat.apply_scaled_msg(&wire_msg, 1.0 / n as f64);
@@ -219,7 +223,9 @@ impl Coordinator {
                 a.z_trig.reset(&z);
                 a.ef_down.clear();
                 a.down_ch.stats.record_reliable(sync_bytes);
+                // lint:allow(unaccounted-send): reset bytes were charged via record_reliable on the line above; the mpsc send is the thread-boundary transfer
                 a.tx.send(ToAgent::Reset { z: z.clone() })
+                    // lint:allow(panic-in-library): a closed channel means the agent thread already panicked; propagating that panic is intended
                     .expect("agent thread alive");
             }
         }
@@ -244,6 +250,7 @@ impl Coordinator {
     /// Stop all agent threads; returns total uplink d-events.
     pub fn shutdown(mut self) -> u64 {
         for a in &self.agents {
+            // lint:allow(unaccounted-send): Stop is a control message with no payload; nothing crosses the modelled wire
             let _ = a.tx.send(ToAgent::Stop);
         }
         // agents reply with a final stats message
@@ -341,6 +348,7 @@ impl AgentWorker {
                             &mut self.rng,
                         );
                     }
+                    // lint:allow(unaccounted-send): uplink bytes were charged via transmit_bytes when the payload was produced; this send reports them to the leader
                     let _ = self.to_leader.send(FromAgent {
                         agent: self.id,
                         delta: payload,
@@ -359,6 +367,7 @@ impl AgentWorker {
                     self.zhat.reset_to(&z);
                 }
                 ToAgent::Stop => {
+                    // lint:allow(unaccounted-send): final stats report carries no payload; all wire bytes were charged when transmitted
                     let _ = self.to_leader.send(FromAgent {
                         agent: self.id,
                         delta: None,

@@ -58,7 +58,7 @@ pub fn dirichlet_split(
             .enumerate()
             .map(|(j, &pi)| (pi * n as f64 - counts[j] as f64, j))
             .collect();
-        rem.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        rem.sort_by(|a, b| b.0.total_cmp(&a.0));
         let assigned: usize = counts.iter().sum();
         for k in 0..(n - assigned) {
             counts[rem[k % n_agents].1] += 1;

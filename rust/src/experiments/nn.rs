@@ -211,6 +211,7 @@ pub fn run_algo(
                     Trigger::participation(part),
                     Trigger::participation(part),
                 ),
+                // lint:allow(panic-in-library): the outer match arm already restricted algo to these three variants
                 _ => unreachable!(),
             };
             // FedADMM is Alg. 1 with participation triggers (see
@@ -249,6 +250,7 @@ pub fn run_algo(
                         w.lr,
                         &init,
                     )
+                    // lint:allow(panic-in-library): a PJRT solver that fails to build means the artifact set is broken; aborting the experiment is intended
                     .expect("pjrt solver");
                     for k in 0..cfg.rounds {
                         engine.round(&mut solver, &mut prox, &mut rng);

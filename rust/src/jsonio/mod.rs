@@ -20,13 +20,23 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at {line}:{col}: {msg}")]
+/// Parse error with a 1-based source position.  Implements
+/// `std::error::Error`, so `?` converts it into `anyhow::Error` at
+/// every call site that propagates.
+#[derive(Debug)]
 pub struct JsonError {
     pub line: usize,
     pub col: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json error at {}:{}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---------------------------------------------------------------
@@ -205,7 +215,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
@@ -237,7 +247,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.eat(b'{')?;
         let mut map = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
@@ -248,7 +258,7 @@ impl<'a> Parser<'a> {
             self.ws();
             let key = self.string()?;
             self.ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             self.ws();
             let val = self.value()?;
             map.insert(key, val);
@@ -265,7 +275,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.eat(b'[')?;
         let mut arr = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
@@ -288,7 +298,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -330,7 +340,10 @@ impl<'a> Parser<'a> {
                     let start = self.pos;
                     let text = std::str::from_utf8(&self.b[start..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let ch = text.chars().next().unwrap();
+                    let ch = text
+                        .chars()
+                        .next()
+                        .ok_or_else(|| self.err("unterminated string"))?;
                     s.push(ch);
                     self.pos += ch.len_utf8();
                 }
@@ -361,7 +374,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))

@@ -23,10 +23,14 @@
 //! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
 //!   artifacts from `artifacts/` (Python never runs on the request path).
 //! * [`coordinator`] — the threaded leader/agent runtime.
+//! * [`analysis`] — the `deluxe lint` static-analysis pass that
+//!   machine-checks the determinism / panic-freedom / byte-accounting
+//!   house invariants (DESIGN.md §11).
 //! * Substrates built from scratch for the offline environment: [`rng`],
 //!   [`jsonio`], [`linalg`], [`data`], [`topology`], [`metrics`],
 //!   [`benchlib`], [`proptest`], [`cli`].
 
+pub mod analysis;
 pub mod benchlib;
 pub mod cli;
 pub mod comm;

@@ -165,6 +165,7 @@ impl Matrix {
         let mut g = self.gram();
         let eps = 1e-12 * (1.0 + g.data.iter().cloned().fold(0.0, f64::max));
         g.add_diag(eps);
+        // lint:allow(panic-in-library): the Gram matrix plus a positive ridge is PD by construction, so the factorization cannot fail
         let chol = Cholesky::factor(&g).expect("gram not PD");
         let n = self.cols;
         let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();

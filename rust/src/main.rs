@@ -34,6 +34,11 @@ USAGE:
              [--workers N]
              discrete-event network simulation (builtins: ideal | lossy |
              stragglers | churn); scenario JSON schema in DESIGN.md §9
+  deluxe lint [--json] [--root DIR]
+             house-invariant static analysis: nondeterministic
+             iteration, wall-clock reads, ambient RNG, library panics,
+             unaccounted sends (rule catalogue in DESIGN.md §11);
+             exits 1 on findings
   deluxe info                                          artifact manifest
   deluxe help
 
@@ -58,6 +63,7 @@ fn main() -> Result<()> {
         Some("exp") => run_exp(&args),
         Some("train") => run_train(&args),
         Some("sim") => run_sim(&args),
+        Some("lint") => run_lint(&args),
         Some("info") => run_info(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -755,6 +761,26 @@ fn run_train(args: &Args) -> Result<()> {
         fmt_bytes(down_bytes),
         fmt_bytes(rounds as u64 * w.n_agents() as u64 * dense),
     );
+    Ok(())
+}
+
+fn run_lint(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.str_or("root", "."));
+    let findings = deluxe::analysis::run_on_tree(&root)?;
+    if args.has("json") {
+        println!(
+            "{}",
+            deluxe::analysis::findings_to_json(&findings).to_string()
+        );
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        println!("-- {} finding(s)", findings.len());
+    }
+    if !findings.is_empty() {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

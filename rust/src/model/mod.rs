@@ -27,6 +27,7 @@ impl MlpSpec {
         self.layers[0]
     }
     pub fn classes(&self) -> usize {
+        // lint:allow(panic-in-library): layers.len() >= 2 is asserted in MlpSpec::new, so last() always exists
         *self.layers.last().unwrap()
     }
     pub fn n_layers(&self) -> usize {
@@ -69,6 +70,7 @@ impl MlpSpec {
     /// Batched forward: `xs` is `n x d_in` flattened; returns `n x C`
     /// logits.
     pub fn forward(&self, params: &[f32], xs: &[f32], n: usize) -> Vec<f32> {
+        // lint:allow(panic-in-library): forward_acts always returns at least the input activation, so pop() cannot fail
         self.forward_acts(params, xs, n).pop().unwrap()
     }
 
@@ -86,6 +88,7 @@ impl MlpSpec {
         for (li, &(woff, boff, din, dout)) in offs.iter().enumerate() {
             let w = &params[woff..woff + din * dout];
             let b = &params[boff..boff + dout];
+            // lint:allow(panic-in-library): acts is seeded with the input batch before the loop, so last() always exists
             let inp = acts.last().unwrap();
             let mut out = vec![0.0f32; n * dout];
             let last = li == offs.len() - 1;
@@ -132,6 +135,7 @@ impl MlpSpec {
         let c = self.classes();
         assert_eq!(ys_onehot.len(), n * c);
         let acts = self.forward_acts(params, xs, n);
+        // lint:allow(panic-in-library): acts is seeded with the input batch, so last() always exists
         let logits = acts.last().unwrap();
 
         // softmax + CE + dlogits
@@ -297,9 +301,9 @@ impl MlpSpec {
             let arg = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j)
+                .unwrap_or(0);
             if arg == labels[r] {
                 correct += 1;
             }

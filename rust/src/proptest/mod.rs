@@ -40,6 +40,7 @@ pub fn forall_seeded<T: std::fmt::Debug + Clone>(
         let mut rng = Pcg64::seed_stream(seed.wrapping_add(case as u64), 77);
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
+            // lint:allow(panic-in-library): panicking with the seed and the failing case IS this harness's reporting contract (mirrors upstream proptest); every caller is a test
             panic!(
                 "property '{name}' failed (case {case}/{cases}, seed {seed}):\n  \
                  {msg}\n  input: {input:?}"

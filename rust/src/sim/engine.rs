@@ -167,6 +167,7 @@ impl<T: Scalar> AsyncConsensus<T> {
     /// engine's initialization contract.
     pub fn new(scn: Scenario, z0: Vec<T>) -> Self {
         scn.validate()
+            // lint:allow(panic-in-library): an invalid scenario is a constructor contract violation; running it would produce meaningless sweep results
             .unwrap_or_else(|e| panic!("invalid scenario {:?}: {e}", scn.name));
         assert!(
             matches!(scn.topology, TopologySpec::Star),

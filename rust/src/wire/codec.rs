@@ -89,18 +89,20 @@ impl QuantBlock {
         buf: &[u8],
         pos: &mut usize,
         count: usize,
-    ) -> Result<QuantBlock, String> {
-        let bits = *buf.get(*pos).ok_or("truncated quant block")?;
+    ) -> anyhow::Result<QuantBlock> {
+        let bits = *buf
+            .get(*pos)
+            .ok_or_else(|| anyhow::anyhow!("truncated quant block"))?;
         *pos += 1;
         if !(1..=16).contains(&bits) {
-            return Err(format!("quant bits {bits} out of range 1..=16"));
+            anyhow::bail!("quant bits {bits} out of range 1..=16");
         }
         let lo = read_f64(buf, pos)?;
         let hi = read_f64(buf, pos)?;
         // u64 math: count is wire-controlled, the product must not wrap
         let plen64 = (count as u64 * bits as u64 + 7) / 8;
         if (buf.len() as u64) < *pos as u64 + plen64 {
-            return Err("truncated quant levels".into());
+            anyhow::bail!("truncated quant levels");
         }
         let plen = plen64 as usize;
         let levels = unpack_bits(&buf[*pos..*pos + plen], count, bits);
@@ -142,9 +144,9 @@ fn unpack_bits(buf: &[u8], count: usize, bits: u8) -> Vec<u32> {
     out
 }
 
-fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32, String> {
+fn read_u32(buf: &[u8], pos: &mut usize) -> anyhow::Result<u32> {
     if buf.len() < *pos + 4 {
-        return Err("truncated u32".into());
+        anyhow::bail!("truncated u32");
     }
     let v = u32::from_le_bytes([
         buf[*pos],
@@ -156,9 +158,9 @@ fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32, String> {
     Ok(v)
 }
 
-fn read_f64(buf: &[u8], pos: &mut usize) -> Result<f64, String> {
+fn read_f64(buf: &[u8], pos: &mut usize) -> anyhow::Result<f64> {
     if buf.len() < *pos + 8 {
-        return Err("truncated f64".into());
+        anyhow::bail!("truncated f64");
     }
     let mut b = [0u8; 8];
     b.copy_from_slice(&buf[*pos..*pos + 8]);
@@ -264,19 +266,19 @@ impl<T: Scalar> WireMessage<T> {
 
     /// Parse the wire format back; errors on wrong magic, scalar-width
     /// mismatch, unknown kind, or truncation.
-    pub fn decode(buf: &[u8]) -> Result<Self, String> {
+    pub fn decode(buf: &[u8]) -> anyhow::Result<Self> {
         if buf.len() < HEADER_BYTES {
-            return Err("message shorter than header".into());
+            anyhow::bail!("message shorter than header");
         }
         if buf[0] != MAGIC {
-            return Err(format!("bad magic 0x{:02x}", buf[0]));
+            anyhow::bail!("bad magic 0x{:02x}", buf[0]);
         }
         if buf[1] as usize != T::WIRE_BYTES {
-            return Err(format!(
+            anyhow::bail!(
                 "scalar width mismatch: wire {} vs decoder {}",
                 buf[1],
                 T::WIRE_BYTES
-            ));
+            );
         }
         let kind = buf[2];
         let mut pos = 3;
@@ -286,7 +288,7 @@ impl<T: Scalar> WireMessage<T> {
                 if (buf.len() as u64)
                     < pos as u64 + dim as u64 * T::WIRE_BYTES as u64
                 {
-                    return Err("truncated dense payload".into());
+                    anyhow::bail!("truncated dense payload");
                 }
                 let mut v = Vec::with_capacity(dim);
                 for j in 0..dim {
@@ -297,7 +299,7 @@ impl<T: Scalar> WireMessage<T> {
             KIND_SPARSE => {
                 let k = read_u32(buf, &mut pos)? as usize;
                 if k > dim {
-                    return Err(format!("sparse k {k} > dim {dim}"));
+                    anyhow::bail!("sparse k {k} > dim {dim}");
                 }
                 // validate the full remaining length BEFORE allocating:
                 // k is wire-controlled and must never size an allocation
@@ -306,15 +308,15 @@ impl<T: Scalar> WireMessage<T> {
                 if (buf.len() as u64)
                     < pos as u64 + k as u64 * (4 + T::WIRE_BYTES) as u64
                 {
-                    return Err("truncated sparse payload".into());
+                    anyhow::bail!("truncated sparse payload");
                 }
                 let mut idx = Vec::with_capacity(k);
                 for _ in 0..k {
                     let i = read_u32(buf, &mut pos)?;
                     if i as usize >= dim {
-                        return Err(format!(
+                        anyhow::bail!(
                             "sparse index {i} out of range (dim {dim})"
-                        ));
+                        );
                     }
                     idx.push(i);
                 }
@@ -331,26 +333,26 @@ impl<T: Scalar> WireMessage<T> {
             KIND_SPARSE_QUANT => {
                 let k = read_u32(buf, &mut pos)? as usize;
                 if k > dim {
-                    return Err(format!("sparse-quant k {k} > dim {dim}"));
+                    anyhow::bail!("sparse-quant k {k} > dim {dim}");
                 }
                 // length check before any k-sized allocation (see Sparse)
                 if (buf.len() as u64) < pos as u64 + k as u64 * 4 {
-                    return Err("truncated sparse-quant indices".into());
+                    anyhow::bail!("truncated sparse-quant indices");
                 }
                 let mut idx = Vec::with_capacity(k);
                 for _ in 0..k {
                     let i = read_u32(buf, &mut pos)?;
                     if i as usize >= dim {
-                        return Err(format!(
+                        anyhow::bail!(
                             "sparse-quant index {i} out of range (dim {dim})"
-                        ));
+                        );
                     }
                     idx.push(i);
                 }
                 let q = QuantBlock::decode_from(buf, &mut pos, k)?;
                 Ok(WireMessage::SparseQuant { dim: dim as u32, idx, q })
             }
-            other => Err(format!("unknown payload kind {other}")),
+            other => Err(anyhow::anyhow!("unknown payload kind {other}")),
         }
     }
 

@@ -1,0 +1,222 @@
+//! Integration: the `deluxe lint` pass against its fixture corpus, and
+//! the repo-is-clean gate.
+//!
+//! Each fixture under `rust/tests/lint_fixtures/` isolates one rule; the
+//! tests analyze it under a *virtual* restricted-module path (the corpus
+//! directory itself is skipped by the tree walk) and pin the exact
+//! finding set.  `lint_self_clean` then asserts the crate's own tree
+//! produces zero findings — the adoption contract of DESIGN.md §11.
+
+use std::path::Path;
+use std::process::Command;
+
+use deluxe::analysis::{analyze_source, classify, run_on_tree, FileKind};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", p.display()))
+}
+
+fn rules_of(path: &str, src: &str) -> Vec<String> {
+    analyze_source(path, src)
+        .into_iter()
+        .map(|f| f.rule)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// one fixture per rule
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixture_nondet_iteration_fires_in_restricted_module() {
+    let src = fixture("nondet_iteration.rs");
+    assert_eq!(
+        rules_of("rust/src/sim/fixture.rs", &src),
+        vec!["nondet-iteration"]
+    );
+    // ...but not in an unrestricted library module
+    assert!(rules_of("rust/src/model/fixture.rs", &src).is_empty());
+    // ...and not in tests
+    assert!(rules_of("rust/tests/fixture.rs", &src).is_empty());
+}
+
+#[test]
+fn fixture_wall_clock_fires_outside_benchlib() {
+    let src = fixture("wall_clock.rs");
+    assert_eq!(
+        rules_of("rust/src/sim/fixture.rs", &src),
+        vec!["wall-clock"]
+    );
+    // benchlib and metrics measure real time by design
+    assert!(rules_of("rust/src/benchlib/fixture.rs", &src).is_empty());
+    assert!(rules_of("rust/src/metrics/fixture.rs", &src).is_empty());
+    assert!(rules_of("rust/benches/fixture.rs", &src).is_empty());
+}
+
+#[test]
+fn fixture_ambient_rng_fires_outside_rng_module() {
+    let src = fixture("ambient_rng.rs");
+    assert_eq!(
+        rules_of("rust/src/sim/fixture.rs", &src),
+        vec!["ambient-rng"]
+    );
+    // the seeded-RNG module itself is the one place entropy words appear
+    assert!(rules_of("rust/src/rng/fixture.rs", &src).is_empty());
+}
+
+#[test]
+fn fixture_panic_in_library_fires_everywhere_but_cli_and_tests() {
+    let src = fixture("panic_in_library.rs");
+    assert_eq!(
+        rules_of("rust/src/model/fixture.rs", &src),
+        vec!["panic-in-library"]
+    );
+    assert!(rules_of("rust/src/main.rs", &src).is_empty());
+    assert!(rules_of("rust/tests/fixture.rs", &src).is_empty());
+    assert!(rules_of("examples/fixture.rs", &src).is_empty());
+}
+
+#[test]
+fn fixture_unaccounted_send_fires_in_restricted_module() {
+    let src = fixture("unaccounted_send.rs");
+    assert_eq!(
+        rules_of("rust/src/coordinator/fixture.rs", &src),
+        vec!["unaccounted-send"]
+    );
+    assert!(rules_of("rust/src/solver/fixture.rs", &src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// suppression semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixture_justified_suppression_silences_finding() {
+    let src = fixture("suppressed_ok.rs");
+    assert!(rules_of("rust/src/model/fixture.rs", &src).is_empty());
+}
+
+#[test]
+fn fixture_unjustified_suppression_is_itself_a_finding() {
+    let src = fixture("bad_suppression.rs");
+    let mut got = rules_of("rust/src/model/fixture.rs", &src);
+    got.sort();
+    assert_eq!(got, vec!["bad-suppression", "panic-in-library"]);
+}
+
+#[test]
+fn trailing_suppression_covers_its_own_line() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    \
+               x.unwrap() // lint:allow(panic-in-library): trailing form covers this line\n}\n";
+    assert!(rules_of("rust/src/model/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn suppression_of_unknown_rule_is_rejected() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    \
+               // lint:allow(no-such-rule): bogus\n    x.unwrap()\n}\n";
+    let mut got = rules_of("rust/src/model/fixture.rs", src);
+    got.sort();
+    assert_eq!(got, vec!["bad-suppression", "panic-in-library"]);
+}
+
+#[test]
+fn suppression_on_wrong_rule_does_not_silence() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    \
+               // lint:allow(wall-clock): names the wrong rule\n    x.unwrap()\n}\n";
+    assert_eq!(
+        rules_of("rust/src/model/fixture.rs", src),
+        vec!["panic-in-library"]
+    );
+}
+
+#[test]
+fn cfg_test_items_are_exempt_inside_library_files() {
+    let src = "pub fn lib_fn() -> u8 { 1 }\n\
+               #[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+               let x: Option<u8> = Some(1);\n        assert_eq!(x.unwrap(), 1);\n    }\n}\n";
+    assert!(rules_of("rust/src/model/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn classification_matches_design_doc() {
+    assert_eq!(
+        classify("rust/src/wire/codec.rs"),
+        Some((FileKind::Library, "wire".to_string()))
+    );
+    assert_eq!(classify("rust/src/main.rs"), Some((FileKind::Cli, String::new())));
+    assert_eq!(classify("rust/vendor/anyhow/src/lib.rs"), None);
+    assert_eq!(classify("rust/tests/lint_fixtures/panic_in_library.rs"), None);
+}
+
+// ---------------------------------------------------------------------------
+// the adoption gate: the crate's own tree must be clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lint_self_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = run_on_tree(root).expect("tree walk");
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    assert!(
+        findings.is_empty(),
+        "the repo tree has {} lint finding(s); fix or justify them \
+         (see DESIGN.md §11)",
+        findings.len()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CLI exit codes (`deluxe lint` is the CI gate)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_exits_zero_on_clean_tree_and_nonzero_on_violation() {
+    let exe = env!("CARGO_BIN_EXE_deluxe");
+
+    // clean: the repo itself
+    let out = Command::new(exe)
+        .args(["lint", "--root", env!("CARGO_MANIFEST_DIR")])
+        .output()
+        .expect("run deluxe lint");
+    assert!(
+        out.status.success(),
+        "expected exit 0 on the repo tree:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+
+    // violation: a synthetic tree with one restricted-module HashMap
+    let tmp = std::env::temp_dir()
+        .join(format!("dela_lint_cli_{}", std::process::id()));
+    let src_dir = tmp.join("rust/src/sim");
+    std::fs::create_dir_all(&src_dir).expect("mk temp tree");
+    std::fs::write(
+        src_dir.join("bad.rs"),
+        "pub fn f(m: &std::collections::HashMap<u8, u8>) -> usize {\n    m.len()\n}\n",
+    )
+    .expect("write violation");
+    let out = Command::new(exe)
+        .args(["lint", "--json", "--root"])
+        .arg(&tmp)
+        .output()
+        .expect("run deluxe lint on temp tree");
+    assert!(!out.status.success(), "expected nonzero exit on a violation");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let j = deluxe::jsonio::Json::parse(&stdout).expect("valid --json output");
+    assert_eq!(j.get("count").and_then(deluxe::jsonio::Json::as_f64), Some(1.0));
+    let arr = j
+        .get("findings")
+        .and_then(deluxe::jsonio::Json::as_arr)
+        .expect("findings array");
+    assert_eq!(
+        arr[0].get("rule").and_then(deluxe::jsonio::Json::as_str),
+        Some("nondet-iteration")
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}

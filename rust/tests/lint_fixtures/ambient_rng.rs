@@ -1,0 +1,5 @@
+// Fixture: constructing RNG state from ambient entropy (RandomState)
+// outside rng/ must produce exactly one ambient-rng finding.
+pub fn entropy_hasher() -> impl std::hash::BuildHasher {
+    std::collections::hash_map::RandomState::new()
+}

@@ -1,0 +1,7 @@
+// Fixture: a suppression without a justification is malformed — it does
+// NOT silence anything and additionally reports bad-suppression, so this
+// file must produce exactly two findings.
+pub fn head(xs: &[u64]) -> u64 {
+    // lint:allow(panic-in-library)
+    *xs.first().unwrap()
+}

@@ -1,0 +1,5 @@
+// Fixture: a HashMap in a restricted module (analyzed under a virtual
+// rust/src/sim/ path) must produce exactly one nondet-iteration finding.
+pub fn order(map: &std::collections::HashMap<u32, u32>) -> u32 {
+    map.values().sum()
+}

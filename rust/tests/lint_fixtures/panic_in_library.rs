@@ -1,0 +1,5 @@
+// Fixture: .unwrap() in a library path must produce exactly one
+// panic-in-library finding.
+pub fn head(xs: &[u64]) -> u64 {
+    *xs.first().unwrap()
+}

@@ -1,0 +1,6 @@
+// Fixture: a well-formed suppression with a justification silences the
+// finding on the next line — this file must produce zero findings.
+pub fn head(xs: &[u64]) -> u64 {
+    // lint:allow(panic-in-library): fixture demonstrating a justified suppression
+    *xs.first().unwrap()
+}

@@ -1,0 +1,5 @@
+// Fixture: a channel send in a restricted module with no WireStats
+// charging must produce exactly one unaccounted-send finding.
+pub fn push(tx: &std::sync::mpsc::Sender<u64>, v: u64) {
+    let _ = tx.send(v);
+}

@@ -1,0 +1,6 @@
+// Fixture: Instant::now() outside benchlib/metrics must produce exactly
+// one wall-clock finding (the bare `Instant` in the return type is not
+// flagged; only the `Instant::now` call is).
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
