@@ -13,7 +13,7 @@
 use deluxe::experiments::fig9::{self, ConvexAlgo, Fig9Config};
 use deluxe::lasso::{LassoConfig, LassoProblem};
 use deluxe::data::regress::RegressSpec;
-use deluxe::rng::Pcg64;
+use deluxe::prelude::Pcg64;
 
 fn main() {
     let cfg = Fig9Config { n_agents: 50, rounds: 50, ..Default::default() };

@@ -9,10 +9,9 @@
 //! trade-off against full communication.
 
 use deluxe::admm::{ConsensusAdmm, ConsensusConfig};
-use deluxe::comm::Trigger;
 use deluxe::data::regress::RegressSpec;
 use deluxe::lasso::{LassoConfig, LassoProblem};
-use deluxe::rng::Pcg64;
+use deluxe::prelude::{Pcg64, Trigger};
 use deluxe::solver::{ExactQuadratic, L1Prox};
 
 fn main() {

@@ -6,13 +6,13 @@
 //! `-- --trajectory PATH` instead writes the per-PR perf-trajectory
 //! snapshot (the `BENCH_pr<k>.json` series): the 64-agent pooled
 //! consensus round at workers 1/2/4/8, with per-round µs and
-//! agents/sec derived from the median sample.
+//! agents/sec derived from the median sample, plus the 4-agent
+//! coordinator round driven in-proc vs over a TCP loopback cohort
+//! (the socket runtime's per-round transport tax).
 
 use deluxe::admm::{ConsensusAdmm, ConsensusConfig};
 use deluxe::benchlib::{black_box, Bench};
-use deluxe::comm::{
-    sub, sub_into, DropChannel, Estimate, Trigger, TriggerState,
-};
+use deluxe::comm::{sub, sub_into, Estimate, Trigger, TriggerState};
 use deluxe::data::regress::{generate, RegressSpec};
 use deluxe::linalg::{
     soft_threshold, soft_threshold_into, Cholesky, Matrix,
@@ -21,6 +21,7 @@ use deluxe::model::MlpSpec;
 use deluxe::rng::{Pcg64, Rng};
 use deluxe::sim::EventQueue;
 use deluxe::solver::{ExactQuadratic, IdentityProx, LocalSolver};
+use deluxe::transport::LossyLink;
 use deluxe::wire::{Compressor, CompressorCfg, ErrorFeedback, WireMessage};
 
 fn main() {
@@ -80,7 +81,7 @@ fn main() {
         est.apply(black_box(&delta));
     });
 
-    let mut ch = DropChannel::new(0.3);
+    let mut ch = LossyLink::new(0.3);
     b.bench("channel.transmit (unit payload)", || {
         black_box(ch.transmit((), &mut rng));
     });
@@ -285,6 +286,95 @@ fn trajectory(path: &str) {
             ("result", res.to_json()),
         ]));
     }
+
+    // transport tax: the same 4-agent MLP training round driven by the
+    // in-proc mpsc runtime vs a real TCP loopback cohort — the delta is
+    // the socket runtime's framing + syscall cost per round (results
+    // are bit-identical by the transport_e2e contract, so this is pure
+    // wall-clock)
+    {
+        use deluxe::config::RunConfig;
+        use deluxe::coordinator::{
+            make_endpoints, run_tcp_agent, AgentOpts, Coordinator,
+        };
+        use deluxe::data::partition::single_class_split;
+        use deluxe::data::synth::{generate as synth_generate, SynthSpec};
+        use deluxe::transport::{SocketOpts, Tcp};
+
+        let mut wrng = Pcg64::seed(5);
+        let (train, _) = synth_generate(&SynthSpec::tiny(), &mut wrng);
+        let mlp = MlpSpec::new(vec![8, 16, 4]);
+        let init = mlp.init(&mut wrng);
+        let cfg = RunConfig::default()
+            .with_steps(2)
+            .with_batch(8)
+            .with_trigger_d(Trigger::vanilla(1e-9))
+            .with_trigger_z(Trigger::vanilla(1e-9))
+            .with_seed(11);
+
+        let mut a = Coordinator::spawn(
+            cfg.clone(),
+            mlp.clone(),
+            single_class_split(&train, 4),
+            init.clone(),
+        );
+        let res = b.bench(
+            "coordinator.round (4 agents, mlp 8-16-4, in-proc)",
+            || {
+                a.round();
+            },
+        );
+        let med_ns = res.median_ns();
+        cases.push(Json::obj(vec![
+            ("transport", Json::Str("inproc".to_string())),
+            ("per_round_us", Json::Num(med_ns / 1e3)),
+            ("rounds_per_sec", Json::Num(1e9 / med_ns)),
+            ("result", res.to_json()),
+        ]));
+        a.shutdown();
+
+        let digest = cfg.digest(init.len(), 4);
+        let mut tp = Tcp::bind(
+            "127.0.0.1:0",
+            4,
+            digest,
+            init.len(),
+            SocketOpts::default(),
+        )
+        .expect("bind bench leader");
+        let addr = tp.local_addr().to_string();
+        let endpoints =
+            make_endpoints(&cfg, &mlp, single_class_split(&train, 4), &init);
+        let joins: Vec<_> = endpoints
+            .into_iter()
+            .map(|mut ep| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    run_tcp_agent(&addr, &mut ep, digest, &AgentOpts::default())
+                        .expect("bench agent session");
+                })
+            })
+            .collect();
+        tp.await_cohort().expect("bench cohort formation");
+        let mut c = Coordinator::over(tp, cfg, mlp, init);
+        let res = b.bench(
+            "coordinator.round (4 agents, mlp 8-16-4, tcp loopback)",
+            || {
+                c.round();
+            },
+        );
+        let med_ns = res.median_ns();
+        cases.push(Json::obj(vec![
+            ("transport", Json::Str("tcp-loopback".to_string())),
+            ("per_round_us", Json::Num(med_ns / 1e3)),
+            ("rounds_per_sec", Json::Num(1e9 / med_ns)),
+            ("result", res.to_json()),
+        ]));
+        c.shutdown();
+        for j in joins {
+            let _ = j.join();
+        }
+    }
     let doc = Json::obj(vec![
         (
             "series",
@@ -295,7 +385,9 @@ fn trajectory(path: &str) {
         (
             "bench",
             Json::Str(
-                "consensus.round (64 agents, dim 128), pooled exact prox"
+                "consensus.round (64 agents, dim 128), pooled exact prox; \
+                 coordinator.round (4 agents, mlp 8-16-4), in-proc vs \
+                 tcp loopback"
                     .to_string(),
             ),
         ),

@@ -245,7 +245,7 @@ impl<T: Scalar> ConsensusAdmm<T> {
     /// drops any carried compression residual.  A packet that triggered
     /// but *dropped* in the same round is superseded by the sync — the
     /// round bills exactly one dense transfer on that line, never two
-    /// (see [`crate::comm::DropChannel::charge_sync`] /
+    /// (see [`crate::transport::loss::LossyLink::charge_sync`] /
     /// [`EventLine::resync`]).
     pub fn reset(&mut self) {
         let mut zeta = vec![0.0f64; self.dim];

@@ -29,7 +29,8 @@
 //! bit-identical for every `--workers` value, including `1` — pinned by
 //! the `determinism` integration tests.
 
-use crate::comm::{ChannelStats, DropChannel, Scalar, Trigger, TriggerState};
+use crate::comm::{Scalar, Trigger, TriggerState};
+use crate::transport::loss::{ChannelStats, LossyLink};
 use crate::rng::Pcg64;
 use crate::wire::{
     Compressor, CompressorCfg, ErrorFeedback, LinkStats, WireMessage,
@@ -136,7 +137,7 @@ pub fn solve_rngs(base: &Pcg64, round: u64, n: usize) -> Vec<Pcg64> {
 #[derive(Clone, Debug)]
 pub struct EventLine<T: Scalar> {
     pub trig: TriggerState<T>,
-    pub ch: DropChannel,
+    pub ch: LossyLink,
     pub ef: ErrorFeedback<T>,
 }
 
@@ -144,7 +145,7 @@ impl<T: Scalar> EventLine<T> {
     pub fn new(trigger: Trigger, init: Vec<T>, drop_rate: f64) -> Self {
         EventLine {
             trig: TriggerState::new(trigger, init),
-            ch: DropChannel::new(drop_rate),
+            ch: LossyLink::new(drop_rate),
             ef: ErrorFeedback::new(),
         }
     }
@@ -179,7 +180,7 @@ impl<T: Scalar> EventLine<T> {
     /// `value` (counting one event), drop the carried compression
     /// residual, and charge one full dense synchronization transfer — a
     /// same-round triggered-but-dropped packet is superseded by the sync
-    /// (see [`DropChannel::charge_sync`]).
+    /// (see [`LossyLink::charge_sync`]).
     pub fn resync(&mut self, value: &[T]) {
         self.trig.reset(value);
         self.ef.clear();
@@ -203,7 +204,7 @@ impl<T: Scalar> EventLine<T> {
 pub struct BroadcastLine<T: Scalar> {
     pub trig: TriggerState<T>,
     pub ef: ErrorFeedback<T>,
-    pub channels: Vec<DropChannel>,
+    pub channels: Vec<LossyLink>,
 }
 
 impl<T: Scalar> BroadcastLine<T> {
@@ -217,7 +218,7 @@ impl<T: Scalar> BroadcastLine<T> {
             trig: TriggerState::new(trigger, init),
             ef: ErrorFeedback::new(),
             channels: (0..fanout)
-                .map(|_| DropChannel::new(drop_rate))
+                .map(|_| LossyLink::new(drop_rate))
                 .collect(),
         }
     }

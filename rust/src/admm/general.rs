@@ -435,7 +435,9 @@ impl GeneralAdmm {
     }
 
     /// Per-line `(label, ChannelStats)` snapshot for byte accounting.
-    pub fn line_stats(&self) -> Vec<(&'static str, crate::comm::ChannelStats)> {
+    pub fn line_stats(
+        &self,
+    ) -> Vec<(&'static str, crate::transport::loss::ChannelStats)> {
         vec![
             ("rs", self.line_rs.ch.stats),
             ("ru", self.line_ru.ch.stats),

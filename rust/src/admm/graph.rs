@@ -269,7 +269,7 @@ impl<T: Scalar> GraphAdmm<T> {
     /// agent; charges one dense message per link and drops any carried
     /// compression residual).  A broadcast that triggered but dropped on
     /// a link in the same round is superseded by the sync on that link
-    /// (see [`crate::comm::DropChannel::charge_sync`] /
+    /// (see [`crate::transport::loss::LossyLink::charge_sync`] /
     /// [`BroadcastLine::resync`]).
     pub fn reset(&mut self) {
         for i in 0..self.graph.n {

@@ -39,8 +39,16 @@ pub const RULES: [&str; 5] = [
 pub const BAD_SUPPRESSION: &str = "bad-suppression";
 
 /// Library modules whose iteration order / sends feed trajectories.
-pub const RESTRICTED: [&str; 7] =
-    ["admm", "sim", "comm", "wire", "baselines", "coordinator", "runtime"];
+pub const RESTRICTED: [&str; 8] = [
+    "admm",
+    "sim",
+    "comm",
+    "wire",
+    "baselines",
+    "coordinator",
+    "runtime",
+    "transport",
+];
 
 /// Modules allowed to read the wall clock (they measure, not simulate).
 pub const WALL_CLOCK_ALLOW: [&str; 2] = ["benchlib", "metrics"];

@@ -220,7 +220,9 @@ pub fn scan_rules(
                 }
                 if restricted
                     && m.kind == TokKind::Ident
-                    && (m.text == "send" || m.text == "try_send")
+                    && (m.text == "send"
+                        || m.text == "try_send"
+                        || m.text == "write_all")
                     && p.kind == TokKind::Punct
                     && p.text == "("
                 {
@@ -229,9 +231,9 @@ pub fn scan_rules(
                         m.line,
                         m.col,
                         format!(
-                            "raw channel `.{}()` bypasses WireStats byte \
+                            "raw `.{}()` bypasses WireStats byte \
                              accounting; charge via \
-                             DropChannel::transmit_bytes / \
+                             LossyLink::transmit_bytes / \
                              ChannelStats::record_reliable or justify",
                             m.text
                         ),

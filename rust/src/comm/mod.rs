@@ -6,8 +6,11 @@
 //!   vanilla send-on-delta (`|v_{k+1} − v_{[k]}| > Δ`), the randomized
 //!   variant (below-threshold sends with probability `p_trig`), the
 //!   baselines' random participation, or always/never.
-//! * [`DropChannel`] — decides whether a sent delta *arrives* (Bernoulli
-//!   packet drops, the paper's `χ` disturbances).
+//! * [`crate::transport::loss::LossyLink`] — decides whether a sent delta
+//!   *arrives* (Bernoulli packet drops, the paper's `χ` disturbances).
+//!   It lives in [`crate::transport`] since the transport layer landed;
+//!   this module re-exports its stats/model types for one release and
+//!   keeps a deprecated [`DropChannel`] alias for external callers.
 //! * [`Estimate`] — the receiver-side accumulator `v̂` that integrates the
 //!   received deltas and can be hard-reset (the rare periodic reset
 //!   strategy of Alg. 1/2).
@@ -16,13 +19,19 @@
 //! (triggered events normalized by full communication) falls out of the
 //! counters.
 
-mod channel;
 mod estimate;
 mod trigger;
 
-pub use channel::{ChannelStats, DropChannel, LossModel};
+pub use crate::transport::loss::{ChannelStats, LossModel};
 pub use estimate::Estimate;
 pub use trigger::{Trigger, TriggerState};
+
+/// Compatibility alias for the pre-transport name of the lossy channel.
+#[deprecated(
+    since = "0.7.0",
+    note = "moved to `transport::loss`; use `LossyLink`"
+)]
+pub type DropChannel = crate::transport::loss::LossyLink;
 
 /// Scalar abstraction so the protocol works over both the f32 PJRT
 /// parameter ABI and the f64 convex experiments.

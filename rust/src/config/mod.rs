@@ -1,8 +1,17 @@
-//! Run-level configuration: artifact/result locations, seeds, and JSON
-//! config-file loading for the experiment launcher.
+//! Run-level configuration: one `RunConfig` shared by the CLI, the
+//! threaded service runtime, the sim, examples and benches.
+//!
+//! The protocol half (ρ, α, triggers, drop rates, reset period) used to
+//! live in a separate `CoordinatorConfig`; the transport redesign folded
+//! it in here so every entry point — `deluxe train`, `deluxe serve`,
+//! `deluxe agent`, the examples — constructs runs through a single
+//! builder and a single flag-parsing path.  [`RunConfig::digest`] hashes
+//! the protocol fields so a serve/agent pair can refuse to form a cohort
+//! on mismatched configuration.
 
 use std::path::{Path, PathBuf};
 
+use crate::comm::Trigger;
 use crate::jsonio::{read_json, Json};
 use crate::wire::CompressorCfg;
 
@@ -22,6 +31,27 @@ pub struct RunConfig {
     /// `DELUXE_WORKERS` env var if set, else one per core).  Results
     /// are bit-identical for every value.
     pub workers: usize,
+    /// ADMM penalty ρ.
+    pub rho: f32,
+    /// Relaxation α (1 = no relaxation).
+    pub alpha: f32,
+    /// Local prox-SGD learning rate.
+    pub lr: f32,
+    /// Local prox-SGD steps per round.
+    pub steps: usize,
+    /// Local prox-SGD batch size.
+    pub batch: usize,
+    /// Uplink (agent → leader) event trigger.
+    pub trigger_d: Trigger,
+    /// Downlink (leader → agent) event trigger.
+    pub trigger_z: Trigger,
+    /// Uplink i.i.d. packet-drop probability.
+    pub drop_up: f64,
+    /// Downlink i.i.d. packet-drop probability.
+    pub drop_down: f64,
+    /// Hard-resync `ẑ` every k rounds (0 = never) — the paper's
+    /// periodic reset strategy against drop-induced drift.
+    pub reset_period: usize,
 }
 
 impl Default for RunConfig {
@@ -32,6 +62,16 @@ impl Default for RunConfig {
             seed: 0,
             compressor: CompressorCfg::Identity,
             workers: 0,
+            rho: 1.0,
+            alpha: 1.0,
+            lr: 0.1,
+            steps: 5,
+            batch: 32,
+            trigger_d: Trigger::Always,
+            trigger_z: Trigger::Always,
+            drop_up: 0.0,
+            drop_down: 0.0,
+            reset_period: 0,
         }
     }
 }
@@ -51,6 +91,79 @@ pub fn default_artifacts_dir() -> PathBuf {
 }
 
 impl RunConfig {
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_compressor(mut self, c: CompressorCfg) -> Self {
+        self.compressor = c;
+        self
+    }
+
+    pub fn with_workers(mut self, w: usize) -> Self {
+        self.workers = w;
+        self
+    }
+
+    pub fn with_rho(mut self, rho: f32) -> Self {
+        self.rho = rho;
+        self
+    }
+
+    pub fn with_alpha(mut self, alpha: f32) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn with_steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn with_trigger_d(mut self, t: Trigger) -> Self {
+        self.trigger_d = t;
+        self
+    }
+
+    pub fn with_trigger_z(mut self, t: Trigger) -> Self {
+        self.trigger_z = t;
+        self
+    }
+
+    /// The paper's vanilla trigger pair at threshold δ: uplink fires at
+    /// δ, downlink at δ/10 (the `--delta` CLI shorthand).
+    pub fn with_delta(mut self, delta: f64) -> Self {
+        self.trigger_d = Trigger::vanilla(delta);
+        self.trigger_z = Trigger::vanilla(delta * 0.1);
+        self
+    }
+
+    pub fn with_drop_up(mut self, p: f64) -> Self {
+        self.drop_up = p;
+        self
+    }
+
+    pub fn with_drop_down(mut self, p: f64) -> Self {
+        self.drop_down = p;
+        self
+    }
+
+    pub fn with_reset_period(mut self, k: usize) -> Self {
+        self.reset_period = k;
+        self
+    }
+
     pub fn from_args(args: &crate::cli::Args) -> RunConfig {
         let mut cfg = RunConfig::default();
         if let Some(dir) = args.get("artifacts") {
@@ -68,6 +181,32 @@ impl RunConfig {
             cfg.compressor = CompressorCfg::parse(spec)
                 // lint:allow(panic-in-library): a malformed --compressor silently measuring the dense baseline would corrupt a whole sweep; fatal-by-design for CLI input
                 .unwrap_or_else(|e| panic!("--compressor: {e}"));
+        }
+        cfg.rho = args.f64_or("rho", cfg.rho as f64) as f32;
+        cfg.alpha = args.f64_or("alpha", cfg.alpha as f64) as f32;
+        cfg.lr = args.f64_or("lr", cfg.lr as f64) as f32;
+        cfg.steps = args.usize_or("steps", cfg.steps);
+        cfg.batch = args.usize_or("batch", cfg.batch);
+        cfg.drop_up = args.f64_or("drop-up", cfg.drop_up);
+        cfg.drop_down = args.f64_or("drop-down", cfg.drop_down);
+        cfg.reset_period = args.usize_or("reset-period", cfg.reset_period);
+        // --delta is shorthand for the vanilla trigger pair; an explicit
+        // --trigger-d / --trigger-z wins over it
+        match args.get_parse::<f64>("delta") {
+            Ok(Some(d)) => cfg = cfg.with_delta(d),
+            Ok(None) => {}
+            // lint:allow(panic-in-library): a malformed --delta silently running Trigger::Always would corrupt a sweep; fatal-by-design for CLI input
+            Err(e) => panic!("--delta: {e}"),
+        }
+        if let Some(spec) = args.get("trigger-d") {
+            cfg.trigger_d = Trigger::parse(spec)
+                // lint:allow(panic-in-library): a malformed trigger silently running Trigger::Always would corrupt a sweep; fatal-by-design for CLI input
+                .unwrap_or_else(|e| panic!("--trigger-d: {e}"));
+        }
+        if let Some(spec) = args.get("trigger-z") {
+            cfg.trigger_z = Trigger::parse(spec)
+                // lint:allow(panic-in-library): a malformed trigger silently running Trigger::Always would corrupt a sweep; fatal-by-design for CLI input
+                .unwrap_or_else(|e| panic!("--trigger-z: {e}"));
         }
         cfg
     }
@@ -93,6 +232,37 @@ impl RunConfig {
                 .map_err(|e| anyhow::anyhow!("config compressor: {e}"))?;
         }
         Ok(())
+    }
+
+    /// FNV-1a hash of every field that must agree between a serving
+    /// leader and a connecting agent for the run to be well-defined
+    /// (protocol constants, triggers, compressor, seed, model dim,
+    /// cohort size).  Carried in the transport handshake: a mismatched
+    /// agent is rejected at accept time instead of silently diverging.
+    pub fn digest(&self, dim: usize, n_agents: usize) -> u64 {
+        let canon = format!(
+            "dela-proto-v1|dim={dim}|n={n_agents}|seed={}|rho={}|alpha={}\
+             |lr={}|steps={}|batch={}|td={}|tz={}|du={}|dd={}|reset={}\
+             |comp={}",
+            self.seed,
+            self.rho,
+            self.alpha,
+            self.lr,
+            self.steps,
+            self.batch,
+            self.trigger_d.label(),
+            self.trigger_z.label(),
+            self.drop_up,
+            self.drop_down,
+            self.reset_period,
+            self.compressor.label(),
+        );
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &b in canon.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
     }
 }
 
@@ -144,6 +314,82 @@ mod tests {
         let res =
             std::panic::catch_unwind(|| RunConfig::from_args(&bad));
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn from_args_parses_protocol_fields() {
+        let args = Args::parse(
+            [
+                "--rho", "0.5", "--alpha", "0.9", "--lr", "0.05", "--steps",
+                "3", "--batch", "16", "--drop-up", "0.1", "--drop-down",
+                "0.2", "--reset-period", "25",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args);
+        assert_eq!(cfg.rho, 0.5);
+        assert_eq!(cfg.alpha, 0.9);
+        assert_eq!(cfg.lr, 0.05);
+        assert_eq!(cfg.steps, 3);
+        assert_eq!(cfg.batch, 16);
+        assert_eq!(cfg.drop_up, 0.1);
+        assert_eq!(cfg.drop_down, 0.2);
+        assert_eq!(cfg.reset_period, 25);
+    }
+
+    #[test]
+    fn delta_shorthand_sets_vanilla_pair_and_explicit_trigger_wins() {
+        let args = Args::parse(
+            ["--delta", "0.5"].iter().map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args);
+        assert_eq!(cfg.trigger_d, Trigger::vanilla(0.5));
+        assert_eq!(cfg.trigger_z, Trigger::vanilla(0.05));
+
+        let args = Args::parse(
+            ["--delta", "0.5", "--trigger-d", "never"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::from_args(&args);
+        assert_eq!(cfg.trigger_d, Trigger::Never);
+        assert_eq!(cfg.trigger_z, Trigger::vanilla(0.05));
+    }
+
+    #[test]
+    fn builder_chain_sets_protocol_fields() {
+        let cfg = RunConfig::default()
+            .with_seed(7)
+            .with_rho(2.0)
+            .with_lr(0.01)
+            .with_steps(9)
+            .with_batch(4)
+            .with_delta(1.0)
+            .with_drop_down(0.3)
+            .with_reset_period(10);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.rho, 2.0);
+        assert_eq!(cfg.lr, 0.01);
+        assert_eq!(cfg.steps, 9);
+        assert_eq!(cfg.batch, 4);
+        assert_eq!(cfg.trigger_d, Trigger::vanilla(1.0));
+        assert_eq!(cfg.drop_down, 0.3);
+        assert_eq!(cfg.reset_period, 10);
+    }
+
+    #[test]
+    fn digest_separates_differing_protocols() {
+        let base = RunConfig::default();
+        let d0 = base.digest(100, 4);
+        // same config, same digest — both ends compute it independently
+        assert_eq!(d0, base.clone().digest(100, 4));
+        // any protocol-relevant difference must separate
+        assert_ne!(d0, base.clone().with_seed(1).digest(100, 4));
+        assert_ne!(d0, base.clone().with_rho(2.0).digest(100, 4));
+        assert_ne!(d0, base.clone().with_delta(0.5).digest(100, 4));
+        assert_ne!(d0, base.digest(101, 4));
+        assert_ne!(d0, base.digest(100, 5));
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! The agent side of the socket runtime: connect, handshake, serve
+//! rounds, reconnect with bounded backoff.
+//!
+//! A session is `Hello → Welcome → (Round/Reset … ) → Stop`.  On any
+//! I/O error the driver reconnects (bounded attempts, exponential
+//! backoff); the endpoint's state survives the reconnect, and the
+//! leader answers the rejoin with a reliable `Reset` resync — crash
+//! recovery rides the same path as the paper's periodic reset
+//! strategy.  A *process* crash loses the endpoint state entirely; a
+//! replacement process starts from `init` and is resynced the same
+//! way.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+use crate::transport::frame::{read_frame, write_frame, Frame};
+
+use super::endpoint::{AgentEndpoint, EndpointStep};
+
+/// Client-side knobs.
+#[derive(Clone, Debug)]
+pub struct AgentOpts {
+    /// Reconnect budget after the first established session.
+    pub reconnect_attempts: u32,
+    /// Initial reconnect backoff; doubles per failure.
+    pub backoff_ms: u64,
+    /// Backoff ceiling.
+    pub max_backoff_ms: u64,
+    /// Write timeout on the connection.
+    pub write_timeout_ms: u64,
+    /// Test hook: silently drop the connection after serving this many
+    /// rounds (simulates an agent crash without a goodbye).
+    pub crash_after_rounds: Option<u64>,
+}
+
+impl Default for AgentOpts {
+    fn default() -> Self {
+        AgentOpts {
+            reconnect_attempts: 5,
+            backoff_ms: 200,
+            max_backoff_ms: 5_000,
+            write_timeout_ms: 5_000,
+            crash_after_rounds: None,
+        }
+    }
+}
+
+/// How a session over one connection ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionEnd {
+    /// The leader sent `Stop`; the final reply went out.
+    Stopped,
+    /// The `crash_after_rounds` test hook fired — the caller should
+    /// drop the connection without a goodbye.
+    Crashed,
+}
+
+/// Serve one connection: handshake, then frames until `Stop`, an I/O
+/// error, or the crash hook.  Generic over the stream so tests can
+/// drive it over TCP, UDS, or an in-memory pipe.
+pub fn run_agent_session<S: Read + Write>(
+    stream: &mut S,
+    ep: &mut AgentEndpoint,
+    digest: u64,
+    opts: &AgentOpts,
+) -> io::Result<SessionEnd> {
+    write_frame(
+        stream,
+        &Frame::Hello {
+            agent: ep.id() as u32,
+            digest,
+            dim: ep.dim() as u32,
+        },
+    )?;
+    match read_frame(stream)? {
+        Frame::Welcome { .. } => {}
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected Welcome, got {}", other.kind()),
+            ));
+        }
+    }
+    let mut rounds_served = 0u64;
+    loop {
+        let frame = read_frame(stream)?;
+        let was_round = matches!(frame, Frame::Round { .. });
+        match ep.handle(frame) {
+            EndpointStep::Reply(r) => write_frame(stream, &r)?,
+            EndpointStep::Idle => {}
+            EndpointStep::Done(r) => {
+                write_frame(stream, &r)?;
+                return Ok(SessionEnd::Stopped);
+            }
+        }
+        if was_round {
+            rounds_served += 1;
+            if opts.crash_after_rounds == Some(rounds_served) {
+                return Ok(SessionEnd::Crashed);
+            }
+        }
+    }
+}
+
+/// Connect-and-serve with bounded reconnect-and-backoff.
+fn drive<S, F>(
+    mut connect: F,
+    ep: &mut AgentEndpoint,
+    digest: u64,
+    opts: &AgentOpts,
+) -> anyhow::Result<SessionEnd>
+where
+    S: Read + Write,
+    F: FnMut() -> io::Result<S>,
+{
+    let mut attempts_left = opts.reconnect_attempts;
+    let mut backoff = opts.backoff_ms.max(1);
+    loop {
+        let attempt = connect()
+            .and_then(|mut s| run_agent_session(&mut s, ep, digest, opts));
+        match attempt {
+            Ok(end) => return Ok(end),
+            Err(e) => {
+                if attempts_left == 0 {
+                    anyhow::bail!(
+                        "agent {}: giving up after {} reconnect attempts: {e}",
+                        ep.id(),
+                        opts.reconnect_attempts
+                    );
+                }
+                attempts_left -= 1;
+                std::thread::sleep(Duration::from_millis(backoff));
+                backoff = (backoff * 2).min(opts.max_backoff_ms.max(1));
+            }
+        }
+    }
+}
+
+/// Run one agent against a TCP leader (`deluxe agent --connect`).
+pub fn run_tcp_agent(
+    addr: &str,
+    ep: &mut AgentEndpoint,
+    digest: u64,
+    opts: &AgentOpts,
+) -> anyhow::Result<SessionEnd> {
+    let addr = addr.to_string();
+    let write_timeout = Duration::from_millis(opts.write_timeout_ms);
+    drive(
+        move || {
+            let s = TcpStream::connect(&addr)?;
+            s.set_nodelay(true)?;
+            s.set_write_timeout(Some(write_timeout))?;
+            // reads block indefinitely: silence between rounds is normal
+            s.set_read_timeout(None)?;
+            Ok(s)
+        },
+        ep,
+        digest,
+        opts,
+    )
+}
+
+/// Run one agent against a Unix-domain-socket leader.
+#[cfg(unix)]
+pub fn run_uds_agent(
+    path: &str,
+    ep: &mut AgentEndpoint,
+    digest: u64,
+    opts: &AgentOpts,
+) -> anyhow::Result<SessionEnd> {
+    let path = path.to_string();
+    let write_timeout = Duration::from_millis(opts.write_timeout_ms);
+    drive(
+        move || {
+            let s = UnixStream::connect(&path)?;
+            s.set_write_timeout(Some(write_timeout))?;
+            s.set_read_timeout(None)?;
+            Ok(s)
+        },
+        ep,
+        digest,
+        opts,
+    )
+}

@@ -1,0 +1,191 @@
+//! The agent side of the service protocol, factored out of the old
+//! in-process worker thread so every transport shares one state
+//! machine.
+//!
+//! [`AgentEndpoint`] is a pure frame-in / frame-out reducer: the mpsc
+//! runtime ([`crate::transport::InProc`]), the socket client loop
+//! ([`crate::coordinator::client`]) and tests all drive the same
+//! `handle` method, so local-solve order, RNG draws and uplink byte
+//! accounting are identical in every deployment shape — the property
+//! the TCP-vs-in-proc bitwise test pins.
+
+use crate::comm::{Estimate, TriggerState};
+use crate::config::RunConfig;
+use crate::data::synth::ClassDataset;
+use crate::model::MlpSpec;
+use crate::rng::Pcg64;
+use crate::transport::frame::Frame;
+use crate::transport::LossyLink;
+use crate::wire::{Compressor, ErrorFeedback};
+
+/// What the endpoint wants the driving loop to do after a frame.
+pub enum EndpointStep {
+    /// Send this reply to the leader and keep serving.
+    Reply(Frame),
+    /// Nothing to send (e.g. after a reset sync).
+    Idle,
+    /// Send this final reply, then close the session.
+    Done(Frame),
+}
+
+/// One agent's complete protocol state: local iterate `x`, dual `u`,
+/// downlink estimate `ẑ`, uplink trigger + error feedback + lossy link.
+///
+/// The uplink line survives a [`Frame::Reset`] on purpose: the
+/// coordinator's reset resynchronizes only the z (downlink) line, while
+/// the d-line keeps its trigger reference AND its error-feedback
+/// residual, which is re-injected on the next event — clearing it would
+/// silently discard compressed update mass (unlike
+/// `ConsensusAdmm::reset`, which resyncs ζ̂ exactly and may therefore
+/// drop the residual).
+pub struct AgentEndpoint {
+    id: usize,
+    spec: MlpSpec,
+    shard: ClassDataset,
+    cfg: RunConfig,
+    x: Vec<f32>,
+    u: Vec<f32>,
+    zhat: Estimate<f32>,
+    zhat_prev: Vec<f32>,
+    d_trig: TriggerState<f32>,
+    up_ch: LossyLink,
+    ef_up: ErrorFeedback<f32>,
+    rng: Pcg64,
+    comp: Box<dyn Compressor<f32>>,
+}
+
+impl AgentEndpoint {
+    /// Build agent `id`'s endpoint.  `rng` must be the agent's
+    /// deterministic stream from [`super::derive_rngs`] so that a
+    /// process-per-agent run draws exactly what the in-proc run draws.
+    pub fn new(
+        id: usize,
+        spec: MlpSpec,
+        shard: ClassDataset,
+        cfg: &RunConfig,
+        init: Vec<f32>,
+        rng: Pcg64,
+    ) -> AgentEndpoint {
+        let dim = init.len();
+        assert_eq!(dim, spec.param_len());
+        AgentEndpoint {
+            id,
+            spec,
+            shard,
+            x: init.clone(),
+            u: vec![0.0; dim],
+            zhat: Estimate::new(init.clone()),
+            zhat_prev: init.clone(),
+            d_trig: TriggerState::new(cfg.trigger_d, init),
+            up_ch: LossyLink::new(cfg.drop_up),
+            ef_up: ErrorFeedback::new(),
+            rng,
+            comp: cfg.compressor.build::<f32>(),
+            cfg: cfg.clone(),
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Uplink d-events triggered so far.
+    pub fn events(&self) -> u64 {
+        self.d_trig.events
+    }
+
+    /// Cumulative uplink bytes put on the wire by this agent.
+    pub fn sent_bytes(&self) -> u64 {
+        self.up_ch.stats.sent_bytes
+    }
+
+    fn reply(&self, delta: Option<crate::wire::WireMessage<f32>>) -> Frame {
+        Frame::Reply {
+            agent: self.id as u32,
+            events: self.d_trig.events,
+            sent_bytes: self.up_ch.stats.sent_bytes,
+            delta,
+        }
+    }
+
+    /// Advance the state machine by one leader frame.
+    pub fn handle(&mut self, frame: Frame) -> EndpointStep {
+        match frame {
+            Frame::Round { zdelta } => {
+                EndpointStep::Reply(self.run_round(zdelta))
+            }
+            Frame::Reset { z } => {
+                self.zhat.reset_to(&z);
+                EndpointStep::Idle
+            }
+            Frame::Stop => EndpointStep::Done(self.reply(None)),
+            // Welcome is consumed by the session handshake; Hello/Reply
+            // never travel leader -> agent.  Ignoring them keeps the
+            // endpoint total over the frame alphabet.
+            Frame::Welcome { .. } | Frame::Hello { .. }
+            | Frame::Reply { .. } => EndpointStep::Idle,
+        }
+    }
+
+    /// One local ADMM round: apply the downlink payload, dual ascent,
+    /// S prox-SGD steps, offer the uplink trigger.
+    fn run_round(
+        &mut self,
+        zdelta: Option<crate::wire::WireMessage<f32>>,
+    ) -> Frame {
+        let dim = self.x.len();
+        self.zhat_prev.clear();
+        let snapshot: Vec<f32> = self.zhat.get().to_vec();
+        self.zhat_prev.extend_from_slice(&snapshot);
+        if let Some(wire_msg) = zdelta {
+            self.zhat.apply_msg(&wire_msg);
+        }
+        let alpha = self.cfg.alpha;
+        for j in 0..dim {
+            self.u[j] += alpha * self.x[j] - self.zhat.get()[j]
+                + (1.0 - alpha) * self.zhat_prev[j];
+        }
+        // S prox-SGD steps from the warm-started x
+        let d = self.spec.input_dim();
+        let c = self.spec.classes();
+        let mut xs =
+            Vec::with_capacity(self.cfg.steps * self.cfg.batch * d);
+        let mut ys =
+            Vec::with_capacity(self.cfg.steps * self.cfg.batch * c);
+        for _ in 0..self.cfg.steps {
+            let (bx, by) =
+                self.shard.sample_batch(self.cfg.batch, &mut self.rng);
+            xs.extend_from_slice(&bx);
+            ys.extend_from_slice(&by);
+        }
+        self.x = self.spec.local_admm(
+            &self.x,
+            self.zhat.get(),
+            &self.u,
+            &xs,
+            &ys,
+            self.cfg.lr,
+            self.cfg.rho,
+            self.cfg.steps,
+            self.cfg.batch,
+        );
+        let dvec: Vec<f32> = self
+            .x
+            .iter()
+            .zip(&self.u)
+            .map(|(&x, &u)| alpha * x + u)
+            .collect();
+        let mut payload = None;
+        if let Some(dl) = self.d_trig.offer(&dvec, &mut self.rng) {
+            let msg =
+                self.ef_up.compress(&dl, self.comp.as_ref(), &mut self.rng);
+            let bytes = msg.wire_bytes() as u64;
+            payload = self.up_ch.transmit_bytes(msg, bytes, &mut self.rng);
+        }
+        self.reply(payload)
+    }
+}

@@ -1,212 +1,271 @@
-//! Threaded leader/worker runtime for Alg. 1.
+//! The long-running leader service for Alg. 1, generic over
+//! [`Transport`].
 //!
-//! The algorithm cores in [`crate::admm`] are deterministic single-threaded
-//! state machines (every experiment is reproducible from a seed); this
-//! module is the *deployment shape*: one OS thread per agent, a leader
-//! thread owning `z`, message passing over `std::sync::mpsc` channels with
-//! the same event-trigger + drop-channel semantics on every link.  A round
-//! barrier preserves Alg. 1's synchronous semantics; the event protocol
-//! decides whether a message carries a payload.
+//! The algorithm cores in [`crate::admm`] are deterministic
+//! single-threaded state machines; this module is the *deployment
+//! shape*: a leader owning `z` and the per-agent downlink lines
+//! (trigger + error feedback), talking to [`AgentEndpoint`] state
+//! machines through whatever medium the transport provides — worker
+//! threads ([`crate::transport::InProc`]), the simulator's cost model
+//! ([`crate::transport::SimLink`]), or real sockets
+//! ([`crate::transport::Tcp`] / `Uds`, driven by `deluxe serve` +
+//! `deluxe agent`).
 //!
-//! Used by the e2e example and the integration tests; single-threaded
-//! experiment sweeps use [`crate::admm::ConsensusAdmm`] directly.
+//! A round barrier preserves Alg. 1's synchronous semantics; the event
+//! protocol decides whether a message carries a payload.  Fault
+//! semantics on lossy transports: an agent that dies mid-round
+//! ([`TransportEvent::Left`]) is simply absent — the paper's
+//! drop-tolerance already covers a missing delta — and a rejoining
+//! agent is resynchronized through the same reliable `Reset` path the
+//! periodic reset strategy uses ([`Coordinator::rejoin_resyncs`]
+//! counts these).  Replies are buffered per agent and applied in agent
+//! order, so a trajectory is bit-reproducible no matter which link
+//! delivers first.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
+mod client;
+mod endpoint;
 
-use crate::comm::{DropChannel, Estimate, Trigger, TriggerState};
+pub use client::{run_agent_session, AgentOpts, SessionEnd};
+#[cfg(unix)]
+pub use client::run_uds_agent;
+pub use client::run_tcp_agent;
+pub use endpoint::{AgentEndpoint, EndpointStep};
+
+use crate::comm::{Estimate, TriggerState};
+use crate::config::RunConfig;
 use crate::data::synth::ClassDataset;
 use crate::model::MlpSpec;
 use crate::rng::Pcg64;
-use crate::wire::{CompressorCfg, ErrorFeedback, WireMessage};
+use crate::sim::link::LinkModel;
+use crate::transport::frame::Frame;
+use crate::transport::{InProc, SimLink, Transport, TransportEvent};
+use crate::wire::{Compressor, ErrorFeedback, WireMessage, WireStats};
 
-/// Leader -> agent messages.  Payloads cross the thread boundary as
-/// [`WireMessage`]s — the same codec the single-threaded engines use —
-/// so byte accounting and compression behave identically in the
-/// deployment-shaped runtime.
-enum ToAgent {
-    /// Start round k; `zdelta` is the event-based downlink payload
-    /// (None = no event or packet dropped).
-    Round { zdelta: Option<WireMessage<f32>> },
-    /// Hard reset: synchronize `ẑ` to the true `z`.
-    Reset { z: Vec<f32> },
-    /// Terminate and report stats.
-    Stop,
+/// Derive the leader's and every agent's RNG stream from the run seed.
+///
+/// This replicates the historical spawn order exactly (agents are split
+/// off first, in id order, then the leader), so trajectories match the
+/// pre-trait runtime bit-for-bit — and a `deluxe agent` process can
+/// derive its own stream without ever talking to the leader.
+pub fn derive_rngs(seed: u64, n: usize) -> (Pcg64, Vec<Pcg64>) {
+    let mut master = Pcg64::seed(seed);
+    let agents: Vec<Pcg64> =
+        (0..n).map(|i| master.split(i as u64 + 1)).collect();
+    (master.split(0), agents)
 }
 
-/// Agent -> leader messages.
-struct FromAgent {
-    /// Sender id.
-    agent: usize,
-    /// Uplink payload: `Some(msg)` if the d-trigger fired AND the packet
-    /// survived; `None` otherwise.
-    delta: Option<WireMessage<f32>>,
-    /// d-events triggered so far (for load accounting).
-    events: u64,
-    /// Cumulative uplink bytes put on the wire by this agent.
-    sent_bytes: u64,
+/// Build the per-shard [`AgentEndpoint`]s with their deterministic RNG
+/// streams — shared by every in-process deployment shape, and by the
+/// `deluxe agent` CLI (which builds all endpoints identically and keeps
+/// only its own shard's).
+pub fn make_endpoints(
+    cfg: &RunConfig,
+    spec: &MlpSpec,
+    shards: Vec<ClassDataset>,
+    init: &[f32],
+) -> Vec<AgentEndpoint> {
+    let (_, agent_rngs) = derive_rngs(cfg.seed, shards.len());
+    shards
+        .into_iter()
+        .zip(agent_rngs)
+        .enumerate()
+        .map(|(i, (shard, rng))| {
+            AgentEndpoint::new(i, spec.clone(), shard, cfg, init.to_vec(), rng)
+        })
+        .collect()
 }
 
-/// Configuration of the threaded runtime.
-#[derive(Clone, Debug)]
-pub struct CoordinatorConfig {
-    pub rho: f32,
-    pub alpha: f32,
-    pub lr: f32,
-    pub steps: usize,
-    pub batch: usize,
-    pub trigger_d: Trigger,
-    pub trigger_z: Trigger,
-    pub drop_up: f64,
-    pub drop_down: f64,
-    pub reset_period: usize,
-    pub seed: u64,
-    /// Delta compressor on both directions (`--compressor` on the CLI).
-    pub compressor: CompressorCfg,
-}
-
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
-        CoordinatorConfig {
-            rho: 1.0,
-            alpha: 1.0,
-            lr: 0.1,
-            steps: 5,
-            batch: 32,
-            trigger_d: Trigger::Always,
-            trigger_z: Trigger::Always,
-            drop_up: 0.0,
-            drop_down: 0.0,
-            reset_period: 0,
-            seed: 0,
-            compressor: CompressorCfg::Identity,
-        }
-    }
-}
-
-struct AgentHandle {
-    tx: Sender<ToAgent>,
-    join: JoinHandle<()>,
+/// Per-agent downlink protocol line owned by the leader.
+struct LeaderLine {
     z_trig: TriggerState<f32>,
-    down_ch: DropChannel,
     ef_down: ErrorFeedback<f32>,
 }
 
-/// The leader: owns `z`, spawns one worker thread per shard.
-pub struct Coordinator {
-    pub cfg: CoordinatorConfig,
+/// The leader: owns `z` and drives one synchronous round at a time
+/// over any [`Transport`].
+pub struct Coordinator<TP: Transport = InProc> {
+    pub cfg: RunConfig,
     pub spec: MlpSpec,
     pub z: Vec<f32>,
     zeta_hat: Estimate<f32>,
-    agents: Vec<AgentHandle>,
-    from_rx: Receiver<FromAgent>,
+    lines: Vec<LeaderLine>,
+    /// Membership view: `false` once a link died, back to `true` after
+    /// a rejoin-resync.
+    live: Vec<bool>,
+    tp: TP,
     rng: Pcg64,
     pub round_idx: usize,
     pub uplink_events: u64,
-    comp: Box<dyn crate::wire::Compressor<f32>>,
-    /// Latest cumulative uplink bytes reported by each agent thread.
+    comp: Box<dyn Compressor<f32>>,
+    /// Latest cumulative uplink bytes reported by each agent.
     uplink_bytes_per_agent: Vec<u64>,
+    /// Latest cumulative uplink d-events reported by each agent.
+    uplink_events_per_agent: Vec<u64>,
+    /// Rejoin-resyncs performed (one reliable dense `Reset` each).
+    pub rejoin_resyncs: u64,
+    /// Replies that arrived after their round's gather closed.
+    pub stale_replies: u64,
 }
 
-impl Coordinator {
-    /// Spawn N agent threads, one per data shard.
+impl Coordinator<InProc> {
+    /// Spawn N agent threads, one per data shard — the classic
+    /// in-process runtime.
     pub fn spawn(
-        cfg: CoordinatorConfig,
+        cfg: RunConfig,
         spec: MlpSpec,
         shards: Vec<ClassDataset>,
         init: Vec<f32>,
-    ) -> Coordinator {
-        let _n = shards.len();
+    ) -> Coordinator<InProc> {
+        let endpoints = make_endpoints(&cfg, &spec, shards, &init);
+        let tp = InProc::spawn(endpoints, cfg.drop_down);
+        Coordinator::over(tp, cfg, spec, init)
+    }
+}
+
+impl Coordinator<SimLink> {
+    /// Spawn agent threads behind the simulator's link cost model.
+    pub fn spawn_sim(
+        cfg: RunConfig,
+        spec: MlpSpec,
+        shards: Vec<ClassDataset>,
+        init: Vec<f32>,
+        model: LinkModel,
+    ) -> Coordinator<SimLink> {
+        let endpoints = make_endpoints(&cfg, &spec, shards, &init);
+        let tp = SimLink::spawn(endpoints, model);
+        Coordinator::over(tp, cfg, spec, init)
+    }
+}
+
+impl<TP: Transport> Coordinator<TP> {
+    /// Run the leader over an already-constructed transport (sockets,
+    /// sims, or anything else implementing [`Transport`]).
+    pub fn over(
+        tp: TP,
+        cfg: RunConfig,
+        spec: MlpSpec,
+        init: Vec<f32>,
+    ) -> Coordinator<TP> {
+        let n = tp.n_agents();
         let dim = init.len();
         assert_eq!(dim, spec.param_len());
-        let (from_tx, from_rx) = channel::<FromAgent>();
-        let mut master_rng = Pcg64::seed(cfg.seed);
-        let n_agents = shards.len();
-        let agents = shards
-            .into_iter()
-            .enumerate()
-            .map(|(i, shard)| {
-                let (tx, rx) = channel::<ToAgent>();
-                let mut worker = AgentWorker {
-                    id: i,
-                    spec: spec.clone(),
-                    shard,
-                    cfg: cfg.clone(),
-                    x: init.clone(),
-                    u: vec![0.0; dim],
-                    zhat: Estimate::new(init.clone()),
-                    zhat_prev: init.clone(),
-                    d_trig: TriggerState::new(cfg.trigger_d, init.clone()),
-                    up_ch: DropChannel::new(cfg.drop_up),
-                    ef_up: ErrorFeedback::new(),
-                    rng: master_rng.split(i as u64 + 1),
-                    to_leader: from_tx.clone(),
-                };
-                let join = std::thread::Builder::new()
-                    .name(format!("dela-agent-{i}"))
-                    .spawn(move || worker.run(rx))
-                    // lint:allow(panic-in-library): thread spawn fails only on OS resource exhaustion; no meaningful recovery exists here
-                    .expect("spawn agent thread");
-                AgentHandle {
-                    tx,
-                    join,
-                    z_trig: TriggerState::new(cfg.trigger_z, init.clone()),
-                    down_ch: DropChannel::new(cfg.drop_down),
-                    ef_down: ErrorFeedback::new(),
-                }
+        let (leader_rng, _) = derive_rngs(cfg.seed, n);
+        let comp = cfg.compressor.build::<f32>();
+        let lines = (0..n)
+            .map(|_| LeaderLine {
+                z_trig: TriggerState::new(cfg.trigger_z, init.clone()),
+                ef_down: ErrorFeedback::new(),
             })
             .collect();
-        let comp = cfg.compressor.build::<f32>();
         Coordinator {
-            rng: master_rng.split(0),
-            cfg,
-            spec,
+            rng: leader_rng,
             zeta_hat: Estimate::new(init.clone()),
             z: init,
-            agents,
-            from_rx,
+            lines,
+            live: vec![true; n],
+            tp,
             round_idx: 0,
             uplink_events: 0,
             comp,
-            uplink_bytes_per_agent: vec![0; n_agents],
+            uplink_bytes_per_agent: vec![0; n],
+            uplink_events_per_agent: vec![0; n],
+            rejoin_resyncs: 0,
+            stale_replies: 0,
+            cfg,
+            spec,
         }
     }
 
-    /// Execute one synchronous round across all agent threads.
+    /// Execute one synchronous round across all live agents.
     pub fn round(&mut self) {
-        let n = self.agents.len();
-        // downlink: per-link event trigger + EF-compressed codec + lossy
-        // channel with byte accounting
-        for a in &mut self.agents {
+        let n = self.tp.n_agents();
+        self.tp.begin_round();
+        // absorb membership churn that happened between rounds, so a
+        // crashed agent's rejoin is resynced before we address the round
+        while let Some(ev) = self.tp.poll() {
+            self.absorb_idle_event(ev);
+        }
+        // downlink: per-link event trigger + EF-compressed codec, then
+        // the transport's lossy link with byte accounting
+        let mut pending = vec![false; n];
+        for i in 0..n {
+            if !self.live[i] {
+                continue;
+            }
             let mut payload = None;
-            if let Some(delta) = a.z_trig.offer(&self.z, &mut self.rng) {
-                let msg = a.ef_down.compress(
+            if let Some(delta) =
+                self.lines[i].z_trig.offer(&self.z, &mut self.rng)
+            {
+                payload = Some(self.lines[i].ef_down.compress(
                     &delta,
                     self.comp.as_ref(),
                     &mut self.rng,
-                );
-                let bytes = msg.wire_bytes() as u64;
-                payload = a.down_ch.transmit_bytes(msg, bytes, &mut self.rng);
+                ));
             }
-            // lint:allow(unaccounted-send): downlink bytes were charged via transmit_bytes above; this mpsc send is the thread-boundary transfer, not a wire hop
-            a.tx.send(ToAgent::Round { zdelta: payload })
-                // lint:allow(panic-in-library): a closed channel means the agent thread already panicked; propagating that panic is intended
-                .expect("agent thread alive");
-        }
-        // gather uplink
-        let mut got = 0;
-        let mut uplink_events = 0;
-        while got < n {
-            // lint:allow(panic-in-library): a closed channel means an agent thread already panicked; propagating that panic is intended
-            let msg = self.from_rx.recv().expect("agent reply");
-            if let Some(wire_msg) = msg.delta {
-                self.zeta_hat.apply_scaled_msg(&wire_msg, 1.0 / n as f64);
+            // lint:allow(unaccounted-send): Transport::send charges the wire books internally (loss draw + byte accounting per frame kind)
+            match self.tp.send(i, Frame::Round { zdelta: payload }, &mut self.rng)
+            {
+                Ok(()) => pending[i] = true,
+                // lint:allow(panic-in-library): a transport send error means the runtime fabric itself is gone (an agent thread panicked); propagating that panic is intended
+                Err(e) => panic!("transport send to agent {i}: {e}"),
             }
-            self.uplink_bytes_per_agent[msg.agent] = msg.sent_bytes;
-            uplink_events += msg.events;
-            got += 1;
         }
-        self.uplink_events = uplink_events;
+        // gather uplink: buffer replies per agent, apply in agent order
+        // (bit-reproducible regardless of delivery order)
+        let mut replies: Vec<Option<WireMessage<f32>>> = Vec::new();
+        replies.resize_with(n, || None);
+        let mut outstanding = pending.iter().filter(|&&p| p).count();
+        while outstanding > 0 {
+            let ev = match self.tp.recv() {
+                Ok(ev) => ev,
+                // lint:allow(panic-in-library): a failed transport recv means the runtime fabric is gone (agent thread panicked or event queue closed); propagating that panic is intended
+                Err(e) => panic!("transport recv: {e}"),
+            };
+            match ev {
+                TransportEvent::Frame { frame, .. } => {
+                    if let Frame::Reply { agent, events, sent_bytes, delta } =
+                        frame
+                    {
+                        let a = agent as usize;
+                        if a < n && pending[a] {
+                            pending[a] = false;
+                            outstanding -= 1;
+                            replies[a] = delta;
+                            self.uplink_bytes_per_agent[a] = sent_bytes;
+                            self.uplink_events_per_agent[a] = events;
+                        } else {
+                            self.stale_replies += 1;
+                        }
+                    }
+                }
+                TransportEvent::Left { from } => {
+                    if from < n {
+                        self.live[from] = false;
+                        if pending[from] {
+                            pending[from] = false;
+                            outstanding -= 1;
+                        }
+                    }
+                }
+                TransportEvent::Joined { from } => {
+                    self.resync_rejoined(from);
+                }
+                TransportEvent::Timeout => {
+                    // slow agents stay live; their late replies will be
+                    // discarded as stale when they finally land
+                    for p in pending.iter_mut() {
+                        if *p {
+                            *p = false;
+                            outstanding -= 1;
+                        }
+                    }
+                }
+            }
+        }
+        for msg in replies.iter().flatten() {
+            self.zeta_hat.apply_scaled_msg(msg, 1.0 / n as f64);
+        }
+        self.uplink_events = self.uplink_events_per_agent.iter().sum();
         // z-update (g = 0): z = ζ̂ + (1−α) z
         let alpha = self.cfg.alpha;
         for (z, &zh) in self.z.iter_mut().zip(self.zeta_hat.get()) {
@@ -217,173 +276,151 @@ impl Coordinator {
             && self.round_idx % self.cfg.reset_period == 0
         {
             let z = self.z.clone();
-            let sync_bytes =
-                WireMessage::<f32>::dense_bytes(z.len()) as u64;
-            for a in &mut self.agents {
-                a.z_trig.reset(&z);
-                a.ef_down.clear();
-                a.down_ch.stats.record_reliable(sync_bytes);
-                // lint:allow(unaccounted-send): reset bytes were charged via record_reliable on the line above; the mpsc send is the thread-boundary transfer
-                a.tx.send(ToAgent::Reset { z: z.clone() })
-                    // lint:allow(panic-in-library): a closed channel means the agent thread already panicked; propagating that panic is intended
-                    .expect("agent thread alive");
+            for i in 0..n {
+                if !self.live[i] {
+                    continue;
+                }
+                self.lines[i].z_trig.reset(&z);
+                self.lines[i].ef_down.clear();
+                // lint:allow(unaccounted-send): Transport::send charges the reset as one reliable dense sync transfer
+                match self.tp.send(
+                    i,
+                    Frame::Reset { z: z.clone() },
+                    &mut self.rng,
+                ) {
+                    Ok(()) => {}
+                    // lint:allow(panic-in-library): a transport send error means the runtime fabric itself is gone; propagating that panic is intended
+                    Err(e) => panic!("transport reset to agent {i}: {e}"),
+                }
             }
         }
+    }
+
+    /// Handle an event that arrived outside a gather.
+    fn absorb_idle_event(&mut self, ev: TransportEvent) {
+        match ev {
+            TransportEvent::Frame {
+                frame: Frame::Reply { .. }, ..
+            } => self.stale_replies += 1,
+            TransportEvent::Frame { .. } | TransportEvent::Timeout => {}
+            TransportEvent::Left { from } => {
+                if from < self.live.len() {
+                    self.live[from] = false;
+                }
+            }
+            TransportEvent::Joined { from } => self.resync_rejoined(from),
+        }
+    }
+
+    /// A crashed agent reconnected: bring its slot back and resync its
+    /// `ẑ` through the reliable reset path (charged as one dense sync).
+    fn resync_rejoined(&mut self, from: usize) {
+        if from >= self.lines.len() {
+            return;
+        }
+        self.live[from] = true;
+        let z = self.z.clone();
+        self.lines[from].z_trig.reset(&z);
+        self.lines[from].ef_down.clear();
+        // lint:allow(unaccounted-send): Transport::send charges the resync as one reliable dense sync transfer
+        match self.tp.send(from, Frame::Reset { z }, &mut self.rng) {
+            Ok(()) => {}
+            // lint:allow(panic-in-library): a transport send error means the runtime fabric itself is gone; propagating that panic is intended
+            Err(e) => panic!("transport resync to agent {from}: {e}"),
+        }
+        self.rejoin_resyncs += 1;
     }
 
     /// Downlink events so far.
     pub fn downlink_events(&self) -> u64 {
-        self.agents.iter().map(|a| a.z_trig.events).sum()
+        self.lines.iter().map(|l| l.z_trig.events).sum()
     }
 
     /// Downlink bytes put on the wire so far.
     pub fn downlink_bytes(&self) -> u64 {
-        self.agents.iter().map(|a| a.down_ch.stats.sent_bytes).sum()
+        self.tp.stats().downlink_bytes()
     }
 
     /// Uplink bytes put on the wire so far (as last reported by each
-    /// agent thread).
+    /// agent).
     pub fn uplink_bytes(&self) -> u64 {
         self.uplink_bytes_per_agent.iter().sum()
     }
 
-    /// Stop all agent threads; returns total uplink d-events.
-    pub fn shutdown(mut self) -> u64 {
-        for a in &self.agents {
-            // lint:allow(unaccounted-send): Stop is a control message with no payload; nothing crosses the modelled wire
-            let _ = a.tx.send(ToAgent::Stop);
-        }
-        // agents reply with a final stats message
-        let mut uplink = 0;
-        for _ in 0..self.agents.len() {
-            if let Ok(msg) = self.from_rx.recv() {
-                uplink += msg.events;
-            }
-        }
-        for a in self.agents.drain(..) {
-            let _ = a.join.join();
-        }
-        uplink
+    /// Per-link byte books from the transport.
+    pub fn wire_stats(&self) -> WireStats {
+        self.tp.stats()
     }
-}
 
-struct AgentWorker {
-    id: usize,
-    spec: MlpSpec,
-    shard: ClassDataset,
-    cfg: CoordinatorConfig,
-    x: Vec<f32>,
-    u: Vec<f32>,
-    zhat: Estimate<f32>,
-    zhat_prev: Vec<f32>,
-    d_trig: TriggerState<f32>,
-    up_ch: DropChannel,
-    ef_up: ErrorFeedback<f32>,
-    rng: Pcg64,
-    to_leader: Sender<FromAgent>,
-}
+    /// Current membership view.
+    pub fn live(&self) -> &[bool] {
+        &self.live
+    }
 
-impl AgentWorker {
-    fn run(&mut self, rx: Receiver<ToAgent>) {
-        let dim = self.x.len();
-        let comp = self.cfg.compressor.build::<f32>();
-        while let Ok(msg) = rx.recv() {
-            match msg {
-                ToAgent::Round { zdelta } => {
-                    self.zhat_prev.clear();
-                    let snapshot: Vec<f32> = self.zhat.get().to_vec();
-                    self.zhat_prev.extend_from_slice(&snapshot);
-                    if let Some(wire_msg) = zdelta {
-                        self.zhat.apply_msg(&wire_msg);
-                    }
-                    let alpha = self.cfg.alpha;
-                    for j in 0..dim {
-                        self.u[j] += alpha * self.x[j] - self.zhat.get()[j]
-                            + (1.0 - alpha) * self.zhat_prev[j];
-                    }
-                    // S prox-SGD steps from the warm-started x
-                    let d = self.spec.input_dim();
-                    let c = self.spec.classes();
-                    let mut xs = Vec::with_capacity(
-                        self.cfg.steps * self.cfg.batch * d,
-                    );
-                    let mut ys = Vec::with_capacity(
-                        self.cfg.steps * self.cfg.batch * c,
-                    );
-                    for _ in 0..self.cfg.steps {
-                        let (bx, by) =
-                            self.shard.sample_batch(self.cfg.batch, &mut self.rng);
-                        xs.extend_from_slice(&bx);
-                        ys.extend_from_slice(&by);
-                    }
-                    self.x = self.spec.local_admm(
-                        &self.x,
-                        self.zhat.get(),
-                        &self.u,
-                        &xs,
-                        &ys,
-                        self.cfg.lr,
-                        self.cfg.rho,
-                        self.cfg.steps,
-                        self.cfg.batch,
-                    );
-                    let dvec: Vec<f32> = self
-                        .x
-                        .iter()
-                        .zip(&self.u)
-                        .map(|(&x, &u)| alpha * x + u)
-                        .collect();
-                    let mut payload = None;
-                    if let Some(dl) = self.d_trig.offer(&dvec, &mut self.rng)
-                    {
-                        let msg = self.ef_up.compress(
-                            &dl,
-                            comp.as_ref(),
-                            &mut self.rng,
-                        );
-                        let bytes = msg.wire_bytes() as u64;
-                        payload = self.up_ch.transmit_bytes(
-                            msg,
-                            bytes,
-                            &mut self.rng,
-                        );
-                    }
-                    // lint:allow(unaccounted-send): uplink bytes were charged via transmit_bytes when the payload was produced; this send reports them to the leader
-                    let _ = self.to_leader.send(FromAgent {
-                        agent: self.id,
-                        delta: payload,
-                        events: self.d_trig.events,
-                        sent_bytes: self.up_ch.stats.sent_bytes,
-                    });
-                }
-                ToAgent::Reset { z } => {
-                    // the coordinator's reset resynchronizes only the z
-                    // (downlink) line; the uplink d-line keeps its trigger
-                    // reference AND its error-feedback residual, which is
-                    // re-injected on the next event — clearing it here
-                    // would silently discard compressed update mass
-                    // (unlike ConsensusAdmm::reset, which resyncs ζ̂
-                    // exactly and may therefore drop the residual).
-                    self.zhat.reset_to(&z);
-                }
-                ToAgent::Stop => {
-                    // lint:allow(unaccounted-send): final stats report carries no payload; all wire bytes were charged when transmitted
-                    let _ = self.to_leader.send(FromAgent {
-                        agent: self.id,
-                        delta: None,
-                        events: self.d_trig.events,
-                        sent_bytes: self.up_ch.stats.sent_bytes,
-                    });
-                    break;
-                }
+    /// Number of currently live agents.
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    /// Borrow the underlying transport (e.g. to read a sim clock or a
+    /// socket address).
+    pub fn transport(&self) -> &TP {
+        &self.tp
+    }
+
+    /// Stop all agents; returns total uplink d-events.
+    pub fn shutdown(mut self) -> u64 {
+        let n = self.tp.n_agents();
+        let mut awaited = vec![false; n];
+        for (i, slot) in awaited.iter_mut().enumerate() {
+            if !self.live[i] {
+                continue;
+            }
+            // lint:allow(unaccounted-send): Stop is a control frame; Transport::send charges nothing for it by design
+            if self.tp.send(i, Frame::Stop, &mut self.rng).is_ok() {
+                *slot = true;
             }
         }
+        let mut outstanding = awaited.iter().filter(|&&a| a).count();
+        while outstanding > 0 {
+            let ev = match self.tp.recv() {
+                Ok(ev) => ev,
+                Err(_) => break,
+            };
+            match ev {
+                TransportEvent::Frame {
+                    frame: Frame::Reply { agent, events, sent_bytes, .. },
+                    ..
+                } => {
+                    let a = agent as usize;
+                    if a < n {
+                        self.uplink_events_per_agent[a] = events;
+                        self.uplink_bytes_per_agent[a] = sent_bytes;
+                        if awaited[a] {
+                            awaited[a] = false;
+                            outstanding -= 1;
+                        }
+                    }
+                }
+                TransportEvent::Left { from } => {
+                    if from < n && awaited[from] {
+                        awaited[from] = false;
+                        outstanding -= 1;
+                    }
+                }
+                TransportEvent::Timeout => break,
+                _ => {}
+            }
+        }
+        let _ = self.tp.shutdown();
+        self.uplink_events_per_agent.iter().sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Trigger;
     use crate::data::partition::single_class_split;
     use crate::data::synth::{generate, SynthSpec};
 
@@ -395,16 +432,14 @@ mod tests {
         let spec = MlpSpec::new(vec![8, 16, 4]);
         let init = spec.init(&mut rng);
         let acc0 = spec.accuracy(&init, &test.xs, &test.labels);
-        let cfg = CoordinatorConfig {
-            rho: 1.0,
-            lr: 0.1,
-            steps: 3,
-            batch: 8,
-            trigger_d: Trigger::vanilla(0.05),
-            trigger_z: Trigger::vanilla(0.05),
-            seed: 7,
-            ..Default::default()
-        };
+        let cfg = RunConfig::default()
+            .with_rho(1.0)
+            .with_lr(0.1)
+            .with_steps(3)
+            .with_batch(8)
+            .with_trigger_d(Trigger::vanilla(0.05))
+            .with_trigger_z(Trigger::vanilla(0.05))
+            .with_seed(7);
         let mut coord = Coordinator::spawn(cfg, spec.clone(), shards, init);
         for _ in 0..40 {
             coord.round();
@@ -422,12 +457,8 @@ mod tests {
         let shards = single_class_split(&train, 4);
         let spec = MlpSpec::new(vec![8, 16, 4]);
         let init = spec.init(&mut rng);
-        let coord = Coordinator::spawn(
-            CoordinatorConfig::default(),
-            spec,
-            shards,
-            init,
-        );
+        let coord =
+            Coordinator::spawn(RunConfig::default(), spec, shards, init);
         assert_eq!(coord.shutdown(), 0);
     }
 
@@ -440,15 +471,17 @@ mod tests {
 
         let run = |trig: Trigger| {
             let shards = single_class_split(&train, 4);
-            let cfg = CoordinatorConfig {
-                trigger_d: trig,
-                steps: 2,
-                batch: 4,
-                seed: 11,
-                ..Default::default()
-            };
-            let mut coord =
-                Coordinator::spawn(cfg, MlpSpec::new(vec![8, 16, 4]), shards, init.clone());
+            let cfg = RunConfig::default()
+                .with_trigger_d(trig)
+                .with_steps(2)
+                .with_batch(4)
+                .with_seed(11);
+            let mut coord = Coordinator::spawn(
+                cfg,
+                MlpSpec::new(vec![8, 16, 4]),
+                shards,
+                init.clone(),
+            );
             for _ in 0..20 {
                 coord.round();
             }
@@ -468,12 +501,10 @@ mod tests {
         let spec = MlpSpec::new(vec![8, 16, 4]);
         let init = spec.init(&mut rng);
         let dim = init.len();
-        let cfg = CoordinatorConfig {
-            steps: 1,
-            batch: 4,
-            seed: 13,
-            ..Default::default()
-        };
+        let cfg = RunConfig::default()
+            .with_steps(1)
+            .with_batch(4)
+            .with_seed(13);
         let mut coord = Coordinator::spawn(cfg, spec, shards, init);
         let rounds = 15;
         for _ in 0..rounds {
@@ -485,6 +516,10 @@ mod tests {
         let expect = rounds as u64 * 4 * dense;
         assert_eq!(coord.downlink_bytes(), expect);
         assert_eq!(coord.uplink_bytes(), expect);
+        // the transport's WireStats books agree with the counters
+        let ws = coord.wire_stats();
+        assert_eq!(ws.downlink_bytes(), expect);
+        assert_eq!(ws.uplink_bytes(), expect);
         coord.shutdown();
     }
 
@@ -496,20 +531,18 @@ mod tests {
         let spec = MlpSpec::new(vec![8, 16, 4]);
         let init = spec.init(&mut rng);
         let acc0 = spec.accuracy(&init, &test.xs, &test.labels);
-        let cfg = CoordinatorConfig {
-            rho: 1.0,
-            lr: 0.1,
-            steps: 3,
-            batch: 8,
-            trigger_d: Trigger::vanilla(0.05),
-            trigger_z: Trigger::vanilla(0.05),
-            seed: 7,
-            compressor: crate::wire::CompressorCfg::TopKQuant {
+        let cfg = RunConfig::default()
+            .with_rho(1.0)
+            .with_lr(0.1)
+            .with_steps(3)
+            .with_batch(8)
+            .with_trigger_d(Trigger::vanilla(0.05))
+            .with_trigger_z(Trigger::vanilla(0.05))
+            .with_seed(7)
+            .with_compressor(crate::wire::CompressorCfg::TopKQuant {
                 frac: 0.25,
                 bits: 10,
-            },
-            ..Default::default()
-        };
+            });
         let mut coord = Coordinator::spawn(cfg, spec.clone(), shards, init);
         for _ in 0..40 {
             coord.round();
@@ -519,5 +552,63 @@ mod tests {
         coord.shutdown();
         assert!(acc > acc0 + 0.15, "compressed acc {acc0} -> {acc}");
         assert!(uplink_bytes > 0);
+    }
+
+    #[test]
+    fn sim_transport_with_ideal_links_matches_inproc_bitwise() {
+        // the keystone interchangeability property at the in-process
+        // level: an ideal SimLink draws nothing extra from the leader
+        // RNG, so the trajectory is bit-identical to InProc.
+        let mut rng = Pcg64::seed(21);
+        let (train, _) = generate(&SynthSpec::tiny(), &mut rng);
+        let spec = MlpSpec::new(vec![8, 16, 4]);
+        let init = spec.init(&mut rng);
+        let cfg = RunConfig::default()
+            .with_steps(2)
+            .with_batch(4)
+            .with_trigger_d(Trigger::vanilla(0.05))
+            .with_trigger_z(Trigger::vanilla(0.05))
+            .with_seed(17);
+
+        let mut a = Coordinator::spawn(
+            cfg.clone(),
+            spec.clone(),
+            single_class_split(&train, 4),
+            init.clone(),
+        );
+        let mut b = Coordinator::spawn_sim(
+            cfg,
+            spec,
+            single_class_split(&train, 4),
+            init,
+            LinkModel::ideal(),
+        );
+        for r in 0..10 {
+            a.round();
+            b.round();
+            assert_eq!(a.z, b.z, "z diverged at round {r}");
+        }
+        assert_eq!(a.downlink_bytes(), b.downlink_bytes());
+        assert_eq!(a.uplink_bytes(), b.uplink_bytes());
+        assert_eq!(b.transport().vtime_ticks(), 0, "ideal links take no time");
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn derive_rngs_streams_are_stable_and_distinct() {
+        let (mut leader, mut agents) = derive_rngs(42, 4);
+        let (mut leader2, mut agents2) = derive_rngs(42, 4);
+        assert_eq!(leader.next_u64(), leader2.next_u64());
+        for (a, b) in agents.iter_mut().zip(agents2.iter_mut()) {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // distinct streams across agents and leader
+        let mut seen: Vec<u64> =
+            agents.iter_mut().map(|r| r.next_u64()).collect();
+        seen.push(leader.next_u64());
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 5);
     }
 }

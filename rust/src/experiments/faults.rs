@@ -15,7 +15,8 @@
 //! an independent seeded simulation, so the sweep is deterministic on
 //! any worker count.
 
-use crate::comm::{LossModel, Trigger};
+use crate::comm::Trigger;
+use crate::transport::loss::LossModel;
 use crate::data::regress::RegressSpec;
 use crate::lasso::{LassoConfig, LassoProblem};
 use crate::metrics::Recorder;

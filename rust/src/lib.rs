@@ -7,8 +7,13 @@
 //! (see `DESIGN.md`):
 //!
 //! * [`comm`] — the paper's event-based communication protocol (vanilla and
-//!   randomized triggers), packet-drop channel simulation and periodic
-//!   resets (Sec. 2, App. E).
+//!   randomized triggers) and periodic resets (Sec. 2, App. E).
+//! * [`transport`] — the deployment substrate: the object-safe
+//!   [`transport::Transport`] trait, the in-process thread fabric
+//!   ([`transport::InProc`]), the discrete-event cost model adapter
+//!   ([`transport::SimLink`]), real sockets ([`transport::Tcp`] /
+//!   `Uds`) with length-prefixed framing and handshake, and the lossy
+//!   link model ([`transport::loss`]).
 //! * [`wire`] — the compressed-message codec (TopK / RandK / b-bit
 //!   stochastic quantization with error feedback) and byte-accurate
 //!   uplink/downlink accounting layered under every link.
@@ -44,6 +49,7 @@ pub mod proptest;
 pub mod rng;
 pub mod sim;
 pub mod topology;
+pub mod transport;
 pub mod wire;
 
 pub mod admm;
@@ -54,11 +60,29 @@ pub mod lasso;
 pub mod runtime;
 pub mod solver;
 
-/// Commonly used items.
+/// The stable import surface: everything a downstream binary, example,
+/// or integration test should need.  Internal plumbing (the lint
+/// lexer, the in-proc thread fabric, frame codecs beyond [`Frame`])
+/// stays out on purpose.
 pub mod prelude {
-    pub use crate::comm::{Trigger, TriggerState};
+    pub use crate::comm::{Estimate, Scalar, Trigger, TriggerState};
+    pub use crate::config::RunConfig;
+    pub use crate::coordinator::{
+        derive_rngs, make_endpoints, run_agent_session, run_tcp_agent,
+        AgentEndpoint, AgentOpts, Coordinator, SessionEnd,
+    };
+    #[cfg(unix)]
+    pub use crate::coordinator::run_uds_agent;
     pub use crate::linalg::Matrix;
     pub use crate::metrics::Recorder;
     pub use crate::rng::{Pcg64, Rng};
-    pub use crate::wire::{Compressor, CompressorCfg, WireMessage};
+    pub use crate::transport::{
+        Frame, InProc, LossModel, LossyLink, SimLink, SocketOpts, Tcp,
+        Transport, TransportEvent,
+    };
+    #[cfg(unix)]
+    pub use crate::transport::Uds;
+    pub use crate::wire::{
+        Compressor, CompressorCfg, WireMessage, WireStats,
+    };
 }

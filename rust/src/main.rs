@@ -30,6 +30,14 @@ USAGE:
               results are bit-identical for every worker count)
   deluxe train [--rounds N] [--delta D] [--seed S] [--compressor C]
                                                        threaded e2e run
+  deluxe serve [--listen HOST:PORT | --uds PATH] [--rounds N] [--seed S]
+             [--delta D] [--compressor C] [--drop-down P] [--reset-period T]
+             leader service over real sockets: waits for the full agent
+             cohort, drives rounds, resyncs crashed agents on rejoin
+  deluxe agent (--connect HOST:PORT | --uds PATH) --shard K [--seed S]
+             [--delta D] [--compressor C]
+             one agent process holding shard K; protocol flags must match
+             the leader's (enforced by the handshake config digest)
   deluxe sim --scenario NAME|file.json [--agents N] [--rounds N] [--seed S]
              [--workers N]
              discrete-event network simulation (builtins: ideal | lossy |
@@ -62,6 +70,8 @@ fn main() -> Result<()> {
     match cmd.as_deref() {
         Some("exp") => run_exp(&args),
         Some("train") => run_train(&args),
+        Some("serve") => run_serve(&args),
+        Some("agent") => run_agent(&args),
         Some("sim") => run_sim(&args),
         Some("lint") => run_lint(&args),
         Some("info") => run_info(&args),
@@ -708,39 +718,78 @@ fn run_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Workload-derived protocol defaults shared by `train`, `serve` and
+/// `agent`, so all three build the identical [`RunConfig`] from the same
+/// flags — and therefore the identical handshake digest.  Explicit flags
+/// always win; the vanilla Δ=0.5 trigger pair applies only when no
+/// trigger flag was given at all.
+fn apply_train_defaults(
+    mut rc: RunConfig,
+    w: &nn::NnWorkload,
+    args: &Args,
+) -> RunConfig {
+    if args.get("rho").is_none() {
+        rc.rho = w.rho as f32;
+    }
+    if args.get("lr").is_none() {
+        rc.lr = w.lr;
+    }
+    if args.get("steps").is_none() {
+        rc.steps = w.steps;
+    }
+    if args.get("batch").is_none() {
+        rc.batch = w.batch;
+    }
+    if args.get("delta").is_none()
+        && args.get("trigger-d").is_none()
+        && args.get("trigger-z").is_none()
+    {
+        rc = rc.with_delta(0.5);
+    }
+    rc
+}
+
 fn run_train(args: &Args) -> Result<()> {
-    use deluxe::comm::Trigger;
-    use deluxe::coordinator::{Coordinator, CoordinatorConfig};
+    use deluxe::coordinator::Coordinator;
     let rc = RunConfig::from_args(args);
     let rounds = args.usize_or("rounds", 60);
-    let delta = args.f64_or("delta", 0.5);
     let w = nn::NnWorkload::mnist(rc.seed);
+    let rc = apply_train_defaults(rc, &w, args);
     println!(
         "threaded e2e training: {} agents (single-class shards), {} rounds, \
-         Δ={delta}, compressor {}",
+         trigger {}, compressor {}",
         w.n_agents(),
         rounds,
+        rc.trigger_d.label(),
         rc.compressor.label()
     );
-    let cfg = CoordinatorConfig {
-        rho: w.rho as f32,
-        lr: w.lr,
-        steps: w.steps,
-        batch: w.batch,
-        trigger_d: Trigger::vanilla(delta),
-        trigger_z: Trigger::vanilla(delta * 0.1),
-        seed: rc.seed,
-        compressor: rc.compressor,
-        ..Default::default()
-    };
     let init = w.spec.init(&mut deluxe::rng::Pcg64::seed(rc.seed));
-    let mut coord =
-        Coordinator::spawn(cfg, w.spec.clone(), w.shards.clone(), init);
+    let coord =
+        Coordinator::spawn(rc, w.spec.clone(), w.shards.clone(), init);
+    drive_leader(coord, &w, rounds)
+}
+
+/// Round loop + final report shared by `train` (in-proc transport) and
+/// `serve` (socket transport).
+fn drive_leader<TP: deluxe::transport::Transport>(
+    mut coord: deluxe::coordinator::Coordinator<TP>,
+    w: &nn::NnWorkload,
+    rounds: usize,
+) -> Result<()> {
     for k in 0..rounds {
         coord.round();
         if (k + 1) % 10 == 0 {
             let acc = w.spec.accuracy(&coord.z, &w.test.xs, &w.test.labels);
-            println!("round {:>4}: accuracy {:.3}", k + 1, acc);
+            println!(
+                "round {:>4}: accuracy {:.3}  (live {}/{}, rejoins {}, \
+                 stale {})",
+                k + 1,
+                acc,
+                coord.live_count(),
+                w.n_agents(),
+                coord.rejoin_resyncs,
+                coord.stale_replies,
+            );
         }
     }
     let acc = w.spec.accuracy(&coord.z, &w.test.xs, &w.test.labels);
@@ -760,6 +809,110 @@ fn run_train(args: &Args) -> Result<()> {
         fmt_bytes(up_bytes),
         fmt_bytes(down_bytes),
         fmt_bytes(rounds as u64 * w.n_agents() as u64 * dense),
+    );
+    Ok(())
+}
+
+fn run_serve(args: &Args) -> Result<()> {
+    use deluxe::coordinator::Coordinator;
+    use deluxe::transport::{SocketOpts, Tcp};
+
+    let rc = RunConfig::from_args(args);
+    let rounds = args.usize_or("rounds", 60);
+    let w = nn::NnWorkload::mnist(rc.seed);
+    let rc = apply_train_defaults(rc, &w, args);
+    let n = w.n_agents();
+    let init = w.spec.init(&mut deluxe::rng::Pcg64::seed(rc.seed));
+    let digest = rc.digest(init.len(), n);
+
+    #[cfg(unix)]
+    {
+        if let Some(path) = args.get("uds") {
+            use deluxe::transport::Uds;
+            let mut tp = <Uds>::bind(
+                path,
+                n,
+                digest,
+                init.len(),
+                SocketOpts::default(),
+            )?;
+            println!(
+                "serving {n} agents on uds:{path} (config digest \
+                 {digest:016x}); waiting for cohort…"
+            );
+            tp.await_cohort()?;
+            println!("cohort complete; starting rounds");
+            let coord = Coordinator::over(tp, rc, w.spec.clone(), init);
+            return drive_leader(coord, &w, rounds);
+        }
+    }
+    let listen = args.str_or("listen", "127.0.0.1:46700");
+    let mut tp =
+        <Tcp>::bind(listen, n, digest, init.len(), SocketOpts::default())?;
+    println!(
+        "serving {n} agents on tcp:{} (config digest {digest:016x}); \
+         waiting for cohort…",
+        tp.local_addr()
+    );
+    tp.await_cohort()?;
+    println!("cohort complete; starting rounds");
+    let coord = Coordinator::over(tp, rc, w.spec.clone(), init);
+    drive_leader(coord, &w, rounds)
+}
+
+fn run_agent(args: &Args) -> Result<()> {
+    use deluxe::coordinator::{make_endpoints, run_tcp_agent, AgentOpts};
+
+    let rc = RunConfig::from_args(args);
+    let w = nn::NnWorkload::mnist(rc.seed);
+    let rc = apply_train_defaults(rc, &w, args);
+    let n = w.n_agents();
+    let shard = match args.get_parse::<usize>("shard")? {
+        Some(k) => k,
+        None => anyhow::bail!("deluxe agent requires --shard K"),
+    };
+    anyhow::ensure!(
+        shard < n,
+        "--shard {shard} out of range (workload has {n} shards)"
+    );
+    let init = w.spec.init(&mut deluxe::rng::Pcg64::seed(rc.seed));
+    let digest = rc.digest(init.len(), n);
+    // every agent derives the full deterministic endpoint set and keeps
+    // its own shard's — no leader round-trip needed for RNG streams
+    let mut endpoints =
+        make_endpoints(&rc, &w.spec, w.shards.clone(), &init);
+    let mut ep = endpoints.remove(shard);
+    drop(endpoints);
+    let opts = AgentOpts::default();
+
+    #[cfg(unix)]
+    {
+        if let Some(path) = args.get("uds") {
+            use deluxe::coordinator::run_uds_agent;
+            println!(
+                "agent {shard}/{n} connecting to uds:{path} (config digest \
+                 {digest:016x})"
+            );
+            let end = run_uds_agent(path, &mut ep, digest, &opts)?;
+            println!(
+                "agent {shard}: session ended ({end:?}); {} uplink events, \
+                 {} sent",
+                ep.events(),
+                fmt_bytes(ep.sent_bytes()),
+            );
+            return Ok(());
+        }
+    }
+    let addr = args.str_or("connect", "127.0.0.1:46700");
+    println!(
+        "agent {shard}/{n} connecting to tcp:{addr} (config digest \
+         {digest:016x})"
+    );
+    let end = run_tcp_agent(addr, &mut ep, digest, &opts)?;
+    println!(
+        "agent {shard}: session ended ({end:?}); {} uplink events, {} sent",
+        ep.events(),
+        fmt_bytes(ep.sent_bytes()),
     );
     Ok(())
 }

@@ -820,7 +820,8 @@ impl<T: Scalar> AsyncConsensus<T> {
 mod tests {
     use super::*;
     use crate::admm::{ConsensusAdmm, ConsensusConfig};
-    use crate::comm::{LossModel, Trigger};
+    use crate::comm::Trigger;
+    use crate::transport::loss::LossModel;
     use crate::sim::link::{LatencyModel, LinkModel};
     use crate::sim::scenario::{ComputeModel, FaultEvent};
     use crate::solver::IdentityProx;

@@ -1,6 +1,6 @@
 //! Per-link delivery models for the discrete-event simulator.
 //!
-//! A [`Link`] generalizes [`crate::comm::DropChannel`] from "Bernoulli
+//! A [`Link`] generalizes [`crate::transport::loss::LossyLink`] from "Bernoulli
 //! drop, instantaneous delivery" to the full cost model of a real
 //! network path:
 //!
@@ -9,15 +9,15 @@
 //! * **bandwidth** — bytes/second that convert a
 //!   [`crate::wire::WireMessage`]'s exact encoded size into
 //!   serialization time (`0` = infinite);
-//! * **loss** — the shared [`crate::comm::LossModel`] (Bernoulli or
-//!   Gilbert–Elliott burst drops).
+//! * **loss** — the shared [`crate::transport::loss::LossModel`]
+//!   (Bernoulli or Gilbert–Elliott burst drops).
 //!
-//! Byte accounting reuses [`crate::comm::ChannelStats`], so
+//! Byte accounting reuses [`crate::transport::loss::ChannelStats`], so
 //! [`crate::wire::WireStats`] snapshots work identically on simulated
 //! links.
 
-use crate::comm::{ChannelStats, LossModel};
 use crate::rng::{Pcg64, Rng};
+use crate::transport::loss::{ChannelStats, LossModel};
 
 use super::event::{ticks, SimTime};
 
@@ -186,7 +186,7 @@ pub struct Link {
     /// Bytes of a packet dropped at the current round's transmit
     /// opportunity (cleared by [`Self::mark_round`]) — the same
     /// reset-supersession accounting rule as
-    /// [`crate::comm::DropChannel::charge_sync`].
+    /// [`crate::transport::loss::LossyLink::charge_sync`].
     last_drop: Option<u64>,
     pub stats: ChannelStats,
 }
@@ -246,7 +246,7 @@ impl Link {
     /// that triggered but dropped in the same round is superseded by
     /// the sync — the round bills exactly one dense transfer, never a
     /// lost delta *plus* a sync (DESIGN.md §9, same rule as
-    /// `DropChannel::charge_sync`).
+    /// `LossyLink::charge_sync`).
     pub fn charge_sync(&mut self, bytes: u64) {
         if let Some(b) = self.last_drop.take() {
             self.stats.sent -= 1;

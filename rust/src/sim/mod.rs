@@ -11,7 +11,7 @@
 //! * [`link`] — per-link delivery models: seeded latency distributions,
 //!   bandwidth that converts [`crate::wire::WireMessage`] bytes into
 //!   serialization time, and Bernoulli / Gilbert–Elliott loss via the
-//!   shared [`crate::comm::LossModel`].
+//!   shared [`crate::transport::loss::LossModel`].
 //! * [`scenario`] — the declarative [`Scenario`] (topology, links,
 //!   compute/straggler model, quorum, staleness, resets, fault
 //!   schedule), parseable from JSON and from named CLI builtins.

@@ -10,7 +10,8 @@
 
 use std::path::Path;
 
-use crate::comm::{LossModel, Trigger};
+use crate::comm::Trigger;
+use crate::transport::loss::LossModel;
 use crate::jsonio::{read_json, Json};
 use crate::rng::{Pcg64, Rng};
 use crate::topology::Graph;

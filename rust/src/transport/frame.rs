@@ -1,0 +1,347 @@
+//! The transport frame protocol and its length-prefixed byte framing.
+//!
+//! Every transport moves the same six [`Frame`] kinds; the socket
+//! transports serialize them as
+//!
+//! ```text
+//! frame := tag(u8) . len(u32 LE) . body(len bytes)
+//! ```
+//!
+//! Vector payloads reuse [`WireMessage`]'s exact codec, so a frame's
+//! payload bytes on a real socket are bit-identical to the bytes the
+//! in-process accounting charges.  The codec is strict: unknown tags,
+//! truncated bodies and trailing garbage are errors, never silently
+//! skipped (DESIGN.md §12).
+
+use std::io::{Read, Write};
+
+use crate::wire::WireMessage;
+
+/// Hard upper bound on a frame body (64 MiB) — a corrupted length
+/// prefix must not translate into an unbounded allocation.
+pub const MAX_FRAME_BODY: u32 = 64 << 20;
+
+/// Frame tags on the wire, in catalogue order (DESIGN.md §12).
+const TAG_HELLO: u8 = 0;
+const TAG_WELCOME: u8 = 1;
+const TAG_ROUND: u8 = 2;
+const TAG_RESET: u8 = 3;
+const TAG_STOP: u8 = 4;
+const TAG_REPLY: u8 = 5;
+
+/// One protocol message between the leader and an agent.  The deployed
+/// runtime speaks the f32 PJRT parameter ABI, so frames are concrete
+/// over `f32` (keeping [`super::Transport`] object-safe).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Agent -> leader connect handshake: who I am and a digest of my
+    /// run configuration (seed, triggers, compressor, dim, cohort size).
+    /// The leader rejects a digest mismatch — two processes silently
+    /// disagreeing on the protocol parameters would diverge without any
+    /// error signal.
+    Hello { agent: u32, digest: u64, dim: u32 },
+    /// Leader -> agent handshake ack; `round` tells a rejoining agent
+    /// where the cohort is.  Carries no model state: the initial `z` is
+    /// derived from the shared seed on both sides, and a rejoin resync
+    /// arrives as an explicit [`Frame::Reset`] so its dense bytes are
+    /// charged on the books.
+    Welcome { round: u64 },
+    /// Start one round; `zdelta` is the event-based downlink payload
+    /// (`None` = no z-event fired, or the packet was lost in flight).
+    Round { zdelta: Option<WireMessage<f32>> },
+    /// Reliable resynchronization of the agent's `ẑ` to the true `z`
+    /// (periodic resets and rejoin resyncs).
+    Reset { z: Vec<f32> },
+    /// Terminate; the agent answers with one final [`Frame::Reply`].
+    Stop,
+    /// Agent -> leader round reply: the event-based uplink payload plus
+    /// the agent's cumulative event/byte counters.
+    Reply {
+        agent: u32,
+        /// d-events triggered so far (for load accounting).
+        events: u64,
+        /// Cumulative uplink bytes this agent has put on the wire.
+        sent_bytes: u64,
+        /// `Some(msg)` iff the d-trigger fired AND the packet survived.
+        delta: Option<WireMessage<f32>>,
+    },
+}
+
+impl Frame {
+    /// Display name of the frame kind (for counters and errors).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::Welcome { .. } => "welcome",
+            Frame::Round { .. } => "round",
+            Frame::Reset { .. } => "reset",
+            Frame::Stop => "stop",
+            Frame::Reply { .. } => "reply",
+        }
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(buf: &[u8], pos: &mut usize) -> anyhow::Result<u32> {
+    if buf.len() < *pos + 4 {
+        anyhow::bail!("truncated u32 at offset {}", *pos);
+    }
+    let v = u32::from_le_bytes([
+        buf[*pos],
+        buf[*pos + 1],
+        buf[*pos + 2],
+        buf[*pos + 3],
+    ]);
+    *pos += 4;
+    Ok(v)
+}
+
+fn get_u64(buf: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    if buf.len() < *pos + 8 {
+        anyhow::bail!("truncated u64 at offset {}", *pos);
+    }
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[*pos..*pos + 8]);
+    *pos += 8;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn put_opt_msg(out: &mut Vec<u8>, msg: &Option<WireMessage<f32>>) {
+    match msg {
+        None => out.push(0),
+        Some(m) => {
+            out.push(1);
+            out.extend_from_slice(&m.encode());
+        }
+    }
+}
+
+fn get_opt_msg(
+    buf: &[u8],
+    pos: &mut usize,
+) -> anyhow::Result<Option<WireMessage<f32>>> {
+    let flag = *buf
+        .get(*pos)
+        .ok_or_else(|| anyhow::anyhow!("truncated payload flag"))?;
+    *pos += 1;
+    match flag {
+        0 => Ok(None),
+        1 => {
+            let msg = WireMessage::<f32>::decode(&buf[*pos..])?;
+            *pos += msg.wire_bytes();
+            Ok(Some(msg))
+        }
+        other => anyhow::bail!("bad payload flag {other}"),
+    }
+}
+
+/// Encode a frame to its full on-wire form (tag + length + body).
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let mut body = Vec::new();
+    let tag = match f {
+        Frame::Hello { agent, digest, dim } => {
+            put_u32(&mut body, *agent);
+            put_u64(&mut body, *digest);
+            put_u32(&mut body, *dim);
+            TAG_HELLO
+        }
+        Frame::Welcome { round } => {
+            put_u64(&mut body, *round);
+            TAG_WELCOME
+        }
+        Frame::Round { zdelta } => {
+            put_opt_msg(&mut body, zdelta);
+            TAG_ROUND
+        }
+        Frame::Reset { z } => {
+            body.extend_from_slice(&WireMessage::dense(z).encode());
+            TAG_RESET
+        }
+        Frame::Stop => TAG_STOP,
+        Frame::Reply { agent, events, sent_bytes, delta } => {
+            put_u32(&mut body, *agent);
+            put_u64(&mut body, *events);
+            put_u64(&mut body, *sent_bytes);
+            put_opt_msg(&mut body, delta);
+            TAG_REPLY
+        }
+    };
+    let mut out = Vec::with_capacity(5 + body.len());
+    out.push(tag);
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode one frame body given its tag.  The body must be consumed
+/// exactly — trailing bytes are a framing error.
+fn decode_body(tag: u8, body: &[u8]) -> anyhow::Result<Frame> {
+    let mut pos = 0usize;
+    let frame = match tag {
+        TAG_HELLO => Frame::Hello {
+            agent: get_u32(body, &mut pos)?,
+            digest: get_u64(body, &mut pos)?,
+            dim: get_u32(body, &mut pos)?,
+        },
+        TAG_WELCOME => Frame::Welcome { round: get_u64(body, &mut pos)? },
+        TAG_ROUND => Frame::Round { zdelta: get_opt_msg(body, &mut pos)? },
+        TAG_RESET => {
+            let msg = WireMessage::<f32>::decode(body)?;
+            pos += msg.wire_bytes();
+            match msg {
+                WireMessage::Dense(z) => Frame::Reset { z },
+                other => anyhow::bail!(
+                    "reset payload must be dense, got {} values in a \
+                     non-dense message",
+                    other.dim()
+                ),
+            }
+        }
+        TAG_STOP => Frame::Stop,
+        TAG_REPLY => Frame::Reply {
+            agent: get_u32(body, &mut pos)?,
+            events: get_u64(body, &mut pos)?,
+            sent_bytes: get_u64(body, &mut pos)?,
+            delta: get_opt_msg(body, &mut pos)?,
+        },
+        other => anyhow::bail!("unknown frame tag {other}"),
+    };
+    if pos != body.len() {
+        anyhow::bail!(
+            "frame body has {} trailing byte(s) after a {} frame",
+            body.len() - pos,
+            frame.kind()
+        );
+    }
+    Ok(frame)
+}
+
+/// Decode a full framed buffer (as produced by [`encode_frame`]); the
+/// buffer must contain exactly one frame.
+pub fn decode_frame(buf: &[u8]) -> anyhow::Result<Frame> {
+    if buf.len() < 5 {
+        anyhow::bail!("framed buffer shorter than the 5-byte header");
+    }
+    let tag = buf[0];
+    let mut pos = 1usize;
+    let len = get_u32(buf, &mut pos)? as usize;
+    if buf.len() != 5 + len {
+        anyhow::bail!(
+            "frame length prefix {len} disagrees with buffer ({} body \
+             bytes)",
+            buf.len() - 5
+        );
+    }
+    decode_body(tag, &buf[5..])
+}
+
+/// Write one frame to a byte sink (the socket transports' single write
+/// path — `Tcp`/`Uds` charge wire bytes *before* calling this, in
+/// `SocketTransport::send`, so the framing layer never touches the
+/// books).
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> std::io::Result<()> {
+    let buf = encode_frame(f);
+    // lint:allow(unaccounted-send): wire bytes are charged by the caller (SocketTransport::send / AgentEndpoint uplink) before framing; this is the one socket write path
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Read one frame from a byte source.  Decode failures surface as
+/// `InvalidData` I/O errors so socket readers treat a corrupt peer the
+/// same as a broken connection.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Frame> {
+    let mut header = [0u8; 5];
+    r.read_exact(&mut header)?;
+    let tag = header[0];
+    let len = u32::from_le_bytes([header[1], header[2], header[3], header[4]]);
+    if len > MAX_FRAME_BODY {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame body length {len} exceeds {MAX_FRAME_BODY}"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    decode_body(tag, &body).map_err(|e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let buf = encode_frame(&f);
+        assert_eq!(decode_frame(&buf).unwrap(), f, "roundtrip {}", f.kind());
+        // the io path must agree with the buffer path
+        let mut sink = Vec::new();
+        write_frame(&mut sink, &f).unwrap();
+        assert_eq!(sink, buf);
+        let mut cur = std::io::Cursor::new(&buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), f);
+    }
+
+    #[test]
+    fn all_frame_kinds_roundtrip() {
+        roundtrip(Frame::Hello { agent: 3, digest: 0xDEAD_BEEF, dim: 44 });
+        roundtrip(Frame::Welcome { round: 17 });
+        roundtrip(Frame::Round { zdelta: None });
+        roundtrip(Frame::Round {
+            zdelta: Some(WireMessage::dense(&[1.0f32, -2.5, 3.25])),
+        });
+        roundtrip(Frame::Reset { z: vec![0.5, -0.25, 8.0, 0.0] });
+        roundtrip(Frame::Stop);
+        roundtrip(Frame::Reply {
+            agent: 9,
+            events: 41,
+            sent_bytes: 12345,
+            delta: None,
+        });
+        roundtrip(Frame::Reply {
+            agent: 0,
+            events: 0,
+            sent_bytes: 0,
+            delta: Some(WireMessage::dense(&[42.0f32])),
+        });
+    }
+
+    #[test]
+    fn round_payload_bytes_match_wire_message_codec() {
+        // the framing must embed the WireMessage codec verbatim: body =
+        // flag byte + exact encode() bytes
+        let msg = WireMessage::dense(&[1.0f32, 2.0, 3.0]);
+        let buf = encode_frame(&Frame::Round { zdelta: Some(msg.clone()) });
+        assert_eq!(&buf[6..], &msg.encode()[..]);
+        assert_eq!(buf[5], 1); // payload flag
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected() {
+        assert!(decode_frame(&[]).is_err());
+        assert!(decode_frame(&[99, 0, 0, 0, 0]).is_err()); // unknown tag
+        let mut buf = encode_frame(&Frame::Welcome { round: 1 });
+        buf.push(0); // trailing garbage: length prefix now disagrees
+        assert!(decode_frame(&buf).is_err());
+        // trailing bytes inside the declared body
+        let mut long = encode_frame(&Frame::Stop);
+        long[1] = 1; // declare a 1-byte body
+        long.push(7);
+        assert!(decode_frame(&long).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocating() {
+        let hdr = [TAG_STOP, 0xFF, 0xFF, 0xFF, 0xFF];
+        let mut cur = std::io::Cursor::new(&hdr[..]);
+        let err = read_frame(&mut cur).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+}

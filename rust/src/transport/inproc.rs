@@ -1,0 +1,186 @@
+//! The original deployment shape: one OS thread per agent, frames over
+//! `std::sync::mpsc`.
+//!
+//! This is the old `coordinator` runtime rehosted behind
+//! [`Transport`]: the thread names, channel topology, per-link
+//! [`LossyLink`] draws and byte books are unchanged, so trajectories
+//! are bit-identical to the pre-trait code (pinned by the coordinator
+//! tests and the TCP-vs-in-proc loopback test).  [`Mesh`] — the thread
+//! pool + channel fabric without any link model — is shared with
+//! [`crate::transport::SimLink`], which swaps the Bernoulli links for
+//! the simulator's latency/bandwidth/burst-loss cost model.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::coordinator::{AgentEndpoint, EndpointStep};
+use crate::rng::Pcg64;
+use crate::wire::{LinkStats, WireMessage, WireStats};
+
+use super::frame::Frame;
+use super::loss::LossyLink;
+use super::{Transport, TransportEvent, UplinkBooks};
+
+/// Thread-per-endpoint fabric: spawns one named worker per
+/// [`AgentEndpoint`] and moves raw frames over mpsc channels.  No link
+/// model lives here — the owning transport decides what a send costs.
+pub(crate) struct Mesh {
+    tx: Vec<Sender<Frame>>,
+    rx: Receiver<(usize, Frame)>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl Mesh {
+    pub(crate) fn spawn(endpoints: Vec<AgentEndpoint>) -> Mesh {
+        let n = endpoints.len();
+        let (from_tx, from_rx) = channel::<(usize, Frame)>();
+        let mut tx = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        for mut ep in endpoints {
+            let i = ep.id();
+            let (to_tx, to_rx) = channel::<Frame>();
+            let to_leader = from_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("dela-agent-{i}"))
+                .spawn(move || {
+                    while let Ok(frame) = to_rx.recv() {
+                        match ep.handle(frame) {
+                            EndpointStep::Reply(r) => {
+                                // lint:allow(unaccounted-send): uplink bytes were charged by the endpoint's LossyLink when the payload was produced; this mpsc send is the thread-boundary transfer
+                                if to_leader.send((i, r)).is_err() {
+                                    break;
+                                }
+                            }
+                            EndpointStep::Idle => {}
+                            EndpointStep::Done(r) => {
+                                // lint:allow(unaccounted-send): final stats report carries no payload; all wire bytes were charged when transmitted
+                                let _ = to_leader.send((i, r));
+                                break;
+                            }
+                        }
+                    }
+                })
+                // lint:allow(panic-in-library): thread spawn fails only on OS resource exhaustion; no meaningful recovery exists here
+                .expect("spawn agent thread");
+            tx.push(to_tx);
+            joins.push(join);
+        }
+        Mesh { tx, rx: from_rx, joins }
+    }
+
+    pub(crate) fn n(&self) -> usize {
+        self.tx.len()
+    }
+
+    pub(crate) fn send(&self, to: usize, frame: Frame) -> anyhow::Result<()> {
+        // lint:allow(unaccounted-send): the owning transport charged the wire books before handing the frame to the fabric; this mpsc send is the thread-boundary transfer, not a wire hop
+        let sent = self.tx[to].send(frame);
+        sent.map_err(|_| anyhow::anyhow!("agent {to} channel closed"))
+    }
+
+    pub(crate) fn recv(&self) -> anyhow::Result<(usize, Frame)> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("all agent threads disconnected"))
+    }
+
+    pub(crate) fn try_recv(&self) -> Option<(usize, Frame)> {
+        self.rx.try_recv().ok()
+    }
+
+    pub(crate) fn join_all(&mut self) {
+        // closing the command channels unblocks any thread still in recv
+        self.tx.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// In-process transport: each [`AgentEndpoint`] runs on its own thread,
+/// the leader talks to it over unbounded mpsc channels, and each
+/// downlink is an i.i.d. [`LossyLink`] — exactly the pre-trait
+/// `Coordinator` runtime.
+pub struct InProc {
+    mesh: Mesh,
+    links: Vec<LossyLink>,
+    uplink: UplinkBooks,
+}
+
+impl InProc {
+    /// Spawn one named worker thread per endpoint.  `drop_down` is the
+    /// i.i.d. downlink loss probability (the endpoints own their uplink
+    /// loss processes).
+    pub fn spawn(endpoints: Vec<AgentEndpoint>, drop_down: f64) -> InProc {
+        let n = endpoints.len();
+        InProc {
+            mesh: Mesh::spawn(endpoints),
+            links: (0..n).map(|_| LossyLink::new(drop_down)).collect(),
+            uplink: UplinkBooks::new(n),
+        }
+    }
+}
+
+impl Transport for InProc {
+    fn n_agents(&self) -> usize {
+        self.mesh.n()
+    }
+
+    fn send(
+        &mut self,
+        to: usize,
+        frame: Frame,
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<()> {
+        let frame = match frame {
+            Frame::Round { zdelta: Some(msg) } => {
+                let bytes = msg.wire_bytes() as u64;
+                Frame::Round {
+                    zdelta: self.links[to].transmit_bytes(msg, bytes, rng),
+                }
+            }
+            Frame::Reset { z } => {
+                let sync = WireMessage::<f32>::dense_bytes(z.len()) as u64;
+                self.links[to].stats.record_reliable(sync);
+                Frame::Reset { z }
+            }
+            other => other,
+        };
+        // lint:allow(unaccounted-send): bytes were charged on the LossyLink above; the mesh hop is the in-process delivery, not a wire hop
+        self.mesh.send(to, frame)
+    }
+
+    fn recv(&mut self) -> anyhow::Result<TransportEvent> {
+        let (from, frame) = self.mesh.recv()?;
+        let ev = TransportEvent::Frame { from, frame };
+        self.uplink.observe(&ev);
+        Ok(ev)
+    }
+
+    fn poll(&mut self) -> Option<TransportEvent> {
+        let (from, frame) = self.mesh.try_recv()?;
+        let ev = TransportEvent::Frame { from, frame };
+        self.uplink.observe(&ev);
+        Some(ev)
+    }
+
+    fn stats(&self) -> WireStats {
+        WireStats {
+            uplink: self.uplink.snapshot(),
+            downlink: self
+                .links
+                .iter()
+                .map(|l| LinkStats::from(&l.stats))
+                .collect(),
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn shutdown(&mut self) -> anyhow::Result<()> {
+        self.mesh.join_all();
+        Ok(())
+    }
+}

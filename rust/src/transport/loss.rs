@@ -1,10 +1,15 @@
-//! Lossy channel simulation — the paper's packet-drop model.
+//! Lossy-link simulation — the paper's packet-drop model.
 //!
 //! A sent delta is lost with probability `drop_rate`; the *sender does not
 //! learn about the loss* (no acknowledgements), which is exactly why the
 //! paper needs the periodic reset strategy (App. E, Fig. 10): receiver
 //! estimates drift by the accumulated `χ` disturbances until a reset
 //! re-synchronizes them.
+//!
+//! [`LossyLink`] was called `DropChannel` when it lived under
+//! [`crate::comm`]; the loss process is transport-level state, so the
+//! transport redesign moved it here.  `crate::comm` keeps a deprecated
+//! re-export shim for one PR.
 
 use crate::rng::Rng;
 
@@ -129,7 +134,7 @@ impl LossModel {
 
 /// A lossy point-to-point link.
 #[derive(Clone, Debug)]
-pub struct DropChannel {
+pub struct LossyLink {
     pub drop_rate: f64,
     /// Generalized loss process; `None` uses the i.i.d. `drop_rate`
     /// Bernoulli model (so mutating `drop_rate` keeps working and the
@@ -144,10 +149,10 @@ pub struct DropChannel {
     pub stats: ChannelStats,
 }
 
-impl DropChannel {
+impl LossyLink {
     pub fn new(drop_rate: f64) -> Self {
         assert!((0.0..=1.0).contains(&drop_rate), "drop_rate in [0,1]");
-        DropChannel {
+        LossyLink {
             drop_rate,
             loss: None,
             bad: false,
@@ -175,7 +180,7 @@ impl DropChannel {
                 pi_bad * loss_bad + (1.0 - pi_bad) * loss_good
             }
         };
-        DropChannel {
+        LossyLink {
             drop_rate,
             loss: Some(loss),
             bad: false,
@@ -186,7 +191,7 @@ impl DropChannel {
 
     /// A perfect link.
     pub fn reliable() -> Self {
-        DropChannel::new(0.0)
+        LossyLink::new(0.0)
     }
 
     /// Transmit a payload; `None` means the packet was dropped in flight.
@@ -249,7 +254,7 @@ mod tests {
 
     #[test]
     fn reliable_never_drops() {
-        let mut ch = DropChannel::reliable();
+        let mut ch = LossyLink::reliable();
         let mut rng = Pcg64::seed(0);
         for i in 0..1000 {
             assert_eq!(ch.transmit(i, &mut rng), Some(i));
@@ -260,7 +265,7 @@ mod tests {
 
     #[test]
     fn full_loss_drops_everything() {
-        let mut ch = DropChannel::new(1.0);
+        let mut ch = LossyLink::new(1.0);
         let mut rng = Pcg64::seed(1);
         for i in 0..100 {
             assert_eq!(ch.transmit(i, &mut rng), None);
@@ -270,7 +275,7 @@ mod tests {
 
     #[test]
     fn drop_rate_is_respected() {
-        let mut ch = DropChannel::new(0.3);
+        let mut ch = LossyLink::new(0.3);
         let mut rng = Pcg64::seed(2);
         for _ in 0..50_000 {
             ch.transmit((), &mut rng);
@@ -282,13 +287,13 @@ mod tests {
 
     #[test]
     fn rejects_bad_rate() {
-        let res = std::panic::catch_unwind(|| DropChannel::new(1.5));
+        let res = std::panic::catch_unwind(|| LossyLink::new(1.5));
         assert!(res.is_err());
     }
 
     #[test]
     fn byte_counters_track_sent_and_dropped() {
-        let mut ch = DropChannel::new(0.5);
+        let mut ch = LossyLink::new(0.5);
         let mut rng = Pcg64::seed(4);
         for _ in 0..10_000 {
             ch.transmit_bytes((), 100, &mut rng);
@@ -303,7 +308,7 @@ mod tests {
 
     #[test]
     fn reliable_messages_count_traffic_but_never_drop() {
-        let mut ch = DropChannel::new(1.0);
+        let mut ch = LossyLink::new(1.0);
         ch.stats.record_reliable(42);
         assert_eq!(ch.stats.sent, 1);
         assert_eq!(ch.stats.sent_bytes, 42);
@@ -314,7 +319,7 @@ mod tests {
     fn charge_sync_supersedes_same_round_drop() {
         // round: triggered packet drops, then a reset syncs the link —
         // the books must show exactly one (dense sync) message.
-        let mut ch = DropChannel::new(1.0);
+        let mut ch = LossyLink::new(1.0);
         let mut rng = Pcg64::seed(5);
         ch.mark_round();
         assert_eq!(ch.transmit_bytes((), 100, &mut rng), None);
@@ -327,7 +332,7 @@ mod tests {
 
     #[test]
     fn charge_sync_does_not_supersede_earlier_round_drop() {
-        let mut ch = DropChannel::new(1.0);
+        let mut ch = LossyLink::new(1.0);
         let mut rng = Pcg64::seed(6);
         // round 1: drop
         ch.mark_round();
@@ -345,7 +350,7 @@ mod tests {
     #[test]
     fn charge_sync_keeps_delivered_packet_on_the_books() {
         // a delivered delta followed by a reset is two real transfers
-        let mut ch = DropChannel::new(0.0);
+        let mut ch = LossyLink::new(0.0);
         let mut rng = Pcg64::seed(7);
         ch.mark_round();
         assert!(ch.transmit_bytes((), 100, &mut rng).is_some());
@@ -399,7 +404,7 @@ mod tests {
 
     #[test]
     fn gilbert_elliott_all_bad_drops_everything() {
-        let mut ch = DropChannel::with_model(LossModel::GilbertElliott {
+        let mut ch = LossyLink::with_model(LossModel::GilbertElliott {
             p_gb: 1.0,
             p_bg: 0.0,
             loss_good: 0.0,
@@ -417,7 +422,7 @@ mod tests {
 
     #[test]
     fn with_model_reports_stationary_average_rate() {
-        let ch = DropChannel::with_model(LossModel::GilbertElliott {
+        let ch = LossyLink::with_model(LossModel::GilbertElliott {
             p_gb: 0.1,
             p_bg: 0.3,
             loss_good: 0.0,
@@ -425,7 +430,7 @@ mod tests {
         });
         // pi_bad = 0.1/0.4 = 0.25; average = 0.25 * 0.8 = 0.2
         assert!((ch.drop_rate - 0.2).abs() < 1e-12, "{}", ch.drop_rate);
-        let b = DropChannel::with_model(LossModel::Bernoulli { p: 0.3 });
+        let b = LossyLink::with_model(LossModel::Bernoulli { p: 0.3 });
         assert_eq!(b.drop_rate, 0.3);
     }
 

@@ -1,0 +1,174 @@
+//! The transport seam: one trait between the ADMM protocol and the
+//! bytes that carry it.
+//!
+//! Every deployment shape moves the same [`Frame`]s and charges the
+//! same [`crate::wire::WireStats`] books; only the medium differs:
+//!
+//! * [`InProc`] — one OS thread per agent over `std::sync::mpsc`
+//!   (the original `coordinator` runtime, byte-identical and pinned);
+//! * [`SimLink`] — in-process threads with [`crate::sim::link`]'s
+//!   latency / bandwidth / burst-loss cost model on the downlink, so
+//!   the discrete-event cost model becomes just another transport;
+//! * [`Tcp`] / [`Uds`] — real sockets with length-prefixed framing
+//!   ([`frame`]), a connect/accept handshake carrying agent id + config
+//!   digest, read/write timeouts and crash recovery riding the
+//!   reset/rejoin-resync path (DESIGN.md §12).
+//!
+//! The contract that makes the implementations interchangeable:
+//! payload-bearing frames ([`Frame::Round`] with a delta) pass through
+//! the link's [`LossyLink`] — bytes charged by the payload's exact
+//! [`crate::wire::WireMessage::wire_bytes`], loss sampled from the
+//! *caller's* RNG in deterministic per-agent order ([`LossModel::None`]
+//! draws nothing, so a no-loss TCP run is bit-identical to `InProc`).
+//! [`Frame::Reset`] is a reliable dense sync charged via
+//! [`ChannelStats::record_reliable`]; handshake/stop control frames are
+//! a few framing bytes the books ignore by design (the same rule as the
+//! sim's control ticks, DESIGN.md §9).
+
+pub mod frame;
+pub mod loss;
+
+mod inproc;
+mod simlink;
+mod socket;
+
+pub use frame::{decode_frame, encode_frame, read_frame, write_frame, Frame};
+pub use inproc::InProc;
+pub use loss::{ChannelStats, LossModel, LossyLink};
+pub use simlink::SimLink;
+pub use socket::{SocketOpts, SocketTransport, Tcp};
+#[cfg(unix)]
+pub use socket::Uds;
+
+use crate::rng::Pcg64;
+use crate::wire::{LinkStats, WireStats};
+
+/// What [`Transport::recv`] / [`Transport::poll`] deliver to the
+/// service loop.
+#[derive(Debug)]
+pub enum TransportEvent {
+    /// A frame arrived from agent `from`.
+    Frame { from: usize, frame: Frame },
+    /// Agent `from` completed a (re)connect handshake after the initial
+    /// cohort was formed — the coordinator answers with a
+    /// [`Frame::Reset`] resync.
+    Joined { from: usize },
+    /// Agent `from`'s link died (EOF, I/O error, write failure).  Its
+    /// round reply will never arrive; the coordinator proceeds without
+    /// it, exactly as it does for a dropped packet.
+    Left { from: usize },
+    /// Nothing arrived within the transport's read timeout.  The
+    /// coordinator closes the gather; still-pending agents stay live
+    /// and their late replies are discarded as stale.
+    Timeout,
+}
+
+/// An object-safe leader-side message transport for one agent cohort.
+///
+/// Implementations own the per-agent downlink [`LossyLink`]s (loss
+/// process + byte books) and surface uplink books observed from
+/// [`Frame::Reply`] counters; the protocol state (triggers, error
+/// feedback, `z`) stays with [`crate::coordinator::Coordinator`].
+///
+/// ### Send semantics
+///
+/// * `Frame::Round { zdelta: Some(_) }` — charged by the payload's
+///   exact wire size, then passed through the link's loss process
+///   drawing from `rng` (a no-loss link draws nothing).  A lost payload
+///   is delivered as `Round { zdelta: None }`: the agent still runs the
+///   round, it just receives no update — the paper's drop semantics.
+/// * `Frame::Reset { .. }` — reliable, charged as one dense sync
+///   message via [`ChannelStats::record_reliable`].
+/// * Control frames (`Welcome`, `Stop`) — reliable, not charged.
+/// * Sends to a dead or unknown link are silently dropped; link death
+///   is reported once via [`TransportEvent::Left`].
+pub trait Transport {
+    /// Cohort size (fixed at construction; crashed agents keep their
+    /// slot and may rejoin into it).
+    fn n_agents(&self) -> usize;
+
+    /// Hook called by the coordinator at the top of each round (e.g.
+    /// [`SimLink`] folds the previous round's slowest link delay into
+    /// its virtual clock).  Default: no-op.
+    fn begin_round(&mut self) {}
+
+    /// Deliver `frame` to agent `to` under the semantics above.
+    /// Errors are infrastructure failures (closed in-proc channel),
+    /// not per-link conditions.
+    fn send(
+        &mut self,
+        to: usize,
+        frame: Frame,
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<()>;
+
+    /// Send a frame to every agent, in agent order (the deterministic
+    /// order every loss draw depends on).
+    fn broadcast(
+        &mut self,
+        frame: &Frame,
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<()> {
+        for i in 0..self.n_agents() {
+            // lint:allow(unaccounted-send): Transport::send charges the wire books per frame kind
+            self.send(i, frame.clone(), rng)?;
+        }
+        Ok(())
+    }
+
+    /// Block for the next event (frame, membership change, or
+    /// [`TransportEvent::Timeout`] on transports with a read timeout).
+    fn recv(&mut self) -> anyhow::Result<TransportEvent>;
+
+    /// Non-blocking variant of [`Self::recv`]; `None` if nothing is
+    /// queued.  The coordinator drains this between rounds so rejoins
+    /// are not stuck waiting for the next gather.
+    fn poll(&mut self) -> Option<TransportEvent>;
+
+    /// Per-link byte books: downlink as charged by this transport's
+    /// links, uplink as observed from the agents' cumulative
+    /// [`Frame::Reply`] counters (uplink drop accounting lives with the
+    /// sending endpoint).
+    fn stats(&self) -> WireStats;
+
+    /// Human-readable transport kind (for logs and bench labels).
+    fn label(&self) -> &'static str;
+
+    /// Tear down threads/sockets.  Called once, after the coordinator
+    /// has drained final replies.
+    fn shutdown(&mut self) -> anyhow::Result<()>;
+}
+
+/// Uplink books as observable from the leader: cumulative bytes come
+/// from each agent's [`Frame::Reply`] counters (charged sender-side by
+/// its [`LossyLink`]), message count from payload-bearing replies seen.
+#[derive(Clone, Debug)]
+pub(crate) struct UplinkBooks {
+    links: Vec<LinkStats>,
+}
+
+impl UplinkBooks {
+    pub(crate) fn new(n: usize) -> UplinkBooks {
+        UplinkBooks { links: vec![LinkStats::default(); n] }
+    }
+
+    /// Fold one received frame into the books.
+    pub(crate) fn observe(&mut self, ev: &TransportEvent) {
+        if let TransportEvent::Frame {
+            frame: Frame::Reply { agent, sent_bytes, delta, .. },
+            ..
+        } = ev
+        {
+            if let Some(l) = self.links.get_mut(*agent as usize) {
+                if delta.is_some() {
+                    l.msgs += 1;
+                }
+                l.bytes = *sent_bytes;
+            }
+        }
+    }
+
+    pub(crate) fn snapshot(&self) -> Vec<LinkStats> {
+        self.links.clone()
+    }
+}

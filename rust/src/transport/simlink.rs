@@ -1,0 +1,162 @@
+//! The discrete-event cost model as a transport: in-process agent
+//! threads behind [`crate::sim::link::Link`]s.
+//!
+//! `SimLink` reuses the [`InProc`] thread fabric but routes every
+//! downlink payload through the simulator's per-link latency /
+//! bandwidth / burst-loss model, advancing a virtual clock by the
+//! slowest link each round (the synchronous round barrier waits for
+//! the last delivery).  Uplink replies return at the next barrier —
+//! downlink-only delay modeling is the v1 adaptation; the full
+//! per-direction async cadence stays in [`crate::sim::engine`].
+//!
+//! Under [`crate::sim::link::LinkModel::ideal`] links nothing is drawn
+//! from the RNG and no virtual time passes, so an ideal `SimLink` run
+//! is bit-identical to [`InProc`] (pinned by a coordinator test).
+
+use crate::rng::Pcg64;
+use crate::sim::event::{ticks, SimTime};
+use crate::sim::link::{Link, LinkModel};
+use crate::wire::{LinkStats, WireMessage, WireStats};
+
+use crate::coordinator::AgentEndpoint;
+
+use super::frame::Frame;
+use super::inproc::Mesh;
+use super::{Transport, TransportEvent, UplinkBooks};
+
+/// In-process transport with the simulator's link cost model on each
+/// downlink.
+pub struct SimLink {
+    mesh: Mesh,
+    links: Vec<Link>,
+    uplink: UplinkBooks,
+    vtime: SimTime,
+    round_max: SimTime,
+}
+
+impl SimLink {
+    /// One thread per endpoint, every downlink sharing `model`.
+    pub fn spawn(endpoints: Vec<AgentEndpoint>, model: LinkModel) -> SimLink {
+        let n = endpoints.len();
+        SimLink::spawn_with(endpoints, vec![model; n])
+    }
+
+    /// Heterogeneous links: `models[i]` is agent i's downlink.
+    pub fn spawn_with(
+        endpoints: Vec<AgentEndpoint>,
+        models: Vec<LinkModel>,
+    ) -> SimLink {
+        assert_eq!(endpoints.len(), models.len());
+        let n = endpoints.len();
+        SimLink {
+            mesh: Mesh::spawn(endpoints),
+            links: models.into_iter().map(Link::new).collect(),
+            uplink: UplinkBooks::new(n),
+            vtime: 0,
+            round_max: 0,
+        }
+    }
+
+    /// Virtual clock in integer ticks (µs).
+    pub fn vtime_ticks(&self) -> SimTime {
+        self.vtime
+    }
+
+    /// Virtual clock in seconds.
+    pub fn vtime_secs(&self) -> f64 {
+        self.vtime as f64 / ticks(1.0) as f64
+    }
+}
+
+impl Transport for SimLink {
+    fn n_agents(&self) -> usize {
+        self.mesh.n()
+    }
+
+    /// Close the previous round's barrier: the slowest downlink delay
+    /// becomes elapsed virtual time.
+    fn begin_round(&mut self) {
+        self.vtime += self.round_max;
+        self.round_max = 0;
+    }
+
+    fn send(
+        &mut self,
+        to: usize,
+        frame: Frame,
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<()> {
+        let frame = match frame {
+            Frame::Round { zdelta: Some(msg) } => {
+                let bytes = msg.wire_bytes() as u64;
+                match self.links[to].transmit(bytes, rng) {
+                    Some(delay) => {
+                        self.round_max = self.round_max.max(delay);
+                        Frame::Round { zdelta: Some(msg) }
+                    }
+                    // lost in flight: the agent still gets its round
+                    // tick (pure control latency, no bytes)
+                    None => {
+                        let d = self.links[to].control_delay(rng);
+                        self.round_max = self.round_max.max(d);
+                        Frame::Round { zdelta: None }
+                    }
+                }
+            }
+            Frame::Round { zdelta: None } => {
+                let d = self.links[to].control_delay(rng);
+                self.round_max = self.round_max.max(d);
+                Frame::Round { zdelta: None }
+            }
+            Frame::Reset { z } => {
+                let sync = WireMessage::<f32>::dense_bytes(z.len()) as u64;
+                // same accounting rule as the in-proc coordinator: a
+                // reset is reliable charged traffic (no supersession —
+                // the leader's reset cadence is round-based, not
+                // offer-based)
+                self.links[to].stats.record_reliable(sync);
+                Frame::Reset { z }
+            }
+            other => other,
+        };
+        // lint:allow(unaccounted-send): bytes were charged on the sim link above; the mesh hop is the in-process delivery, not a wire hop
+        self.mesh.send(to, frame)
+    }
+
+    fn recv(&mut self) -> anyhow::Result<TransportEvent> {
+        let (from, frame) = self.mesh.recv()?;
+        let ev = TransportEvent::Frame { from, frame };
+        self.uplink.observe(&ev);
+        Ok(ev)
+    }
+
+    fn poll(&mut self) -> Option<TransportEvent> {
+        let (from, frame) = self.mesh.try_recv()?;
+        let ev = TransportEvent::Frame { from, frame };
+        self.uplink.observe(&ev);
+        Some(ev)
+    }
+
+    fn stats(&self) -> WireStats {
+        WireStats {
+            uplink: self.uplink.snapshot(),
+            downlink: self
+                .links
+                .iter()
+                .map(|l| LinkStats::from(&l.stats))
+                .collect(),
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        "simlink"
+    }
+
+    fn shutdown(&mut self) -> anyhow::Result<()> {
+        // account for the final round's deliveries before the books close
+        self.vtime += self.round_max;
+        self.round_max = 0;
+        self.mesh.join_all();
+        Ok(())
+    }
+}

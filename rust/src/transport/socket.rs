@@ -1,0 +1,609 @@
+//! Real sockets: the leader side of the TCP / Unix-domain transport.
+//!
+//! Wire format is [`super::frame`]'s length-prefixed codec.  A
+//! connecting agent opens with [`Frame::Hello`] carrying its agent id,
+//! its [`crate::config::RunConfig::digest`] and its model dimension;
+//! the acceptor validates all three against the serving run (plus
+//! slot-not-taken) and answers [`Frame::Welcome`] — a mismatched or
+//! duplicate agent is rejected at accept time instead of silently
+//! diverging.  After the initial cohort forms, any further successful
+//! handshake surfaces as [`TransportEvent::Joined`], which the
+//! coordinator answers with a `Reset` resync (crash recovery rides the
+//! existing reset path).
+//!
+//! Threading: one acceptor thread polls the listener; each accepted
+//! link gets a reader thread that turns frames (or EOF/IO errors) into
+//! [`TransportEvent`]s on a single mpsc queue.  Writes happen on the
+//! caller's thread through a cloned stream handle.  Per-link byte
+//! books use the same [`LossyLink`] charging as [`super::InProc`] —
+//! with [`LossyLink::reliable`] links that draw nothing, a no-loss TCP
+//! run replays the in-proc RNG stream exactly (the bitwise loopback
+//! test).
+
+use std::collections::VecDeque;
+use std::io;
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::rng::Pcg64;
+use crate::wire::{LinkStats, WireMessage, WireStats};
+
+use super::frame::{read_frame, write_frame, Frame};
+use super::loss::LossyLink;
+use super::{Transport, TransportEvent, UplinkBooks};
+
+/// Socket-level knobs shared by TCP and UDS.
+#[derive(Clone, Debug)]
+pub struct SocketOpts {
+    /// Leader-side gather timeout: how long [`Transport::recv`] blocks
+    /// before reporting [`TransportEvent::Timeout`].
+    pub read_timeout_ms: u64,
+    /// Per-connection handshake deadline (Hello must arrive within it).
+    pub handshake_timeout_ms: u64,
+    /// Write timeout on every established link.
+    pub write_timeout_ms: u64,
+    /// Cohort-formation patience: [`SocketTransport::await_cohort`]
+    /// fails if no new agent arrives for this long.
+    pub accept_wait_ms: u64,
+}
+
+impl Default for SocketOpts {
+    fn default() -> Self {
+        SocketOpts {
+            read_timeout_ms: 10_000,
+            handshake_timeout_ms: 5_000,
+            write_timeout_ms: 5_000,
+            accept_wait_ms: 30_000,
+        }
+    }
+}
+
+/// A duplex byte stream the socket transport can run over.
+pub trait NetStream: io::Read + io::Write + Send + Sized + 'static {
+    fn try_clone_stream(&self) -> io::Result<Self>;
+    /// Force blocking mode (accepted sockets may inherit the listener's
+    /// non-blocking flag on some platforms).
+    fn set_blocking(&self) -> io::Result<()>;
+    fn set_stream_timeouts(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> io::Result<()>;
+    fn shutdown_both(&self) -> io::Result<()>;
+}
+
+impl NetStream for TcpStream {
+    fn try_clone_stream(&self) -> io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn set_blocking(&self) -> io::Result<()> {
+        self.set_nonblocking(false)?;
+        // small frames, synchronous rounds: Nagle only adds latency
+        self.set_nodelay(true)
+    }
+
+    fn set_stream_timeouts(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> io::Result<()> {
+        self.set_read_timeout(read)?;
+        self.set_write_timeout(write)
+    }
+
+    fn shutdown_both(&self) -> io::Result<()> {
+        self.shutdown(std::net::Shutdown::Both)
+    }
+}
+
+#[cfg(unix)]
+impl NetStream for UnixStream {
+    fn try_clone_stream(&self) -> io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn set_blocking(&self) -> io::Result<()> {
+        self.set_nonblocking(false)
+    }
+
+    fn set_stream_timeouts(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> io::Result<()> {
+        self.set_read_timeout(read)?;
+        self.set_write_timeout(write)
+    }
+
+    fn shutdown_both(&self) -> io::Result<()> {
+        self.shutdown(std::net::Shutdown::Both)
+    }
+}
+
+/// A listener that yields [`NetStream`]s.
+pub trait NetListener: Send + Sized + 'static {
+    type Stream: NetStream;
+    fn bind_to(addr: &str) -> io::Result<Self>;
+    fn accept_stream(&self) -> io::Result<Self::Stream>;
+    fn set_listener_nonblocking(&self, v: bool) -> io::Result<()>;
+    /// The actually-bound address, when meaningful (`127.0.0.1:0`
+    /// resolves to a real ephemeral port).
+    fn bound_label(&self) -> Option<String>;
+    fn kind_label() -> &'static str;
+}
+
+impl NetListener for TcpListener {
+    type Stream = TcpStream;
+
+    fn bind_to(addr: &str) -> io::Result<Self> {
+        TcpListener::bind(addr)
+    }
+
+    fn accept_stream(&self) -> io::Result<TcpStream> {
+        self.accept().map(|(s, _)| s)
+    }
+
+    fn set_listener_nonblocking(&self, v: bool) -> io::Result<()> {
+        self.set_nonblocking(v)
+    }
+
+    fn bound_label(&self) -> Option<String> {
+        self.local_addr().ok().map(|a| a.to_string())
+    }
+
+    fn kind_label() -> &'static str {
+        "tcp"
+    }
+}
+
+#[cfg(unix)]
+impl NetListener for UnixListener {
+    type Stream = UnixStream;
+
+    fn bind_to(addr: &str) -> io::Result<Self> {
+        // a stale socket file from a crashed leader would make rebinding
+        // fail forever; replacing it is the standard UDS idiom
+        let _ = std::fs::remove_file(addr);
+        UnixListener::bind(addr)
+    }
+
+    fn accept_stream(&self) -> io::Result<UnixStream> {
+        self.accept().map(|(s, _)| s)
+    }
+
+    fn set_listener_nonblocking(&self, v: bool) -> io::Result<()> {
+        self.set_nonblocking(v)
+    }
+
+    fn bound_label(&self) -> Option<String> {
+        None
+    }
+
+    fn kind_label() -> &'static str {
+        "uds"
+    }
+}
+
+/// TCP instantiation of the socket transport.
+pub type Tcp = SocketTransport<TcpListener>;
+
+/// Unix-domain-socket instantiation of the socket transport.
+#[cfg(unix)]
+pub type Uds = SocketTransport<UnixListener>;
+
+/// Leader-side state shared with the acceptor and reader threads.
+struct Shared {
+    connected: Vec<AtomicBool>,
+    stop: AtomicBool,
+    /// Current round index, stamped into `Welcome` so a rejoining agent
+    /// can log where it re-entered.
+    round: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// The leader end of a process-per-agent cohort over real sockets.
+pub struct SocketTransport<L: NetListener> {
+    n: usize,
+    writers: Vec<Option<L::Stream>>,
+    links: Vec<LossyLink>,
+    uplink: UplinkBooks,
+    pending: VecDeque<TransportEvent>,
+    ctl_rx: Receiver<(usize, L::Stream)>,
+    ev_rx: Receiver<TransportEvent>,
+    ev_tx: Sender<TransportEvent>,
+    shared: Arc<Shared>,
+    addr: String,
+    opts: SocketOpts,
+    acceptor: Option<JoinHandle<()>>,
+    cleanup_path: Option<PathBuf>,
+}
+
+impl<L: NetListener> SocketTransport<L> {
+    /// Bind and start accepting.  Returns immediately (so callers can
+    /// learn an ephemeral port via [`Self::local_addr`] before any
+    /// agent exists); call [`Self::await_cohort`] to block until all
+    /// `n_agents` slots completed the handshake.
+    pub fn bind(
+        addr: &str,
+        n_agents: usize,
+        digest: u64,
+        dim: usize,
+        opts: SocketOpts,
+    ) -> anyhow::Result<SocketTransport<L>> {
+        assert!(n_agents > 0, "cohort must have at least one agent");
+        let listener = L::bind_to(addr).map_err(|e| {
+            anyhow::anyhow!("bind {} listener on {addr}: {e}", L::kind_label())
+        })?;
+        let bound = listener.bound_label().unwrap_or_else(|| addr.to_string());
+        listener.set_listener_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            connected: (0..n_agents).map(|_| AtomicBool::new(false)).collect(),
+            stop: AtomicBool::new(false),
+            round: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        });
+        let (ctl_tx, ctl_rx) = channel();
+        let (ev_tx, ev_rx) = channel();
+        let acceptor = {
+            let shared = shared.clone();
+            let ev_tx = ev_tx.clone();
+            let opts = opts.clone();
+            std::thread::Builder::new()
+                .name("dela-accept".into())
+                .spawn(move || {
+                    acceptor_loop::<L>(
+                        listener, n_agents, digest, dim as u32, shared,
+                        ctl_tx, ev_tx, opts,
+                    )
+                })
+                // lint:allow(panic-in-library): thread spawn fails only on OS resource exhaustion; no meaningful recovery exists here
+                .expect("spawn acceptor thread")
+        };
+        let cleanup_path = if L::kind_label() == "uds" {
+            Some(PathBuf::from(addr))
+        } else {
+            None
+        };
+        Ok(SocketTransport {
+            n: n_agents,
+            writers: (0..n_agents).map(|_| None).collect(),
+            links: (0..n_agents).map(|_| LossyLink::reliable()).collect(),
+            uplink: UplinkBooks::new(n_agents),
+            pending: VecDeque::new(),
+            ctl_rx,
+            ev_rx,
+            ev_tx,
+            shared,
+            addr: bound,
+            opts,
+            acceptor: Some(acceptor),
+            cleanup_path,
+        })
+    }
+
+    /// The bound address (for TCP, the resolved ephemeral port).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Handshakes refused so far (bad digest, bad id, taken slot, …).
+    pub fn rejected_handshakes(&self) -> u64 {
+        self.shared.rejected.load(Ordering::SeqCst)
+    }
+
+    /// Agents currently holding a live connection.
+    pub fn connected_count(&self) -> usize {
+        self.shared
+            .connected
+            .iter()
+            .filter(|c| c.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Block until every slot has completed the handshake.  Joined /
+    /// Left churn during formation is absorbed (the cohort is the
+    /// starting state, not a rejoin); fails if no progress happens for
+    /// `accept_wait_ms`.
+    pub fn await_cohort(&mut self) -> anyhow::Result<()> {
+        let patience = Duration::from_millis(self.opts.accept_wait_ms);
+        loop {
+            self.drain_ctl();
+            let have = (0..self.n)
+                .filter(|&i| {
+                    self.writers[i].is_some()
+                        && self.shared.connected[i].load(Ordering::SeqCst)
+                })
+                .count();
+            if have == self.n {
+                return Ok(());
+            }
+            match self.ev_rx.recv_timeout(patience) {
+                Ok(TransportEvent::Joined { .. })
+                | Ok(TransportEvent::Left { .. }) => {}
+                Ok(ev) => self.pending.push_back(ev),
+                Err(RecvTimeoutError::Timeout) => anyhow::bail!(
+                    "cohort formation timed out ({have}/{} agents connected \
+                     on {})",
+                    self.n,
+                    self.addr
+                ),
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("acceptor thread died during formation")
+                }
+            }
+        }
+    }
+
+    /// Install any writer handed over by the acceptor.  Must run before
+    /// a `Joined` event is surfaced, so the resync `Reset` has a link
+    /// to go out on.
+    fn drain_ctl(&mut self) {
+        while let Ok((agent, w)) = self.ctl_rx.try_recv() {
+            self.writers[agent] = Some(w);
+        }
+    }
+
+    fn deliver(&mut self, ev: TransportEvent) -> TransportEvent {
+        self.uplink.observe(&ev);
+        ev
+    }
+}
+
+impl<L: NetListener> Transport for SocketTransport<L> {
+    fn n_agents(&self) -> usize {
+        self.n
+    }
+
+    fn begin_round(&mut self) {
+        self.shared.round.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn send(
+        &mut self,
+        to: usize,
+        frame: Frame,
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<()> {
+        self.drain_ctl();
+        anyhow::ensure!(to < self.n, "agent index {to} out of range");
+        if self.writers[to].is_none() {
+            // dead link: drop silently, death was/will be surfaced once
+            return Ok(());
+        }
+        let frame = match frame {
+            Frame::Round { zdelta: Some(msg) } => {
+                let bytes = msg.wire_bytes() as u64;
+                // the link is reliable (TCP/UDS) so nothing is drawn from
+                // `rng`, but the charge goes through the same LossyLink
+                // path as every other transport — the books cannot be
+                // bypassed
+                Frame::Round {
+                    zdelta: self.links[to].transmit_bytes(msg, bytes, rng),
+                }
+            }
+            Frame::Reset { z } => {
+                let sync = WireMessage::<f32>::dense_bytes(z.len()) as u64;
+                self.links[to].stats.record_reliable(sync);
+                Frame::Reset { z }
+            }
+            other => other,
+        };
+        let Some(w) = self.writers[to].as_mut() else {
+            return Ok(());
+        };
+        if write_frame(w, &frame).is_err() {
+            self.writers[to] = None;
+            self.shared.connected[to].store(false, Ordering::SeqCst);
+            // lint:allow(unaccounted-send): link-death notification on the in-process event queue; nothing crosses the modelled wire
+            let _ = self.ev_tx.send(TransportEvent::Left { from: to });
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> anyhow::Result<TransportEvent> {
+        self.drain_ctl();
+        if let Some(ev) = self.pending.pop_front() {
+            return Ok(self.deliver(ev));
+        }
+        let patience = Duration::from_millis(self.opts.read_timeout_ms);
+        match self.ev_rx.recv_timeout(patience) {
+            Ok(ev) => {
+                // a Joined's writer handover precedes its event
+                self.drain_ctl();
+                Ok(self.deliver(ev))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(TransportEvent::Timeout),
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("socket transport event queue closed")
+            }
+        }
+    }
+
+    fn poll(&mut self) -> Option<TransportEvent> {
+        self.drain_ctl();
+        if let Some(ev) = self.pending.pop_front() {
+            return Some(self.deliver(ev));
+        }
+        match self.ev_rx.try_recv() {
+            Ok(ev) => {
+                self.drain_ctl();
+                Some(self.deliver(ev))
+            }
+            Err(_) => None,
+        }
+    }
+
+    fn stats(&self) -> WireStats {
+        WireStats {
+            uplink: self.uplink.snapshot(),
+            downlink: self
+                .links
+                .iter()
+                .map(|l| LinkStats::from(&l.stats))
+                .collect(),
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        L::kind_label()
+    }
+
+    fn shutdown(&mut self) -> anyhow::Result<()> {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for w in self.writers.iter_mut() {
+            if let Some(s) = w.take() {
+                let _ = s.shutdown_both();
+            }
+        }
+        if let Some(j) = self.acceptor.take() {
+            let _ = j.join();
+        }
+        if let Some(p) = self.cleanup_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+        Ok(())
+    }
+}
+
+impl<L: NetListener> Drop for SocketTransport<L> {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+/// Accept loop: validate handshakes, spawn one reader thread per link,
+/// hand the write half to the transport.
+fn acceptor_loop<L: NetListener>(
+    listener: L,
+    n: usize,
+    digest: u64,
+    dim: u32,
+    shared: Arc<Shared>,
+    ctl_tx: Sender<(usize, L::Stream)>,
+    ev_tx: Sender<TransportEvent>,
+    opts: SocketOpts,
+) {
+    // rejection reasons are counted, not logged (library code)
+    let reject = |_why: &str| {
+        shared.rejected.fetch_add(1, Ordering::SeqCst);
+    };
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match listener.accept_stream() {
+            Ok(s) => s,
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+            Err(_) => {
+                // transient accept failure (e.g. aborted connection)
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+        };
+        if stream.set_blocking().is_err() {
+            continue;
+        }
+        if stream
+            .set_stream_timeouts(
+                Some(Duration::from_millis(opts.handshake_timeout_ms)),
+                Some(Duration::from_millis(opts.write_timeout_ms)),
+            )
+            .is_err()
+        {
+            continue;
+        }
+        let mut reader = stream;
+        let (agent, their_digest, their_dim) = match read_frame(&mut reader) {
+            Ok(Frame::Hello { agent, digest, dim }) => {
+                (agent as usize, digest, dim)
+            }
+            _ => {
+                reject("no Hello within handshake timeout");
+                continue;
+            }
+        };
+        if agent >= n {
+            reject("agent id out of range");
+            continue;
+        }
+        if their_digest != digest || their_dim != dim {
+            reject("config digest / dimension mismatch");
+            continue;
+        }
+        if shared.connected[agent].swap(true, Ordering::SeqCst) {
+            reject("slot already connected");
+            continue;
+        }
+        let ok = (|| -> io::Result<L::Stream> {
+            let mut writer = reader.try_clone_stream()?;
+            let round = shared.round.load(Ordering::SeqCst);
+            write_frame(&mut writer, &Frame::Welcome { round })?;
+            // the reader side blocks without deadline: silence between
+            // rounds is normal; death is detected as EOF / reset
+            reader.set_stream_timeouts(
+                None,
+                Some(Duration::from_millis(opts.write_timeout_ms)),
+            )?;
+            Ok(writer)
+        })();
+        let writer = match ok {
+            Ok(w) => w,
+            Err(_) => {
+                shared.connected[agent].store(false, Ordering::SeqCst);
+                reject("handshake write failed");
+                continue;
+            }
+        };
+        let reader_ev = ev_tx.clone();
+        let reader_shared = shared.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("dela-link-{agent}"))
+            .spawn(move || {
+                let mut reader = reader;
+                loop {
+                    match read_frame(&mut reader) {
+                        Ok(frame) => {
+                            let ev =
+                                TransportEvent::Frame { from: agent, frame };
+                            // lint:allow(unaccounted-send): handing a received frame to the in-process event queue; its wire bytes were charged sender-side and reported via Reply counters
+                            if reader_ev.send(ev).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => {
+                            reader_shared.connected[agent]
+                                .store(false, Ordering::SeqCst);
+                            let ev = TransportEvent::Left { from: agent };
+                            // lint:allow(unaccounted-send): link-death notification on the in-process event queue; nothing crosses the modelled wire
+                            let _ = reader_ev.send(ev);
+                            return;
+                        }
+                    }
+                }
+            });
+        if spawned.is_err() {
+            shared.connected[agent].store(false, Ordering::SeqCst);
+            reject("reader thread spawn failed");
+            continue;
+        }
+        // writer handover MUST precede the Joined event (recv/poll drain
+        // the control queue before surfacing events)
+        // lint:allow(unaccounted-send): control-plane handover of the write half to the service loop
+        if ctl_tx.send((agent, writer)).is_err() {
+            return;
+        }
+        // lint:allow(unaccounted-send): membership notification on the in-process event queue; nothing crosses the modelled wire
+        let _ = ev_tx.send(TransportEvent::Joined { from: agent });
+    }
+}

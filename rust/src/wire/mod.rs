@@ -13,7 +13,7 @@
 //!   sizing.
 //! * [`stats`] — [`WireStats`] / [`LinkStats`] / [`ByteTally`]: uplink
 //!   and downlink bytes per agent, fed by the byte counters that
-//!   [`crate::comm::DropChannel`] charges per transmitted message.
+//!   [`crate::transport::loss::LossyLink`] charges per transmitted message.
 //!
 //! Everything composes with the existing event triggers: a trigger
 //! decides *whether* a delta is sent, the compressor decides *how many

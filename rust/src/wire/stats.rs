@@ -6,7 +6,7 @@
 //! **bytes on the wire**, per agent and per direction, as charged by the
 //! exact encoded size of each [`crate::wire::WireMessage`].
 
-use crate::comm::ChannelStats;
+use crate::transport::loss::ChannelStats;
 use crate::jsonio::Json;
 
 /// Per-link transfer totals (messages and bytes, sent and lost).

@@ -87,7 +87,25 @@ fn fixture_unaccounted_send_fires_in_restricted_module() {
         rules_of("rust/src/coordinator/fixture.rs", &src),
         vec!["unaccounted-send"]
     );
+    // transport joined the restricted set with the socket runtime
+    assert_eq!(
+        rules_of("rust/src/transport/fixture.rs", &src),
+        vec!["unaccounted-send"]
+    );
     assert!(rules_of("rust/src/solver/fixture.rs", &src).is_empty());
+}
+
+#[test]
+fn fixture_unaccounted_write_all_fires_in_transport_module() {
+    let src = fixture("unaccounted_send_write.rs");
+    assert_eq!(
+        rules_of("rust/src/transport/fixture.rs", &src),
+        vec!["unaccounted-send"]
+    );
+    // unrestricted library modules may write raw bytes freely
+    assert!(rules_of("rust/src/model/fixture.rs", &src).is_empty());
+    // ...and so may tests
+    assert!(rules_of("rust/tests/fixture.rs", &src).is_empty());
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,7 @@
+// Fixture: a raw socket write in a restricted module with no WireStats
+// charging must produce exactly one unaccounted-send finding (the
+// transport's framed writes charge via LossyLink before the bytes hit
+// the socket).
+pub fn push(w: &mut impl std::io::Write, buf: &[u8]) -> std::io::Result<()> {
+    w.write_all(buf)
+}

@@ -2,12 +2,12 @@
 //! invariants: trigger semantics, estimate consistency, Prop. 2.1 bounds,
 //! reset synchronization, partitioners, linalg and graph structure.
 
-use deluxe::comm::{delta_norm, DropChannel, Estimate, Trigger, TriggerState};
+use deluxe::comm::delta_norm;
+use deluxe::prelude::{Estimate, LossyLink, Pcg64, Rng, Trigger, TriggerState};
 use deluxe::data::partition::{dirichlet_split, single_class_split};
 use deluxe::data::synth::{generate, SynthSpec};
 use deluxe::linalg::{soft_threshold, Cholesky, Matrix};
 use deluxe::proptest::forall;
-use deluxe::rng::{Pcg64, Rng};
 use deluxe::topology::Graph;
 
 // ---------------------------------------------------------------------------
@@ -112,7 +112,7 @@ fn prop21_error_bounded_by_delta_plus_drop_accumulation() {
             let mut tx: TriggerState<f64> =
                 TriggerState::new(Trigger::vanilla(delta), vec![0.0; dim]);
             let mut rx = Estimate::new(vec![0.0; dim]);
-            let mut ch = DropChannel::new(drop);
+            let mut ch = LossyLink::new(drop);
             let mut v = vec![0.0; dim];
             let mut chi_accum = 0.0f64; // Σ|χ| since last reset
             for k in 0..100 {

@@ -1,0 +1,286 @@
+//! End-to-end socket-transport tests: a real TCP (or UDS) leader with
+//! agent sessions driven over loopback, one thread standing in for each
+//! agent process (the threads run the exact `deluxe agent` code path —
+//! [`run_tcp_agent`] — so the two-terminal deployment is what's tested).
+//!
+//! The keystone property: under no loss, a TCP cohort replays the
+//! in-proc trajectory bit-for-bit — reliable links draw nothing from
+//! the leader RNG, replies apply in agent order, and every byte is
+//! charged through the same `LossyLink` books.
+
+use std::thread;
+
+use deluxe::data::partition::single_class_split;
+use deluxe::data::synth::{generate, ClassDataset, SynthSpec};
+use deluxe::model::MlpSpec;
+use deluxe::prelude::{
+    make_endpoints, run_tcp_agent, AgentOpts, Coordinator, Pcg64, RunConfig,
+    SessionEnd, SocketOpts, Tcp, Trigger,
+};
+
+/// The shared 4-agent workload: tiny synthetic classes, single-class
+/// shards, an 8-16-4 MLP.
+fn workload(seed: u64) -> (ClassDataset, ClassDataset, MlpSpec, Vec<f32>) {
+    let mut rng = Pcg64::seed(seed);
+    let (train, test) = generate(&SynthSpec::tiny(), &mut rng);
+    let spec = MlpSpec::new(vec![8, 16, 4]);
+    let init = spec.init(&mut rng);
+    (train, test, spec, init)
+}
+
+/// Spawn one session thread per endpoint against `addr`, each running
+/// the real client driver.
+fn spawn_agents(
+    addr: &str,
+    endpoints: Vec<deluxe::prelude::AgentEndpoint>,
+    digest: u64,
+    opts_for: impl Fn(usize) -> AgentOpts,
+) -> Vec<thread::JoinHandle<SessionEnd>> {
+    endpoints
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut ep)| {
+            let addr = addr.to_string();
+            let opts = opts_for(i);
+            thread::Builder::new()
+                .name(format!("test-agent-{i}"))
+                .spawn(move || {
+                    run_tcp_agent(&addr, &mut ep, digest, &opts)
+                        .expect("agent session")
+                })
+                .expect("spawn test agent")
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_loopback_matches_inproc_bitwise() {
+    let (train, _, spec, init) = workload(31);
+    let cfg = RunConfig::default()
+        .with_steps(2)
+        .with_batch(4)
+        .with_trigger_d(Trigger::vanilla(0.05))
+        .with_trigger_z(Trigger::vanilla(0.05))
+        .with_seed(23);
+
+    // reference trajectory: the in-proc thread runtime
+    let mut a = Coordinator::spawn(
+        cfg.clone(),
+        spec.clone(),
+        single_class_split(&train, 4),
+        init.clone(),
+    );
+
+    // TCP loopback cohort on an ephemeral port
+    let digest = cfg.digest(init.len(), 4);
+    let mut tp =
+        Tcp::bind("127.0.0.1:0", 4, digest, init.len(), SocketOpts::default())
+            .expect("bind leader");
+    let addr = tp.local_addr().to_string();
+    let endpoints =
+        make_endpoints(&cfg, &spec, single_class_split(&train, 4), &init);
+    let joins = spawn_agents(&addr, endpoints, digest, |_| AgentOpts::default());
+    tp.await_cohort().expect("cohort formation");
+    let mut b = Coordinator::over(tp, cfg, spec, init);
+
+    for r in 0..10 {
+        a.round();
+        b.round();
+        assert_eq!(a.z, b.z, "z diverged from in-proc at round {r}");
+    }
+    // byte books are bit-identical too: same LossyLink charging rules on
+    // both transports, cumulative uplink counters reported by identical
+    // endpoints
+    assert_eq!(a.downlink_bytes(), b.downlink_bytes());
+    assert_eq!(a.uplink_bytes(), b.uplink_bytes());
+    let (wa, wb) = (a.wire_stats(), b.wire_stats());
+    assert_eq!(wa.uplink_bytes(), wb.uplink_bytes());
+    assert_eq!(wa.downlink_bytes(), wb.downlink_bytes());
+
+    a.shutdown();
+    b.shutdown();
+    for j in joins {
+        assert_eq!(j.join().expect("agent thread"), SessionEnd::Stopped);
+    }
+}
+
+#[test]
+fn tcp_survives_agent_crash_with_rejoin_resync() {
+    let (train, test, spec, init) = workload(37);
+    let cfg = RunConfig::default()
+        .with_steps(3)
+        .with_batch(8)
+        .with_trigger_d(Trigger::vanilla(0.05))
+        .with_trigger_z(Trigger::vanilla(0.05))
+        .with_seed(29);
+    let acc0 = spec.accuracy(&init, &test.xs, &test.labels);
+    let digest = cfg.digest(init.len(), 4);
+    let opts = SocketOpts { read_timeout_ms: 3_000, ..Default::default() };
+    let mut tp = Tcp::bind("127.0.0.1:0", 4, digest, init.len(), opts)
+        .expect("bind leader");
+    let addr = tp.local_addr().to_string();
+
+    // agent 2 silently drops its connection after serving 3 rounds — a
+    // process crash without a goodbye
+    let endpoints =
+        make_endpoints(&cfg, &spec, single_class_split(&train, 4), &init);
+    let joins = spawn_agents(&addr, endpoints, digest, |i| {
+        if i == 2 {
+            AgentOpts { crash_after_rounds: Some(3), ..Default::default() }
+        } else {
+            AgentOpts::default()
+        }
+    });
+    tp.await_cohort().expect("cohort formation");
+    let mut coord =
+        Coordinator::over(tp, cfg.clone(), spec.clone(), init.clone());
+
+    for _ in 0..5 {
+        coord.round();
+    }
+    assert!(
+        coord.live_count() < 4,
+        "agent 2's crash should have surfaced by round 5"
+    );
+
+    // a replacement process takes over shard 2: fresh endpoint state
+    // from init, resynced by the leader's reliable Reset on rejoin
+    let mut replacement =
+        make_endpoints(&cfg, &spec, single_class_split(&train, 4), &init)
+            .remove(2);
+    let addr2 = addr.clone();
+    let rejoin = thread::spawn(move || {
+        run_tcp_agent(&addr2, &mut replacement, digest, &AgentOpts::default())
+            .expect("replacement session")
+    });
+    for _ in 0..15 {
+        coord.round();
+    }
+    assert_eq!(coord.rejoin_resyncs, 1, "exactly one rejoin-resync");
+    assert_eq!(coord.live_count(), 4, "replacement restored the cohort");
+    // the resync was charged: agent 2's downlink books carry at least
+    // one reliable dense sync on top of any triggered payloads
+    let dense =
+        deluxe::wire::WireMessage::<f32>::dense_bytes(coord.z.len()) as u64;
+    assert!(
+        coord.wire_stats().downlink[2].bytes >= dense,
+        "rejoin Reset must be charged as one dense transfer"
+    );
+    // and the run still converges (the paper's drop-tolerance covers
+    // the crashed agent's missing rounds)
+    let acc = spec.accuracy(&coord.z, &test.xs, &test.labels);
+    assert!(acc > acc0, "accuracy {acc0:.3} -> {acc:.3} should improve");
+
+    coord.shutdown();
+    let mut ends: Vec<SessionEnd> =
+        joins.into_iter().map(|j| j.join().expect("agent thread")).collect();
+    ends.push(rejoin.join().expect("replacement thread"));
+    assert_eq!(
+        ends.iter().filter(|e| **e == SessionEnd::Crashed).count(),
+        1,
+        "exactly the crashed session reports Crashed"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn uds_loopback_matches_inproc_bitwise() {
+    use deluxe::coordinator::run_uds_agent;
+    use deluxe::transport::Uds;
+
+    let (train, _, spec, init) = workload(41);
+    let cfg = RunConfig::default()
+        .with_steps(2)
+        .with_batch(4)
+        .with_trigger_d(Trigger::vanilla(0.05))
+        .with_trigger_z(Trigger::vanilla(0.05))
+        .with_seed(43);
+
+    let mut a = Coordinator::spawn(
+        cfg.clone(),
+        spec.clone(),
+        single_class_split(&train, 4),
+        init.clone(),
+    );
+
+    let digest = cfg.digest(init.len(), 4);
+    let path = std::env::temp_dir()
+        .join(format!("dela_uds_e2e_{}.sock", std::process::id()));
+    let path_str = path.to_string_lossy().to_string();
+    let mut tp =
+        Uds::bind(&path_str, 4, digest, init.len(), SocketOpts::default())
+            .expect("bind uds leader");
+    let endpoints =
+        make_endpoints(&cfg, &spec, single_class_split(&train, 4), &init);
+    let joins: Vec<_> = endpoints
+        .into_iter()
+        .map(|mut ep| {
+            let p = path_str.clone();
+            thread::spawn(move || {
+                run_uds_agent(&p, &mut ep, digest, &AgentOpts::default())
+                    .expect("uds agent session")
+            })
+        })
+        .collect();
+    tp.await_cohort().expect("uds cohort formation");
+    let mut b = Coordinator::over(tp, cfg, spec, init);
+
+    for r in 0..8 {
+        a.round();
+        b.round();
+        assert_eq!(a.z, b.z, "z diverged from in-proc at round {r}");
+    }
+    assert_eq!(a.uplink_bytes(), b.uplink_bytes());
+    assert_eq!(a.downlink_bytes(), b.downlink_bytes());
+    a.shutdown();
+    b.shutdown();
+    for j in joins {
+        assert_eq!(j.join().expect("uds agent thread"), SessionEnd::Stopped);
+    }
+    assert!(!path.exists(), "leader shutdown removes the socket file");
+}
+
+#[test]
+fn handshake_rejects_wrong_digest_and_duplicate_slot() {
+    let (train, _, spec, init) = workload(47);
+    let cfg = RunConfig::default().with_seed(53);
+    let digest = cfg.digest(init.len(), 4);
+    let mut tp =
+        Tcp::bind("127.0.0.1:0", 4, digest, init.len(), SocketOpts::default())
+            .expect("bind leader");
+    let addr = tp.local_addr().to_string();
+
+    // an agent built from a different protocol config never joins the
+    // cohort: its Hello digest mismatches and the handshake is refused
+    let bad_cfg = cfg.clone().with_delta(9.0);
+    let bad_digest = bad_cfg.digest(init.len(), 4);
+    assert_ne!(digest, bad_digest, "digest must separate the configs");
+    let mut bad =
+        make_endpoints(&bad_cfg, &spec, single_class_split(&train, 4), &init)
+            .remove(0);
+    let bad_opts = AgentOpts {
+        reconnect_attempts: 0,
+        backoff_ms: 10,
+        ..Default::default()
+    };
+    let addr2 = addr.clone();
+    let rejected = thread::spawn(move || {
+        run_tcp_agent(&addr2, &mut bad, bad_digest, &bad_opts)
+    });
+    assert!(
+        rejected.join().expect("rejected thread").is_err(),
+        "mismatched digest must fail the session"
+    );
+
+    // the real cohort still forms afterwards
+    let endpoints =
+        make_endpoints(&cfg, &spec, single_class_split(&train, 4), &init);
+    let joins = spawn_agents(&addr, endpoints, digest, |_| AgentOpts::default());
+    tp.await_cohort().expect("cohort formation");
+    assert!(tp.rejected_handshakes() >= 1, "the bad hello was counted");
+    let coord = Coordinator::over(tp, cfg, spec, init);
+    coord.shutdown();
+    for j in joins {
+        assert_eq!(j.join().expect("agent thread"), SessionEnd::Stopped);
+    }
+}
