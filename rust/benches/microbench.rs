@@ -8,7 +8,9 @@
 //! consensus round at workers 1/2/4/8, with per-round µs and
 //! agents/sec derived from the median sample, plus the 4-agent
 //! coordinator round driven in-proc vs over a TCP loopback cohort
-//! (the socket runtime's per-round transport tax).
+//! (the socket runtime's per-round transport tax), plus the same
+//! in-proc round with the obs journal off vs streaming JSONL to disk
+//! (the journal tax — acceptance budget is within 5% per round).
 
 use deluxe::admm::{ConsensusAdmm, ConsensusConfig};
 use deluxe::benchlib::{black_box, Bench};
@@ -375,6 +377,76 @@ fn trajectory(path: &str) {
             let _ = j.join();
         }
     }
+
+    // journal tax: the same 4-agent in-proc round with the obs journal
+    // disabled (the default) vs streaming JSONL to a file — the delta is
+    // the event-emission + serialization + buffered-write cost per round.
+    // The acceptance budget (ISSUE 8) is journal-on within 5% of off.
+    {
+        use deluxe::config::RunConfig;
+        use deluxe::coordinator::Coordinator;
+        use deluxe::data::partition::single_class_split;
+        use deluxe::data::synth::{generate as synth_generate, SynthSpec};
+        use deluxe::obs::Obs;
+
+        let mut wrng = Pcg64::seed(5);
+        let (train, _) = synth_generate(&SynthSpec::tiny(), &mut wrng);
+        let mlp = MlpSpec::new(vec![8, 16, 4]);
+        let init = mlp.init(&mut wrng);
+        let cfg = RunConfig::default()
+            .with_steps(2)
+            .with_batch(8)
+            .with_trigger_d(Trigger::vanilla(1e-9))
+            .with_trigger_z(Trigger::vanilla(1e-9))
+            .with_seed(11);
+
+        let mut off = Coordinator::spawn(
+            cfg.clone(),
+            mlp.clone(),
+            single_class_split(&train, 4),
+            init.clone(),
+        );
+        let res_off = b.bench(
+            "coordinator.round (4 agents, mlp 8-16-4, journal off)",
+            || {
+                off.round();
+            },
+        );
+        let off_ns = res_off.median_ns();
+        cases.push(Json::obj(vec![
+            ("journal", Json::Str("off".to_string())),
+            ("per_round_us", Json::Num(off_ns / 1e3)),
+            ("rounds_per_sec", Json::Num(1e9 / off_ns)),
+            ("result", res_off.to_json()),
+        ]));
+        off.shutdown();
+
+        let jpath = std::env::temp_dir()
+            .join(format!("dela_bench_journal_{}.jsonl", std::process::id()));
+        let mut on = Coordinator::spawn(
+            cfg,
+            mlp,
+            single_class_split(&train, 4),
+            init,
+        );
+        on.obs = Obs::to_path(&jpath).expect("open bench journal sink");
+        let res_on = b.bench(
+            "coordinator.round (4 agents, mlp 8-16-4, journal on)",
+            || {
+                on.round();
+            },
+        );
+        let on_ns = res_on.median_ns();
+        cases.push(Json::obj(vec![
+            ("journal", Json::Str("on".to_string())),
+            ("per_round_us", Json::Num(on_ns / 1e3)),
+            ("rounds_per_sec", Json::Num(1e9 / on_ns)),
+            ("overhead_vs_off_pct", Json::Num((on_ns / off_ns - 1.0) * 100.0)),
+            ("result", res_on.to_json()),
+        ]));
+        on.shutdown();
+        std::fs::remove_file(&jpath).ok();
+    }
     let doc = Json::obj(vec![
         (
             "series",
@@ -387,7 +459,7 @@ fn trajectory(path: &str) {
             Json::Str(
                 "consensus.round (64 agents, dim 128), pooled exact prox; \
                  coordinator.round (4 agents, mlp 8-16-4), in-proc vs \
-                 tcp loopback"
+                 tcp loopback, and journal off vs on"
                     .to_string(),
             ),
         ),

@@ -30,6 +30,7 @@
 //! the `determinism` integration tests.
 
 use crate::comm::{Scalar, Trigger, TriggerState};
+use crate::obs::{clock::Stopwatch, Event, Line, Obs};
 use crate::transport::loss::{ChannelStats, LossyLink};
 use crate::rng::Pcg64;
 use crate::wire::{
@@ -117,6 +118,50 @@ impl WorkerPool {
             }
         });
     }
+
+    /// [`WorkerPool::run`] plus per-item wall-clock timing: returns the
+    /// microseconds each `f(i, …)` call took, indexed like `items`.  The
+    /// item updates are bit-identical to [`WorkerPool::run`]; the timings
+    /// are wall-side observability data only and must never feed
+    /// deterministic state (they serialize under `"wall_us"` — see
+    /// [`crate::obs::strip_wall`]).
+    pub fn run_timed<S, F>(&self, items: &mut [S], f: F) -> Vec<u64>
+    where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        let n = items.len();
+        let mut micros = vec![0u64; n];
+        let w = self.workers.min(n);
+        if w <= 1 {
+            for (i, s) in items.iter_mut().enumerate() {
+                let sw = Stopwatch::start();
+                f(i, s);
+                micros[i] = sw.micros();
+            }
+            return micros;
+        }
+        let per = n.div_ceil(w);
+        std::thread::scope(|scope| {
+            for ((ci, chunk), mchunk) in items
+                .chunks_mut(per)
+                .enumerate()
+                .zip(micros.chunks_mut(per))
+            {
+                let f = &f;
+                scope.spawn(move || {
+                    for ((j, s), m) in
+                        chunk.iter_mut().enumerate().zip(mchunk.iter_mut())
+                    {
+                        let sw = Stopwatch::start();
+                        f(ci * per + j, s);
+                        *m = sw.micros();
+                    }
+                });
+            }
+        });
+        micros
+    }
 }
 
 /// Per-agent solver streams for one round: `base.fork(round, agent)` for
@@ -186,6 +231,81 @@ impl<T: Scalar> EventLine<T> {
         self.ef.clear();
         self.ch
             .charge_sync(WireMessage::<T>::dense_bytes(value.len()) as u64);
+    }
+
+    /// [`EventLine::offer_send`] with journaling: emits `TriggerFired`,
+    /// `MessageSent` and `PacketDropped` events whose byte fields are the
+    /// exact [`ChannelStats`] deltas of the call, so a journal's sums
+    /// reconcile against the line's books to the byte.  A dropped packet
+    /// emits *both* `MessageSent` (it was charged to the wire) and
+    /// `PacketDropped` (it never arrived), mirroring how
+    /// [`LossyLink::transmit_bytes`] books it under `sent_bytes` *and*
+    /// `dropped_bytes`.  RNG consumption is identical to the unjournaled
+    /// path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn offer_send_obs(
+        &mut self,
+        value: &[T],
+        comp: &dyn Compressor<T>,
+        rng: &mut Pcg64,
+        scratch: &mut Vec<T>,
+        obs: &mut Obs,
+        round: u64,
+        agent: usize,
+        line: Line,
+    ) -> Option<WireMessage<T>> {
+        let before = self.ch.stats;
+        let events_before = self.trig.events;
+        let out = self.offer_send(value, comp, rng, scratch);
+        if obs.on() {
+            let after = self.ch.stats;
+            if self.trig.events > events_before {
+                obs.emit(Event::TriggerFired { round, agent, line });
+            }
+            if after.sent_bytes > before.sent_bytes {
+                obs.emit(Event::MessageSent {
+                    round,
+                    agent,
+                    line,
+                    bytes: after.sent_bytes - before.sent_bytes,
+                });
+            }
+            if after.dropped_bytes > before.dropped_bytes {
+                obs.emit(Event::PacketDropped {
+                    round,
+                    agent,
+                    line,
+                    bytes: after.dropped_bytes - before.dropped_bytes,
+                });
+            }
+        }
+        out
+    }
+
+    /// [`EventLine::resync`] with journaling: emits one `ResetSync` whose
+    /// `bytes` is the net `sent_bytes` delta of the call — the dense sync
+    /// charge, minus a superseded same-round drop if there was one (see
+    /// [`LossyLink::charge_sync`]); under supersession the earlier
+    /// `MessageSent`/`PacketDropped` pair for the retracted packet is
+    /// folded back here, keeping `Σ msg_sent + Σ reset_sync ==
+    /// sent_bytes` exact.
+    pub fn resync_obs(
+        &mut self,
+        value: &[T],
+        obs: &mut Obs,
+        round: u64,
+        agent: usize,
+    ) {
+        let before = self.ch.stats;
+        self.resync(value);
+        if obs.on() {
+            let after = self.ch.stats;
+            obs.emit(Event::ResetSync {
+                round,
+                agent,
+                bytes: after.sent_bytes.saturating_sub(before.sent_bytes),
+            });
+        }
     }
 
     pub fn events(&self) -> u64 {
@@ -361,6 +481,29 @@ impl<T: Scalar> RoundCore<T> {
         solve_rngs(base, self.round_idx as u64, self.n)
     }
 
+    /// Run the local-solve phase on the pool, journaling one `SolveDone`
+    /// per agent when `obs` is live.  Timings come from
+    /// [`WorkerPool::run_timed`] but are emitted **post-barrier in agent
+    /// order**, so the journal's event sequence is independent of worker
+    /// count and scheduling (only the `wall_us` values differ, and those
+    /// are stripped for determinism comparisons).  With `obs` off this is
+    /// exactly [`WorkerPool::run`].
+    pub fn solve_timed<S, F>(&self, items: &mut [S], f: F, obs: &mut Obs)
+    where
+        S: Send,
+        F: Fn(usize, &mut S) + Sync,
+    {
+        if !obs.on() {
+            self.pool.run(items, f);
+            return;
+        }
+        let micros = self.pool.run_timed(items, f);
+        let round = self.round_idx as u64;
+        for (agent, us) in micros.into_iter().enumerate() {
+            obs.emit(Event::SolveDone { round, agent, micros: us });
+        }
+    }
+
     /// Close the round: advance the counter and report whether the
     /// periodic reset (period `T`, 0 = disabled) is due.
     pub fn finish_round(&mut self, reset_period: usize) -> bool {
@@ -499,6 +642,93 @@ mod tests {
         let total: u64 =
             line.channels.iter().map(|c| c.stats.sent_bytes).sum();
         assert_eq!(total, 3 * (bytes + dense));
+    }
+
+    #[test]
+    fn run_timed_matches_run_and_times_every_item() {
+        let base: Vec<u64> = (0..37).collect();
+        let mut want = base.clone();
+        for (i, v) in want.iter_mut().enumerate() {
+            *v = *v * 7 + i as u64;
+        }
+        for workers in [1, 4] {
+            let pool = WorkerPool { workers };
+            let mut items = base.clone();
+            let micros = pool.run_timed(&mut items, |i, v| *v = *v * 7 + i as u64);
+            assert_eq!(items, want, "workers = {workers}");
+            assert_eq!(micros.len(), items.len());
+        }
+    }
+
+    #[test]
+    fn offer_send_obs_journal_matches_channel_books() {
+        use crate::obs::{Line, Obs};
+        let comp = CompressorCfg::Identity.build::<f64>();
+        // drop_rate 1.0: the packet is charged AND dropped — both events
+        let mut line = EventLine::new(Trigger::Always, vec![0.0], 1.0);
+        let mut rng = Pcg64::seed(11);
+        let mut scratch = Vec::new();
+        let mut obs = Obs::in_memory();
+        assert!(line
+            .offer_send_obs(
+                &[1.0],
+                comp.as_ref(),
+                &mut rng,
+                &mut scratch,
+                &mut obs,
+                0,
+                2,
+                Line::Up,
+            )
+            .is_none());
+        assert_eq!(obs.metrics.counter("trigger_up"), 1);
+        assert_eq!(obs.metrics.counter("bytes_up"), line.stats().sent_bytes);
+        assert_eq!(
+            obs.metrics.counter("dropped_bytes_up"),
+            line.stats().dropped_bytes
+        );
+        // same-round resync supersedes the drop: net ResetSync delta keeps
+        // the journal's sent-byte sum equal to the books
+        line.resync_obs(&[1.0], &mut obs, 0, 2);
+        assert_eq!(
+            obs.metrics.counter("bytes_up") + obs.metrics.counter("reset_bytes"),
+            line.stats().sent_bytes
+        );
+        assert_eq!(obs.metrics.counter("resyncs"), 1);
+        // journal trigger count + resync count == the line's event book
+        assert_eq!(
+            obs.metrics.counter("trigger_up") + obs.metrics.counter("resyncs"),
+            line.events()
+        );
+    }
+
+    #[test]
+    fn solve_timed_emits_solves_in_agent_order() {
+        use crate::obs::{Event, Obs};
+        let core = RoundCore::<f64>::new(6, 2, &CompressorCfg::Identity, 4);
+        let mut items = vec![0u64; 6];
+        let mut obs = Obs::in_memory();
+        core.solve_timed(&mut items, |i, v| *v = i as u64 + 1, &mut obs);
+        assert_eq!(items, vec![1, 2, 3, 4, 5, 6]);
+        let agents: Vec<usize> = obs
+            .flight
+            .events()
+            .filter_map(|e| match e {
+                Event::SolveDone { agent, round, .. } => {
+                    assert_eq!(*round, 0);
+                    Some(*agent)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(agents, (0..6).collect::<Vec<_>>());
+        assert_eq!(obs.metrics.hist("solve_us").map(|h| h.count()), Some(6));
+        // obs off: no events, same values
+        let mut off = Obs::off();
+        let mut items2 = vec![0u64; 6];
+        core.solve_timed(&mut items2, |i, v| *v = i as u64 + 1, &mut off);
+        assert_eq!(items2, items);
+        assert_eq!(off.flight.len(), 0);
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub const RULES: [&str; 5] = [
 pub const BAD_SUPPRESSION: &str = "bad-suppression";
 
 /// Library modules whose iteration order / sends feed trajectories.
-pub const RESTRICTED: [&str; 8] = [
+pub const RESTRICTED: [&str; 9] = [
     "admm",
     "sim",
     "comm",
@@ -48,10 +48,18 @@ pub const RESTRICTED: [&str; 8] = [
     "coordinator",
     "runtime",
     "transport",
+    "obs",
 ];
 
 /// Modules allowed to read the wall clock (they measure, not simulate).
 pub const WALL_CLOCK_ALLOW: [&str; 2] = ["benchlib", "metrics"];
+
+/// File-scoped wall-clock allowance: `obs` is a restricted module (its
+/// journal feeds trajectories in tests), but its timing sampler is the
+/// one place the observability layer may read the clock.  Keeping the
+/// allowance per-file rather than per-module means a stray `Instant`
+/// anywhere else in `obs` still fires.
+pub const WALL_CLOCK_ALLOW_FILES: [&str; 1] = ["rust/src/obs/clock.rs"];
 
 /// Identifiers that construct RNG state from ambient entropy.
 pub const RNG_IDENTS: [&str; 5] =
@@ -154,7 +162,11 @@ pub fn analyze_source(path: &str, src: &str) -> Vec<Finding> {
     };
     let (toks, sups) = lexer::lex(src);
     let mask = rules::cfg_test_mask(&toks);
-    let raw = rules::scan_rules(kind, &module, &toks, &mask);
+    let mut raw = rules::scan_rules(kind, &module, &toks, &mask);
+    let rel = path.replace('\\', "/");
+    if WALL_CLOCK_ALLOW_FILES.contains(&rel.as_str()) {
+        raw.retain(|f| f.rule != "wall-clock");
+    }
     let mut findings = rules::apply_suppressions(raw, &sups);
     for f in &mut findings {
         f.path = path.to_string();

@@ -9,8 +9,7 @@
 //! * [`crate::transport::loss::LossyLink`] — decides whether a sent delta
 //!   *arrives* (Bernoulli packet drops, the paper's `χ` disturbances).
 //!   It lives in [`crate::transport`] since the transport layer landed;
-//!   this module re-exports its stats/model types for one release and
-//!   keeps a deprecated [`DropChannel`] alias for external callers.
+//!   this module re-exports its stats/model types for convenience.
 //! * [`Estimate`] — the receiver-side accumulator `v̂` that integrates the
 //!   received deltas and can be hard-reset (the rare periodic reset
 //!   strategy of Alg. 1/2).
@@ -25,13 +24,6 @@ mod trigger;
 pub use crate::transport::loss::{ChannelStats, LossModel};
 pub use estimate::Estimate;
 pub use trigger::{Trigger, TriggerState};
-
-/// Compatibility alias for the pre-transport name of the lossy channel.
-#[deprecated(
-    since = "0.7.0",
-    note = "moved to `transport::loss`; use `LossyLink`"
-)]
-pub type DropChannel = crate::transport::loss::LossyLink;
 
 /// Scalar abstraction so the protocol works over both the f32 PJRT
 /// parameter ABI and the f64 convex experiments.

@@ -16,6 +16,7 @@ use std::net::TcpStream;
 use std::os::unix::net::UnixStream;
 use std::time::Duration;
 
+use crate::obs::{Event, Obs};
 use crate::transport::frame::{read_frame, write_frame, Frame};
 
 use super::endpoint::{AgentEndpoint, EndpointStep};
@@ -106,11 +107,16 @@ pub fn run_agent_session<S: Read + Write>(
 }
 
 /// Connect-and-serve with bounded reconnect-and-backoff.
+///
+/// Every failed attempt journals a [`Event::ReconnectAttempt`] before
+/// the backoff sleep — reconnects only happen on faulty runs, so these
+/// are churn events outside the deterministic-journal promise.
 fn drive<S, F>(
     mut connect: F,
     ep: &mut AgentEndpoint,
     digest: u64,
     opts: &AgentOpts,
+    obs: &mut Obs,
 ) -> anyhow::Result<SessionEnd>
 where
     S: Read + Write,
@@ -132,6 +138,12 @@ where
                     );
                 }
                 attempts_left -= 1;
+                if obs.on() {
+                    obs.emit(Event::ReconnectAttempt {
+                        agent: ep.id(),
+                        attempt: opts.reconnect_attempts - attempts_left,
+                    });
+                }
                 std::thread::sleep(Duration::from_millis(backoff));
                 backoff = (backoff * 2).min(opts.max_backoff_ms.max(1));
             }
@@ -145,6 +157,18 @@ pub fn run_tcp_agent(
     ep: &mut AgentEndpoint,
     digest: u64,
     opts: &AgentOpts,
+) -> anyhow::Result<SessionEnd> {
+    run_tcp_agent_obs(addr, ep, digest, opts, &mut Obs::off())
+}
+
+/// [`run_tcp_agent`] with a journal attached (`--journal` on the agent
+/// CLI): reconnect attempts are recorded as they happen.
+pub fn run_tcp_agent_obs(
+    addr: &str,
+    ep: &mut AgentEndpoint,
+    digest: u64,
+    opts: &AgentOpts,
+    obs: &mut Obs,
 ) -> anyhow::Result<SessionEnd> {
     let addr = addr.to_string();
     let write_timeout = Duration::from_millis(opts.write_timeout_ms);
@@ -160,6 +184,7 @@ pub fn run_tcp_agent(
         ep,
         digest,
         opts,
+        obs,
     )
 }
 
@@ -170,6 +195,18 @@ pub fn run_uds_agent(
     ep: &mut AgentEndpoint,
     digest: u64,
     opts: &AgentOpts,
+) -> anyhow::Result<SessionEnd> {
+    run_uds_agent_obs(path, ep, digest, opts, &mut Obs::off())
+}
+
+/// [`run_uds_agent`] with a journal attached.
+#[cfg(unix)]
+pub fn run_uds_agent_obs(
+    path: &str,
+    ep: &mut AgentEndpoint,
+    digest: u64,
+    opts: &AgentOpts,
+    obs: &mut Obs,
 ) -> anyhow::Result<SessionEnd> {
     let path = path.to_string();
     let write_timeout = Duration::from_millis(opts.write_timeout_ms);
@@ -183,5 +220,6 @@ pub fn run_uds_agent(
         ep,
         digest,
         opts,
+        obs,
     )
 }

@@ -124,10 +124,12 @@ impl AgentEndpoint {
             }
             Frame::Stop => EndpointStep::Done(self.reply(None)),
             // Welcome is consumed by the session handshake; Hello/Reply
-            // never travel leader -> agent.  Ignoring them keeps the
-            // endpoint total over the frame alphabet.
+            // never travel leader -> agent; StatusReq/Status live on
+            // one-shot probe connections the acceptor answers itself.
+            // Ignoring them keeps the endpoint total over the alphabet.
             Frame::Welcome { .. } | Frame::Hello { .. }
-            | Frame::Reply { .. } => EndpointStep::Idle,
+            | Frame::Reply { .. } | Frame::StatusReq
+            | Frame::Status { .. } => EndpointStep::Idle,
         }
     }
 

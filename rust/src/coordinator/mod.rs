@@ -27,14 +27,16 @@ mod endpoint;
 
 pub use client::{run_agent_session, AgentOpts, SessionEnd};
 #[cfg(unix)]
-pub use client::run_uds_agent;
-pub use client::run_tcp_agent;
+pub use client::{run_uds_agent, run_uds_agent_obs};
+pub use client::{run_tcp_agent, run_tcp_agent_obs};
 pub use endpoint::{AgentEndpoint, EndpointStep};
 
 use crate::comm::{Estimate, TriggerState};
 use crate::config::RunConfig;
 use crate::data::synth::ClassDataset;
+use crate::jsonio::Json;
 use crate::model::MlpSpec;
+use crate::obs::{clock::Stopwatch, Event, Line, Obs};
 use crate::rng::Pcg64;
 use crate::sim::link::LinkModel;
 use crate::transport::frame::Frame;
@@ -105,6 +107,14 @@ pub struct Coordinator<TP: Transport = InProc> {
     pub rejoin_resyncs: u64,
     /// Replies that arrived after their round's gather closed.
     pub stale_replies: u64,
+    /// Observability handle: journal + flight recorder + metrics.
+    /// Defaults to [`Obs::off`] (zero overhead); `deluxe serve`/`train`
+    /// install a live one before driving rounds.  Deterministic journal
+    /// fields are emitted in agent order at *apply* time, never at
+    /// receive time, so journals stay bit-identical across worker counts
+    /// and transports (DESIGN.md §13).
+    pub obs: Obs,
+    meta_emitted: bool,
 }
 
 impl Coordinator<InProc> {
@@ -171,14 +181,56 @@ impl<TP: Transport> Coordinator<TP> {
             uplink_events_per_agent: vec![0; n],
             rejoin_resyncs: 0,
             stale_replies: 0,
+            obs: Obs::off(),
+            meta_emitted: false,
             cfg,
             spec,
         }
     }
 
+    /// Per-agent downlink `(sent_bytes, dropped_bytes)` snapshot, used
+    /// to journal exact byte deltas around the send phase.
+    fn downlink_book(&self) -> Vec<(u64, u64)> {
+        self.tp
+            .stats()
+            .downlink
+            .iter()
+            .map(|l| (l.bytes, l.dropped_bytes))
+            .collect()
+    }
+
     /// Execute one synchronous round across all live agents.
+    ///
+    /// Journaling (when [`Coordinator::obs`] is live) follows the
+    /// determinism split of DESIGN.md §13: downlink events come from
+    /// exact per-agent book deltas around the send phase; uplink events
+    /// are emitted **in agent order at apply time** from the cumulative
+    /// `Reply` counters, never at receive time, so the deterministic
+    /// journal fields are identical for every transport and worker
+    /// count.  Churn events (`AgentLeft`/`Rejoin`/`FrameTimeout`) are
+    /// journaled in arrival order — they only occur on faulty runs,
+    /// which make no bit-identity promise.
     pub fn round(&mut self) {
         let n = self.tp.n_agents();
+        let round = self.round_idx as u64;
+        let sw = if self.obs.on() { Some(Stopwatch::start()) } else { None };
+        if self.obs.on() && !self.meta_emitted {
+            self.meta_emitted = true;
+            self.obs.emit(Event::Meta {
+                agents: n,
+                dim: self.z.len(),
+                dense_bytes: WireMessage::<f32>::dense_bytes(self.z.len())
+                    as u64,
+            });
+            for i in 0..n {
+                if self.live[i] {
+                    self.obs.emit(Event::AgentJoined { agent: i });
+                }
+            }
+        }
+        if self.obs.on() {
+            self.obs.emit(Event::RoundStart { round });
+        }
         self.tp.begin_round();
         // absorb membership churn that happened between rounds, so a
         // crashed agent's rejoin is resynced before we address the round
@@ -187,6 +239,12 @@ impl<TP: Transport> Coordinator<TP> {
         }
         // downlink: per-link event trigger + EF-compressed codec, then
         // the transport's lossy link with byte accounting
+        let down_before = if self.obs.on() {
+            self.downlink_book()
+        } else {
+            Vec::new()
+        };
+        let mut fired = vec![false; n];
         let mut pending = vec![false; n];
         for i in 0..n {
             if !self.live[i] {
@@ -196,6 +254,7 @@ impl<TP: Transport> Coordinator<TP> {
             if let Some(delta) =
                 self.lines[i].z_trig.offer(&self.z, &mut self.rng)
             {
+                fired[i] = true;
                 payload = Some(self.lines[i].ef_down.compress(
                     &delta,
                     self.comp.as_ref(),
@@ -210,8 +269,46 @@ impl<TP: Transport> Coordinator<TP> {
                 Err(e) => panic!("transport send to agent {i}: {e}"),
             }
         }
+        if self.obs.on() {
+            let down_after = self.downlink_book();
+            for i in 0..n {
+                if fired[i] {
+                    self.obs.emit(Event::TriggerFired {
+                        round,
+                        agent: i,
+                        line: Line::Down,
+                    });
+                }
+                let (b0, d0) = down_before[i];
+                let (b1, d1) = down_after[i];
+                if b1 > b0 {
+                    self.obs.emit(Event::MessageSent {
+                        round,
+                        agent: i,
+                        line: Line::Down,
+                        bytes: b1 - b0,
+                    });
+                }
+                if d1 > d0 {
+                    self.obs.emit(Event::PacketDropped {
+                        round,
+                        agent: i,
+                        line: Line::Down,
+                        bytes: d1 - d0,
+                    });
+                }
+            }
+        }
         // gather uplink: buffer replies per agent, apply in agent order
         // (bit-reproducible regardless of delivery order)
+        let up_before = if self.obs.on() {
+            Some((
+                self.uplink_bytes_per_agent.clone(),
+                self.uplink_events_per_agent.clone(),
+            ))
+        } else {
+            None
+        };
         let mut replies: Vec<Option<WireMessage<f32>>> = Vec::new();
         replies.resize_with(n, || None);
         let mut outstanding = pending.iter().filter(|&&p| p).count();
@@ -245,6 +342,9 @@ impl<TP: Transport> Coordinator<TP> {
                             pending[from] = false;
                             outstanding -= 1;
                         }
+                        if self.obs.on() {
+                            self.obs.emit(Event::AgentLeft { agent: from });
+                        }
                     }
                 }
                 TransportEvent::Joined { from } => {
@@ -259,6 +359,35 @@ impl<TP: Transport> Coordinator<TP> {
                             outstanding -= 1;
                         }
                     }
+                    if self.obs.on() {
+                        self.obs.emit(Event::FrameTimeout { round });
+                    }
+                }
+            }
+        }
+        // uplink journal: agent-order apply-time emission from the
+        // cumulative Reply counter deltas (receive order is not
+        // deterministic; these deltas are)
+        if let Some((pb, pe)) = up_before {
+            for i in 0..n {
+                let ev_delta =
+                    self.uplink_events_per_agent[i].saturating_sub(pe[i]);
+                for _ in 0..ev_delta {
+                    self.obs.emit(Event::TriggerFired {
+                        round,
+                        agent: i,
+                        line: Line::Up,
+                    });
+                }
+                let b_delta =
+                    self.uplink_bytes_per_agent[i].saturating_sub(pb[i]);
+                if b_delta > 0 {
+                    self.obs.emit(Event::MessageSent {
+                        round,
+                        agent: i,
+                        line: Line::Up,
+                        bytes: b_delta,
+                    });
                 }
             }
         }
@@ -276,6 +405,7 @@ impl<TP: Transport> Coordinator<TP> {
             && self.round_idx % self.cfg.reset_period == 0
         {
             let z = self.z.clone();
+            let sync = WireMessage::<f32>::dense_bytes(z.len()) as u64;
             for i in 0..n {
                 if !self.live[i] {
                     continue;
@@ -292,7 +422,28 @@ impl<TP: Transport> Coordinator<TP> {
                     // lint:allow(panic-in-library): a transport send error means the runtime fabric itself is gone; propagating that panic is intended
                     Err(e) => panic!("transport reset to agent {i}: {e}"),
                 }
+                if self.obs.on() {
+                    self.obs.emit(Event::ResetSync {
+                        round,
+                        agent: i,
+                        bytes: sync,
+                    });
+                }
             }
+        }
+        if self.obs.on() {
+            self.obs.emit(Event::RoundEnd {
+                round,
+                events: self.uplink_events + self.downlink_events(),
+                up_bytes: self.uplink_bytes(),
+                down_bytes: self.downlink_bytes(),
+                vtime_us: self.tp.vtime_us(),
+                wall_us: sw.map(|s| s.micros()),
+            });
+        }
+        if self.tp.wants_status() {
+            let status = self.status_json().to_string();
+            self.tp.set_status(&status);
         }
     }
 
@@ -306,6 +457,9 @@ impl<TP: Transport> Coordinator<TP> {
             TransportEvent::Left { from } => {
                 if from < self.live.len() {
                     self.live[from] = false;
+                    if self.obs.on() {
+                        self.obs.emit(Event::AgentLeft { agent: from });
+                    }
                 }
             }
             TransportEvent::Joined { from } => self.resync_rejoined(from),
@@ -329,6 +483,68 @@ impl<TP: Transport> Coordinator<TP> {
             Err(e) => panic!("transport resync to agent {from}: {e}"),
         }
         self.rejoin_resyncs += 1;
+        if self.obs.on() {
+            let round = self.round_idx as u64;
+            self.obs.emit(Event::Rejoin { round, agent: from });
+            self.obs.emit(Event::ResetSync {
+                round,
+                agent: from,
+                bytes: WireMessage::<f32>::dense_bytes(self.z.len()) as u64,
+            });
+        }
+    }
+
+    /// Live status snapshot served to `deluxe status` probes.
+    ///
+    /// Published to the transport after every round (when the transport
+    /// wants one, i.e. socket runtimes).  The shape is stable JSON:
+    /// scalar progress fields plus per-agent parallel arrays, and the
+    /// metrics registry snapshot when journaling is live.
+    pub fn status_json(&self) -> Json {
+        let n = self.lines.len();
+        let wire = self.tp.stats();
+        let num = |v: u64| Json::Num(v as f64);
+        Json::obj(vec![
+            ("round", num(self.round_idx as u64)),
+            ("agents", num(n as u64)),
+            (
+                "live",
+                Json::Arr(self.live.iter().map(|&l| Json::Bool(l)).collect()),
+            ),
+            ("rejoin_resyncs", num(self.rejoin_resyncs)),
+            ("stale_replies", num(self.stale_replies)),
+            (
+                "uplink_events",
+                Json::Arr(
+                    self.uplink_events_per_agent
+                        .iter()
+                        .map(|&e| num(e))
+                        .collect(),
+                ),
+            ),
+            (
+                "uplink_bytes",
+                Json::Arr(
+                    self.uplink_bytes_per_agent
+                        .iter()
+                        .map(|&b| num(b))
+                        .collect(),
+                ),
+            ),
+            (
+                "downlink_events",
+                Json::Arr(
+                    self.lines.iter().map(|l| num(l.z_trig.events)).collect(),
+                ),
+            ),
+            (
+                "downlink_bytes",
+                Json::Arr(
+                    wire.downlink.iter().map(|l| num(l.bytes)).collect(),
+                ),
+            ),
+            ("metrics", self.obs.metrics.snapshot()),
+        ])
     }
 
     /// Downlink events so far.

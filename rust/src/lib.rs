@@ -31,6 +31,10 @@
 //! * [`analysis`] — the `deluxe lint` static-analysis pass that
 //!   machine-checks the determinism / panic-freedom / byte-accounting
 //!   house invariants (DESIGN.md §11).
+//! * [`obs`] — structured observability: typed event journal with a
+//!   wall-clock/deterministic field split, bounded flight recorder, and
+//!   the metrics registry behind `deluxe status` / `deluxe trace`
+//!   (DESIGN.md §13).
 //! * Substrates built from scratch for the offline environment: [`rng`],
 //!   [`jsonio`], [`linalg`], [`data`], [`topology`], [`metrics`],
 //!   [`benchlib`], [`proptest`], [`cli`].
@@ -45,6 +49,7 @@ pub mod jsonio;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod proptest;
 pub mod rng;
 pub mod sim;
@@ -75,6 +80,7 @@ pub mod prelude {
     pub use crate::coordinator::run_uds_agent;
     pub use crate::linalg::Matrix;
     pub use crate::metrics::Recorder;
+    pub use crate::obs::{Event, FlightRecorder, Metrics, Obs};
     pub use crate::rng::{Pcg64, Rng};
     pub use crate::transport::{
         Frame, InProc, LossModel, LossyLink, SimLink, SocketOpts, Tcp,

@@ -29,15 +29,26 @@ USAGE:
               0 = one per core, env DELUXE_WORKERS overrides the default;
               results are bit-identical for every worker count)
   deluxe train [--rounds N] [--delta D] [--seed S] [--compressor C]
-                                                       threaded e2e run
+             [--journal PATH]                          threaded e2e run
   deluxe serve [--listen HOST:PORT | --uds PATH] [--rounds N] [--seed S]
              [--delta D] [--compressor C] [--drop-down P] [--reset-period T]
+             [--journal PATH]
              leader service over real sockets: waits for the full agent
-             cohort, drives rounds, resyncs crashed agents on rejoin
+             cohort, drives rounds, resyncs crashed agents on rejoin;
+             --journal writes the JSONL event journal (DESIGN.md §13)
   deluxe agent (--connect HOST:PORT | --uds PATH) --shard K [--seed S]
-             [--delta D] [--compressor C]
+             [--delta D] [--compressor C] [--journal PATH]
              one agent process holding shard K; protocol flags must match
              the leader's (enforced by the handshake config digest)
+  deluxe status (--connect HOST:PORT | --uds PATH) [--json]
+             probe a running leader: per-agent liveness, trigger rates
+             and wire bytes from its live Status snapshot
+  deluxe trace PATH [PATH2] [--check]
+             summarize a JSONL event journal (comm savings vs dense,
+             trigger rates, straggler histogram); with PATH2, diff the
+             deterministic fields of two journals; --check reconciles
+             journal sums against the round-end books (exits 1 on
+             mismatch)
   deluxe sim --scenario NAME|file.json [--agents N] [--rounds N] [--seed S]
              [--workers N]
              discrete-event network simulation (builtins: ideal | lossy |
@@ -72,6 +83,8 @@ fn main() -> Result<()> {
         Some("train") => run_train(&args),
         Some("serve") => run_serve(&args),
         Some("agent") => run_agent(&args),
+        Some("status") => run_status(&args),
+        Some("trace") => run_trace(&args),
         Some("sim") => run_sim(&args),
         Some("lint") => run_lint(&args),
         Some("info") => run_info(&args),
@@ -764,9 +777,23 @@ fn run_train(args: &Args) -> Result<()> {
         rc.compressor.label()
     );
     let init = w.spec.init(&mut deluxe::rng::Pcg64::seed(rc.seed));
-    let coord =
+    let mut coord =
         Coordinator::spawn(rc, w.spec.clone(), w.shards.clone(), init);
+    coord.obs = journal_obs(args, false)?;
     drive_leader(coord, &w, rounds)
+}
+
+/// Resolve `--journal PATH` into an [`deluxe::obs::Obs`] handle.  With
+/// no flag: a journal-less live handle when `default_on` (serve keeps
+/// metrics warm for `deluxe status`), else fully off.  The flag never
+/// enters the handshake digest — observability is per-process.
+fn journal_obs(args: &Args, default_on: bool) -> Result<deluxe::obs::Obs> {
+    use deluxe::obs::Obs;
+    match args.get("journal") {
+        Some(path) => Obs::to_path(std::path::Path::new(path)),
+        None if default_on => Ok(Obs::new()),
+        None => Ok(Obs::off()),
+    }
 }
 
 /// Round loop + final report shared by `train` (in-proc transport) and
@@ -796,6 +823,7 @@ fn drive_leader<TP: deluxe::transport::Transport>(
     let down = coord.downlink_events();
     let up_bytes = coord.uplink_bytes();
     let down_bytes = coord.downlink_bytes();
+    coord.obs.flush();
     let up = coord.shutdown();
     let dense = deluxe::wire::WireMessage::<f32>::dense_bytes(
         w.spec.param_len(),
@@ -842,7 +870,8 @@ fn run_serve(args: &Args) -> Result<()> {
             );
             tp.await_cohort()?;
             println!("cohort complete; starting rounds");
-            let coord = Coordinator::over(tp, rc, w.spec.clone(), init);
+            let mut coord = Coordinator::over(tp, rc, w.spec.clone(), init);
+            coord.obs = journal_obs(args, true)?;
             return drive_leader(coord, &w, rounds);
         }
     }
@@ -856,12 +885,13 @@ fn run_serve(args: &Args) -> Result<()> {
     );
     tp.await_cohort()?;
     println!("cohort complete; starting rounds");
-    let coord = Coordinator::over(tp, rc, w.spec.clone(), init);
+    let mut coord = Coordinator::over(tp, rc, w.spec.clone(), init);
+    coord.obs = journal_obs(args, true)?;
     drive_leader(coord, &w, rounds)
 }
 
 fn run_agent(args: &Args) -> Result<()> {
-    use deluxe::coordinator::{make_endpoints, run_tcp_agent, AgentOpts};
+    use deluxe::coordinator::{make_endpoints, run_tcp_agent_obs, AgentOpts};
 
     let rc = RunConfig::from_args(args);
     let w = nn::NnWorkload::mnist(rc.seed);
@@ -884,16 +914,18 @@ fn run_agent(args: &Args) -> Result<()> {
     let mut ep = endpoints.remove(shard);
     drop(endpoints);
     let opts = AgentOpts::default();
+    let mut obs = journal_obs(args, false)?;
 
     #[cfg(unix)]
     {
         if let Some(path) = args.get("uds") {
-            use deluxe::coordinator::run_uds_agent;
+            use deluxe::coordinator::run_uds_agent_obs;
             println!(
                 "agent {shard}/{n} connecting to uds:{path} (config digest \
                  {digest:016x})"
             );
-            let end = run_uds_agent(path, &mut ep, digest, &opts)?;
+            let end = run_uds_agent_obs(path, &mut ep, digest, &opts, &mut obs)?;
+            obs.flush();
             println!(
                 "agent {shard}: session ended ({end:?}); {} uplink events, \
                  {} sent",
@@ -908,13 +940,343 @@ fn run_agent(args: &Args) -> Result<()> {
         "agent {shard}/{n} connecting to tcp:{addr} (config digest \
          {digest:016x})"
     );
-    let end = run_tcp_agent(addr, &mut ep, digest, &opts)?;
+    let end = run_tcp_agent_obs(addr, &mut ep, digest, &opts, &mut obs)?;
+    obs.flush();
     println!(
         "agent {shard}: session ended ({end:?}); {} uplink events, {} sent",
         ep.events(),
         fmt_bytes(ep.sent_bytes()),
     );
     Ok(())
+}
+
+/// One-shot status probe: a bare connection that sends `StatusReq`
+/// instead of `Hello` and reads back the leader's `Status` snapshot.
+fn fetch_status<S: std::io::Read + std::io::Write>(
+    s: &mut S,
+) -> Result<String> {
+    use deluxe::transport::frame::{read_frame, write_frame, Frame};
+    write_frame(s, &Frame::StatusReq)?;
+    match read_frame(s)? {
+        Frame::Status { json } => Ok(json),
+        other => anyhow::bail!("expected Status, got {}", other.kind()),
+    }
+}
+
+fn run_status(args: &Args) -> Result<()> {
+    #[cfg(unix)]
+    let json = if let Some(path) = args.get("uds") {
+        let mut s = std::os::unix::net::UnixStream::connect(path)?;
+        fetch_status(&mut s)?
+    } else {
+        let addr = args.str_or("connect", "127.0.0.1:46700");
+        let mut s = std::net::TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        fetch_status(&mut s)?
+    };
+    #[cfg(not(unix))]
+    let json = {
+        let addr = args.str_or("connect", "127.0.0.1:46700");
+        let mut s = std::net::TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        fetch_status(&mut s)?
+    };
+    anyhow::ensure!(
+        !json.is_empty(),
+        "leader is up but has not completed a round yet (empty status)"
+    );
+    let st = Json::parse(&json)
+        .map_err(|e| anyhow::anyhow!("malformed status JSON: {e:?}"))?;
+    if args.has("json") {
+        println!("{}", st.to_string());
+        return Ok(());
+    }
+    let num =
+        |k: &str| st.get(k).and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
+    let arr = |k: &str| -> Vec<u64> {
+        st.get(k)
+            .and_then(|j| j.as_arr())
+            .map(|a| {
+                a.iter()
+                    .map(|v| v.as_f64().unwrap_or(0.0) as u64)
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let live: Vec<bool> = st
+        .get("live")
+        .and_then(|j| j.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_bool()).collect())
+        .unwrap_or_default();
+    let round = num("round");
+    println!(
+        "round {round}  agents {}  live {}/{}  rejoin resyncs {}  stale \
+         replies {}",
+        num("agents"),
+        live.iter().filter(|&&l| l).count(),
+        live.len(),
+        num("rejoin_resyncs"),
+        num("stale_replies"),
+    );
+    let up_ev = arr("uplink_events");
+    let up_b = arr("uplink_bytes");
+    let down_ev = arr("downlink_events");
+    let down_b = arr("downlink_bytes");
+    let mut table = Table::new(&[
+        "agent", "live", "up events", "up rate", "up bytes", "down events",
+        "down bytes",
+    ]);
+    for (i, &l) in live.iter().enumerate() {
+        let ev = up_ev.get(i).copied().unwrap_or(0);
+        let rate = if round > 0 { ev as f64 / round as f64 } else { 0.0 };
+        table.row(vec![
+            format!("{i}"),
+            if l { "yes".into() } else { "NO".into() },
+            format!("{ev}"),
+            format!("{rate:.2}"),
+            fmt_bytes(up_b.get(i).copied().unwrap_or(0)),
+            format!("{}", down_ev.get(i).copied().unwrap_or(0)),
+            fmt_bytes(down_b.get(i).copied().unwrap_or(0)),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn run_trace(args: &Args) -> Result<()> {
+    let paths = &args.positional;
+    anyhow::ensure!(
+        !paths.is_empty(),
+        "deluxe trace needs a journal path (see `deluxe help`)"
+    );
+    if paths.len() >= 2 {
+        return trace_diff(&paths[0], &paths[1]);
+    }
+    let src = std::fs::read_to_string(&paths[0])?;
+    let events = deluxe::obs::parse_journal(&src)?;
+    trace_summary(&events, args.has("check"))
+}
+
+fn bump(v: &mut Vec<u64>, i: usize, by: u64) {
+    if v.len() <= i {
+        v.resize(i + 1, 0);
+    }
+    v[i] += by;
+}
+
+/// Journal summary: comm savings vs the dense baseline in exact bytes,
+/// per-agent trigger rates, straggler histogram; `--check` reconciles
+/// the per-event sums against the final `round_end` cumulative books.
+fn trace_summary(events: &[deluxe::jsonio::Json], check: bool) -> Result<()> {
+    let kind = |j: &Json| j.get("ev").and_then(|v| v.as_str()).unwrap_or("");
+    let num = |j: &Json, k: &str| {
+        j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64
+    };
+    let line_up =
+        |j: &Json| j.get("line").and_then(|v| v.as_str()) == Some("up");
+    let mut agents = 0usize;
+    let mut dense = 0u64;
+    let mut rounds = 0u64;
+    let mut trig_count = 0u64;
+    let mut up_trig: Vec<u64> = Vec::new();
+    let mut down_trig: Vec<u64> = Vec::new();
+    let (mut up_sent, mut down_sent) = (0u64, 0u64);
+    let (mut resets, mut reset_bytes) = (0u64, 0u64);
+    let (mut drops, mut dropped_bytes) = (0u64, 0u64);
+    let mut last_end: Option<(u64, u64, u64)> = None;
+    let mut solve_hist = deluxe::obs::Histogram::default();
+    for j in events {
+        match kind(j) {
+            "meta" => {
+                agents = num(j, "agents") as usize;
+                dense = num(j, "dense_bytes");
+            }
+            "round_end" => {
+                rounds += 1;
+                last_end = Some((
+                    num(j, "events"),
+                    num(j, "up_bytes"),
+                    num(j, "down_bytes"),
+                ));
+            }
+            "trigger_fired" => {
+                trig_count += 1;
+                let a = num(j, "agent") as usize;
+                if line_up(j) {
+                    bump(&mut up_trig, a, 1);
+                } else {
+                    bump(&mut down_trig, a, 1);
+                }
+            }
+            "msg_sent" => {
+                let b = num(j, "bytes");
+                if line_up(j) {
+                    up_sent += b;
+                } else {
+                    down_sent += b;
+                }
+            }
+            "pkt_dropped" => {
+                drops += 1;
+                dropped_bytes += num(j, "bytes");
+            }
+            "reset_sync" => {
+                resets += 1;
+                reset_bytes += num(j, "bytes");
+            }
+            "solve_done" => solve_hist.observe(num(j, "wall_us")),
+            _ => {}
+        }
+    }
+    println!(
+        "journal: {} events, {rounds} rounds, {agents} agents",
+        events.len()
+    );
+    let actual = up_sent + down_sent + reset_bytes;
+    println!(
+        "wire: uplink {} + downlink {} + resets {} = {} ({actual} bytes); \
+         {drops} packets dropped ({})",
+        fmt_bytes(up_sent),
+        fmt_bytes(down_sent),
+        fmt_bytes(reset_bytes),
+        fmt_bytes(actual),
+        fmt_bytes(dropped_bytes),
+    );
+    let baseline = 2 * dense * agents as u64 * rounds;
+    if baseline > 0 {
+        println!(
+            "dense baseline: {} ({dense} bytes x {agents} agents x \
+             {rounds} rounds x 2 directions = {baseline} bytes); comm \
+             savings {:.1}%",
+            fmt_bytes(baseline),
+            100.0 * (1.0 - actual as f64 / baseline as f64),
+        );
+    }
+    let n = agents.max(up_trig.len()).max(down_trig.len());
+    let r = rounds.max(1) as f64;
+    let mut table =
+        Table::new(&["agent", "up trig", "up rate", "down trig", "down rate"]);
+    for i in 0..n {
+        let u = up_trig.get(i).copied().unwrap_or(0);
+        let d = down_trig.get(i).copied().unwrap_or(0);
+        table.row(vec![
+            format!("{i}"),
+            format!("{u}"),
+            format!("{:.2}", u as f64 / r),
+            format!("{d}"),
+            format!("{:.2}", d as f64 / r),
+        ]);
+    }
+    println!("{}", table.render());
+    if solve_hist.count() > 0 {
+        println!(
+            "solve-time straggler histogram (µs, log2 buckets; mean {:.0}):",
+            solve_hist.mean()
+        );
+        let hj = solve_hist.to_json();
+        if let Some(bs) = hj.get("buckets").and_then(|b| b.as_arr()) {
+            for b in bs {
+                if let Some(t) = b.as_arr() {
+                    println!(
+                        "  [{:>10} .. {:>10}]  {}",
+                        t[0].as_f64().unwrap_or(0.0) as u64,
+                        t[1].as_f64().unwrap_or(0.0) as u64,
+                        t[2].as_f64().unwrap_or(0.0) as u64,
+                    );
+                }
+            }
+        }
+    }
+    if check {
+        let (ev, upb, downb) = last_end.ok_or_else(|| {
+            anyhow::anyhow!("--check needs at least one round_end event")
+        })?;
+        let mut bad = false;
+        // a reset counts one trigger event in the books but journals as
+        // reset_sync, so the event reconciliation is the sum of both
+        if trig_count + resets != ev {
+            eprintln!(
+                "check: trigger_fired {trig_count} + reset_sync {resets} \
+                 != round_end events {ev}"
+            );
+            bad = true;
+        }
+        if up_sent != upb {
+            eprintln!(
+                "check: sum(msg_sent up) {up_sent} != round_end up_bytes \
+                 {upb}"
+            );
+            bad = true;
+        }
+        if down_sent + reset_bytes != downb {
+            eprintln!(
+                "check: sum(msg_sent down) {down_sent} + sum(reset_sync) \
+                 {reset_bytes} != round_end down_bytes {downb}"
+            );
+            bad = true;
+        }
+        if bad {
+            std::process::exit(1);
+        }
+        println!(
+            "check: journal sums match the round_end books (events {ev}, \
+             up {}, down {})",
+            fmt_bytes(upb),
+            fmt_bytes(downb),
+        );
+    }
+    Ok(())
+}
+
+/// Diff the deterministic fields of two journals (wall-clock stripped).
+fn trace_diff(a: &str, b: &str) -> Result<()> {
+    let ja = deluxe::obs::parse_journal(&std::fs::read_to_string(a)?)?;
+    let jb = deluxe::obs::parse_journal(&std::fs::read_to_string(b)?)?;
+    let strip = |v: &[Json]| -> Vec<String> {
+        v.iter()
+            .map(|j| deluxe::obs::strip_wall(j).to_string())
+            .collect()
+    };
+    let (sa, sb) = (strip(&ja), strip(&jb));
+    if sa == sb {
+        println!(
+            "journals identical over deterministic fields ({} events)",
+            sa.len()
+        );
+        return Ok(());
+    }
+    let mut i = 0;
+    while i < sa.len().min(sb.len()) && sa[i] == sb[i] {
+        i += 1;
+    }
+    println!(
+        "journals diverge at event {} ({} vs {} events total)",
+        i + 1,
+        sa.len(),
+        sb.len()
+    );
+    if let Some(l) = sa.get(i) {
+        println!("  a: {l}");
+    }
+    if let Some(l) = sb.get(i) {
+        println!("  b: {l}");
+    }
+    let mut by_kind: std::collections::BTreeMap<String, (i64, i64)> =
+        std::collections::BTreeMap::new();
+    for j in &ja {
+        let k = j.get("ev").and_then(|v| v.as_str()).unwrap_or("?");
+        by_kind.entry(k.to_string()).or_default().0 += 1;
+    }
+    for j in &jb {
+        let k = j.get("ev").and_then(|v| v.as_str()).unwrap_or("?");
+        by_kind.entry(k.to_string()).or_default().1 += 1;
+    }
+    for (k, (ca, cb)) in &by_kind {
+        if ca != cb {
+            println!("  {k}: {ca} vs {cb}");
+        }
+    }
+    std::process::exit(1);
 }
 
 fn run_lint(args: &Args) -> Result<()> {

@@ -53,8 +53,22 @@ impl Recorder {
 
     /// First x where the series reaches `target` (e.g. rounds-to-accuracy);
     /// `None` if never reached (the paper's "N/A" entries in Tab. 1).
+    ///
+    /// This is a *rising-threshold* scan: it returns the first sample
+    /// with `y >= target` in insertion order, which is the intended
+    /// crossing only for (approximately) non-decreasing series such as
+    /// accuracy curves.  On an oscillating series it reports the first
+    /// touch, not a sustained crossing; for falling series (suboptimality,
+    /// loss) use [`Recorder::first_below`].
     pub fn first_reaching(&self, name: &str, target: f64) -> Option<f64> {
         self.get(name).iter().find(|&&(_, y)| y >= target).map(|&(x, _)| x)
+    }
+
+    /// Falling-threshold dual of [`Recorder::first_reaching`]: the first
+    /// x with `y <= target`, for decreasing series like suboptimality or
+    /// comm-load.  Same first-touch semantics on non-monotone data.
+    pub fn first_below(&self, name: &str, target: f64) -> Option<f64> {
+        self.get(name).iter().find(|&&(_, y)| y <= target).map(|&(x, _)| x)
     }
 
     /// Write all series as long-format CSV: `series,x,y`.
@@ -214,6 +228,13 @@ mod tests {
         }
         assert_eq!(r.first_reaching("acc", 0.8), Some(20.0));
         assert_eq!(r.first_reaching("acc", 0.95), None);
+        // rising-threshold semantics: the documented first-touch
+        // behavior on a non-monotone series
+        let mut osc = Recorder::new();
+        for (i, y) in [0.1, 0.9, 0.3, 0.95].iter().enumerate() {
+            osc.add("acc", i as f64, *y);
+        }
+        assert_eq!(osc.first_reaching("acc", 0.9), Some(1.0));
         assert_eq!(fmt_opt(None), "N/A");
         assert_eq!(fmt_duration(2.5e-5), "25 µs");
         assert_eq!(fmt_duration(0.0305), "30.5 ms");
@@ -221,6 +242,23 @@ mod tests {
         assert_eq!(fmt_duration(95.0), "1 min 35 s");
         assert_eq!(fmt_duration(119.7), "2 min 0 s");
         assert_eq!(fmt_opt(Some(123.4)), "123");
+    }
+
+    #[test]
+    fn first_below_for_falling_series() {
+        let mut r = Recorder::new();
+        for (i, y) in [1.0e-1, 3.0e-2, 8.0e-3, 9.0e-4].iter().enumerate() {
+            r.add("subopt", (i * 5) as f64, *y);
+        }
+        assert_eq!(r.first_below("subopt", 1e-2), Some(10.0));
+        assert_eq!(r.first_below("subopt", 1e-2 + 1e-9), Some(10.0));
+        assert_eq!(r.first_below("subopt", 1e-5), None);
+        assert_eq!(r.first_below("missing", 1.0), None);
+        // exact-equality samples count as crossed on both scans
+        let mut eq = Recorder::new();
+        eq.add("s", 0.0, 0.5);
+        assert_eq!(eq.first_below("s", 0.5), Some(0.0));
+        assert_eq!(eq.first_reaching("s", 0.5), Some(0.0));
     }
 
     #[test]

@@ -1,0 +1,44 @@
+//! The **only** wall-clock read site in the library.
+//!
+//! The house `wall-clock` lint bans `Instant::now` / `SystemTime` in every
+//! library module so that trajectories and journals never depend on the
+//! machine's clock; this file carries the single scoped allowance (see
+//! `analysis::WALL_CLOCK_ALLOW_FILES`).  Everything that feeds the
+//! journal's *deterministic* fields must come from counters or from the
+//! transport's virtual time; the [`Stopwatch`] here exists solely for
+//! wall-side samples (`wall_us` journal fields, metrics histograms), which
+//! [`super::strip_wall`] removes before any determinism comparison.
+
+use std::time::Instant;
+
+/// Monotonic stopwatch for wall-side timing samples (solve µs, round µs).
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Microseconds elapsed since [`Stopwatch::start`].
+    pub fn micros(&self) -> u64 {
+        let us = self.t0.elapsed().as_micros();
+        us.min(u64::MAX as u128) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.micros();
+        let b = sw.micros();
+        assert!(b >= a);
+    }
+}

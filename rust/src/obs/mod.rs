@@ -1,0 +1,896 @@
+//! Structured observability: typed event journal, flight recorder and a
+//! dependency-free metrics registry (DESIGN.md §13).
+//!
+//! Three pieces, one write path:
+//!
+//! * [`Event`] — the typed vocabulary of everything the engines, the
+//!   transports and the coordinator service do: round lifecycle, trigger
+//!   firings, wire sends/drops, resync charges, local-solve completions,
+//!   membership churn and frame timeouts.  Every event serializes to one
+//!   JSONL line via [`crate::jsonio`].
+//! * [`Obs`] — the sink handle threaded through the coordinator: journal
+//!   (file / in-memory / null), a bounded [`FlightRecorder`] ring buffer
+//!   holding the most recent events for crash dumps, and a [`Metrics`]
+//!   registry that absorbs every emitted event into counters, gauges and
+//!   log₂-bucketed [`Histogram`]s.
+//! * [`strip_wall`] — the determinism boundary.  Deterministic payload
+//!   fields (round, agent, bytes, virtual time) and wall-clock timing are
+//!   **strictly separated**: all wall data lives under the single JSON key
+//!   `"wall_us"`, so stripping that key from every line yields a journal
+//!   that is bit-identical across `--workers` counts and across the
+//!   in-proc / sim-link / socket transports (pinned by `tests/obs.rs` and
+//!   `tests/transport_e2e.rs`).
+//!
+//! The journal write path is `writeln!` into a `BufWriter`; write errors
+//! are counted, never panicked on — observability must not take down the
+//! run it observes.
+
+pub mod clock;
+
+use crate::jsonio::Json;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::io::Write;
+
+/// Which communication line an event belongs to: agent→leader (`Up`,
+/// the d-line of Alg. 1) or leader→agent (`Down`, the z-line).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Line {
+    Up,
+    Down,
+}
+
+impl Line {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Line::Up => "up",
+            Line::Down => "down",
+        }
+    }
+}
+
+/// One journal record.  Fields are deterministic (round indices, agent
+/// ids, exact wire bytes, virtual time) **except** the ones documented as
+/// wall-clock, which serialize under the `"wall_us"` key and are removed
+/// by [`strip_wall`] for determinism comparisons.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// First line of every journal: run shape, for baselines in `trace`.
+    Meta {
+        agents: usize,
+        dim: usize,
+        /// Exact dense-payload wire bytes for one message of `dim` values
+        /// (the full-communication baseline unit).
+        dense_bytes: u64,
+    },
+    RoundStart {
+        round: u64,
+    },
+    /// Cumulative books at the end of `round`; `wall_us` (wall-clock round
+    /// duration) is stripped for determinism, `vtime_us` (virtual time,
+    /// sim transport only) is deterministic and kept.
+    RoundEnd {
+        round: u64,
+        events: u64,
+        up_bytes: u64,
+        down_bytes: u64,
+        vtime_us: Option<u64>,
+        wall_us: Option<u64>,
+    },
+    TriggerFired {
+        round: u64,
+        agent: usize,
+        line: Line,
+    },
+    MessageSent {
+        round: u64,
+        agent: usize,
+        line: Line,
+        bytes: u64,
+    },
+    PacketDropped {
+        round: u64,
+        agent: usize,
+        line: Line,
+        bytes: u64,
+    },
+    /// A reliable dense resync charge (periodic reset or rejoin).
+    ResetSync {
+        round: u64,
+        agent: usize,
+        bytes: u64,
+    },
+    /// A local solve finished; `micros` is wall-clock (serialized under
+    /// `"wall_us"`), the only non-deterministic payload in the taxonomy.
+    SolveDone {
+        round: u64,
+        agent: usize,
+        micros: u64,
+    },
+    AgentJoined {
+        agent: usize,
+    },
+    AgentLeft {
+        agent: usize,
+    },
+    /// A previously-dead agent slot reconnected and was resynced.
+    Rejoin {
+        round: u64,
+        agent: usize,
+    },
+    /// Client-side: one bounded-backoff reconnect attempt.
+    ReconnectAttempt {
+        agent: usize,
+        attempt: u32,
+    },
+    /// The gather phase gave up waiting on outstanding replies.
+    FrameTimeout {
+        round: u64,
+    },
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+impl Event {
+    /// Stable snake_case discriminant, the `"ev"` field of every line.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Meta { .. } => "meta",
+            Event::RoundStart { .. } => "round_start",
+            Event::RoundEnd { .. } => "round_end",
+            Event::TriggerFired { .. } => "trigger_fired",
+            Event::MessageSent { .. } => "msg_sent",
+            Event::PacketDropped { .. } => "pkt_dropped",
+            Event::ResetSync { .. } => "reset_sync",
+            Event::SolveDone { .. } => "solve_done",
+            Event::AgentJoined { .. } => "agent_joined",
+            Event::AgentLeft { .. } => "agent_left",
+            Event::Rejoin { .. } => "rejoin",
+            Event::ReconnectAttempt { .. } => "reconnect_attempt",
+            Event::FrameTimeout { .. } => "frame_timeout",
+        }
+    }
+
+    /// One JSONL record.  Wall-clock data appears only under `"wall_us"`.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("ev", Json::Str(self.kind().to_string()))];
+        match self {
+            Event::Meta {
+                agents,
+                dim,
+                dense_bytes,
+            } => {
+                fields.push(("agents", num(*agents as u64)));
+                fields.push(("dim", num(*dim as u64)));
+                fields.push(("dense_bytes", num(*dense_bytes)));
+            }
+            Event::RoundStart { round } => fields.push(("round", num(*round))),
+            Event::RoundEnd {
+                round,
+                events,
+                up_bytes,
+                down_bytes,
+                vtime_us,
+                wall_us,
+            } => {
+                fields.push(("round", num(*round)));
+                fields.push(("events", num(*events)));
+                fields.push(("up_bytes", num(*up_bytes)));
+                fields.push(("down_bytes", num(*down_bytes)));
+                fields.push((
+                    "vtime_us",
+                    match vtime_us {
+                        Some(v) => num(*v),
+                        None => Json::Null,
+                    },
+                ));
+                if let Some(w) = wall_us {
+                    fields.push(("wall_us", num(*w)));
+                }
+            }
+            Event::TriggerFired { round, agent, line } => {
+                fields.push(("round", num(*round)));
+                fields.push(("agent", num(*agent as u64)));
+                fields.push(("line", Json::Str(line.as_str().to_string())));
+            }
+            Event::MessageSent {
+                round,
+                agent,
+                line,
+                bytes,
+            }
+            | Event::PacketDropped {
+                round,
+                agent,
+                line,
+                bytes,
+            } => {
+                fields.push(("round", num(*round)));
+                fields.push(("agent", num(*agent as u64)));
+                fields.push(("line", Json::Str(line.as_str().to_string())));
+                fields.push(("bytes", num(*bytes)));
+            }
+            Event::ResetSync {
+                round,
+                agent,
+                bytes,
+            } => {
+                fields.push(("round", num(*round)));
+                fields.push(("agent", num(*agent as u64)));
+                fields.push(("bytes", num(*bytes)));
+            }
+            Event::SolveDone {
+                round,
+                agent,
+                micros,
+            } => {
+                fields.push(("round", num(*round)));
+                fields.push(("agent", num(*agent as u64)));
+                fields.push(("wall_us", num(*micros)));
+            }
+            Event::AgentJoined { agent } | Event::AgentLeft { agent } => {
+                fields.push(("agent", num(*agent as u64)));
+            }
+            Event::Rejoin { round, agent } => {
+                fields.push(("round", num(*round)));
+                fields.push(("agent", num(*agent as u64)));
+            }
+            Event::ReconnectAttempt { agent, attempt } => {
+                fields.push(("agent", num(*agent as u64)));
+                fields.push(("attempt", num(*attempt as u64)));
+            }
+            Event::FrameTimeout { round } => fields.push(("round", num(*round))),
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Remove every `"wall_us"` key, recursively.  What remains is the
+/// deterministic view of a journal record: bit-identical across worker
+/// counts and transports for the same seeded run.
+pub fn strip_wall(j: &Json) -> Json {
+    match j {
+        Json::Obj(m) => Json::Obj(
+            m.iter()
+                .filter(|(k, _)| k.as_str() != "wall_us")
+                .map(|(k, v)| (k.clone(), strip_wall(v)))
+                .collect(),
+        ),
+        Json::Arr(a) => Json::Arr(a.iter().map(strip_wall).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Parse a JSONL journal into its records, rejecting malformed lines.
+pub fn parse_journal(src: &str) -> anyhow::Result<Vec<Json>> {
+    let mut out = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match Json::parse(line) {
+            Ok(j) => out.push(j),
+            Err(e) => anyhow::bail!("journal line {}: {e}", i + 1),
+        }
+    }
+    Ok(out)
+}
+
+/// Bounded ring buffer of the most recent events, for crash dumps: cheap
+/// to keep always-on, dumped as JSON when something goes wrong.
+#[derive(Clone, Debug)]
+pub struct FlightRecorder {
+    cap: usize,
+    buf: VecDeque<Event>,
+    evicted: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        FlightRecorder {
+            cap,
+            buf: VecDeque::with_capacity(cap),
+            evicted: 0,
+        }
+    }
+
+    /// Append, evicting the oldest event once the buffer is full.
+    pub fn push(&mut self, ev: Event) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.evicted += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// How many events have been evicted to make room.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Oldest-to-newest view of the retained events.
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.buf.iter()
+    }
+
+    /// `{"evicted": n, "events": [...]}` crash-dump payload.
+    pub fn dump_json(&self) -> Json {
+        Json::obj(vec![
+            ("evicted", num(self.evicted)),
+            (
+                "events",
+                Json::Arr(self.buf.iter().map(Event::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Log₂-bucketed histogram over `u64` samples (latencies in µs, byte
+/// sizes, attempt counts).  Bucket `i ≥ 1` covers `[2^(i-1), 2^i - 1]`;
+/// bucket 0 holds exact zeros.  Dependency-free and exact-counting: no
+/// sampling, no decay.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: [u64; 65],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: [0; 65],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl Histogram {
+    /// Bucket index of a sample: 0 for 0, else the sample's bit length.
+    pub fn bucket_of(v: u64) -> usize {
+        (u64::BITS - v.leading_zeros()) as usize
+    }
+
+    pub fn observe(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Non-empty buckets as `[lo, hi, count]` triples (oldest bucket
+    /// first), plus the summary stats.
+    pub fn to_json(&self) -> Json {
+        let mut triples = Vec::new();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let (lo, hi) = if i == 0 {
+                (0u64, 0u64)
+            } else {
+                (1u64 << (i - 1), (1u64 << (i - 1)).saturating_mul(2) - 1)
+            };
+            triples.push(Json::Arr(vec![num(lo), num(hi), num(c)]));
+        }
+        Json::obj(vec![
+            ("count", num(self.count)),
+            ("sum", num(self.sum)),
+            ("min", num(if self.count == 0 { 0 } else { self.min })),
+            ("max", num(self.max)),
+            ("buckets", Json::Arr(triples)),
+        ])
+    }
+}
+
+/// Dependency-free metrics registry: monotone counters, last-value
+/// gauges and [`Histogram`]s, all keyed by `&'static`-ish names in
+/// ordered maps (deterministic snapshot serialization).  Absorbs every
+/// [`Event`] routed through [`Obs::emit`], and accepts direct
+/// [`Metrics::observe`] calls for wall-side samples that never enter the
+/// journal.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&mut self, name: &str, v: u64) {
+        self.hists.entry(name.to_string()).or_default().observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// Fold one journal event into the registry.  The counter names here
+    /// are the stable metrics vocabulary (`trigger_up`, `bytes_down`, …).
+    pub fn absorb(&mut self, ev: &Event) {
+        match ev {
+            Event::Meta {
+                agents,
+                dim,
+                dense_bytes,
+            } => {
+                self.gauge("agents", *agents as f64);
+                self.gauge("dim", *dim as f64);
+                self.gauge("dense_bytes", *dense_bytes as f64);
+            }
+            Event::RoundStart { .. } => {}
+            Event::RoundEnd {
+                round,
+                up_bytes,
+                down_bytes,
+                wall_us,
+                ..
+            } => {
+                self.inc("rounds");
+                self.gauge("round", *round as f64);
+                self.gauge("up_bytes", *up_bytes as f64);
+                self.gauge("down_bytes", *down_bytes as f64);
+                if let Some(w) = wall_us {
+                    self.observe("round_us", *w);
+                }
+            }
+            Event::TriggerFired { line, .. } => match line {
+                Line::Up => self.inc("trigger_up"),
+                Line::Down => self.inc("trigger_down"),
+            },
+            Event::MessageSent { line, bytes, .. } => match line {
+                Line::Up => {
+                    self.inc("msgs_up");
+                    self.add("bytes_up", *bytes);
+                }
+                Line::Down => {
+                    self.inc("msgs_down");
+                    self.add("bytes_down", *bytes);
+                }
+            },
+            Event::PacketDropped { line, bytes, .. } => match line {
+                Line::Up => {
+                    self.inc("drops_up");
+                    self.add("dropped_bytes_up", *bytes);
+                }
+                Line::Down => {
+                    self.inc("drops_down");
+                    self.add("dropped_bytes_down", *bytes);
+                }
+            },
+            Event::ResetSync { bytes, .. } => {
+                self.inc("resyncs");
+                self.add("reset_bytes", *bytes);
+            }
+            Event::SolveDone { micros, .. } => self.observe("solve_us", *micros),
+            Event::AgentJoined { .. } => self.inc("joins"),
+            Event::AgentLeft { .. } => self.inc("leaves"),
+            Event::Rejoin { .. } => self.inc("rejoins"),
+            Event::ReconnectAttempt { .. } => self.inc("reconnect_attempts"),
+            Event::FrameTimeout { .. } => self.inc("frame_timeouts"),
+        }
+    }
+
+    /// `{"counters": {...}, "gauges": {...}, "hists": {...}}`.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "hists",
+                Json::Obj(
+                    self.hists
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Default flight-recorder depth: enough for a few rounds of a mid-size
+/// cohort without holding the whole run in memory.
+pub const FLIGHT_CAP: usize = 512;
+
+enum Sink {
+    /// Metrics + flight recorder only, no journal lines retained.
+    Null,
+    File(std::io::BufWriter<std::fs::File>),
+    Mem(Vec<String>),
+}
+
+/// The observability handle threaded through the coordinator and the
+/// round core.  [`Obs::off`] is a zero-cost no-op handle (the hot paths
+/// check [`Obs::on`] once per round); every other constructor records.
+pub struct Obs {
+    on: bool,
+    sink: Sink,
+    pub flight: FlightRecorder,
+    pub metrics: Metrics,
+    write_errors: u64,
+}
+
+impl Obs {
+    /// Disabled: `emit` returns immediately, nothing is recorded.
+    pub fn off() -> Self {
+        Obs {
+            on: false,
+            sink: Sink::Null,
+            flight: FlightRecorder::new(1),
+            metrics: Metrics::new(),
+            write_errors: 0,
+        }
+    }
+
+    /// Metrics + flight recorder, no journal (the `deluxe serve` default:
+    /// feeds the `Status` frame without touching disk).
+    pub fn new() -> Self {
+        Obs {
+            on: true,
+            sink: Sink::Null,
+            flight: FlightRecorder::new(FLIGHT_CAP),
+            metrics: Metrics::new(),
+            write_errors: 0,
+        }
+    }
+
+    /// Journal to a JSONL file (plus metrics + flight recorder).
+    pub fn to_path(path: &std::path::Path) -> anyhow::Result<Obs> {
+        let f = match std::fs::File::create(path) {
+            Ok(f) => f,
+            Err(e) => anyhow::bail!("cannot create journal {}: {e}", path.display()),
+        };
+        Ok(Obs {
+            on: true,
+            sink: Sink::File(std::io::BufWriter::new(f)),
+            flight: FlightRecorder::new(FLIGHT_CAP),
+            metrics: Metrics::new(),
+            write_errors: 0,
+        })
+    }
+
+    /// Journal to memory — determinism tests compare these lines.
+    pub fn in_memory() -> Self {
+        Obs {
+            on: true,
+            sink: Sink::Mem(Vec::new()),
+            flight: FlightRecorder::new(FLIGHT_CAP),
+            metrics: Metrics::new(),
+            write_errors: 0,
+        }
+    }
+
+    /// Whether this handle records anything (hot paths gate on this).
+    pub fn on(&self) -> bool {
+        self.on
+    }
+
+    /// Journal one event: metrics absorb, flight-recorder push, one JSONL
+    /// line to the sink.  Write errors are counted, never panicked on.
+    pub fn emit(&mut self, ev: Event) {
+        if !self.on {
+            return;
+        }
+        self.metrics.absorb(&ev);
+        match &mut self.sink {
+            Sink::Null => {}
+            Sink::File(w) => {
+                if writeln!(w, "{}", ev.to_json()).is_err() {
+                    self.write_errors += 1;
+                }
+            }
+            Sink::Mem(v) => v.push(ev.to_json().to_string()),
+        }
+        self.flight.push(ev);
+    }
+
+    /// In-memory journal lines ([`Obs::in_memory`] only; empty otherwise).
+    pub fn mem_lines(&self) -> &[String] {
+        match &self.sink {
+            Sink::Mem(v) => v,
+            _ => &[],
+        }
+    }
+
+    /// Journal write failures swallowed so far.
+    pub fn write_errors(&self) -> u64 {
+        self.write_errors
+    }
+
+    /// Flush a file-backed journal (no-op otherwise).
+    pub fn flush(&mut self) {
+        if let Sink::File(w) = &mut self.sink {
+            if w.flush().is_err() {
+                self.write_errors += 1;
+            }
+        }
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::off()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bucket_edges() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(1023), 10);
+        assert_eq!(Histogram::bucket_of(1024), 11);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 64);
+    }
+
+    #[test]
+    fn histogram_counts_and_stats() {
+        let mut h = Histogram::default();
+        for v in [0u64, 1, 2, 3, 700, 700] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 1406);
+        let j = h.to_json();
+        assert_eq!(j.get("min").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(j.get("max").and_then(|v| v.as_usize()), Some(700));
+        // buckets: [0,0]=1, [1,1]=1, [2,3]=2, [512,1023]=2
+        let buckets = j.get("buckets").and_then(|b| b.as_arr()).unwrap();
+        assert_eq!(buckets.len(), 4);
+    }
+
+    #[test]
+    fn strip_wall_removes_only_wall_fields() {
+        let ev = Event::SolveDone {
+            round: 3,
+            agent: 1,
+            micros: 812,
+        };
+        let j = ev.to_json();
+        assert!(j.get("wall_us").is_some());
+        let s = strip_wall(&j);
+        assert!(s.get("wall_us").is_none());
+        assert_eq!(s.get("round").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(s.get("agent").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(s.get("ev").and_then(|v| v.as_str()), Some("solve_done"));
+    }
+
+    #[test]
+    fn event_json_has_kind_and_parses_back() {
+        let evs = vec![
+            Event::Meta {
+                agents: 4,
+                dim: 8,
+                dense_bytes: 41,
+            },
+            Event::RoundStart { round: 0 },
+            Event::RoundEnd {
+                round: 0,
+                events: 3,
+                up_bytes: 120,
+                down_bytes: 82,
+                vtime_us: Some(900),
+                wall_us: Some(55),
+            },
+            Event::TriggerFired {
+                round: 0,
+                agent: 2,
+                line: Line::Up,
+            },
+            Event::MessageSent {
+                round: 0,
+                agent: 2,
+                line: Line::Up,
+                bytes: 41,
+            },
+            Event::PacketDropped {
+                round: 0,
+                agent: 1,
+                line: Line::Down,
+                bytes: 41,
+            },
+            Event::ResetSync {
+                round: 5,
+                agent: 0,
+                bytes: 41,
+            },
+            Event::SolveDone {
+                round: 0,
+                agent: 3,
+                micros: 17,
+            },
+            Event::AgentJoined { agent: 0 },
+            Event::AgentLeft { agent: 1 },
+            Event::Rejoin { round: 7, agent: 1 },
+            Event::ReconnectAttempt {
+                agent: 1,
+                attempt: 2,
+            },
+            Event::FrameTimeout { round: 9 },
+        ];
+        for ev in &evs {
+            let line = ev.to_json().to_string();
+            let back = Json::parse(&line).unwrap();
+            assert_eq!(back.get("ev").and_then(|v| v.as_str()), Some(ev.kind()));
+        }
+        // journal round-trips through the JSONL parser
+        let src: String = evs
+            .iter()
+            .map(|e| format!("{}\n", e.to_json()))
+            .collect();
+        let parsed = parse_journal(&src).unwrap();
+        assert_eq!(parsed.len(), evs.len());
+    }
+
+    #[test]
+    fn flight_recorder_evicts_oldest_and_counts() {
+        let mut fr = FlightRecorder::new(3);
+        for r in 0..5u64 {
+            fr.push(Event::RoundStart { round: r });
+        }
+        assert_eq!(fr.len(), 3);
+        assert_eq!(fr.evicted(), 2);
+        let rounds: Vec<u64> = fr
+            .events()
+            .map(|e| match e {
+                Event::RoundStart { round } => *round,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(rounds, vec![2, 3, 4]);
+        let dump = fr.dump_json();
+        assert_eq!(dump.get("evicted").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(
+            dump.get("events").and_then(|e| e.as_arr()).map(|a| a.len()),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn metrics_absorb_vocabulary() {
+        let mut m = Metrics::new();
+        m.absorb(&Event::TriggerFired {
+            round: 0,
+            agent: 0,
+            line: Line::Up,
+        });
+        m.absorb(&Event::MessageSent {
+            round: 0,
+            agent: 0,
+            line: Line::Up,
+            bytes: 41,
+        });
+        m.absorb(&Event::PacketDropped {
+            round: 0,
+            agent: 1,
+            line: Line::Down,
+            bytes: 20,
+        });
+        m.absorb(&Event::SolveDone {
+            round: 0,
+            agent: 0,
+            micros: 100,
+        });
+        m.absorb(&Event::ResetSync {
+            round: 0,
+            agent: 0,
+            bytes: 41,
+        });
+        assert_eq!(m.counter("trigger_up"), 1);
+        assert_eq!(m.counter("msgs_up"), 1);
+        assert_eq!(m.counter("bytes_up"), 41);
+        assert_eq!(m.counter("drops_down"), 1);
+        assert_eq!(m.counter("dropped_bytes_down"), 20);
+        assert_eq!(m.counter("resyncs"), 1);
+        assert_eq!(m.counter("reset_bytes"), 41);
+        assert_eq!(m.hist("solve_us").map(|h| h.count()), Some(1));
+        let snap = m.snapshot();
+        assert!(snap.get("counters").is_some());
+        assert!(snap.get("gauges").is_some());
+        assert!(snap.get("hists").is_some());
+    }
+
+    #[test]
+    fn obs_off_records_nothing_and_in_memory_records_lines() {
+        let mut off = Obs::off();
+        off.emit(Event::RoundStart { round: 0 });
+        assert!(!off.on());
+        assert_eq!(off.flight.len(), 0);
+        assert_eq!(off.metrics.counter("rounds"), 0);
+
+        let mut mem = Obs::in_memory();
+        mem.emit(Event::RoundStart { round: 0 });
+        mem.emit(Event::RoundEnd {
+            round: 0,
+            events: 0,
+            up_bytes: 0,
+            down_bytes: 0,
+            vtime_us: None,
+            wall_us: None,
+        });
+        assert_eq!(mem.mem_lines().len(), 2);
+        assert_eq!(mem.metrics.counter("rounds"), 1);
+        assert_eq!(mem.flight.len(), 2);
+    }
+}

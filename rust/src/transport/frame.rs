@@ -1,6 +1,6 @@
 //! The transport frame protocol and its length-prefixed byte framing.
 //!
-//! Every transport moves the same six [`Frame`] kinds; the socket
+//! Every transport moves the same eight [`Frame`] kinds; the socket
 //! transports serialize them as
 //!
 //! ```text
@@ -28,6 +28,8 @@ const TAG_ROUND: u8 = 2;
 const TAG_RESET: u8 = 3;
 const TAG_STOP: u8 = 4;
 const TAG_REPLY: u8 = 5;
+const TAG_STATUS_REQ: u8 = 6;
+const TAG_STATUS: u8 = 7;
 
 /// One protocol message between the leader and an agent.  The deployed
 /// runtime speaks the f32 PJRT parameter ABI, so frames are concrete
@@ -65,6 +67,15 @@ pub enum Frame {
         /// `Some(msg)` iff the d-trigger fired AND the packet survived.
         delta: Option<WireMessage<f32>>,
     },
+    /// Out-of-band introspection probe (`deluxe status`): a one-shot
+    /// connection sends this instead of [`Frame::Hello`] and gets a
+    /// [`Frame::Status`] back.  Never enters the round protocol and is
+    /// not charged to the books (a control frame, DESIGN.md §13).
+    StatusReq,
+    /// The leader's latest status snapshot, as a JSON document (the
+    /// coordinator's metrics/liveness view, published per round via
+    /// `Transport::set_status`).
+    Status { json: String },
 }
 
 impl Frame {
@@ -77,6 +88,8 @@ impl Frame {
             Frame::Reset { .. } => "reset",
             Frame::Stop => "stop",
             Frame::Reply { .. } => "reply",
+            Frame::StatusReq => "status_req",
+            Frame::Status { .. } => "status",
         }
     }
 }
@@ -172,6 +185,12 @@ pub fn encode_frame(f: &Frame) -> Vec<u8> {
             put_opt_msg(&mut body, delta);
             TAG_REPLY
         }
+        Frame::StatusReq => TAG_STATUS_REQ,
+        Frame::Status { json } => {
+            put_u32(&mut body, json.len() as u32);
+            body.extend_from_slice(json.as_bytes());
+            TAG_STATUS
+        }
     };
     let mut out = Vec::with_capacity(5 + body.len());
     out.push(tag);
@@ -211,6 +230,19 @@ fn decode_body(tag: u8, body: &[u8]) -> anyhow::Result<Frame> {
             sent_bytes: get_u64(body, &mut pos)?,
             delta: get_opt_msg(body, &mut pos)?,
         },
+        TAG_STATUS_REQ => Frame::StatusReq,
+        TAG_STATUS => {
+            let len = get_u32(body, &mut pos)? as usize;
+            if body.len() < pos + len {
+                anyhow::bail!("truncated status payload at offset {pos}");
+            }
+            let json = match std::str::from_utf8(&body[pos..pos + len]) {
+                Ok(s) => s.to_string(),
+                Err(e) => anyhow::bail!("status payload is not UTF-8: {e}"),
+            };
+            pos += len;
+            Frame::Status { json }
+        }
         other => anyhow::bail!("unknown frame tag {other}"),
     };
     if pos != body.len() {
@@ -311,6 +343,32 @@ mod tests {
             sent_bytes: 0,
             delta: Some(WireMessage::dense(&[42.0f32])),
         });
+        roundtrip(Frame::StatusReq);
+        roundtrip(Frame::Status { json: String::new() });
+        roundtrip(Frame::Status {
+            json: "{\"round\":7,\"live\":[true,false]}".to_string(),
+        });
+    }
+
+    #[test]
+    fn corrupt_status_frames_are_rejected() {
+        // truncated payload: declared string length exceeds the body
+        let mut buf = encode_frame(&Frame::Status { json: "abcd".into() });
+        let body_len = (buf.len() - 5) as u32;
+        buf[5..9].copy_from_slice(&100u32.to_le_bytes());
+        buf[1..5].copy_from_slice(&body_len.to_le_bytes());
+        assert!(decode_frame(&buf).is_err());
+        // non-UTF-8 payload
+        let mut bad = encode_frame(&Frame::Status { json: "ab".into() });
+        let n = bad.len();
+        bad[n - 1] = 0xFF;
+        bad[n - 2] = 0xC0;
+        assert!(decode_frame(&bad).is_err());
+        // status_req with trailing bytes
+        let mut req = encode_frame(&Frame::StatusReq);
+        req[1] = 1;
+        req.push(0);
+        assert!(decode_frame(&req).is_err());
     }
 
     #[test]

@@ -6,10 +6,9 @@
 //! estimates drift by the accumulated `χ` disturbances until a reset
 //! re-synchronizes them.
 //!
-//! [`LossyLink`] was called `DropChannel` when it lived under
-//! [`crate::comm`]; the loss process is transport-level state, so the
-//! transport redesign moved it here.  `crate::comm` keeps a deprecated
-//! re-export shim for one PR.
+//! [`LossyLink`] originated under [`crate::comm`]; the loss process is
+//! transport-level state, so the transport redesign moved it here
+//! (`crate::comm` still re-exports the stats/model types).
 
 use crate::rng::Rng;
 

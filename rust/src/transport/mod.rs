@@ -134,6 +134,26 @@ pub trait Transport {
     /// Human-readable transport kind (for logs and bench labels).
     fn label(&self) -> &'static str;
 
+    /// Publish the coordinator's latest status snapshot (a JSON string)
+    /// for out-of-band introspection — the socket transports serve it to
+    /// [`Frame::StatusReq`] probes (`deluxe status`).  Default: no-op;
+    /// pair with [`Transport::wants_status`] so the coordinator skips
+    /// building the snapshot when nobody can read it.
+    fn set_status(&mut self, _json: &str) {}
+
+    /// Whether this transport can serve a published status snapshot.
+    fn wants_status(&self) -> bool {
+        false
+    }
+
+    /// Deterministic virtual time in µs, if this transport models one
+    /// ([`SimLink`]).  Journaled in `RoundEnd` as a *deterministic*
+    /// field — unlike wall-clock, virtual time is part of the seeded
+    /// trajectory.
+    fn vtime_us(&self) -> Option<u64> {
+        None
+    }
+
     /// Tear down threads/sockets.  Called once, after the coordinator
     /// has drained final replies.
     fn shutdown(&mut self) -> anyhow::Result<()>;

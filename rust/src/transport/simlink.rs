@@ -152,6 +152,12 @@ impl Transport for SimLink {
         "simlink"
     }
 
+    /// The virtual clock is deterministic state (ticks are µs), so it
+    /// may appear in the journal's deterministic fields.
+    fn vtime_us(&self) -> Option<u64> {
+        Some(self.vtime)
+    }
+
     fn shutdown(&mut self) -> anyhow::Result<()> {
         // account for the final round's deliveries before the books close
         self.vtime += self.round_max;

@@ -28,7 +28,7 @@ use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -207,6 +207,10 @@ struct Shared {
     /// can log where it re-entered.
     round: AtomicU64,
     rejected: AtomicU64,
+    /// Latest coordinator status snapshot (JSON), served to
+    /// [`Frame::StatusReq`] probes by the acceptor thread.  Empty until
+    /// the coordinator publishes one via `Transport::set_status`.
+    status: Mutex<String>,
 }
 
 /// The leader end of a process-per-agent cohort over real sockets.
@@ -249,6 +253,7 @@ impl<L: NetListener> SocketTransport<L> {
             stop: AtomicBool::new(false),
             round: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            status: Mutex::new(String::new()),
         });
         let (ctl_tx, ctl_rx) = channel();
         let (ev_tx, ev_rx) = channel();
@@ -456,6 +461,20 @@ impl<L: NetListener> Transport for SocketTransport<L> {
         L::kind_label()
     }
 
+    fn set_status(&mut self, json: &str) {
+        let mut s = self
+            .shared
+            .status
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        s.clear();
+        s.push_str(json);
+    }
+
+    fn wants_status(&self) -> bool {
+        true
+    }
+
     fn shutdown(&mut self) -> anyhow::Result<()> {
         self.shared.stop.store(true, Ordering::SeqCst);
         for w in self.writers.iter_mut() {
@@ -527,6 +546,18 @@ fn acceptor_loop<L: NetListener>(
         let (agent, their_digest, their_dim) = match read_frame(&mut reader) {
             Ok(Frame::Hello { agent, digest, dim }) => {
                 (agent as usize, digest, dim)
+            }
+            Ok(Frame::StatusReq) => {
+                // out-of-band introspection probe (`deluxe status`): a
+                // one-shot connection, answered from the published
+                // snapshot and closed — not a handshake, not a rejection
+                let json = shared
+                    .status
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .clone();
+                let _ = write_frame(&mut reader, &Frame::Status { json });
+                continue;
             }
             _ => {
                 reject("no Hello within handshake timeout");

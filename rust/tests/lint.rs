@@ -108,6 +108,48 @@ fn fixture_unaccounted_write_all_fires_in_transport_module() {
     assert!(rules_of("rust/tests/fixture.rs", &src).is_empty());
 }
 
+#[test]
+fn fixture_journaled_write_all_still_trips_unaccounted_send() {
+    // an obs journal line next to the write does not satisfy the byte
+    // books — only WireStats charging does
+    let src = fixture("unaccounted_send_journaled.rs");
+    assert_eq!(
+        rules_of("rust/src/transport/fixture.rs", &src),
+        vec!["unaccounted-send"]
+    );
+    assert!(rules_of("rust/src/model/fixture.rs", &src).is_empty());
+}
+
+#[test]
+fn obs_is_a_restricted_module() {
+    // journal emission order feeds the determinism tests, so obs joins
+    // the restricted set: nondet iteration and raw sends fire there
+    let src = fixture("nondet_iteration.rs");
+    assert_eq!(
+        rules_of("rust/src/obs/fixture.rs", &src),
+        vec!["nondet-iteration"]
+    );
+    let src = fixture("unaccounted_send_write.rs");
+    assert_eq!(
+        rules_of("rust/src/obs/fixture.rs", &src),
+        vec!["unaccounted-send"]
+    );
+}
+
+#[test]
+fn wall_clock_allowed_only_in_the_obs_timing_sampler() {
+    let src = fixture("wall_clock.rs");
+    // the scoped allowance covers exactly rust/src/obs/clock.rs ...
+    assert!(rules_of("rust/src/obs/clock.rs", &src).is_empty());
+    // ... not the rest of the obs module, and not like-named files
+    // elsewhere in restricted modules
+    assert_eq!(rules_of("rust/src/obs/mod.rs", &src), vec!["wall-clock"]);
+    assert_eq!(
+        rules_of("rust/src/transport/clock.rs", &src),
+        vec!["wall-clock"]
+    );
+}
+
 // ---------------------------------------------------------------------------
 // suppression semantics
 // ---------------------------------------------------------------------------

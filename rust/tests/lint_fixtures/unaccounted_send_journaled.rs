@@ -1,0 +1,22 @@
+// Fixture: journaling a send is NOT accounting for it.  A transport
+// write that emits an observability event but never charges WireStats
+// must still produce exactly one unaccounted-send finding — the event
+// journal mirrors the byte books, it does not replace them.
+pub struct FakeObs {
+    pub lines: Vec<String>,
+}
+
+impl FakeObs {
+    pub fn emit(&mut self, line: &str) {
+        self.lines.push(line.to_string());
+    }
+}
+
+pub fn push_journaled(
+    w: &mut impl std::io::Write,
+    obs: &mut FakeObs,
+    buf: &[u8],
+) -> std::io::Result<()> {
+    obs.emit("msg_sent");
+    w.write_all(buf)
+}

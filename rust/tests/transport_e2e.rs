@@ -105,6 +105,166 @@ fn tcp_loopback_matches_inproc_bitwise() {
 }
 
 #[test]
+fn tcp_journal_matches_inproc_on_deterministic_fields() {
+    use deluxe::obs::{strip_wall, Obs};
+
+    let (train, _, spec, init) = workload(61);
+    let cfg = RunConfig::default()
+        .with_steps(2)
+        .with_batch(4)
+        .with_trigger_d(Trigger::vanilla(0.05))
+        .with_trigger_z(Trigger::vanilla(0.05))
+        .with_seed(59);
+
+    let mut a = Coordinator::spawn(
+        cfg.clone(),
+        spec.clone(),
+        single_class_split(&train, 4),
+        init.clone(),
+    );
+    a.obs = Obs::in_memory();
+
+    let digest = cfg.digest(init.len(), 4);
+    let mut tp =
+        Tcp::bind("127.0.0.1:0", 4, digest, init.len(), SocketOpts::default())
+            .expect("bind leader");
+    let addr = tp.local_addr().to_string();
+    let endpoints =
+        make_endpoints(&cfg, &spec, single_class_split(&train, 4), &init);
+    let joins = spawn_agents(&addr, endpoints, digest, |_| AgentOpts::default());
+    tp.await_cohort().expect("cohort formation");
+    let mut b = Coordinator::over(tp, cfg, spec, init);
+    b.obs = Obs::in_memory();
+
+    for _ in 0..10 {
+        a.round();
+        b.round();
+    }
+    // the deterministic journal fields (everything but "wall_us") are
+    // bit-identical between the in-proc and TCP transports: triggers,
+    // byte deltas and round books come from identical LossyLink state,
+    // and uplink events are journaled in agent order at apply time
+    let strip = |o: &Obs| -> Vec<String> {
+        o.mem_lines()
+            .iter()
+            .map(|l| {
+                let j = deluxe::jsonio::Json::parse(l).expect("journal line");
+                strip_wall(&j).to_string()
+            })
+            .collect()
+    };
+    let (ja, jb) = (strip(&a.obs), strip(&b.obs));
+    assert!(!ja.is_empty(), "journal recorded events");
+    assert_eq!(ja, jb, "journals diverged between in-proc and TCP");
+    // the journal reconciles exactly with the engine books (the
+    // ISSUE's acceptance criterion): per-line sums equal the wire
+    // stats the coordinator kept independently
+    let sum_bytes = |lines: &[String], ev: &str, line: &str| -> u64 {
+        lines
+            .iter()
+            .map(|l| deluxe::jsonio::Json::parse(l).expect("line"))
+            .filter(|j| {
+                j.get("ev").and_then(|v| v.as_str()) == Some(ev)
+                    && (line.is_empty()
+                        || j.get("line").and_then(|v| v.as_str())
+                            == Some(line))
+            })
+            .map(|j| {
+                j.get("bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64
+            })
+            .sum()
+    };
+    assert_eq!(
+        sum_bytes(&jb, "msg_sent", "up"),
+        b.uplink_bytes(),
+        "journaled uplink bytes must equal the cumulative Reply books"
+    );
+    assert_eq!(
+        sum_bytes(&jb, "msg_sent", "down")
+            + sum_bytes(&jb, "reset_sync", ""),
+        b.downlink_bytes(),
+        "journaled downlink + reset bytes must equal the wire books"
+    );
+
+    a.shutdown();
+    b.shutdown();
+    for j in joins {
+        assert_eq!(j.join().expect("agent thread"), SessionEnd::Stopped);
+    }
+}
+
+#[test]
+fn status_probe_round_trips_over_tcp() {
+    use deluxe::jsonio::Json;
+    use deluxe::transport::frame::{read_frame, write_frame, Frame};
+
+    let (train, _, spec, init) = workload(67);
+    let cfg = RunConfig::default()
+        .with_steps(2)
+        .with_batch(4)
+        .with_trigger_d(Trigger::vanilla(0.05))
+        .with_trigger_z(Trigger::vanilla(0.05))
+        .with_seed(71);
+    let digest = cfg.digest(init.len(), 4);
+    let mut tp =
+        Tcp::bind("127.0.0.1:0", 4, digest, init.len(), SocketOpts::default())
+            .expect("bind leader");
+    let addr = tp.local_addr().to_string();
+    let endpoints =
+        make_endpoints(&cfg, &spec, single_class_split(&train, 4), &init);
+    let joins = spawn_agents(&addr, endpoints, digest, |_| AgentOpts::default());
+    tp.await_cohort().expect("cohort formation");
+    let mut coord = Coordinator::over(tp, cfg, spec, init);
+    coord.obs = deluxe::obs::Obs::new();
+
+    let rounds = 6u64;
+    for _ in 0..rounds {
+        coord.round();
+    }
+
+    // one-shot probe connection: StatusReq instead of Hello, answered
+    // by the acceptor from the published snapshot (the `deluxe status`
+    // code path)
+    let mut probe =
+        std::net::TcpStream::connect(&addr).expect("probe connect");
+    write_frame(&mut probe, &Frame::StatusReq).expect("send StatusReq");
+    let json = match read_frame(&mut probe).expect("read Status") {
+        Frame::Status { json } => json,
+        other => panic!("expected Status, got {}", other.kind()),
+    };
+    let st = Json::parse(&json).expect("status JSON parses");
+    assert_eq!(
+        st.get("round").and_then(|j| j.as_f64()),
+        Some(rounds as f64)
+    );
+    assert_eq!(st.get("agents").and_then(|j| j.as_f64()), Some(4.0));
+    let live = st.get("live").and_then(|j| j.as_arr()).expect("live array");
+    assert_eq!(live.len(), 4);
+    assert!(live.iter().all(|l| l.as_bool() == Some(true)));
+    // per-agent books and the metrics snapshot ride along
+    let upb = st
+        .get("uplink_bytes")
+        .and_then(|j| j.as_arr())
+        .expect("uplink_bytes");
+    assert_eq!(upb.len(), 4);
+    let metrics = st.get("metrics").expect("metrics snapshot");
+    assert_eq!(
+        metrics
+            .get("counters")
+            .and_then(|c| c.get("rounds"))
+            .and_then(|v| v.as_f64()),
+        Some(rounds as f64)
+    );
+    // the probe was not a failed handshake
+    assert_eq!(coord.transport().rejected_handshakes(), 0);
+
+    coord.shutdown();
+    for j in joins {
+        assert_eq!(j.join().expect("agent thread"), SessionEnd::Stopped);
+    }
+}
+
+#[test]
 fn tcp_survives_agent_crash_with_rejoin_resync() {
     let (train, test, spec, init) = workload(37);
     let cfg = RunConfig::default()
