@@ -10,7 +10,9 @@
 //! coordinator round driven in-proc vs over a TCP loopback cohort
 //! (the socket runtime's per-round transport tax), plus the same
 //! in-proc round with the obs journal off vs streaming JSONL to disk
-//! (the journal tax — acceptance budget is within 5% per round).
+//! (the journal tax — acceptance budget is within 5% per round), plus
+//! the journaling round with hierarchical spans off vs on (the span
+//! tax, same 5% budget — gated in CI by `deluxe perfdiff`).
 
 use deluxe::admm::{ConsensusAdmm, ConsensusConfig};
 use deluxe::benchlib::{black_box, Bench};
@@ -430,6 +432,9 @@ fn trajectory(path: &str) {
             init,
         );
         on.obs = Obs::to_path(&jpath).expect("open bench journal sink");
+        // spans off here so this case keeps measuring the pure journal
+        // tax (the span tax gets its own off/on pair below)
+        on.obs.set_spans(false);
         let res_on = b.bench(
             "coordinator.round (4 agents, mlp 8-16-4, journal on)",
             || {
@@ -441,11 +446,94 @@ fn trajectory(path: &str) {
             ("journal", Json::Str("on".to_string())),
             ("per_round_us", Json::Num(on_ns / 1e3)),
             ("rounds_per_sec", Json::Num(1e9 / on_ns)),
-            ("overhead_vs_off_pct", Json::Num((on_ns / off_ns - 1.0) * 100.0)),
+            (
+                "overhead_vs_off_pct",
+                Json::Num(deluxe::benchlib::overhead_pct(off_ns, on_ns)),
+            ),
             ("result", res_on.to_json()),
         ]));
         on.shutdown();
         std::fs::remove_file(&jpath).ok();
+    }
+
+    // span tax: the same journaling round with hierarchical spans
+    // disabled vs enabled — both stream JSONL to disk, so the delta is
+    // purely the span open/close emission (TimedSpan stopwatch reads,
+    // per-link byte snapshots, two extra lines per span).  Same 5%
+    // budget as the journal tax, gated by `deluxe perfdiff` in CI.
+    {
+        use deluxe::config::RunConfig;
+        use deluxe::coordinator::Coordinator;
+        use deluxe::data::partition::single_class_split;
+        use deluxe::data::synth::{generate as synth_generate, SynthSpec};
+        use deluxe::obs::Obs;
+
+        let mut wrng = Pcg64::seed(5);
+        let (train, _) = synth_generate(&SynthSpec::tiny(), &mut wrng);
+        let mlp = MlpSpec::new(vec![8, 16, 4]);
+        let init = mlp.init(&mut wrng);
+        let cfg = RunConfig::default()
+            .with_steps(2)
+            .with_batch(8)
+            .with_trigger_d(Trigger::vanilla(1e-9))
+            .with_trigger_z(Trigger::vanilla(1e-9))
+            .with_seed(11);
+
+        let pid = std::process::id();
+        let jpath_off = std::env::temp_dir()
+            .join(format!("dela_bench_spans_off_{pid}.jsonl"));
+        let mut off = Coordinator::spawn(
+            cfg.clone(),
+            mlp.clone(),
+            single_class_split(&train, 4),
+            init.clone(),
+        );
+        off.obs = Obs::to_path(&jpath_off).expect("open bench journal sink");
+        off.obs.set_spans(false);
+        let res_off = b.bench(
+            "coordinator.round (4 agents, mlp 8-16-4, spans off)",
+            || {
+                off.round();
+            },
+        );
+        let off_ns = res_off.median_ns();
+        cases.push(Json::obj(vec![
+            ("spans", Json::Str("off".to_string())),
+            ("per_round_us", Json::Num(off_ns / 1e3)),
+            ("rounds_per_sec", Json::Num(1e9 / off_ns)),
+            ("result", res_off.to_json()),
+        ]));
+        off.shutdown();
+        std::fs::remove_file(&jpath_off).ok();
+
+        let jpath_on = std::env::temp_dir()
+            .join(format!("dela_bench_spans_on_{pid}.jsonl"));
+        let mut on = Coordinator::spawn(
+            cfg,
+            mlp,
+            single_class_split(&train, 4),
+            init,
+        );
+        on.obs = Obs::to_path(&jpath_on).expect("open bench journal sink");
+        let res_on = b.bench(
+            "coordinator.round (4 agents, mlp 8-16-4, spans on)",
+            || {
+                on.round();
+            },
+        );
+        let on_ns = res_on.median_ns();
+        cases.push(Json::obj(vec![
+            ("spans", Json::Str("on".to_string())),
+            ("per_round_us", Json::Num(on_ns / 1e3)),
+            ("rounds_per_sec", Json::Num(1e9 / on_ns)),
+            (
+                "overhead_vs_off_pct",
+                Json::Num(deluxe::benchlib::overhead_pct(off_ns, on_ns)),
+            ),
+            ("result", res_on.to_json()),
+        ]));
+        on.shutdown();
+        std::fs::remove_file(&jpath_on).ok();
     }
     let doc = Json::obj(vec![
         (
@@ -459,7 +547,7 @@ fn trajectory(path: &str) {
             Json::Str(
                 "consensus.round (64 agents, dim 128), pooled exact prox; \
                  coordinator.round (4 agents, mlp 8-16-4), in-proc vs \
-                 tcp loopback, and journal off vs on"
+                 tcp loopback, journal off vs on, and spans off vs on"
                     .to_string(),
             ),
         ),

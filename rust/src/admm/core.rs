@@ -30,7 +30,7 @@
 //! the `determinism` integration tests.
 
 use crate::comm::{Scalar, Trigger, TriggerState};
-use crate::obs::{clock::Stopwatch, Event, Line, Obs};
+use crate::obs::{clock::Stopwatch, Event, Line, Obs, SpanKind, TimedSpan};
 use crate::transport::loss::{ChannelStats, LossyLink};
 use crate::rng::Pcg64;
 use crate::wire::{
@@ -486,8 +486,12 @@ impl<T: Scalar> RoundCore<T> {
     /// [`WorkerPool::run_timed`] but are emitted **post-barrier in agent
     /// order**, so the journal's event sequence is independent of worker
     /// count and scheduling (only the `wall_us` values differ, and those
-    /// are stripped for determinism comparisons).  With `obs` off this is
-    /// exactly [`WorkerPool::run`].
+    /// are stripped for determinism comparisons).  With spans on the
+    /// phase is wrapped in a `local_solve` span containing one `solve`
+    /// span per agent (DESIGN.md §14); each agent's `SolveDone` line
+    /// lands positionally inside its own span, and the span's wall is
+    /// the pool's per-agent measurement — no extra clock reads.  With
+    /// `obs` off this is exactly [`WorkerPool::run`].
     pub fn solve_timed<S, F>(&self, items: &mut [S], f: F, obs: &mut Obs)
     where
         S: Send,
@@ -497,11 +501,15 @@ impl<T: Scalar> RoundCore<T> {
             self.pool.run(items, f);
             return;
         }
-        let micros = self.pool.run_timed(items, f);
         let round = self.round_idx as u64;
+        let phase = TimedSpan::open(obs, SpanKind::LocalSolve, round, None);
+        let micros = self.pool.run_timed(items, f);
         for (agent, us) in micros.into_iter().enumerate() {
+            let s = obs.open_span(SpanKind::Solve, round, Some(agent));
             obs.emit(Event::SolveDone { round, agent, micros: us });
+            obs.close_span(s, None, None, Some(us));
         }
+        phase.close(obs, None, None);
     }
 
     /// Close the round: advance the counter and report whether the

@@ -58,7 +58,11 @@ pub const WALL_CLOCK_ALLOW: [&str; 2] = ["benchlib", "metrics"];
 /// journal feeds trajectories in tests), but its timing sampler is the
 /// one place the observability layer may read the clock.  Keeping the
 /// allowance per-file rather than per-module means a stray `Instant`
-/// anywhere else in `obs` still fires.
+/// anywhere else in `obs` still fires — deliberately including the
+/// span layer (`obs/span.rs`), whose `TimedSpan` must route every
+/// timing read through [`obs::clock::Stopwatch`] so wall-clock stays
+/// confined to `"wall_us"` keys; a raw `Instant::now` in span-shaped
+/// code is pinned as a finding by the `wall_clock_span.rs` fixture.
 pub const WALL_CLOCK_ALLOW_FILES: [&str; 1] = ["rust/src/obs/clock.rs"];
 
 /// Identifiers that construct RNG state from ambient entropy.

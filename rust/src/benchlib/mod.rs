@@ -184,6 +184,17 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Relative overhead of `on_ns` over `off_ns` in percent — the number
+/// the `BENCH_*.json` trajectory publishes as `overhead_vs_off_pct` and
+/// `deluxe perfdiff` gates against its budget.  A non-positive baseline
+/// yields 0 rather than a nonsense ratio.
+pub fn overhead_pct(off_ns: f64, on_ns: f64) -> f64 {
+    if off_ns <= 0.0 {
+        return 0.0;
+    }
+    (on_ns / off_ns - 1.0) * 100.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,6 +247,14 @@ mod tests {
         });
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn overhead_pct_is_relative_and_guards_zero_baseline() {
+        assert!((overhead_pct(100.0, 105.0) - 5.0).abs() < 1e-9);
+        assert!((overhead_pct(200.0, 100.0) + 50.0).abs() < 1e-9);
+        assert_eq!(overhead_pct(0.0, 100.0), 0.0);
+        assert_eq!(overhead_pct(-1.0, 100.0), 0.0);
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::config::RunConfig;
 use crate::data::synth::ClassDataset;
 use crate::jsonio::Json;
 use crate::model::MlpSpec;
-use crate::obs::{clock::Stopwatch, Event, Line, Obs};
+use crate::obs::{clock::Stopwatch, Event, Line, Obs, SpanKind, TimedSpan};
 use crate::rng::Pcg64;
 use crate::sim::link::LinkModel;
 use crate::transport::frame::Frame;
@@ -231,6 +231,11 @@ impl<TP: Transport> Coordinator<TP> {
         if self.obs.on() {
             self.obs.emit(Event::RoundStart { round });
         }
+        // the round span (DESIGN.md §14) wraps everything from transport
+        // round-begin to the pre-RoundEnd close; idle-churn resyncs land
+        // inside it but outside the phase spans
+        let round_span =
+            TimedSpan::open(&mut self.obs, SpanKind::Round, round, None);
         self.tp.begin_round();
         // absorb membership churn that happened between rounds, so a
         // crashed agent's rejoin is resynced before we address the round
@@ -244,6 +249,13 @@ impl<TP: Transport> Coordinator<TP> {
         } else {
             Vec::new()
         };
+        // broadcast phase span: wraps the sends and the downlink journal
+        // block, so trigger/msg/drop lines attribute to it positionally;
+        // each live link's send gets its own transmit child span whose
+        // deterministic fields come from the per-link book delta and the
+        // sim transport's per-send virtual time
+        let bcast_span =
+            TimedSpan::open(&mut self.obs, SpanKind::Broadcast, round, None);
         let mut fired = vec![false; n];
         let mut pending = vec![false; n];
         for i in 0..n {
@@ -261,6 +273,17 @@ impl<TP: Transport> Coordinator<TP> {
                     &mut self.rng,
                 ));
             }
+            let t_span = TimedSpan::open(
+                &mut self.obs,
+                SpanKind::Transmit,
+                round,
+                Some(i),
+            );
+            let t_before = if self.obs.spans_on() {
+                self.tp.stats().downlink.get(i).map_or(0, |l| l.bytes)
+            } else {
+                0
+            };
             // lint:allow(unaccounted-send): Transport::send charges the wire books internally (loss draw + byte accounting per frame kind)
             match self.tp.send(i, Frame::Round { zdelta: payload }, &mut self.rng)
             {
@@ -268,7 +291,23 @@ impl<TP: Transport> Coordinator<TP> {
                 // lint:allow(panic-in-library): a transport send error means the runtime fabric itself is gone (an agent thread panicked); propagating that panic is intended
                 Err(e) => panic!("transport send to agent {i}: {e}"),
             }
+            let t_bytes = if self.obs.spans_on() {
+                self.tp
+                    .stats()
+                    .downlink
+                    .get(i)
+                    .map_or(0, |l| l.bytes)
+                    .saturating_sub(t_before)
+            } else {
+                0
+            };
+            t_span.close(
+                &mut self.obs,
+                Some(t_bytes),
+                self.tp.last_send_vtime_us(),
+            );
         }
+        let mut down_delta = 0u64;
         if self.obs.on() {
             let down_after = self.downlink_book();
             for i in 0..n {
@@ -282,6 +321,7 @@ impl<TP: Transport> Coordinator<TP> {
                 let (b0, d0) = down_before[i];
                 let (b1, d1) = down_after[i];
                 if b1 > b0 {
+                    down_delta += b1 - b0;
                     self.obs.emit(Event::MessageSent {
                         round,
                         agent: i,
@@ -299,8 +339,12 @@ impl<TP: Transport> Coordinator<TP> {
                 }
             }
         }
+        bcast_span.close(&mut self.obs, Some(down_delta), None);
         // gather uplink: buffer replies per agent, apply in agent order
-        // (bit-reproducible regardless of delivery order)
+        // (bit-reproducible regardless of delivery order); the gather
+        // phase span wraps the reply wait and the uplink journal block
+        let gather_span =
+            TimedSpan::open(&mut self.obs, SpanKind::Gather, round, None);
         let up_before = if self.obs.on() {
             Some((
                 self.uplink_bytes_per_agent.clone(),
@@ -368,6 +412,7 @@ impl<TP: Transport> Coordinator<TP> {
         // uplink journal: agent-order apply-time emission from the
         // cumulative Reply counter deltas (receive order is not
         // deterministic; these deltas are)
+        let mut up_delta = 0u64;
         if let Some((pb, pe)) = up_before {
             for i in 0..n {
                 let ev_delta =
@@ -382,6 +427,7 @@ impl<TP: Transport> Coordinator<TP> {
                 let b_delta =
                     self.uplink_bytes_per_agent[i].saturating_sub(pb[i]);
                 if b_delta > 0 {
+                    up_delta += b_delta;
                     self.obs.emit(Event::MessageSent {
                         round,
                         agent: i,
@@ -391,6 +437,11 @@ impl<TP: Transport> Coordinator<TP> {
                 }
             }
         }
+        gather_span.close(&mut self.obs, Some(up_delta), None);
+        // apply phase span: reply application, the z-update and the
+        // periodic reset resync (its ResetSync lines land inside)
+        let apply_span =
+            TimedSpan::open(&mut self.obs, SpanKind::Apply, round, None);
         for msg in replies.iter().flatten() {
             self.zeta_hat.apply_scaled_msg(msg, 1.0 / n as f64);
         }
@@ -401,6 +452,7 @@ impl<TP: Transport> Coordinator<TP> {
             *z = zh + (1.0 - alpha) * *z;
         }
         self.round_idx += 1;
+        let mut reset_bytes = 0u64;
         if self.cfg.reset_period > 0
             && self.round_idx % self.cfg.reset_period == 0
         {
@@ -423,6 +475,7 @@ impl<TP: Transport> Coordinator<TP> {
                     Err(e) => panic!("transport reset to agent {i}: {e}"),
                 }
                 if self.obs.on() {
+                    reset_bytes += sync;
                     self.obs.emit(Event::ResetSync {
                         round,
                         agent: i,
@@ -431,6 +484,8 @@ impl<TP: Transport> Coordinator<TP> {
                 }
             }
         }
+        apply_span.close(&mut self.obs, Some(reset_bytes), None);
+        round_span.close(&mut self.obs, None, self.tp.vtime_us());
         if self.obs.on() {
             self.obs.emit(Event::RoundEnd {
                 round,

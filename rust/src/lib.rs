@@ -32,9 +32,10 @@
 //!   machine-checks the determinism / panic-freedom / byte-accounting
 //!   house invariants (DESIGN.md §11).
 //! * [`obs`] — structured observability: typed event journal with a
-//!   wall-clock/deterministic field split, bounded flight recorder, and
+//!   wall-clock/deterministic field split, bounded flight recorder,
 //!   the metrics registry behind `deluxe status` / `deluxe trace`
-//!   (DESIGN.md §13).
+//!   (DESIGN.md §13), and the hierarchical span layer + `deluxe
+//!   profile` critical-path analyzer on top of it (DESIGN.md §14).
 //! * Substrates built from scratch for the offline environment: [`rng`],
 //!   [`jsonio`], [`linalg`], [`data`], [`topology`], [`metrics`],
 //!   [`benchlib`], [`proptest`], [`cli`].
@@ -80,7 +81,9 @@ pub mod prelude {
     pub use crate::coordinator::run_uds_agent;
     pub use crate::linalg::Matrix;
     pub use crate::metrics::Recorder;
-    pub use crate::obs::{Event, FlightRecorder, Metrics, Obs};
+    pub use crate::obs::{
+        Event, FlightRecorder, Metrics, Obs, SpanKind, TimedSpan,
+    };
     pub use crate::rng::{Pcg64, Rng};
     pub use crate::transport::{
         Frame, InProc, LossModel, LossyLink, SimLink, SocketOpts, Tcp,

@@ -49,6 +49,19 @@ USAGE:
              deterministic fields of two journals; --check reconciles
              journal sums against the round-end books (exits 1 on
              mismatch)
+  deluxe profile PATH [--json] [--flame] [--check] [--strip]
+             aggregate a journal's hierarchical spans (DESIGN.md §14):
+             per-round phase breakdown, per-agent solve histograms and
+             critical-path attribution (which agent/link bounded each
+             round); --flame emits folded flame stacks, --strip drops
+             wall-clock first (deterministic output), --check verifies
+             phase durations and bytes reconcile with the round span
+             and the wire books (exits 1 on mismatch)
+  deluxe perfdiff BASE HEAD [--tol-pct P] [--budget-pct B]
+             compare two BENCH_*.json microbench trajectories: exits 1
+             when HEAD regresses a matching case's per-round time by
+             more than P% (default 50) or any journal/span overhead
+             case exceeds B% (default 5) — the CI regression gate
   deluxe sim --scenario NAME|file.json [--agents N] [--rounds N] [--seed S]
              [--workers N]
              discrete-event network simulation (builtins: ideal | lossy |
@@ -85,6 +98,8 @@ fn main() -> Result<()> {
         Some("agent") => run_agent(&args),
         Some("status") => run_status(&args),
         Some("trace") => run_trace(&args),
+        Some("profile") => run_profile(&args),
+        Some("perfdiff") => run_perfdiff(&args),
         Some("sim") => run_sim(&args),
         Some("lint") => run_lint(&args),
         Some("info") => run_info(&args),
@@ -1053,8 +1068,15 @@ fn run_trace(args: &Args) -> Result<()> {
         return trace_diff(&paths[0], &paths[1]);
     }
     let src = std::fs::read_to_string(&paths[0])?;
-    let events = deluxe::obs::parse_journal(&src)?;
-    trace_summary(&events, args.has("check"))
+    let parsed = deluxe::obs::parse_journal_lossy(&src)?;
+    if parsed.truncated > 0 {
+        eprintln!(
+            "warning: final journal line truncated (crashed writer?); \
+             recovered {} complete events",
+            parsed.events.len()
+        );
+    }
+    trace_summary(&parsed.events, args.has("check"))
 }
 
 fn bump(v: &mut Vec<u64>, i: usize, by: u64) {
@@ -1230,8 +1252,14 @@ fn trace_summary(events: &[deluxe::jsonio::Json], check: bool) -> Result<()> {
 
 /// Diff the deterministic fields of two journals (wall-clock stripped).
 fn trace_diff(a: &str, b: &str) -> Result<()> {
-    let ja = deluxe::obs::parse_journal(&std::fs::read_to_string(a)?)?;
-    let jb = deluxe::obs::parse_journal(&std::fs::read_to_string(b)?)?;
+    let pa = deluxe::obs::parse_journal_lossy(&std::fs::read_to_string(a)?)?;
+    let pb = deluxe::obs::parse_journal_lossy(&std::fs::read_to_string(b)?)?;
+    for (path, p) in [(a, &pa), (b, &pb)] {
+        if p.truncated > 0 {
+            eprintln!("warning: {path}: final journal line truncated");
+        }
+    }
+    let (ja, jb) = (pa.events, pb.events);
     let strip = |v: &[Json]| -> Vec<String> {
         v.iter()
             .map(|j| deluxe::obs::strip_wall(j).to_string())
@@ -1277,6 +1305,266 @@ fn trace_diff(a: &str, b: &str) -> Result<()> {
         }
     }
     std::process::exit(1);
+}
+
+/// `deluxe profile` — span-level performance digest of one journal
+/// (DESIGN.md §14): per-round phase breakdown, per-agent solve-time
+/// histograms, folded flame stacks and critical-path attribution.
+fn run_profile(args: &Args) -> Result<()> {
+    let paths = &args.positional;
+    anyhow::ensure!(
+        paths.len() == 1,
+        "deluxe profile needs exactly one journal path (see `deluxe help`)"
+    );
+    let src = std::fs::read_to_string(&paths[0])?;
+    let parsed = deluxe::obs::parse_journal_lossy(&src)?;
+    if parsed.truncated > 0 {
+        eprintln!(
+            "warning: final journal line truncated (crashed writer?); \
+             recovered {} complete events",
+            parsed.events.len()
+        );
+    }
+    let events: Vec<Json> = if args.has("strip") {
+        parsed.events.iter().map(|j| deluxe::obs::strip_wall(j)).collect()
+    } else {
+        parsed.events
+    };
+    let mut profile = deluxe::obs::profile::analyze(&events);
+    profile.truncated = parsed.truncated;
+    if args.has("json") {
+        println!("{}", profile.to_json().to_string());
+    } else if args.has("flame") {
+        eprintln!("# folded flame stacks; self cost in {}", profile.flame_unit);
+        for (path, v) in &profile.folded {
+            println!("{path} {v}");
+        }
+    } else {
+        print_profile(&profile);
+    }
+    if args.has("check") {
+        if profile.rounds.is_empty() {
+            eprintln!(
+                "check: journal has no closed round spans to reconcile \
+                 (run the leader with the journal enabled)"
+            );
+            std::process::exit(1);
+        }
+        if !profile.violations.is_empty() {
+            for v in &profile.violations {
+                eprintln!("check: {v}");
+            }
+            std::process::exit(1);
+        }
+        println!(
+            "check: {} rounds reconcile with the round spans and wire books \
+             ({} spans opened, {} closed)",
+            profile.rounds.len(),
+            profile.spans_opened,
+            profile.spans_closed,
+        );
+    }
+    Ok(())
+}
+
+/// One phase cell for the per-round table: wall µs when the journal
+/// carries wall-clock, else bytes (the deterministic fallback).
+fn phase_cell(agg: Option<&deluxe::obs::profile::PhaseAgg>) -> String {
+    match agg {
+        None => "-".to_string(),
+        Some(a) if a.wall_known => format!("{}µs", a.wall_us),
+        Some(a) if a.bytes > 0 => fmt_bytes(a.bytes),
+        Some(a) if a.vtime_us > 0 => format!("{}vµs", a.vtime_us),
+        Some(_) => "0".to_string(),
+    }
+}
+
+fn critical_cell(c: Option<&deluxe::obs::profile::Critical>) -> String {
+    match c {
+        None => "-".to_string(),
+        Some(c) => {
+            let who = match c.agent {
+                Some(a) => format!("a{a}"),
+                None => "?".to_string(),
+            };
+            let cost = match c.unit {
+                "wall_us" => format!("{}µs", c.cost),
+                "vtime_us" => format!("{}vµs", c.cost),
+                _ => fmt_bytes(c.cost),
+            };
+            format!("{who} {} {cost}", c.kind.as_str())
+        }
+    }
+}
+
+fn print_profile(p: &deluxe::obs::profile::Profile) {
+    println!(
+        "profile: {} rounds, {} spans opened / {} closed, {} violation(s)",
+        p.rounds.len(),
+        p.spans_opened,
+        p.spans_closed,
+        p.violations.len()
+    );
+    let mut rounds = Table::new(&[
+        "round", "wall", "broadcast", "local_solve", "gather", "apply",
+        "critical path",
+    ]);
+    for r in &p.rounds {
+        rounds.row(vec![
+            format!("{}", r.round),
+            r.wall_us.map_or("-".to_string(), |w| format!("{w}µs")),
+            phase_cell(r.phases.get("broadcast")),
+            phase_cell(r.phases.get("local_solve")),
+            phase_cell(r.phases.get("gather")),
+            phase_cell(r.phases.get("apply")),
+            critical_cell(r.critical.as_ref()),
+        ]);
+    }
+    println!("{}", rounds.render());
+    let mut totals =
+        Table::new(&["phase", "count", "wall", "bytes", "vtime"]);
+    for (k, a) in &p.phase_totals {
+        totals.row(vec![
+            k.to_string(),
+            format!("{}", a.count),
+            if a.wall_known { format!("{}µs", a.wall_us) } else { "-".to_string() },
+            fmt_bytes(a.bytes),
+            format!("{}µs", a.vtime_us),
+        ]);
+    }
+    println!("{}", totals.render());
+    if !p.solve_hist.is_empty() {
+        let mut solves =
+            Table::new(&["agent", "solves", "mean µs", "min µs", "max µs"]);
+        for (a, h) in &p.solve_hist {
+            solves.row(vec![
+                format!("{a}"),
+                format!("{}", h.count()),
+                format!("{:.0}", h.mean()),
+                format!("{}", h.min()),
+                format!("{}", h.max()),
+            ]);
+        }
+        println!("per-agent solve wall time:\n{}", solves.render());
+    }
+    for v in &p.violations {
+        println!("violation: {v}");
+    }
+}
+
+/// Identity key for matching trajectory cases across two BENCH files:
+/// the stable knob fields, in fixed order, skipping absent ones.
+fn case_key(c: &Json) -> String {
+    let mut parts = Vec::new();
+    for k in ["workers", "transport", "journal", "spans"] {
+        if let Some(v) = c.get(k) {
+            parts.push(format!("{k}={}", v.to_string()));
+        }
+    }
+    parts.join(",")
+}
+
+/// `deluxe perfdiff` — the CI perf-regression gate: compare a HEAD
+/// microbench trajectory against the previous PR's BASE file.  Fails
+/// (exit 1) when HEAD is not measured, any journal/span overhead case
+/// exceeds the budget, a BASE case disappeared, or a matching case's
+/// per-round time regressed beyond the tolerance.
+fn run_perfdiff(args: &Args) -> Result<()> {
+    let paths = &args.positional;
+    anyhow::ensure!(
+        paths.len() == 2,
+        "deluxe perfdiff needs BASE and HEAD paths (see `deluxe help`)"
+    );
+    let tol = args.f64_or("tol-pct", 50.0);
+    let budget = args.f64_or("budget-pct", 5.0);
+    let base = deluxe::jsonio::read_json(std::path::Path::new(&paths[0]))?;
+    let head = deluxe::jsonio::read_json(std::path::Path::new(&paths[1]))?;
+    let measured = |j: &Json| {
+        j.get("measured").and_then(Json::as_bool).unwrap_or(false)
+    };
+    let cases = |j: &Json| -> Vec<Json> {
+        j.get("cases")
+            .and_then(Json::as_arr)
+            .map(|a| a.to_vec())
+            .unwrap_or_default()
+    };
+    let head_cases = cases(&head);
+    let mut bad = false;
+    if !measured(&head) || head_cases.is_empty() {
+        eprintln!(
+            "perfdiff: HEAD {} is not a measured trajectory \
+             (measured:true with non-empty cases required)",
+            paths[1]
+        );
+        std::process::exit(1);
+    }
+    // budget gate: every overhead case must stay within budget
+    for c in &head_cases {
+        if let Some(pct) = c.get("overhead_vs_off_pct").and_then(Json::as_f64) {
+            if pct > budget {
+                eprintln!(
+                    "perfdiff: case [{}] overhead {pct:.2}% exceeds the \
+                     {budget}% budget",
+                    case_key(c)
+                );
+                bad = true;
+            }
+        }
+    }
+    // regression gate: compare per-round time per matching case
+    let base_cases = cases(&base);
+    if measured(&base) && !base_cases.is_empty() {
+        for bc in &base_cases {
+            let key = case_key(bc);
+            let b_us = bc.get("per_round_us").and_then(Json::as_f64);
+            let hc = head_cases.iter().find(|c| case_key(c) == key);
+            match (hc, b_us) {
+                (None, _) => {
+                    eprintln!(
+                        "perfdiff: case [{key}] present in BASE but missing \
+                         from HEAD"
+                    );
+                    bad = true;
+                }
+                (Some(hc), Some(b_us)) if b_us > 0.0 => {
+                    let h_us = hc
+                        .get("per_round_us")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0);
+                    let ratio = 100.0 * (h_us / b_us - 1.0);
+                    if ratio > tol {
+                        eprintln!(
+                            "perfdiff: case [{key}] per-round time regressed \
+                             {ratio:.1}% ({b_us:.1}µs -> {h_us:.1}µs, \
+                             tolerance {tol}%)"
+                        );
+                        bad = true;
+                    } else {
+                        println!(
+                            "perfdiff: case [{key}] {b_us:.1}µs -> \
+                             {h_us:.1}µs ({ratio:+.1}%)"
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+    } else {
+        println!(
+            "perfdiff: BASE {} is a placeholder (unmeasured); structural \
+             and budget checks only",
+            paths[0]
+        );
+    }
+    if bad {
+        std::process::exit(1);
+    }
+    println!(
+        "perfdiff: {} HEAD case(s) within budget {budget}% and tolerance \
+         {tol}%",
+        head_cases.len()
+    );
+    Ok(())
 }
 
 fn run_lint(args: &Args) -> Result<()> {

@@ -24,8 +24,18 @@
 //! The journal write path is `writeln!` into a `BufWriter`; write errors
 //! are counted, never panicked on — observability must not take down the
 //! run it observes.
+//!
+//! Layered on the flat journal, [`span`] defines the hierarchical span
+//! vocabulary (`span_open` / `span_close` lines with positional
+//! parentage) and [`profile`] the `deluxe profile` analyzer that folds
+//! spans into per-round phase breakdowns, flame stacks and critical-path
+//! attribution (DESIGN.md §14).
 
 pub mod clock;
+pub mod profile;
+pub mod span;
+
+pub use span::{SpanKind, TimedSpan};
 
 use crate::jsonio::Json;
 use std::collections::BTreeMap;
@@ -127,6 +137,25 @@ pub enum Event {
     FrameTimeout {
         round: u64,
     },
+    /// A hierarchical span opened (DESIGN.md §14).  `span` ids are
+    /// monotone per journal; `parent` is the id of the span open at
+    /// emission time (`None` for a root), so the hierarchy is both
+    /// declared and positionally recoverable.
+    SpanOpen {
+        span: u64,
+        parent: Option<u64>,
+        kind: SpanKind,
+        round: u64,
+        agent: Option<usize>,
+    },
+    /// The matching close: deterministic `bytes` (WireStats books) and
+    /// `vtime_us` (sim virtual clock), wall time under `"wall_us"` only.
+    SpanClose {
+        span: u64,
+        bytes: Option<u64>,
+        vtime_us: Option<u64>,
+        wall_us: Option<u64>,
+    },
 }
 
 fn num(v: u64) -> Json {
@@ -150,6 +179,8 @@ impl Event {
             Event::Rejoin { .. } => "rejoin",
             Event::ReconnectAttempt { .. } => "reconnect_attempt",
             Event::FrameTimeout { .. } => "frame_timeout",
+            Event::SpanOpen { .. } => "span_open",
+            Event::SpanClose { .. } => "span_close",
         }
     }
 
@@ -242,6 +273,40 @@ impl Event {
                 fields.push(("attempt", num(*attempt as u64)));
             }
             Event::FrameTimeout { round } => fields.push(("round", num(*round))),
+            Event::SpanOpen {
+                span,
+                parent,
+                kind,
+                round,
+                agent,
+            } => {
+                fields.push(("span", num(*span)));
+                if let Some(p) = parent {
+                    fields.push(("parent", num(*p)));
+                }
+                fields.push(("kind", Json::Str(kind.as_str().to_string())));
+                fields.push(("round", num(*round)));
+                if let Some(a) = agent {
+                    fields.push(("agent", num(*a as u64)));
+                }
+            }
+            Event::SpanClose {
+                span,
+                bytes,
+                vtime_us,
+                wall_us,
+            } => {
+                fields.push(("span", num(*span)));
+                if let Some(b) = bytes {
+                    fields.push(("bytes", num(*b)));
+                }
+                if let Some(v) = vtime_us {
+                    fields.push(("vtime_us", num(*v)));
+                }
+                if let Some(w) = wall_us {
+                    fields.push(("wall_us", num(*w)));
+                }
+            }
         }
         Json::obj(fields)
     }
@@ -277,6 +342,45 @@ pub fn parse_journal(src: &str) -> anyhow::Result<Vec<Json>> {
         }
     }
     Ok(out)
+}
+
+/// A journal recovered by [`parse_journal_lossy`]: every complete
+/// record, plus how many trailing lines had to be discarded.
+#[derive(Clone, Debug)]
+pub struct ParsedJournal {
+    pub events: Vec<Json>,
+    /// 1 when the final line was truncated mid-record, else 0.
+    pub truncated: usize,
+}
+
+/// Crash-tolerant journal parse.  The sink buffers writes, so a crashed
+/// process leaves exactly one half-written *final* line behind; recover
+/// every complete record and count the casualty instead of refusing the
+/// whole file.  A malformed *interior* line is still a hard error — that
+/// is corruption, not truncation.
+pub fn parse_journal_lossy(src: &str) -> anyhow::Result<ParsedJournal> {
+    let lines: Vec<(usize, &str)> = src
+        .lines()
+        .enumerate()
+        .map(|(i, l)| (i, l.trim()))
+        .filter(|(_, l)| !l.is_empty())
+        .collect();
+    let mut events = Vec::new();
+    let mut truncated = 0;
+    let last = lines.len().saturating_sub(1);
+    for (pos, (i, line)) in lines.iter().enumerate() {
+        match Json::parse(line) {
+            Ok(j) => events.push(j),
+            Err(e) => {
+                if pos == last {
+                    truncated = 1;
+                } else {
+                    anyhow::bail!("journal line {}: {e}", i + 1);
+                }
+            }
+        }
+    }
+    Ok(ParsedJournal { events, truncated })
 }
 
 /// Bounded ring buffer of the most recent events, for crash dumps: cheap
@@ -394,6 +498,20 @@ impl Histogram {
         } else {
             self.sum as f64 / self.count as f64
         }
+    }
+
+    /// Smallest observed sample (0 for an empty histogram).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest observed sample (0 for an empty histogram).
+    pub fn max(&self) -> u64 {
+        self.max
     }
 
     /// Non-empty buckets as `[lo, hi, count]` triples (oldest bucket
@@ -526,6 +644,8 @@ impl Metrics {
             Event::Rejoin { .. } => self.inc("rejoins"),
             Event::ReconnectAttempt { .. } => self.inc("reconnect_attempts"),
             Event::FrameTimeout { .. } => self.inc("frame_timeouts"),
+            Event::SpanOpen { .. } => self.inc("spans_opened"),
+            Event::SpanClose { .. } => self.inc("spans_closed"),
         }
     }
 
@@ -579,6 +699,12 @@ enum Sink {
 /// check [`Obs::on`] once per round); every other constructor records.
 pub struct Obs {
     on: bool,
+    /// Whether span open/close events are journaled ([`Obs::spans_on`]).
+    spans: bool,
+    /// Monotone span-id allocator; 0 is reserved for "spans off".
+    next_span: u64,
+    /// Ids of currently-open spans, innermost last — positional parents.
+    span_stack: Vec<u64>,
     sink: Sink,
     pub flight: FlightRecorder,
     pub metrics: Metrics,
@@ -590,6 +716,9 @@ impl Obs {
     pub fn off() -> Self {
         Obs {
             on: false,
+            spans: false,
+            next_span: 0,
+            span_stack: Vec::new(),
             sink: Sink::Null,
             flight: FlightRecorder::new(1),
             metrics: Metrics::new(),
@@ -602,6 +731,9 @@ impl Obs {
     pub fn new() -> Self {
         Obs {
             on: true,
+            spans: true,
+            next_span: 0,
+            span_stack: Vec::new(),
             sink: Sink::Null,
             flight: FlightRecorder::new(FLIGHT_CAP),
             metrics: Metrics::new(),
@@ -617,6 +749,9 @@ impl Obs {
         };
         Ok(Obs {
             on: true,
+            spans: true,
+            next_span: 0,
+            span_stack: Vec::new(),
             sink: Sink::File(std::io::BufWriter::new(f)),
             flight: FlightRecorder::new(FLIGHT_CAP),
             metrics: Metrics::new(),
@@ -628,6 +763,9 @@ impl Obs {
     pub fn in_memory() -> Self {
         Obs {
             on: true,
+            spans: true,
+            next_span: 0,
+            span_stack: Vec::new(),
             sink: Sink::Mem(Vec::new()),
             flight: FlightRecorder::new(FLIGHT_CAP),
             metrics: Metrics::new(),
@@ -638,6 +776,63 @@ impl Obs {
     /// Whether this handle records anything (hot paths gate on this).
     pub fn on(&self) -> bool {
         self.on
+    }
+
+    /// Whether span events are journaled (on by default whenever the
+    /// handle records; the microbench span-off cases disable them).
+    pub fn spans_on(&self) -> bool {
+        self.on && self.spans
+    }
+
+    /// Toggle span emission without touching the rest of the journal.
+    pub fn set_spans(&mut self, on: bool) {
+        self.spans = on;
+    }
+
+    /// Open a hierarchical span; the positional parent is whatever span
+    /// is innermost-open on this handle.  Returns the span id, or 0 when
+    /// spans are off (in which case nothing is emitted and the id is a
+    /// no-op token for [`Obs::close_span`]).
+    pub fn open_span(&mut self, kind: SpanKind, round: u64, agent: Option<usize>) -> u64 {
+        if !self.spans_on() {
+            return 0;
+        }
+        self.next_span += 1;
+        let id = self.next_span;
+        let parent = self.span_stack.last().copied();
+        self.emit(Event::SpanOpen {
+            span: id,
+            parent,
+            kind,
+            round,
+            agent,
+        });
+        self.span_stack.push(id);
+        id
+    }
+
+    /// Close an open span.  Tolerates out-of-order closes by popping the
+    /// stack down to `span` (the analyzer flags the orphans); a 0 id (or
+    /// spans off) is a no-op so call sites need no gating.
+    pub fn close_span(
+        &mut self,
+        span: u64,
+        bytes: Option<u64>,
+        vtime_us: Option<u64>,
+        wall_us: Option<u64>,
+    ) {
+        if !self.spans_on() || span == 0 {
+            return;
+        }
+        if let Some(pos) = self.span_stack.iter().rposition(|&s| s == span) {
+            self.span_stack.truncate(pos);
+        }
+        self.emit(Event::SpanClose {
+            span,
+            bytes,
+            vtime_us,
+            wall_us,
+        });
     }
 
     /// Journal one event: metrics absorb, flight-recorder push, one JSONL
@@ -788,6 +983,32 @@ mod tests {
                 attempt: 2,
             },
             Event::FrameTimeout { round: 9 },
+            Event::SpanOpen {
+                span: 1,
+                parent: None,
+                kind: SpanKind::Round,
+                round: 4,
+                agent: None,
+            },
+            Event::SpanOpen {
+                span: 2,
+                parent: Some(1),
+                kind: SpanKind::Transmit,
+                round: 4,
+                agent: Some(3),
+            },
+            Event::SpanClose {
+                span: 2,
+                bytes: Some(41),
+                vtime_us: Some(12),
+                wall_us: Some(5),
+            },
+            Event::SpanClose {
+                span: 1,
+                bytes: None,
+                vtime_us: None,
+                wall_us: None,
+            },
         ];
         for ev in &evs {
             let line = ev.to_json().to_string();
@@ -825,6 +1046,115 @@ mod tests {
             dump.get("events").and_then(|e| e.as_arr()).map(|a| a.len()),
             Some(3)
         );
+    }
+
+    #[test]
+    fn truncated_final_line_is_recovered_with_count() {
+        let mut src = String::new();
+        for r in 0..3u64 {
+            src.push_str(&Event::RoundStart { round: r }.to_json().to_string());
+            src.push('\n');
+        }
+        // a crashed writer leaves the last record cut mid-line
+        let full = Event::RoundEnd {
+            round: 2,
+            events: 7,
+            up_bytes: 120,
+            down_bytes: 80,
+            vtime_us: None,
+            wall_us: Some(9),
+        }
+        .to_json()
+        .to_string();
+        src.push_str(&full[..full.len() / 2]);
+
+        // the strict parser refuses the file outright...
+        assert!(parse_journal(&src).is_err());
+        // ...the lossy one recovers every complete record and says so
+        let parsed = parse_journal_lossy(&src).unwrap();
+        assert_eq!(parsed.events.len(), 3);
+        assert_eq!(parsed.truncated, 1);
+
+        // an intact journal reports zero truncation
+        let intact = parse_journal_lossy("{\"ev\":\"round_start\",\"round\":0}\n").unwrap();
+        assert_eq!((intact.events.len(), intact.truncated), (1, 0));
+
+        // interior corruption is not truncation: still a hard error
+        let interior = "{\"ev\":\"round_start\",\"round\":0}\n{oops\n{\"ev\":\"round_start\",\"round\":1}\n";
+        assert!(parse_journal_lossy(interior).is_err());
+    }
+
+    #[test]
+    fn flight_recorder_boundary_at_capacity_and_one_past() {
+        let mut fr = FlightRecorder::new(4);
+        // exactly `capacity` pushes: nothing evicted yet
+        for r in 0..4u64 {
+            fr.push(Event::RoundStart { round: r });
+        }
+        assert_eq!((fr.len(), fr.evicted()), (4, 0));
+        // one past capacity: exactly one eviction, oldest goes first
+        fr.push(Event::RoundStart { round: 4 });
+        assert_eq!((fr.len(), fr.evicted()), (4, 1));
+        let rounds: Vec<u64> = fr
+            .events()
+            .map(|e| match e {
+                Event::RoundStart { round } => *round,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(rounds, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn histogram_extremes_observe_exactly() {
+        let mut h = Histogram::default();
+        assert_eq!((h.min(), h.max()), (0, 0));
+        h.observe(0);
+        h.observe(1);
+        h.observe(u64::MAX);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), u64::MAX);
+        // 0 and 1 have dedicated buckets; u64::MAX tops out bucket 64,
+        // whose upper edge saturates instead of wrapping
+        let j = h.to_json();
+        let buckets = j.get("buckets").and_then(|b| b.as_arr()).unwrap();
+        assert_eq!(buckets.len(), 3);
+        let top = buckets[2].as_arr().unwrap();
+        assert_eq!(top[0].as_f64(), Some((1u64 << 63) as f64));
+        assert_eq!(top[1].as_f64(), Some(u64::MAX as f64));
+        assert_eq!(top[2].as_usize(), Some(1));
+    }
+
+    #[test]
+    fn span_machinery_allocates_monotone_ids_with_positional_parents() {
+        let mut obs = Obs::in_memory();
+        let r = obs.open_span(SpanKind::Round, 0, None);
+        let b = obs.open_span(SpanKind::Broadcast, 0, None);
+        let t = obs.open_span(SpanKind::Transmit, 0, Some(2));
+        assert_eq!((r, b, t), (1, 2, 3));
+        obs.close_span(t, Some(41), None, None);
+        obs.close_span(b, Some(41), None, Some(6));
+        // next sibling's positional parent is the round again
+        let g = obs.open_span(SpanKind::Gather, 0, None);
+        assert_eq!(g, 4);
+        obs.close_span(g, Some(0), None, None);
+        obs.close_span(r, None, None, None);
+        let lines = obs.mem_lines();
+        assert_eq!(lines.len(), 8);
+        assert!(lines[2].contains("\"parent\":2") && lines[2].contains("\"agent\":2"));
+        assert!(lines[6].contains("\"parent\":1") && lines[6].contains("\"kind\":\"gather\""));
+        assert_eq!(obs.metrics.counter("spans_opened"), 4);
+        assert_eq!(obs.metrics.counter("spans_closed"), 4);
+
+        // spans off: ids are 0 and nothing is journaled
+        let mut quiet = Obs::in_memory();
+        quiet.set_spans(false);
+        assert!(!quiet.spans_on());
+        let s = quiet.open_span(SpanKind::Round, 0, None);
+        assert_eq!(s, 0);
+        quiet.close_span(s, None, None, None);
+        assert!(quiet.mem_lines().is_empty());
     }
 
     #[test]

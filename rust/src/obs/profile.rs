@@ -1,0 +1,767 @@
+//! `deluxe profile` — aggregate a journal's hierarchical spans into a
+//! per-round phase breakdown, per-agent solve histograms, folded flame
+//! stacks and critical-path attribution (DESIGN.md §14).
+//!
+//! The analyzer is a single forward pass over parsed journal values
+//! with a stack of open spans.  Classic byte-carrying events
+//! (`msg_sent`, `reset_sync`) are attributed *positionally* to every
+//! span open at that point in the stream, which is what ties the span
+//! layer to the `WireStats` books: at close time a `broadcast` span's
+//! declared bytes must equal the downlink message bytes journaled
+//! inside it, a `gather` span's the uplink bytes, an `apply` span's the
+//! reset-sync bytes — and the round span's attributions must match the
+//! `round_end` book deltas.  Any disagreement lands in
+//! [`Profile::violations`], which `deluxe profile --check` turns into
+//! exit 1.
+//!
+//! Everything here is deterministic given the journal: maps are
+//! `BTreeMap`, winners are picked by strict comparison (earliest max
+//! wins), and when the input was [`super::strip_wall`]ed the wall-side
+//! outputs are simply absent — the flame unit then falls back from wall
+//! microseconds to bytes and critical-path attribution from wall to
+//! `vtime_us` to bytes.
+
+use std::collections::BTreeMap;
+
+use crate::jsonio::Json;
+
+use super::span::SpanKind;
+use super::Histogram;
+
+/// Aggregate over every span of one kind within a scope (one round, or
+/// the whole journal in [`Profile::phase_totals`]).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseAgg {
+    /// How many spans of this kind closed in the scope.
+    pub count: u64,
+    /// Summed wall microseconds (only meaningful when `wall_known`).
+    pub wall_us: u64,
+    /// Whether any contributing close carried a `wall_us` sample.
+    pub wall_known: bool,
+    /// Summed deterministic bytes.
+    pub bytes: u64,
+    /// Summed deterministic virtual-time microseconds.
+    pub vtime_us: u64,
+}
+
+impl PhaseAgg {
+    fn absorb(&mut self, wall: Option<u64>, bytes: Option<u64>, vtime: Option<u64>) {
+        self.count += 1;
+        if let Some(w) = wall {
+            self.wall_us = self.wall_us.saturating_add(w);
+            self.wall_known = true;
+        }
+        self.bytes = self.bytes.saturating_add(bytes.unwrap_or(0));
+        self.vtime_us = self.vtime_us.saturating_add(vtime.unwrap_or(0));
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("count", Json::Num(self.count as f64)),
+            ("bytes", Json::Num(self.bytes as f64)),
+            ("vtime_us", Json::Num(self.vtime_us as f64)),
+        ];
+        if self.wall_known {
+            fields.push(("wall_us", Json::Num(self.wall_us as f64)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Which agent or link bounded a round, and by which measure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Critical {
+    /// The bounding agent (solve) or link peer (transmit), when known.
+    pub agent: Option<usize>,
+    /// [`SpanKind::Solve`] or [`SpanKind::Transmit`].
+    pub kind: SpanKind,
+    /// The winning cost in `unit`.
+    pub cost: u64,
+    /// `"wall_us"`, `"vtime_us"` or `"bytes"` — whichever the journal
+    /// supports, in that preference order.
+    pub unit: &'static str,
+}
+
+impl Critical {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "agent",
+                match self.agent {
+                    Some(a) => Json::Num(a as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("kind", Json::Str(self.kind.as_str().to_string())),
+            ("cost", Json::Num(self.cost as f64)),
+            ("unit", Json::Str(self.unit.to_string())),
+        ])
+    }
+}
+
+/// One round span's digest.
+#[derive(Clone, Debug)]
+pub struct RoundProfile {
+    /// The round index the span declared.
+    pub round: u64,
+    /// Wall microseconds of the round span, if journaled.
+    pub wall_us: Option<u64>,
+    /// Direct phase children keyed by [`SpanKind::as_str`].
+    pub phases: BTreeMap<&'static str, PhaseAgg>,
+    /// The straggler verdict, `None` when the round carried no signal.
+    pub critical: Option<Critical>,
+}
+
+impl RoundProfile {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![("round", Json::Num(self.round as f64))];
+        if let Some(w) = self.wall_us {
+            fields.push(("wall_us", Json::Num(w as f64)));
+        }
+        let phases: Vec<(&str, Json)> =
+            self.phases.iter().map(|(k, v)| (*k, v.to_json())).collect();
+        fields.push(("phases", Json::obj(phases)));
+        fields.push((
+            "critical",
+            match &self.critical {
+                Some(c) => c.to_json(),
+                None => Json::Null,
+            },
+        ));
+        Json::obj(fields)
+    }
+}
+
+/// The full analyzer output; see the module docs for the equations
+/// behind [`Profile::violations`].
+#[derive(Clone, Debug)]
+pub struct Profile {
+    /// Per-round digests in journal order.
+    pub rounds: Vec<RoundProfile>,
+    /// Whole-journal aggregates per span kind.
+    pub phase_totals: BTreeMap<&'static str, PhaseAgg>,
+    /// Per-agent solve-wall histograms (empty for stripped journals).
+    pub solve_hist: BTreeMap<usize, Histogram>,
+    /// `span_open` lines seen.
+    pub spans_opened: u64,
+    /// `span_close` lines seen.
+    pub spans_closed: u64,
+    /// Every invariant breach, in stream order; empty ⇔ `--check` passes.
+    pub violations: Vec<String>,
+    /// Folded flame stacks: `path ↦ self cost` in [`Profile::flame_unit`].
+    pub folded: BTreeMap<String, u64>,
+    /// `"wall_us"` when any span carried wall, else `"bytes"`.
+    pub flame_unit: &'static str,
+    /// Truncated-line count carried over from the lossy journal parse.
+    pub truncated: usize,
+}
+
+impl Profile {
+    /// JSON rendering; wall-side values stay under `"wall_us"` keys so
+    /// [`super::strip_wall`] composes with this output too.
+    pub fn to_json(&self) -> Json {
+        let rounds: Vec<Json> = self.rounds.iter().map(RoundProfile::to_json).collect();
+        let totals: Vec<(&str, Json)> =
+            self.phase_totals.iter().map(|(k, v)| (*k, v.to_json())).collect();
+        let hists: Vec<Json> = self
+            .solve_hist
+            .iter()
+            .map(|(a, h)| {
+                Json::obj(vec![("agent", Json::Num(*a as f64)), ("wall_us", h.to_json())])
+            })
+            .collect();
+        let folded: Vec<(&str, Json)> = self
+            .folded
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::Num(*v as f64)))
+            .collect();
+        Json::obj(vec![
+            ("rounds", Json::Arr(rounds)),
+            ("phase_totals", Json::obj(totals)),
+            ("solve_hists", Json::Arr(hists)),
+            ("spans_opened", Json::Num(self.spans_opened as f64)),
+            ("spans_closed", Json::Num(self.spans_closed as f64)),
+            (
+                "violations",
+                Json::Arr(self.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+            ),
+            ("flame_unit", Json::Str(self.flame_unit.to_string())),
+            ("folded", Json::obj(folded)),
+            ("truncated", Json::Num(self.truncated as f64)),
+        ])
+    }
+}
+
+/// Candidate for the per-round critical path, recorded when a `solve`
+/// or `transmit` span closes inside a round.
+#[derive(Clone, Debug)]
+struct Cand {
+    agent: Option<usize>,
+    kind: SpanKind,
+    wall: Option<u64>,
+    vtime: Option<u64>,
+    bytes: Option<u64>,
+}
+
+/// Book-keeping for one open span during the pass.
+struct OpenSpan {
+    id: u64,
+    kind: SpanKind,
+    round: u64,
+    agent: Option<usize>,
+    path: String,
+    attr_up: u64,
+    attr_down: u64,
+    attr_reset: u64,
+    child_wall: u64,
+    child_bytes: u64,
+    child_phase_wall: u64,
+    child_transmit_bytes: u64,
+    max_child_solve_wall: u64,
+    phases: BTreeMap<&'static str, PhaseAgg>,
+    cands: Vec<Cand>,
+}
+
+/// Round-span attributions parked until the matching `round_end` line
+/// delivers the cumulative book values to compare against.
+struct PendingRound {
+    round: u64,
+    up: u64,
+    down: u64,
+    reset: u64,
+}
+
+fn get_u64(ev: &Json, key: &str) -> Option<u64> {
+    ev.get(key).and_then(Json::as_f64).map(|v| v as u64)
+}
+
+fn get_str<'a>(ev: &'a Json, key: &str) -> Option<&'a str> {
+    ev.get(key).and_then(Json::as_str)
+}
+
+/// Pick the round's critical path: max wall among solve/transmit spans
+/// when any wall survives, else max transmit `vtime_us`, else max
+/// transmit bytes; strict `>` so the earliest maximum wins and the
+/// verdict is deterministic for a deterministic journal.
+fn pick_critical(cands: &[Cand]) -> Option<Critical> {
+    let mut best: Option<Critical> = None;
+    for c in cands {
+        if let Some(w) = c.wall {
+            if w > 0 && best.as_ref().map_or(true, |b| w > b.cost) {
+                best = Some(Critical { agent: c.agent, kind: c.kind, cost: w, unit: "wall_us" });
+            }
+        }
+    }
+    if best.is_some() {
+        return best;
+    }
+    for c in cands {
+        if c.kind != SpanKind::Transmit {
+            continue;
+        }
+        if let Some(v) = c.vtime {
+            if v > 0 && best.as_ref().map_or(true, |b| v > b.cost) {
+                best = Some(Critical { agent: c.agent, kind: c.kind, cost: v, unit: "vtime_us" });
+            }
+        }
+    }
+    if best.is_some() {
+        return best;
+    }
+    for c in cands {
+        if c.kind != SpanKind::Transmit {
+            continue;
+        }
+        if let Some(b) = c.bytes {
+            if b > 0 && best.as_ref().map_or(true, |x| b > x.cost) {
+                best = Some(Critical { agent: c.agent, kind: c.kind, cost: b, unit: "bytes" });
+            }
+        }
+    }
+    best
+}
+
+/// Nesting contract per kind (`None` = must be a root span).  A bare
+/// `local_solve` root is legal — engine harnesses run the worker pool
+/// without a coordinator round around it.
+fn nest_ok(kind: SpanKind, parent: Option<SpanKind>) -> bool {
+    match kind {
+        SpanKind::Round => parent.is_none(),
+        SpanKind::Broadcast | SpanKind::Gather | SpanKind::Apply => {
+            parent == Some(SpanKind::Round)
+        }
+        SpanKind::LocalSolve => parent.is_none() || parent == Some(SpanKind::Round),
+        SpanKind::Solve => parent == Some(SpanKind::LocalSolve),
+        SpanKind::Transmit => parent == Some(SpanKind::Broadcast),
+    }
+}
+
+/// Run the analyzer over parsed journal values (one [`Json`] per line).
+/// Never fails: malformed or unknown lines become violations or are
+/// ignored, matching the journal's open-vocabulary contract.
+pub fn analyze(events: &[Json]) -> Profile {
+    let mut p = Profile {
+        rounds: Vec::new(),
+        phase_totals: BTreeMap::new(),
+        solve_hist: BTreeMap::new(),
+        spans_opened: 0,
+        spans_closed: 0,
+        violations: Vec::new(),
+        folded: BTreeMap::new(),
+        flame_unit: "bytes",
+        truncated: 0,
+    };
+    let mut stack: Vec<OpenSpan> = Vec::new();
+    let mut folded_wall: BTreeMap<String, u64> = BTreeMap::new();
+    let mut folded_bytes: BTreeMap<String, u64> = BTreeMap::new();
+    let mut any_wall = false;
+    let mut prev_books = (0u64, 0u64);
+    let mut pending_round: Option<PendingRound> = None;
+
+    for ev in events {
+        match get_str(ev, "ev") {
+            Some("span_open") => {
+                p.spans_opened += 1;
+                let id = get_u64(ev, "span").unwrap_or(0);
+                let kind = match get_str(ev, "kind").and_then(SpanKind::parse) {
+                    Some(k) => k,
+                    None => {
+                        p.violations.push(format!("span {id}: unknown span kind"));
+                        continue;
+                    }
+                };
+                let declared = get_u64(ev, "parent");
+                let actual = stack.last().map(|o| o.id);
+                if declared != actual {
+                    p.violations.push(format!(
+                        "span {id} ({}): declared parent {declared:?} but open stack top is {actual:?}",
+                        kind.as_str()
+                    ));
+                }
+                if !nest_ok(kind, stack.last().map(|o| o.kind)) {
+                    p.violations.push(format!(
+                        "span {id} ({}) opened under {}",
+                        kind.as_str(),
+                        stack.last().map_or("no parent", |o| o.kind.as_str())
+                    ));
+                }
+                let agent = get_u64(ev, "agent").map(|a| a as usize);
+                let mut path = stack.last().map(|o| o.path.clone()).unwrap_or_default();
+                if !path.is_empty() {
+                    path.push(';');
+                }
+                path.push_str(kind.as_str());
+                if let Some(a) = agent {
+                    path.push_str(&format!(":a{a}"));
+                }
+                stack.push(OpenSpan {
+                    id,
+                    kind,
+                    round: get_u64(ev, "round").unwrap_or(0),
+                    agent,
+                    path,
+                    attr_up: 0,
+                    attr_down: 0,
+                    attr_reset: 0,
+                    child_wall: 0,
+                    child_bytes: 0,
+                    child_phase_wall: 0,
+                    child_transmit_bytes: 0,
+                    max_child_solve_wall: 0,
+                    phases: BTreeMap::new(),
+                    cands: Vec::new(),
+                });
+            }
+            Some("span_close") => {
+                p.spans_closed += 1;
+                let id = get_u64(ev, "span").unwrap_or(0);
+                let pos = match stack.iter().rposition(|o| o.id == id) {
+                    Some(pos) => pos,
+                    None => {
+                        p.violations.push(format!("span {id} closed but was never opened"));
+                        continue;
+                    }
+                };
+                while stack.len() > pos + 1 {
+                    if let Some(orphan) = stack.pop() {
+                        p.violations.push(format!(
+                            "span {} ({}) still open when span {id} closed",
+                            orphan.id,
+                            orphan.kind.as_str()
+                        ));
+                    }
+                }
+                let o = match stack.pop() {
+                    Some(o) => o,
+                    None => continue,
+                };
+                let agent = o.agent;
+                let bytes = get_u64(ev, "bytes");
+                let vtime = get_u64(ev, "vtime_us");
+                let wall = get_u64(ev, "wall_us");
+                if wall.is_some() {
+                    any_wall = true;
+                }
+
+                // folded flame self-cost in both units
+                let total_wall = wall.unwrap_or(0);
+                let self_wall = total_wall.saturating_sub(o.child_wall);
+                let self_bytes = bytes.unwrap_or(0).saturating_sub(o.child_bytes);
+                *folded_wall.entry(o.path.clone()).or_insert(0) += self_wall;
+                *folded_bytes.entry(o.path.clone()).or_insert(0) += self_bytes;
+
+                // whole-journal aggregates
+                p.phase_totals
+                    .entry(o.kind.as_str())
+                    .or_default()
+                    .absorb(wall, bytes, vtime);
+                if o.kind == SpanKind::Solve {
+                    if let (Some(a), Some(w)) = (agent, wall) {
+                        p.solve_hist.entry(a).or_default().observe(w);
+                    }
+                }
+
+                // propagate to the enclosing span
+                let is_phase = matches!(
+                    o.kind,
+                    SpanKind::Broadcast | SpanKind::Gather | SpanKind::Apply | SpanKind::LocalSolve
+                );
+                if let Some(parent) = stack.last_mut() {
+                    parent.child_wall = parent.child_wall.saturating_add(total_wall);
+                    parent.child_bytes = parent.child_bytes.saturating_add(bytes.unwrap_or(0));
+                    if is_phase {
+                        if let Some(w) = wall {
+                            parent.child_phase_wall = parent.child_phase_wall.saturating_add(w);
+                        }
+                        parent.phases.entry(o.kind.as_str()).or_default().absorb(
+                            wall, bytes, vtime,
+                        );
+                    }
+                    if o.kind == SpanKind::Transmit {
+                        parent.child_transmit_bytes =
+                            parent.child_transmit_bytes.saturating_add(bytes.unwrap_or(0));
+                    }
+                    if o.kind == SpanKind::Solve {
+                        if let Some(w) = wall {
+                            parent.max_child_solve_wall = parent.max_child_solve_wall.max(w);
+                        }
+                    }
+                }
+                if matches!(o.kind, SpanKind::Solve | SpanKind::Transmit) {
+                    if let Some(r) = stack.iter_mut().rev().find(|s| s.kind == SpanKind::Round) {
+                        r.cands.push(Cand { agent, kind: o.kind, wall, vtime, bytes });
+                    }
+                }
+
+                // per-kind close checks
+                match o.kind {
+                    SpanKind::Broadcast => {
+                        if let Some(b) = bytes {
+                            if b != o.attr_down {
+                                p.violations.push(format!(
+                                    "round {}: broadcast span bytes {b} != downlink msg bytes {} journaled inside it",
+                                    o.round, o.attr_down
+                                ));
+                            }
+                            if b != o.child_transmit_bytes {
+                                p.violations.push(format!(
+                                    "round {}: broadcast span bytes {b} != sum of transmit child bytes {}",
+                                    o.round, o.child_transmit_bytes
+                                ));
+                            }
+                        }
+                    }
+                    SpanKind::Gather => {
+                        if let Some(b) = bytes {
+                            if b != o.attr_up {
+                                p.violations.push(format!(
+                                    "round {}: gather span bytes {b} != uplink msg bytes {} journaled inside it",
+                                    o.round, o.attr_up
+                                ));
+                            }
+                        }
+                    }
+                    SpanKind::Apply => {
+                        if let Some(b) = bytes {
+                            if b != o.attr_reset {
+                                p.violations.push(format!(
+                                    "round {}: apply span bytes {b} != reset-sync bytes {} journaled inside it",
+                                    o.round, o.attr_reset
+                                ));
+                            }
+                        }
+                    }
+                    SpanKind::LocalSolve => {
+                        if let Some(w) = wall {
+                            if o.max_child_solve_wall > w {
+                                p.violations.push(format!(
+                                    "round {}: max solve wall {} exceeds local_solve span wall {w}",
+                                    o.round, o.max_child_solve_wall
+                                ));
+                            }
+                        }
+                    }
+                    SpanKind::Round => {
+                        if let Some(rw) = wall {
+                            if o.child_phase_wall > rw {
+                                p.violations.push(format!(
+                                    "round {}: phase walls sum {} exceeds round span wall {rw}",
+                                    o.round, o.child_phase_wall
+                                ));
+                            }
+                        }
+                        pending_round = Some(PendingRound {
+                            round: o.round,
+                            up: o.attr_up,
+                            down: o.attr_down,
+                            reset: o.attr_reset,
+                        });
+                        p.rounds.push(RoundProfile {
+                            round: o.round,
+                            wall_us: wall,
+                            phases: o.phases,
+                            critical: pick_critical(&o.cands),
+                        });
+                    }
+                    SpanKind::Solve | SpanKind::Transmit => {}
+                }
+            }
+            Some("msg_sent") => {
+                let b = get_u64(ev, "bytes").unwrap_or(0);
+                let up = get_str(ev, "line") == Some("up");
+                for o in stack.iter_mut() {
+                    if up {
+                        o.attr_up = o.attr_up.saturating_add(b);
+                    } else {
+                        o.attr_down = o.attr_down.saturating_add(b);
+                    }
+                }
+            }
+            Some("reset_sync") => {
+                let b = get_u64(ev, "bytes").unwrap_or(0);
+                for o in stack.iter_mut() {
+                    o.attr_reset = o.attr_reset.saturating_add(b);
+                }
+            }
+            Some("round_end") => {
+                let round = get_u64(ev, "round").unwrap_or(0);
+                let up = get_u64(ev, "up_bytes").unwrap_or(0);
+                let down = get_u64(ev, "down_bytes").unwrap_or(0);
+                let d_up = up.saturating_sub(prev_books.0);
+                let d_down = down.saturating_sub(prev_books.1);
+                prev_books = (up, down);
+                if let Some(pr) = pending_round.take() {
+                    if pr.round == round {
+                        if pr.up != d_up {
+                            p.violations.push(format!(
+                                "round {round}: round-span uplink attribution {} != round_end up_bytes delta {d_up}",
+                                pr.up
+                            ));
+                        }
+                        if pr.down + pr.reset != d_down {
+                            p.violations.push(format!(
+                                "round {round}: round-span downlink {} + reset {} attribution != round_end down_bytes delta {d_down}",
+                                pr.down, pr.reset
+                            ));
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    for o in &stack {
+        p.violations
+            .push(format!("span {} ({}) never closed", o.id, o.kind.as_str()));
+    }
+    if any_wall {
+        p.flame_unit = "wall_us";
+        p.folded = folded_wall;
+    } else {
+        p.folded = folded_bytes;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Event, Line, Obs, SpanKind, strip_wall};
+
+    /// Emit a well-formed two-round coordinator-shaped journal through a
+    /// real `Obs` handle and hand back the parsed values.
+    fn synthetic_journal(strip: bool) -> Vec<Json> {
+        let mut obs = Obs::in_memory();
+        let mut up_book = 0u64;
+        let mut down_book = 0u64;
+        for round in 0..2u64 {
+            obs.emit(Event::RoundStart { round });
+            let r = obs.open_span(SpanKind::Round, round, None);
+
+            let b = obs.open_span(SpanKind::Broadcast, round, None);
+            let mut down = 0u64;
+            for agent in 0..2usize {
+                let t = obs.open_span(SpanKind::Transmit, round, Some(agent));
+                let bytes = 100 + round * 10 + agent as u64;
+                obs.close_span(t, Some(bytes), Some(5 + agent as u64), Some(3));
+                down += bytes;
+            }
+            for agent in 0..2usize {
+                let bytes = 100 + round * 10 + agent as u64;
+                obs.emit(Event::MessageSent { round, agent, line: Line::Down, bytes });
+            }
+            obs.close_span(b, Some(down), None, Some(9));
+
+            let ls = obs.open_span(SpanKind::LocalSolve, round, None);
+            for agent in 0..2usize {
+                let s = obs.open_span(SpanKind::Solve, round, Some(agent));
+                let us = 40 + 10 * agent as u64 + round;
+                obs.emit(Event::SolveDone { round, agent, micros: us });
+                obs.close_span(s, None, None, Some(us));
+            }
+            obs.close_span(ls, None, None, Some(60));
+
+            let g = obs.open_span(SpanKind::Gather, round, None);
+            let mut up = 0u64;
+            for agent in 0..2usize {
+                let bytes = 70 + agent as u64;
+                obs.emit(Event::MessageSent { round, agent, line: Line::Up, bytes });
+                up += bytes;
+            }
+            obs.close_span(g, Some(up), None, Some(4));
+
+            let a = obs.open_span(SpanKind::Apply, round, None);
+            let reset = if round == 1 { 200u64 } else { 0 };
+            if reset > 0 {
+                obs.emit(Event::ResetSync { round, agent: 0, bytes: reset });
+            }
+            obs.close_span(a, Some(reset), None, Some(2));
+
+            obs.close_span(r, None, None, Some(100));
+            up_book += up;
+            down_book += down + reset;
+            obs.emit(Event::RoundEnd {
+                round,
+                events: 4,
+                up_bytes: up_book,
+                down_bytes: down_book,
+                vtime_us: None,
+                wall_us: Some(120),
+            });
+        }
+        obs.mem_lines()
+            .iter()
+            .map(|l| {
+                let j = Json::parse(l).expect("journal line parses");
+                if strip {
+                    strip_wall(&j)
+                } else {
+                    j
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_journal_has_no_violations_and_full_breakdown() {
+        let events = synthetic_journal(false);
+        let p = analyze(&events);
+        assert_eq!(p.violations, Vec::<String>::new());
+        assert_eq!(p.rounds.len(), 2);
+        assert_eq!(p.spans_opened, p.spans_closed);
+        for r in &p.rounds {
+            assert_eq!(r.wall_us, Some(100));
+            for phase in ["broadcast", "gather", "apply", "local_solve"] {
+                assert!(r.phases.contains_key(phase), "missing {phase}");
+            }
+        }
+        // round 0: slowest solve is agent 1 at 50µs wall
+        let c = p.rounds[0].critical.clone().expect("critical");
+        assert_eq!((c.agent, c.kind, c.cost, c.unit), (Some(1), SpanKind::Solve, 50, "wall_us"));
+        // per-agent solve histograms saw both rounds
+        assert_eq!(p.solve_hist.get(&0).map(Histogram::count), Some(2));
+        assert_eq!(p.solve_hist.get(&1).map(Histogram::count), Some(2));
+        assert_eq!(p.flame_unit, "wall_us");
+        // flame: solve leaves carry their own wall
+        assert_eq!(p.folded.get("round;local_solve;solve:a1"), Some(&(50 + 51)));
+    }
+
+    #[test]
+    fn stripped_journal_is_deterministic_and_falls_back_to_vtime() {
+        let events = synthetic_journal(true);
+        let p = analyze(&events);
+        assert_eq!(p.violations, Vec::<String>::new());
+        assert_eq!(p.flame_unit, "bytes");
+        assert!(p.solve_hist.is_empty());
+        // wall gone ⇒ transmit vtime decides: agent 1 at 6µs
+        let c = p.rounds[0].critical.clone().expect("critical");
+        assert_eq!(
+            (c.agent, c.kind, c.cost, c.unit),
+            (Some(1), SpanKind::Transmit, 6, "vtime_us")
+        );
+        // byte-mode flame: transmit leaves carry the wire bytes
+        assert_eq!(p.folded.get("round;broadcast;transmit:a0"), Some(&(100 + 110)));
+        let q = analyze(&synthetic_journal(true));
+        assert_eq!(p.to_json().to_string(), q.to_json().to_string());
+    }
+
+    #[test]
+    fn mismatched_books_and_dangling_spans_are_violations() {
+        let mut obs = Obs::in_memory();
+        let r = obs.open_span(SpanKind::Round, 0, None);
+        let b = obs.open_span(SpanKind::Broadcast, 0, None);
+        obs.emit(Event::MessageSent { round: 0, agent: 0, line: Line::Down, bytes: 64 });
+        // declared bytes disagree with the attributed 64
+        obs.close_span(b, Some(63), None, None);
+        obs.close_span(r, None, None, None);
+        // book delta disagrees with the round attribution too
+        obs.emit(Event::RoundEnd {
+            round: 0,
+            events: 1,
+            up_bytes: 0,
+            down_bytes: 99,
+            vtime_us: None,
+            wall_us: None,
+        });
+        let g = obs.open_span(SpanKind::Gather, 7, None);
+        assert!(g > 0);
+        let events: Vec<Json> = obs
+            .mem_lines()
+            .iter()
+            .map(|l| Json::parse(l).expect("line parses"))
+            .collect();
+        let p = analyze(&events);
+        assert_eq!(p.violations.len(), 5, "violations: {:?}", p.violations);
+        assert!(p.violations[0].contains("broadcast span bytes 63"));
+        assert!(p.violations[1].contains("sum of transmit child bytes"));
+        assert!(p.violations[2].contains("down_bytes delta"));
+        // the lone gather opened under no parent...
+        assert!(p.violations[3].contains("opened under no parent"));
+        // ...and never closed
+        assert!(p.violations[4].contains("never closed"));
+    }
+
+    #[test]
+    fn journal_without_spans_yields_empty_profile() {
+        let mut obs = Obs::in_memory();
+        obs.emit(Event::RoundStart { round: 0 });
+        obs.emit(Event::RoundEnd {
+            round: 0,
+            events: 0,
+            up_bytes: 0,
+            down_bytes: 0,
+            vtime_us: None,
+            wall_us: None,
+        });
+        let events: Vec<Json> = obs
+            .mem_lines()
+            .iter()
+            .map(|l| Json::parse(l).expect("line parses"))
+            .collect();
+        let p = analyze(&events);
+        assert!(p.rounds.is_empty());
+        assert!(p.violations.is_empty());
+        assert_eq!(p.spans_opened, 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Hierarchical spans over the flat event journal (DESIGN.md §14).
+//!
+//! A span is a pair of journal lines — [`super::Event::SpanOpen`] /
+//! [`super::Event::SpanClose`] — linked by a monotone id that the
+//! [`super::Obs`] handle allocates.  Parentage is positional: the open
+//! stack at emission time *is* the hierarchy, and the open line also
+//! records the declared parent so `deluxe profile --check` can verify
+//! the two agree.  The vocabulary is fixed ([`SpanKind`]): one `Round`
+//! root per coordinator round containing the `Broadcast` / `Gather` /
+//! `Apply` phases (with per-link `Transmit` children under `Broadcast`),
+//! and a `LocalSolve` phase with per-agent `Solve` children emitted by
+//! the worker pool.
+//!
+//! Dual-time discipline: the deterministic close fields (`bytes` from
+//! the `WireStats` books, `vtime_us` from the sim transport's virtual
+//! clock) survive [`super::strip_wall`]; wall time rides only under the
+//! `"wall_us"` key and is sampled exclusively through
+//! [`super::clock::Stopwatch`] — span code never reads the clock itself
+//! (the `wall-clock` lint fires on a raw read here, pinned by the
+//! `wall_clock_span.rs` fixture).
+
+use super::clock::Stopwatch;
+use super::Obs;
+
+/// The closed span vocabulary.  `as_str` values are the journal's
+/// `"kind"` field; [`SpanKind::parse`] is its inverse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// One coordinator round, root of everything below.
+    Round,
+    /// Leader → agents send phase (contains per-link [`SpanKind::Transmit`]).
+    Broadcast,
+    /// Reply-collection phase (uplink journal lines land inside it).
+    Gather,
+    /// Apply replies + z-update + periodic reset resync.
+    Apply,
+    /// Pooled local-solve phase (contains per-agent [`SpanKind::Solve`]).
+    LocalSolve,
+    /// One agent's solve, wall time from the worker pool's measurement.
+    Solve,
+    /// One link's leader→agent send inside [`SpanKind::Broadcast`].
+    Transmit,
+}
+
+impl SpanKind {
+    /// The journal string for this kind.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Round => "round",
+            SpanKind::Broadcast => "broadcast",
+            SpanKind::Gather => "gather",
+            SpanKind::Apply => "apply",
+            SpanKind::LocalSolve => "local_solve",
+            SpanKind::Solve => "solve",
+            SpanKind::Transmit => "transmit",
+        }
+    }
+
+    /// Inverse of [`SpanKind::as_str`]; `None` for unknown strings.
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "round" => SpanKind::Round,
+            "broadcast" => SpanKind::Broadcast,
+            "gather" => SpanKind::Gather,
+            "apply" => SpanKind::Apply,
+            "local_solve" => SpanKind::LocalSolve,
+            "solve" => SpanKind::Solve,
+            "transmit" => SpanKind::Transmit,
+            _ => return None,
+        })
+    }
+}
+
+/// RAII-flavoured helper pairing a span with a wall stopwatch: open it,
+/// do the work, [`TimedSpan::close`] with the deterministic fields and
+/// the wall sample is filled in automatically.  When spans are off the
+/// handle is inert (`id == 0`) and both calls are no-ops, so call sites
+/// need no gating of their own.
+#[derive(Debug)]
+pub struct TimedSpan {
+    id: u64,
+    sw: Option<Stopwatch>,
+}
+
+impl TimedSpan {
+    /// Open a span (and start its stopwatch) if `obs` has spans on.
+    pub fn open(obs: &mut Obs, kind: SpanKind, round: u64, agent: Option<usize>) -> TimedSpan {
+        if !obs.spans_on() {
+            return TimedSpan { id: 0, sw: None };
+        }
+        let id = obs.open_span(kind, round, agent);
+        TimedSpan { id, sw: Some(Stopwatch::start()) }
+    }
+
+    /// The journal span id (`0` when spans are off).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Close the span, journaling the deterministic `bytes` / `vtime_us`
+    /// plus the elapsed wall microseconds under `"wall_us"`.
+    pub fn close(self, obs: &mut Obs, bytes: Option<u64>, vtime_us: Option<u64>) {
+        let wall = self.sw.map(|s| s.micros());
+        obs.close_span(self.id, bytes, vtime_us, wall);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_strings_round_trip() {
+        let all = [
+            SpanKind::Round,
+            SpanKind::Broadcast,
+            SpanKind::Gather,
+            SpanKind::Apply,
+            SpanKind::LocalSolve,
+            SpanKind::Solve,
+            SpanKind::Transmit,
+        ];
+        for k in all {
+            assert_eq!(SpanKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(SpanKind::parse("rounds"), None);
+        assert_eq!(SpanKind::parse(""), None);
+    }
+
+    #[test]
+    fn timed_span_is_inert_when_spans_off() {
+        let mut obs = Obs::off();
+        let s = TimedSpan::open(&mut obs, SpanKind::Round, 0, None);
+        assert_eq!(s.id(), 0);
+        s.close(&mut obs, Some(1), None);
+        assert!(obs.flight.is_empty());
+
+        let mut obs = Obs::in_memory();
+        obs.set_spans(false);
+        let s = TimedSpan::open(&mut obs, SpanKind::Round, 0, None);
+        assert_eq!(s.id(), 0);
+        s.close(&mut obs, None, None);
+        assert!(obs.mem_lines().is_empty());
+    }
+
+    #[test]
+    fn timed_span_emits_open_and_close_with_wall() {
+        let mut obs = Obs::in_memory();
+        let s = TimedSpan::open(&mut obs, SpanKind::Broadcast, 3, None);
+        assert_eq!(s.id(), 1);
+        s.close(&mut obs, Some(42), Some(7));
+        let lines = obs.mem_lines();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"ev\":\"span_open\""));
+        assert!(lines[0].contains("\"kind\":\"broadcast\""));
+        assert!(lines[1].contains("\"ev\":\"span_close\""));
+        assert!(lines[1].contains("\"bytes\":42"));
+        assert!(lines[1].contains("\"vtime_us\":7"));
+        assert!(lines[1].contains("\"wall_us\""));
+    }
+}

@@ -154,6 +154,15 @@ pub trait Transport {
         None
     }
 
+    /// Virtual-time cost in µs of the most recent [`Transport::send`],
+    /// if this transport models one ([`SimLink`]: the delay drawn for
+    /// that delivery).  The coordinator journals it on each per-link
+    /// transmit span (DESIGN.md §14) — deterministic, like
+    /// [`Transport::vtime_us`].
+    fn last_send_vtime_us(&self) -> Option<u64> {
+        None
+    }
+
     /// Tear down threads/sockets.  Called once, after the coordinator
     /// has drained final replies.
     fn shutdown(&mut self) -> anyhow::Result<()>;

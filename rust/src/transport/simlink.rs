@@ -32,6 +32,9 @@ pub struct SimLink {
     uplink: UplinkBooks,
     vtime: SimTime,
     round_max: SimTime,
+    /// Delay drawn for the most recent send (0 for un-delayed frames),
+    /// surfaced per transmit span via `last_send_vtime_us`.
+    last_send: SimTime,
 }
 
 impl SimLink {
@@ -54,6 +57,7 @@ impl SimLink {
             uplink: UplinkBooks::new(n),
             vtime: 0,
             round_max: 0,
+            last_send: 0,
         }
     }
 
@@ -92,6 +96,7 @@ impl Transport for SimLink {
                 match self.links[to].transmit(bytes, rng) {
                     Some(delay) => {
                         self.round_max = self.round_max.max(delay);
+                        self.last_send = delay;
                         Frame::Round { zdelta: Some(msg) }
                     }
                     // lost in flight: the agent still gets its round
@@ -99,6 +104,7 @@ impl Transport for SimLink {
                     None => {
                         let d = self.links[to].control_delay(rng);
                         self.round_max = self.round_max.max(d);
+                        self.last_send = d;
                         Frame::Round { zdelta: None }
                     }
                 }
@@ -106,6 +112,7 @@ impl Transport for SimLink {
             Frame::Round { zdelta: None } => {
                 let d = self.links[to].control_delay(rng);
                 self.round_max = self.round_max.max(d);
+                self.last_send = d;
                 Frame::Round { zdelta: None }
             }
             Frame::Reset { z } => {
@@ -115,9 +122,13 @@ impl Transport for SimLink {
                 // the leader's reset cadence is round-based, not
                 // offer-based)
                 self.links[to].stats.record_reliable(sync);
+                self.last_send = 0;
                 Frame::Reset { z }
             }
-            other => other,
+            other => {
+                self.last_send = 0;
+                other
+            }
         };
         // lint:allow(unaccounted-send): bytes were charged on the sim link above; the mesh hop is the in-process delivery, not a wire hop
         self.mesh.send(to, frame)
@@ -156,6 +167,12 @@ impl Transport for SimLink {
     /// may appear in the journal's deterministic fields.
     fn vtime_us(&self) -> Option<u64> {
         Some(self.vtime)
+    }
+
+    /// Per-send delay, drawn deterministically from the caller's RNG —
+    /// the transmit spans' virtual-time cost.
+    fn last_send_vtime_us(&self) -> Option<u64> {
+        Some(self.last_send)
     }
 
     fn shutdown(&mut self) -> anyhow::Result<()> {

@@ -150,6 +150,20 @@ fn wall_clock_allowed_only_in_the_obs_timing_sampler() {
     );
 }
 
+#[test]
+fn span_code_must_route_timing_through_the_clock_module() {
+    // the span layer carries the dual-time discipline (DESIGN.md §14):
+    // wall-clock enters spans only via obs/clock.rs::Stopwatch, so a
+    // raw Instant::now in span-shaped code is a finding...
+    let src = fixture("wall_clock_span.rs");
+    assert_eq!(
+        rules_of("rust/src/obs/span.rs", &src),
+        vec!["wall-clock"]
+    );
+    // ...while the one allowed sampler file stays clean
+    assert!(rules_of("rust/src/obs/clock.rs", &src).is_empty());
+}
+
 // ---------------------------------------------------------------------------
 // suppression semantics
 // ---------------------------------------------------------------------------

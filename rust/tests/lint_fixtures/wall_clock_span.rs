@@ -1,0 +1,19 @@
+//! Fixture: a span-shaped timing helper that reads the wall clock
+//! directly instead of routing through `obs::clock::Stopwatch` — the
+//! mistake the per-file allowance exists to catch.  Exactly one
+//! `wall-clock` finding.
+
+/// A would-be span that bypasses the clock module.
+pub struct RogueSpan {
+    t0: std::time::Instant,
+}
+
+impl RogueSpan {
+    pub fn open() -> RogueSpan {
+        RogueSpan { t0: std::time::Instant::now() }
+    }
+
+    pub fn close(self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+}

@@ -156,6 +156,21 @@ fn tcp_journal_matches_inproc_on_deterministic_fields() {
     let (ja, jb) = (strip(&a.obs), strip(&b.obs));
     assert!(!ja.is_empty(), "journal recorded events");
     assert_eq!(ja, jb, "journals diverged between in-proc and TCP");
+    // the span layer (DESIGN.md §14) rides the same contract: span
+    // open/close lines are deterministic fields, so the ja == jb pin
+    // above already covers them bit-for-bit — here we assert they are
+    // actually present and balanced on both transports
+    let count = |lines: &[String], ev: &str| {
+        lines
+            .iter()
+            .filter(|l| l.contains(&format!("\"ev\":\"{ev}\"")))
+            .count()
+    };
+    let opened = count(&ja, "span_open");
+    assert!(opened > 0, "rounds must emit spans");
+    assert_eq!(opened, count(&ja, "span_close"), "every span closes");
+    assert_eq!(opened, count(&jb, "span_open"));
+    assert_eq!(opened, count(&jb, "span_close"));
     // the journal reconciles exactly with the engine books (the
     // ISSUE's acceptance criterion): per-line sums equal the wire
     // stats the coordinator kept independently
