@@ -12,19 +12,26 @@
 //! in-proc round with the obs journal off vs streaming JSONL to disk
 //! (the journal tax — acceptance budget is within 5% per round), plus
 //! the journaling round with hierarchical spans off vs on (the span
-//! tax, same 5% budget — gated in CI by `deluxe perfdiff`).
+//! tax, same 5% budget — gated in CI by `deluxe perfdiff`), plus the
+//! blocked solve kernels vs their scalar reference twins and the fused
+//! NativeSgd batch vs per-agent solves (the PR10 speedup rows — both
+//! pairs are bit-identical in value, so the ratios are pure throughput).
 
-use deluxe::admm::{ConsensusAdmm, ConsensusConfig};
+use deluxe::admm::core::solve_rngs;
+use deluxe::admm::{ConsensusAdmm, ConsensusConfig, WorkerPool};
 use deluxe::benchlib::{black_box, Bench};
 use deluxe::comm::{sub, sub_into, Estimate, Trigger, TriggerState};
+use deluxe::data::partition::iid_split;
 use deluxe::data::regress::{generate, RegressSpec};
+use deluxe::data::synth::{generate as synth_gen, SynthSpec};
+use deluxe::kernels::{self, reference};
 use deluxe::linalg::{
     soft_threshold, soft_threshold_into, Cholesky, Matrix,
 };
 use deluxe::model::MlpSpec;
 use deluxe::rng::{Pcg64, Rng};
 use deluxe::sim::EventQueue;
-use deluxe::solver::{ExactQuadratic, IdentityProx, LocalSolver};
+use deluxe::solver::{ExactQuadratic, IdentityProx, LocalSolver, NativeSgd};
 use deluxe::transport::LossyLink;
 use deluxe::wire::{Compressor, CompressorCfg, ErrorFeedback, WireMessage};
 
@@ -242,6 +249,95 @@ fn main() {
     b.bench("mlp.local_admm (5 steps x batch 64)", || {
         black_box(spec.local_admm(&params, &zeros, &zeros, &xs5, &ys5, 0.1, 1.0, 5, 64));
     });
+
+    println!("\n== fused solve kernels: blocked vs scalar reference ==");
+    // the solve phase's dominant GEMMs at the MNIST-surrogate hot shape
+    // (batch 64, 64 -> 400 first layer) — same inputs through the
+    // blocked kernel and its unblocked scalar twin; outputs are
+    // bit-identical (DESIGN.md §15), so the delta is pure throughput
+    {
+        let (n, din, dout) = (64usize, 64usize, 400usize);
+        let inp: Vec<f32> = (0..n * din).map(|_| rng.f32n()).collect();
+        let w: Vec<f32> = (0..din * dout).map(|_| rng.f32n()).collect();
+        let bias: Vec<f32> = (0..dout).map(|_| rng.f32n()).collect();
+        let mut out = vec![0.0f32; n * dout];
+        b.bench("kernels.layer_forward 64x64->400 (blocked)", || {
+            kernels::layer_forward(&inp, &w, &bias, &mut out, n, din, dout, true);
+            black_box(out[0]);
+        });
+        b.bench("kernels.layer_forward 64x64->400 (reference)", || {
+            reference::layer_forward(&inp, &w, &bias, &mut out, n, din, dout, true);
+            black_box(out[0]);
+        });
+        let delta: Vec<f32> = (0..n * dout).map(|_| rng.f32n()).collect();
+        let mut gw = vec![0.0f32; din * dout];
+        b.bench("kernels.accum_outer 64x64->400 (blocked)", || {
+            gw.iter_mut().for_each(|x| *x = 0.0);
+            kernels::accum_outer(&inp, &delta, &mut gw, n, din, dout);
+            black_box(gw[0]);
+        });
+        b.bench("kernels.accum_outer 64x64->400 (reference)", || {
+            gw.iter_mut().for_each(|x| *x = 0.0);
+            reference::accum_outer(&inp, &delta, &mut gw, n, din, dout);
+            black_box(gw[0]);
+        });
+        let mut dinp = vec![0.0f32; n * din];
+        b.bench("kernels.backprop_dot 64x64<-400 (blocked)", || {
+            dinp.iter_mut().for_each(|x| *x = 0.0);
+            kernels::backprop_dot(&w, &delta, &mut dinp, n, din, dout);
+            black_box(dinp[0]);
+        });
+        b.bench("kernels.backprop_dot 64x64<-400 (reference)", || {
+            dinp.iter_mut().for_each(|x| *x = 0.0);
+            reference::backprop_dot(&w, &delta, &mut dinp, n, din, dout);
+            black_box(dinp[0]);
+        });
+        // the exact-prox side's f64 mat-vec (gram.matvec in every
+        // ExactQuadratic solve) at the lasso frontier shape
+        let a64: Vec<f64> = (0..128 * 128).map(|_| rng.normal()).collect();
+        let x128: Vec<f64> = (0..128).map(|_| rng.normal()).collect();
+        let mut y128 = vec![0.0f64; 128];
+        b.bench("kernels.mat_vec_f64 128x128 (blocked)", || {
+            kernels::mat_vec_f64(&a64, &x128, &mut y128, 128, 128);
+            black_box(y128[0]);
+        });
+        b.bench("kernels.mat_vec_f64 128x128 (reference)", || {
+            reference::mat_vec_f64(&a64, &x128, &mut y128, 128, 128);
+            black_box(y128[0]);
+        });
+    }
+
+    println!("\n== fused batch solve: per-agent vs arena-fused ==");
+    // one NativeSgd solve round over 8 agents — trait-default per-agent
+    // solves (fresh buffers each call) vs the fused solve_batch_into
+    // (retained scratch arenas, stacked minibatch draws); values are
+    // bit-identical, so the delta is allocation + locality
+    {
+        let mut wrng = Pcg64::seed(5);
+        let (train, _) = synth_gen(&SynthSpec::tiny(), &mut wrng);
+        let mlp = MlpSpec::new(vec![8, 16, 4]);
+        let init = mlp.init(&mut wrng);
+        let agents: Vec<usize> = (0..8).collect();
+        let anchors = vec![init.clone(); 8];
+        let base = Pcg64::seed(6);
+        let mut seq =
+            NativeSgd::new(mlp.clone(), iid_split(&train, 8, &mut wrng), 0.1, 2, 8, &init);
+        b.bench("native_sgd 8-agent round (per-agent solves)", || {
+            let mut rngs = solve_rngs(&base, 0, 8);
+            for a in 0..8 {
+                black_box(seq.solve(a, &anchors[a], 0.8, &mut rngs[a]));
+            }
+        });
+        let mut fused =
+            NativeSgd::new(mlp, iid_split(&train, 8, &mut wrng), 0.1, 2, 8, &init);
+        let pool = WorkerPool::sequential();
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        b.bench("native_sgd 8-agent round (fused batch, arenas)", || {
+            let mut rngs = solve_rngs(&base, 0, 8);
+            fused.solve_batch_into(&agents, &anchors, 0.8, &mut rngs, &pool, &mut outs);
+            black_box(outs.len());
+        });
+    }
 
     println!("\ndone: {} benchmarks", b.results.len());
 }
@@ -535,6 +631,122 @@ fn trajectory(path: &str) {
         on.shutdown();
         std::fs::remove_file(&jpath_on).ok();
     }
+
+    // kernel tax (inverted): the solve phase's dominant GEMM at the
+    // MNIST-surrogate hot shape through the blocked kernel vs its scalar
+    // reference twin.  Outputs are bit-identical (DESIGN.md §15), so the
+    // ratio is pure throughput; the blocked case's speedup is the number
+    // the fused-kernel tentpole exists to move.
+    {
+        let mut krng = Pcg64::seed(13);
+        let (n, din, dout) = (64usize, 64usize, 400usize);
+        let inp: Vec<f32> = (0..n * din).map(|_| krng.f32n()).collect();
+        let w: Vec<f32> = (0..din * dout).map(|_| krng.f32n()).collect();
+        let bias: Vec<f32> = (0..dout).map(|_| krng.f32n()).collect();
+        let mut out = vec![0.0f32; n * dout];
+        let res_ref = b.bench(
+            "kernels.layer_forward 64x64->400 (reference)",
+            || {
+                reference::layer_forward(
+                    &inp, &w, &bias, &mut out, n, din, dout, true,
+                );
+                black_box(out[0]);
+            },
+        );
+        let ref_ns = res_ref.median_ns();
+        cases.push(Json::obj(vec![
+            ("kernel", Json::Str("reference".to_string())),
+            ("per_round_us", Json::Num(ref_ns / 1e3)),
+            ("result", res_ref.to_json()),
+        ]));
+        let res_blk = b.bench(
+            "kernels.layer_forward 64x64->400 (blocked)",
+            || {
+                kernels::layer_forward(
+                    &inp, &w, &bias, &mut out, n, din, dout, true,
+                );
+                black_box(out[0]);
+            },
+        );
+        let blk_ns = res_blk.median_ns();
+        cases.push(Json::obj(vec![
+            ("kernel", Json::Str("blocked".to_string())),
+            ("per_round_us", Json::Num(blk_ns / 1e3)),
+            (
+                "speedup_vs_reference",
+                Json::Num(if blk_ns > 0.0 { ref_ns / blk_ns } else { 0.0 }),
+            ),
+            ("result", res_blk.to_json()),
+        ]));
+    }
+
+    // fused-solve tax (inverted): one 8-agent NativeSgd round through
+    // per-agent trait solves (fresh buffers each call) vs the fused
+    // solve_batch_into (retained arenas, stacked draws).  Bit-identical
+    // values (rust/tests/kernels.rs), so the ratio is allocation +
+    // locality — the scratch-arena half of the tentpole.
+    {
+        let mut wrng = Pcg64::seed(5);
+        let (train, _) = synth_gen(&SynthSpec::tiny(), &mut wrng);
+        let mlp = MlpSpec::new(vec![8, 16, 4]);
+        let init = mlp.init(&mut wrng);
+        let agents: Vec<usize> = (0..8).collect();
+        let anchors = vec![init.clone(); 8];
+        let base = Pcg64::seed(6);
+        let mut seq = NativeSgd::new(
+            mlp.clone(),
+            iid_split(&train, 8, &mut wrng),
+            0.1,
+            2,
+            8,
+            &init,
+        );
+        let res_seq = b.bench(
+            "native_sgd 8-agent round (per-agent solves)",
+            || {
+                let mut rngs = solve_rngs(&base, 0, 8);
+                for a in 0..8 {
+                    black_box(seq.solve(a, &anchors[a], 0.8, &mut rngs[a]));
+                }
+            },
+        );
+        let seq_ns = res_seq.median_ns();
+        cases.push(Json::obj(vec![
+            ("solver", Json::Str("per-agent".to_string())),
+            ("per_round_us", Json::Num(seq_ns / 1e3)),
+            ("result", res_seq.to_json()),
+        ]));
+        let mut fused = NativeSgd::new(
+            mlp,
+            iid_split(&train, 8, &mut wrng),
+            0.1,
+            2,
+            8,
+            &init,
+        );
+        let pool = WorkerPool::sequential();
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        let res_fused = b.bench(
+            "native_sgd 8-agent round (fused batch, arenas)",
+            || {
+                let mut rngs = solve_rngs(&base, 0, 8);
+                fused.solve_batch_into(
+                    &agents, &anchors, 0.8, &mut rngs, &pool, &mut outs,
+                );
+                black_box(outs.len());
+            },
+        );
+        let fused_ns = res_fused.median_ns();
+        cases.push(Json::obj(vec![
+            ("solver", Json::Str("fused-batch".to_string())),
+            ("per_round_us", Json::Num(fused_ns / 1e3)),
+            (
+                "speedup_vs_per_agent",
+                Json::Num(if fused_ns > 0.0 { seq_ns / fused_ns } else { 0.0 }),
+            ),
+            ("result", res_fused.to_json()),
+        ]));
+    }
     let doc = Json::obj(vec![
         (
             "series",
@@ -547,7 +759,9 @@ fn trajectory(path: &str) {
             Json::Str(
                 "consensus.round (64 agents, dim 128), pooled exact prox; \
                  coordinator.round (4 agents, mlp 8-16-4), in-proc vs \
-                 tcp loopback, journal off vs on, and spans off vs on"
+                 tcp loopback, journal off vs on, and spans off vs on; \
+                 kernels.layer_forward blocked vs reference; native_sgd \
+                 8-agent round per-agent vs fused-batch"
                     .to_string(),
             ),
         ),

@@ -173,6 +173,17 @@ pub fn solve_rngs(base: &Pcg64, round: u64, n: usize) -> Vec<Pcg64> {
     (0..n).map(|i| base.fork(round, i as u64)).collect()
 }
 
+/// Agent `agent`'s share of a fused dispatch's `total` wall
+/// microseconds: `total / n` each, with the remainder handed one
+/// microsecond apiece to the earliest agents — so the `n` shares sum to
+/// `total` exactly (the span-reconciliation invariant behind
+/// [`RoundCore::solve_timed_chunked`]).
+pub fn prorate(total: u64, n: usize, agent: usize) -> u64 {
+    debug_assert!(agent < n);
+    let n64 = n as u64;
+    total / n64 + u64::from((agent as u64) < total % n64)
+}
+
 // ---------------------------------------------------------------------------
 // Lines
 // ---------------------------------------------------------------------------
@@ -512,6 +523,36 @@ impl<T: Scalar> RoundCore<T> {
         phase.close(obs, None, None);
     }
 
+    /// [`Self::solve_timed`] for **fused** batch solvers
+    /// ([`crate::solver::LocalSolver::solve_batch_into`]): the whole
+    /// phase is one dispatch — `f` runs the entire batch, chunked
+    /// internally across the pool — so there is no per-item pool
+    /// measurement to forward.  The dispatch wall is measured once and
+    /// attributed pro rata ([`prorate`]) across the core's `n` agents;
+    /// the journal keeps the exact shape of the unfused path — one
+    /// `local_solve` phase span, then one `solve` span + `SolveDone`
+    /// line per agent **in agent order** — and the per-agent walls sum
+    /// to the measured dispatch wall exactly.  With `obs` off this is
+    /// just `f()`.
+    pub fn solve_timed_chunked<F: FnOnce()>(&self, f: F, obs: &mut Obs) {
+        if !obs.on() {
+            f();
+            return;
+        }
+        let round = self.round_idx as u64;
+        let phase = TimedSpan::open(obs, SpanKind::LocalSolve, round, None);
+        let sw = Stopwatch::start();
+        f();
+        let total = sw.micros();
+        for agent in 0..self.n {
+            let us = prorate(total, self.n, agent);
+            let s = obs.open_span(SpanKind::Solve, round, Some(agent));
+            obs.emit(Event::SolveDone { round, agent, micros: us });
+            obs.close_span(s, None, None, Some(us));
+        }
+        phase.close(obs, None, None);
+    }
+
     /// Close the round: advance the counter and report whether the
     /// periodic reset (period `T`, 0 = disabled) is due.
     pub fn finish_round(&mut self, reset_period: usize) -> bool {
@@ -736,6 +777,65 @@ mod tests {
         let mut items2 = vec![0u64; 6];
         core.solve_timed(&mut items2, |i, v| *v = i as u64 + 1, &mut off);
         assert_eq!(items2, items);
+        assert_eq!(off.flight.len(), 0);
+    }
+
+    #[test]
+    fn prorate_distributes_remainder_to_earliest() {
+        let shares: Vec<u64> = (0..4).map(|i| prorate(10, 4, i)).collect();
+        assert_eq!(shares, vec![3, 3, 2, 2]);
+        for (total, n) in [(0u64, 3usize), (7, 1), (13, 5), (100, 7)] {
+            let sum: u64 = (0..n).map(|i| prorate(total, n, i)).sum();
+            assert_eq!(sum, total, "shares must sum to the dispatch wall");
+        }
+    }
+
+    #[test]
+    fn solve_timed_chunked_reconciles_fused_dispatch_walls() {
+        use crate::obs::{Event, Obs};
+        let core = RoundCore::<f64>::new(5, 2, &CompressorCfg::Identity, 4);
+        let mut obs = Obs::in_memory();
+        let mut ran = false;
+        core.solve_timed_chunked(|| ran = true, &mut obs);
+        assert!(ran);
+        // one SolveDone per agent, in agent order, walls matching the
+        // per-agent solve spans
+        let mut done: Vec<(usize, u64)> = Vec::new();
+        let mut span_agent = std::collections::BTreeMap::new();
+        let mut span_wall: Vec<(usize, u64)> = Vec::new();
+        for e in obs.flight.events() {
+            match e {
+                Event::SolveDone { agent, micros, round } => {
+                    assert_eq!(*round, 0);
+                    done.push((*agent, *micros));
+                }
+                Event::SpanOpen {
+                    span, kind: SpanKind::Solve, agent, ..
+                } => {
+                    span_agent.insert(*span, agent.unwrap());
+                }
+                Event::SpanClose { span, wall_us, .. } => {
+                    if let Some(&a) = span_agent.get(span) {
+                        span_wall.push((a, wall_us.unwrap()));
+                    }
+                }
+                _ => {}
+            }
+        }
+        let agents: Vec<usize> = done.iter().map(|d| d.0).collect();
+        assert_eq!(agents, (0..5).collect::<Vec<_>>());
+        assert_eq!(done, span_wall, "span walls must equal the SolveDone attribution");
+        // the pro-rata shares sum to the dispatch wall and match prorate()
+        let total: u64 = done.iter().map(|d| d.1).sum();
+        for &(agent, us) in &done {
+            assert_eq!(us, prorate(total, 5, agent));
+        }
+        assert_eq!(obs.metrics.hist("solve_us").map(|h| h.count()), Some(5));
+        // obs off: plain dispatch, nothing journaled
+        let mut off = Obs::off();
+        let mut ran2 = false;
+        core.solve_timed_chunked(|| ran2 = true, &mut off);
+        assert!(ran2);
         assert_eq!(off.flight.len(), 0);
     }
 

@@ -39,7 +39,10 @@ pub const RULES: [&str; 5] = [
 pub const BAD_SUPPRESSION: &str = "bad-suppression";
 
 /// Library modules whose iteration order / sends feed trajectories.
-pub const RESTRICTED: [&str; 9] = [
+/// `kernels` is restricted because its accumulation order *is* the
+/// bit-exactness contract (DESIGN.md §15): a nondeterministic iteration
+/// or ambient draw there would corrupt every solve trajectory.
+pub const RESTRICTED: [&str; 10] = [
     "admm",
     "sim",
     "comm",
@@ -49,6 +52,7 @@ pub const RESTRICTED: [&str; 9] = [
     "runtime",
     "transport",
     "obs",
+    "kernels",
 ];
 
 /// Modules allowed to read the wall clock (they measure, not simulate).

@@ -136,11 +136,11 @@ impl FedLocal for NativeFed {
         rng: &mut Pcg64,
     ) -> Vec<f32> {
         let (xs, ys) = self.batches(agent, rng);
-        let zeros = vec![0.0f32; start.len()];
         // local_admm with (zhat=anchor, u=0, rho=mu) is exactly
-        // f_i + (mu/2)|x − anchor|²
-        self.spec.local_admm(
-            start, anchor, &zeros, &xs, &ys, self.lr, mu as f32, self.steps,
+        // f_i + (mu/2)|x − anchor|²; the anchor variant folds u = 0 in
+        // bit-identically without materializing a zero dual vector.
+        self.spec.local_admm_anchor(
+            start, anchor, &xs, &ys, self.lr, mu as f32, self.steps,
             self.batch,
         )
     }
@@ -192,10 +192,8 @@ impl FedLocal for NativeFed {
                 batch,
                 job.rng,
             );
-            let zeros = vec![0.0f32; start.len()];
-            job.out = spec.local_admm(
-                start, anchor, &zeros, &xs, &ys, lr, mu as f32, steps,
-                batch,
+            job.out = spec.local_admm_anchor(
+                start, anchor, &xs, &ys, lr, mu as f32, steps, batch,
             );
         });
         jobs.into_iter().map(|j| j.out).collect()

@@ -1,0 +1,156 @@
+//! Thread-local allocation counting for zero-alloc hot-path assertions.
+//!
+//! [`CountingAlloc`] is a [`GlobalAlloc`] wrapper around the system
+//! allocator that counts allocations (and allocated bytes) on the
+//! *current thread* while counting is [`enable`]d.  It is NOT installed
+//! by the library — a test binary opts in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: deluxe::benchlib::alloc::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! so the crate's normal builds keep the plain system allocator.
+//! `rust/tests/alloc.rs` uses it to pin the DESIGN.md §15 contract: the
+//! fused solve phase performs **zero allocations per round after
+//! warmup**.
+//!
+//! Implementation constraints (an allocator must never allocate or
+//! panic while serving a request):
+//!
+//! * the counters are `const`-initialized `thread_local!` cells — no
+//!   lazy initialization, so reading them never allocates;
+//! * all cell access goes through `try_with`, so a request landing
+//!   during thread teardown is simply not counted instead of aborting;
+//! * only `alloc` / `alloc_zeroed` / `realloc` count; `dealloc` is
+//!   free-of-charge (the contract is about acquiring memory).
+//!
+//! Counting is per-thread by design: the pooled solve path's worker
+//! threads are *supposed* to allocate during warmup, and the assertion
+//! runs on the driving thread with `WorkerPool::sequential()` where the
+//! whole hot path executes inline.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static COUNT: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System-allocator wrapper that bumps the current thread's counters
+/// while counting is enabled.  Zero-sized; install via
+/// `#[global_allocator]` in the binary that wants accounting.
+pub struct CountingAlloc;
+
+fn note(size: usize) {
+    let _ = ENABLED.try_with(|e| {
+        if e.get() {
+            let _ = COUNT.try_with(|c| c.set(c.get() + 1));
+            let _ = BYTES.try_with(|b| b.set(b.get() + size as u64));
+        }
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        note(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Start counting on the current thread (counters keep their values;
+/// call [`reset`] first for a fresh measurement).
+pub fn enable() {
+    let _ = ENABLED.try_with(|e| e.set(true));
+}
+
+/// Stop counting on the current thread.
+pub fn disable() {
+    let _ = ENABLED.try_with(|e| e.set(false));
+}
+
+/// Zero the current thread's counters.
+pub fn reset() {
+    let _ = COUNT.try_with(|c| c.set(0));
+    let _ = BYTES.try_with(|b| b.set(0));
+}
+
+/// `(allocations, bytes)` counted on the current thread since the last
+/// [`reset`].
+pub fn counts() -> (u64, u64) {
+    let count = COUNT.try_with(Cell::get).unwrap_or(0);
+    let bytes = BYTES.try_with(Cell::get).unwrap_or(0);
+    (count, bytes)
+}
+
+/// Run `f` with counting enabled and return `(result, allocations,
+/// bytes)` attributed to it.  Counting state is reset on entry and
+/// disabled on exit; the measurement machinery itself performs no heap
+/// allocation between enable and disable.
+pub fn measure<R>(f: impl FnOnce() -> R) -> (R, u64, u64) {
+    reset();
+    enable();
+    let out = f();
+    let (count, bytes) = counts();
+    disable();
+    (out, count, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: CountingAlloc is not installed as the global allocator in
+    // unit tests (that happens only in `rust/tests/alloc.rs`), so these
+    // tests exercise the counter plumbing, not actual interception.
+
+    #[test]
+    fn counters_accumulate_and_reset() {
+        reset();
+        enable();
+        note(16);
+        note(8);
+        let (count, bytes) = counts();
+        assert_eq!((count, bytes), (2, 24));
+        disable();
+        note(100); // not counted while disabled
+        assert_eq!(counts(), (2, 24));
+        reset();
+        assert_eq!(counts(), (0, 0));
+    }
+
+    #[test]
+    fn measure_scopes_the_counting() {
+        note(999); // stray note before: wiped by measure's reset
+        let (out, count, bytes) = measure(|| {
+            note(32);
+            7
+        });
+        assert_eq!(out, 7);
+        assert_eq!((count, bytes), (1, 32));
+        // counting is off afterwards
+        note(5);
+        assert_eq!(counts(), (1, 32));
+    }
+}

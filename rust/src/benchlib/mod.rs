@@ -5,6 +5,8 @@
 //! adaptive warmup, fixed-duration sampling, robust statistics and a
 //! plain-text report compatible with `cargo bench` output scraping.
 
+pub mod alloc;
+
 use std::time::{Duration, Instant};
 
 /// One benchmark's collected samples and statistics.

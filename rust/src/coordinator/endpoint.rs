@@ -12,6 +12,7 @@
 use crate::comm::{Estimate, TriggerState};
 use crate::config::RunConfig;
 use crate::data::synth::ClassDataset;
+use crate::kernels::Scratch;
 use crate::model::MlpSpec;
 use crate::rng::Pcg64;
 use crate::transport::frame::Frame;
@@ -52,6 +53,15 @@ pub struct AgentEndpoint {
     ef_up: ErrorFeedback<f32>,
     rng: Pcg64,
     comp: Box<dyn Compressor<f32>>,
+    /// Retained solve-phase arenas (DESIGN.md §15): the kernel scratch,
+    /// the stacked S·B minibatch pair, the next-iterate buffer and the
+    /// uplink d-vector — reused across rounds so the steady-state round
+    /// loop stops allocating on the model path.
+    scratch: Scratch,
+    bx: Vec<f32>,
+    by: Vec<f32>,
+    x_next: Vec<f32>,
+    dvec: Vec<f32>,
 }
 
 impl AgentEndpoint {
@@ -82,6 +92,11 @@ impl AgentEndpoint {
             rng,
             comp: cfg.compressor.build::<f32>(),
             cfg: cfg.clone(),
+            scratch: Scratch::new(),
+            bx: Vec::new(),
+            by: Vec::new(),
+            x_next: Vec::new(),
+            dvec: Vec::new(),
         }
     }
 
@@ -141,8 +156,7 @@ impl AgentEndpoint {
     ) -> Frame {
         let dim = self.x.len();
         self.zhat_prev.clear();
-        let snapshot: Vec<f32> = self.zhat.get().to_vec();
-        self.zhat_prev.extend_from_slice(&snapshot);
+        self.zhat_prev.extend_from_slice(self.zhat.get());
         if let Some(wire_msg) = zdelta {
             self.zhat.apply_msg(&wire_msg);
         }
@@ -151,38 +165,42 @@ impl AgentEndpoint {
             self.u[j] += alpha * self.x[j] - self.zhat.get()[j]
                 + (1.0 - alpha) * self.zhat_prev[j];
         }
-        // S prox-SGD steps from the warm-started x
-        let d = self.spec.input_dim();
-        let c = self.spec.classes();
-        let mut xs =
-            Vec::with_capacity(self.cfg.steps * self.cfg.batch * d);
-        let mut ys =
-            Vec::with_capacity(self.cfg.steps * self.cfg.batch * c);
+        // S prox-SGD steps from the warm-started x, through the retained
+        // scratch arenas — no per-round model-path allocation after the
+        // first round (DESIGN.md §15).  RNG consumption is identical to
+        // the historical per-step sample_batch calls.
+        self.bx.clear();
+        self.by.clear();
         for _ in 0..self.cfg.steps {
-            let (bx, by) =
-                self.shard.sample_batch(self.cfg.batch, &mut self.rng);
-            xs.extend_from_slice(&bx);
-            ys.extend_from_slice(&by);
+            self.shard.sample_batch_into(
+                self.cfg.batch,
+                &mut self.rng,
+                &mut self.bx,
+                &mut self.by,
+            );
         }
-        self.x = self.spec.local_admm(
+        let mut x_next = std::mem::take(&mut self.x_next);
+        self.spec.local_admm_into(
             &self.x,
             self.zhat.get(),
             &self.u,
-            &xs,
-            &ys,
+            &self.bx,
+            &self.by,
             self.cfg.lr,
             self.cfg.rho,
             self.cfg.steps,
             self.cfg.batch,
+            &mut self.scratch,
+            &mut x_next,
         );
-        let dvec: Vec<f32> = self
-            .x
-            .iter()
-            .zip(&self.u)
-            .map(|(&x, &u)| alpha * x + u)
-            .collect();
+        std::mem::swap(&mut self.x, &mut x_next);
+        self.x_next = x_next;
+        self.dvec.clear();
+        self.dvec.extend(
+            self.x.iter().zip(&self.u).map(|(&x, &u)| alpha * x + u),
+        );
         let mut payload = None;
-        if let Some(dl) = self.d_trig.offer(&dvec, &mut self.rng) {
+        if let Some(dl) = self.d_trig.offer(&self.dvec, &mut self.rng) {
             let msg =
                 self.ef_up.compress(&dl, self.comp.as_ref(), &mut self.rng);
             let bytes = msg.wire_bytes() as u64;

@@ -117,13 +117,29 @@ impl ClassDataset {
         rng: &mut impl Rng,
     ) -> (Vec<f32>, Vec<f32>) {
         let mut xs = Vec::with_capacity(batch * self.dim);
-        let mut ys = vec![0.0f32; batch * self.classes];
-        for b in 0..batch {
+        let mut ys = Vec::with_capacity(batch * self.classes);
+        self.sample_batch_into(batch, rng, &mut xs, &mut ys);
+        (xs, ys)
+    }
+
+    /// [`Self::sample_batch`] appending into caller-owned arenas — the
+    /// allocation-free solve-phase path (`rust/tests/alloc.rs`).  RNG
+    /// consumption is identical (one draw per row), so trajectories are
+    /// unchanged whichever entry point a caller uses.
+    pub fn sample_batch_into(
+        &self,
+        batch: usize,
+        rng: &mut impl Rng,
+        xs: &mut Vec<f32>,
+        ys: &mut Vec<f32>,
+    ) {
+        for _ in 0..batch {
             let i = rng.below(self.len());
             xs.extend_from_slice(self.x(i));
-            ys[b * self.classes + self.labels[i]] = 1.0;
+            let base = ys.len();
+            ys.resize(base + self.classes, 0.0);
+            ys[base + self.labels[i]] = 1.0;
         }
-        (xs, ys)
     }
 
     /// One-hot labels for the whole set.

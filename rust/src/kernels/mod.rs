@@ -1,0 +1,667 @@
+//! SIMD-friendly microkernels + per-worker scratch arenas (DESIGN.md §15).
+//!
+//! The solve phase is dominated by small dense GEMM-shaped loops: the
+//! MLP forward/backward in [`crate::model`], the prox/corrected SGD
+//! parameter updates, and the f64 Gram/matmul/matvec paths in
+//! [`crate::linalg`] behind [`crate::solver::ExactQuadratic`].  This
+//! module centralizes those inner loops as blocked,
+//! autovectorization-friendly kernels (`chunks_exact` bodies with
+//! fixed-width accumulators — no intrinsics, no `unsafe`) plus the
+//! [`Scratch`] arena that makes the hot path allocation-free after
+//! warmup (pinned by `rust/tests/alloc.rs`).
+//!
+//! # Accumulation-order contract
+//!
+//! Every kernel computes each output element as **exactly one** of:
+//!
+//! * an *axpy-style fold*: `out[j] (+)= Σ_k a_k · b_{k,j}` accumulated
+//!   in strictly ascending `k`, one accumulator per element
+//!   ([`axpy`], [`layer_forward`], [`accum_outer`], [`gemm_acc_f64`],
+//!   [`syrk_upper_acc_f64`]);
+//! * a *dot-style fold*: `out = Σ_j a_j · b_j` accumulated in strictly
+//!   ascending `j`, one scalar accumulator ([`backprop_dot`],
+//!   [`mat_vec_f64`]).
+//!
+//! Lane-blocking is only ever applied across **independent output
+//! elements** (the `chunks_exact` width in axpy kernels, the [`KB`]
+//! register block in dot kernels), never across the reduction index —
+//! so no per-element sum is reassociated and every kernel is
+//! **bit-identical** to its naive [`reference`] twin and to the scalar
+//! loops it replaced.  That is what lets PR 10 rewire the solve phase
+//! without re-pinning any golden trajectory: the house invariant
+//! (bit-identical across `--workers` and transports) holds with kernels
+//! on because the kernels are value-preserving, not just
+//! tolerance-close.
+//!
+//! The one deliberate value-affecting change lives in
+//! [`crate::linalg`]: `Matrix::matmul`/`gram` used to skip exactly-zero
+//! multiplicands; the kernels include those terms (adding `±0.0`,
+//! which can only flip a `-0.0` sum to `+0.0` or surface a `NaN` from
+//! `0 · ∞` — neither occurs for the finite data these paths carry).
+
+/// f32 lane width the axpy-style kernels block by (AVX2-sized; the
+/// compiler narrows transparently on smaller ISAs).
+pub const LANES: usize = 8;
+
+/// Row-block size for batched layer kernels — streams each weight
+/// matrix once per `RB` batch rows instead of once per row.
+pub const RB: usize = 8;
+
+/// Register block for dot-style kernels: [`KB`] independent
+/// accumulators over [`KB`] *output* elements (the reduction order of
+/// each element is untouched).
+pub const KB: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Elementwise f32 kernels
+// ---------------------------------------------------------------------------
+
+/// `y[i] += a * x[i]` — the axpy fold step shared by every f32 GEMM
+/// kernel here.  Blocked by [`LANES`]; per-element order unchanged.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let head = y.len() - y.len() % LANES;
+    let (yh, yt) = y.split_at_mut(head);
+    let (xh, xt) = x.split_at(head);
+    for (yc, xc) in yh.chunks_exact_mut(LANES).zip(xh.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            yc[i] += a * xc[i];
+        }
+    }
+    for (yv, &xv) in yt.iter_mut().zip(xt) {
+        *yv += a * xv;
+    }
+}
+
+/// `y[i] += x[i]`.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let head = y.len() - y.len() % LANES;
+    let (yh, yt) = y.split_at_mut(head);
+    let (xh, xt) = x.split_at(head);
+    for (yc, xc) in yh.chunks_exact_mut(LANES).zip(xh.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            yc[i] += xc[i];
+        }
+    }
+    for (yv, &xv) in yt.iter_mut().zip(xt) {
+        *yv += xv;
+    }
+}
+
+/// In-place ReLU (`v < 0 → 0`; `-0.0` passes, matching the model's
+/// historical strict `< 0.0` comparison).
+#[inline]
+pub fn relu(v: &mut [f32]) {
+    for o in v {
+        if *o < 0.0 {
+            *o = 0.0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched layer kernels (f32 GEMM shapes of the MLP)
+// ---------------------------------------------------------------------------
+
+/// One dense layer forward over a batch: `out[r,·] = bias + inp[r,·] W`
+/// (`W` row-major `din x dout`), optional fused ReLU.  Row-blocked by
+/// [`RB`] with a k-outer axpy inner loop — each `out[r,j]` is a
+/// k-ascending fold seeded with `bias[j]`.
+pub fn layer_forward(
+    inp: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    fuse_relu: bool,
+) {
+    debug_assert_eq!(inp.len(), n * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(bias.len(), dout);
+    debug_assert_eq!(out.len(), n * dout);
+    let mut rb = 0;
+    while rb < n {
+        let rend = (rb + RB).min(n);
+        for r in rb..rend {
+            out[r * dout..(r + 1) * dout].copy_from_slice(bias);
+        }
+        for k in 0..din {
+            let wrow = &w[k * dout..(k + 1) * dout];
+            for r in rb..rend {
+                // no zero-skip: the branch mispredicts on ~50%-zero ReLU
+                // activations and blocks vectorization (§Perf)
+                axpy(&mut out[r * dout..(r + 1) * dout], inp[r * din + k], wrow);
+            }
+        }
+        if fuse_relu {
+            relu(&mut out[rb * dout..rend * dout]);
+        }
+        rb = rend;
+    }
+}
+
+/// Weight-gradient accumulation `gw += inpᵀ delta` (`gw` row-major
+/// `din x dout`).  Row-blocked; each `gw[k,j]` accumulates in strictly
+/// ascending batch-row order.
+pub fn accum_outer(
+    inp: &[f32],
+    delta: &[f32],
+    gw: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(inp.len(), n * din);
+    debug_assert_eq!(delta.len(), n * dout);
+    debug_assert_eq!(gw.len(), din * dout);
+    let mut rb = 0;
+    while rb < n {
+        let rend = (rb + RB).min(n);
+        for k in 0..din {
+            let grow = &mut gw[k * dout..(k + 1) * dout];
+            for r in rb..rend {
+                axpy(grow, inp[r * din + k], &delta[r * dout..(r + 1) * dout]);
+            }
+        }
+        rb = rend;
+    }
+}
+
+/// Bias-gradient accumulation `gb[j] += Σ_r delta[r,j]` in ascending
+/// `r`.
+pub fn accum_bias(delta: &[f32], gb: &mut [f32], n: usize, dout: usize) {
+    debug_assert_eq!(delta.len(), n * dout);
+    debug_assert_eq!(gb.len(), dout);
+    for r in 0..n {
+        add_assign(gb, &delta[r * dout..(r + 1) * dout]);
+    }
+}
+
+/// Input-gradient `dinp[r,k] = Σ_j delta[r,j] W[k,j]` — a j-ascending
+/// dot per element, register-blocked by [`KB`] across the independent
+/// `k` outputs ([`KB`] separate accumulators, reduction order of each
+/// untouched).
+pub fn backprop_dot(
+    w: &[f32],
+    delta: &[f32],
+    dinp: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(delta.len(), n * dout);
+    debug_assert_eq!(dinp.len(), n * din);
+    for r in 0..n {
+        let drow = &delta[r * dout..(r + 1) * dout];
+        let irow = &mut dinp[r * din..(r + 1) * din];
+        let mut k = 0;
+        while k + KB <= din {
+            let w0 = &w[k * dout..(k + 1) * dout];
+            let w1 = &w[(k + 1) * dout..(k + 2) * dout];
+            let w2 = &w[(k + 2) * dout..(k + 3) * dout];
+            let w3 = &w[(k + 3) * dout..(k + 4) * dout];
+            let (mut a0, mut a1, mut a2, mut a3) =
+                (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (j, &dv) in drow.iter().enumerate() {
+                a0 += w0[j] * dv;
+                a1 += w1[j] * dv;
+                a2 += w2[j] * dv;
+                a3 += w3[j] * dv;
+            }
+            irow[k] = a0;
+            irow[k + 1] = a1;
+            irow[k + 2] = a2;
+            irow[k + 3] = a3;
+            k += KB;
+        }
+        while k < din {
+            let wrow = &w[k * dout..(k + 1) * dout];
+            let mut acc = 0.0f32;
+            for (wv, dv) in wrow.iter().zip(drow) {
+                acc += wv * dv;
+            }
+            irow[k] = acc;
+            k += 1;
+        }
+    }
+}
+
+/// ReLU backward mask: zero `dinp[i]` where the forward activation was
+/// clamped (`acts[i] <= 0`, the model's historical comparison).
+#[inline]
+pub fn relu_mask(dinp: &mut [f32], acts: &[f32]) {
+    debug_assert_eq!(dinp.len(), acts.len());
+    for (iv, &av) in dinp.iter_mut().zip(acts) {
+        if av <= 0.0 {
+            *iv = 0.0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused SGD update kernels
+// ---------------------------------------------------------------------------
+
+/// Prox-SGD step `p -= lr (g + ρ (p - (ẑ - u)))` — the `local_admm`
+/// inner update, expression order identical to the historical scalar
+/// loop.
+pub fn sgd_prox_step(
+    p: &mut [f32],
+    g: &[f32],
+    zhat: &[f32],
+    u: &[f32],
+    lr: f32,
+    rho: f32,
+) {
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(p.len(), zhat.len());
+    debug_assert_eq!(p.len(), u.len());
+    for i in 0..p.len() {
+        let anchor = zhat[i] - u[i];
+        p[i] -= lr * (g[i] + rho * (p[i] - anchor));
+    }
+}
+
+/// [`sgd_prox_step`] with a pre-combined anchor (`anchor = ẑ - u`).
+/// Bit-identical to passing `(zhat = anchor, u = 0)`: IEEE subtraction
+/// of `+0.0` is the identity for every `f32` value including `-0.0`.
+pub fn sgd_prox_step_anchor(
+    p: &mut [f32],
+    g: &[f32],
+    anchor: &[f32],
+    lr: f32,
+    rho: f32,
+) {
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(p.len(), anchor.len());
+    for i in 0..p.len() {
+        p[i] -= lr * (g[i] + rho * (p[i] - anchor[i]));
+    }
+}
+
+/// Corrected-SGD step `p -= lr (g + corr)` — the `local_scaffold` inner
+/// update.
+pub fn sgd_corr_step(p: &mut [f32], g: &[f32], corr: &[f32], lr: f32) {
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(p.len(), corr.len());
+    for i in 0..p.len() {
+        p[i] -= lr * (g[i] + corr[i]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f64 kernels (the linalg substrate routes through these)
+// ---------------------------------------------------------------------------
+
+/// `y[i] += a * x[i]` (f64).
+#[inline]
+pub fn axpy_f64(y: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    let head = y.len() - y.len() % LANES;
+    let (yh, yt) = y.split_at_mut(head);
+    let (xh, xt) = x.split_at(head);
+    for (yc, xc) in yh.chunks_exact_mut(LANES).zip(xh.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            yc[i] += a * xc[i];
+        }
+    }
+    for (yv, &xv) in yt.iter_mut().zip(xt) {
+        *yv += a * xv;
+    }
+}
+
+/// Accumulating row-major GEMM `c += a b` (`a: m x k`, `b: k x n`),
+/// ikj order with an axpy inner loop — no zero-skip (see the module
+/// docs on the `±0.0` semantics).
+pub fn gemm_acc_f64(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            axpy_f64(crow, a[i * k + kk], &b[kk * n..(kk + 1) * n]);
+        }
+    }
+}
+
+/// Rank-1 symmetric update on the **upper triangle** of row-major
+/// `g: n x n`: `g[a, b] += row[a] row[b]` for `b >= a`.  Each element
+/// accumulates in the caller's data-row order (ascending, one call per
+/// data row).
+pub fn syrk_upper_acc_f64(row: &[f64], g: &mut [f64], n: usize) {
+    debug_assert_eq!(row.len(), n);
+    debug_assert_eq!(g.len(), n * n);
+    for a in 0..n {
+        let ra = row[a];
+        axpy_f64(&mut g[a * n + a..a * n + n], ra, &row[a..n]);
+    }
+}
+
+/// `y[i] = Σ_j a[i,j] x[j]` for row-major `a: rows x cols` — a
+/// j-ascending dot per output row, register-blocked by [`KB`] across
+/// independent rows.
+pub fn mat_vec_f64(a: &[f64], x: &[f64], y: &mut [f64], rows: usize, cols: usize) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(y.len(), rows);
+    let mut i = 0;
+    while i + KB <= rows {
+        let r0 = &a[i * cols..(i + 1) * cols];
+        let r1 = &a[(i + 1) * cols..(i + 2) * cols];
+        let r2 = &a[(i + 2) * cols..(i + 3) * cols];
+        let r3 = &a[(i + 3) * cols..(i + 4) * cols];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for (j, &xv) in x.iter().enumerate() {
+            a0 += r0[j] * xv;
+            a1 += r1[j] * xv;
+            a2 += r2[j] * xv;
+            a3 += r3[j] * xv;
+        }
+        y[i] = a0;
+        y[i + 1] = a1;
+        y[i + 2] = a2;
+        y[i + 3] = a3;
+        i += KB;
+    }
+    while i < rows {
+        let row = &a[i * cols..(i + 1) * cols];
+        let mut acc = 0.0f64;
+        for (av, xv) in row.iter().zip(x) {
+            acc += av * xv;
+        }
+        y[i] = acc;
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scratch arena
+// ---------------------------------------------------------------------------
+
+/// Per-worker scratch arena for the solve phase.
+///
+/// Ownership contract (DESIGN.md §15): **one `Scratch` per worker**, or
+/// one per endpoint for the sequential coordinator path — it is plain
+/// `Send` data, never shared between concurrent solves.  Every buffer
+/// is reused via `clear()` + `extend`/`resize`, so after one warmup
+/// round of a fixed-shape workload no call through the arena allocates
+/// (asserted by the counting allocator in `rust/tests/alloc.rs`).
+/// Holders keep their arena across rounds; the model entry points
+/// (`MlpSpec::*_into`) size whatever they need on the way in, so a
+/// fresh `Scratch::new()` is always valid input — just not
+/// allocation-free on first use.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    /// Post-activation output per layer (`acts[li]` = layer `li`'s
+    /// output, `n x layers[li + 1]`; the input batch is *not* copied).
+    pub acts: Vec<Vec<f32>>,
+    /// Backprop delta ping-pong buffers.
+    pub delta: Vec<f32>,
+    pub delta2: Vec<f32>,
+    /// Flat gradient accumulator (`MlpSpec::loss_grad_into` output).
+    pub grad: Vec<f32>,
+    /// Parameter work vector for the SGD loops.
+    pub params: Vec<f32>,
+    /// `(w_offset, b_offset, din, dout)` per layer — the arena-resident
+    /// twin of `MlpSpec::layer_offsets`.
+    pub offs: Vec<(usize, usize, usize, usize)>,
+    /// Stacked minibatch arenas: the whole shard-chunk's `[agents*S*B, D]`
+    /// features / `[agents*S*B, C]` one-hot labels for one round.
+    pub bx: Vec<f32>,
+    pub by: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Naive references (the bit-exactness oracle for tests/benches)
+// ---------------------------------------------------------------------------
+
+/// Unblocked scalar twins of every kernel, written as the plainest
+/// possible loops in the *same documented accumulation order*.  The
+/// kernel proptests assert `kernel(x) == reference(x)` **bit-exactly**;
+/// the microbench's `kernel=reference` cases run these to quantify what
+/// the blocking buys.
+pub mod reference {
+    /// Scalar twin of [`super::layer_forward`].
+    pub fn layer_forward(
+        inp: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        n: usize,
+        din: usize,
+        dout: usize,
+        fuse_relu: bool,
+    ) {
+        for r in 0..n {
+            for j in 0..dout {
+                out[r * dout + j] = bias[j];
+            }
+            for k in 0..din {
+                let xv = inp[r * din + k];
+                for j in 0..dout {
+                    out[r * dout + j] += xv * w[k * dout + j];
+                }
+            }
+            if fuse_relu {
+                for j in 0..dout {
+                    if out[r * dout + j] < 0.0 {
+                        out[r * dout + j] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scalar twin of [`super::accum_outer`].
+    pub fn accum_outer(
+        inp: &[f32],
+        delta: &[f32],
+        gw: &mut [f32],
+        n: usize,
+        din: usize,
+        dout: usize,
+    ) {
+        for k in 0..din {
+            for j in 0..dout {
+                for r in 0..n {
+                    gw[k * dout + j] += inp[r * din + k] * delta[r * dout + j];
+                }
+            }
+        }
+    }
+
+    /// Scalar twin of [`super::backprop_dot`].
+    pub fn backprop_dot(
+        w: &[f32],
+        delta: &[f32],
+        dinp: &mut [f32],
+        n: usize,
+        din: usize,
+        dout: usize,
+    ) {
+        for r in 0..n {
+            for k in 0..din {
+                let mut acc = 0.0f32;
+                for j in 0..dout {
+                    acc += w[k * dout + j] * delta[r * dout + j];
+                }
+                dinp[r * din + k] = acc;
+            }
+        }
+    }
+
+    /// Scalar twin of [`super::gemm_acc_f64`].
+    pub fn gemm_acc_f64(
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+    }
+
+    /// Scalar twin of [`super::mat_vec_f64`].
+    pub fn mat_vec_f64(
+        a: &[f64],
+        x: &[f64],
+        y: &mut [f64],
+        rows: usize,
+        cols: usize,
+    ) {
+        for i in 0..rows {
+            let mut acc = 0.0f64;
+            for j in 0..cols {
+                acc += a[i * cols + j] * x[j];
+            }
+            y[i] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn randv(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        (0..n).map(|_| rng.f32n()).collect()
+    }
+
+    #[test]
+    fn axpy_matches_scalar_bitwise() {
+        let mut rng = Pcg64::seed(1);
+        for n in [0, 1, 7, 8, 9, 31, 64] {
+            let x = randv(n, &mut rng);
+            let y0 = randv(n, &mut rng);
+            let a = rng.f32n();
+            let mut y = y0.clone();
+            axpy(&mut y, a, &x);
+            let want: Vec<f32> =
+                y0.iter().zip(&x).map(|(&yv, &xv)| yv + a * xv).collect();
+            assert_eq!(y, want, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn layer_forward_matches_reference_bitwise() {
+        let mut rng = Pcg64::seed(2);
+        for (n, din, dout) in [(1, 3, 5), (8, 8, 16), (13, 17, 9)] {
+            let inp = randv(n * din, &mut rng);
+            let w = randv(din * dout, &mut rng);
+            let b = randv(dout, &mut rng);
+            for fuse_relu in [false, true] {
+                let mut out = vec![0.0f32; n * dout];
+                let mut want = vec![0.0f32; n * dout];
+                layer_forward(&inp, &w, &b, &mut out, n, din, dout, fuse_relu);
+                reference::layer_forward(
+                    &inp, &w, &b, &mut want, n, din, dout, fuse_relu,
+                );
+                assert_eq!(out, want, "n={n} din={din} dout={dout}");
+            }
+        }
+    }
+
+    #[test]
+    fn backprop_dot_matches_reference_bitwise() {
+        let mut rng = Pcg64::seed(3);
+        for (n, din, dout) in [(2, 4, 4), (5, 9, 7), (8, 16, 4)] {
+            let w = randv(din * dout, &mut rng);
+            let delta = randv(n * dout, &mut rng);
+            let mut got = vec![0.0f32; n * din];
+            let mut want = vec![0.0f32; n * din];
+            backprop_dot(&w, &delta, &mut got, n, din, dout);
+            reference::backprop_dot(&w, &delta, &mut want, n, din, dout);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn mat_vec_f64_matches_reference_bitwise() {
+        let mut rng = Pcg64::seed(4);
+        for (rows, cols) in [(1, 1), (4, 7), (9, 5), (16, 16)] {
+            let a: Vec<f64> = (0..rows * cols).map(|_| rng.normal()).collect();
+            let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            let mut got = vec![0.0f64; rows];
+            let mut want = vec![0.0f64; rows];
+            mat_vec_f64(&a, &x, &mut got, rows, cols);
+            reference::mat_vec_f64(&a, &x, &mut want, rows, cols);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn gemm_acc_f64_matches_reference_bitwise() {
+        let mut rng = Pcg64::seed(5);
+        let (m, k, n) = (5, 7, 6);
+        let mut a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        a[3] = 0.0; // exercise the no-zero-skip path
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut got = vec![0.0f64; m * n];
+        let mut want = vec![0.0f64; m * n];
+        gemm_acc_f64(&a, &b, &mut got, m, k, n);
+        reference::gemm_acc_f64(&a, &b, &mut want, m, k, n);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prox_anchor_equals_zhat_minus_zero_u() {
+        let mut rng = Pcg64::seed(6);
+        let n = 33;
+        let p0 = randv(n, &mut rng);
+        let g = randv(n, &mut rng);
+        let mut anchor = randv(n, &mut rng);
+        anchor[0] = -0.0; // the -0.0 edge the doc comment claims is safe
+        let u = vec![0.0f32; n];
+        let mut a = p0.clone();
+        let mut b = p0.clone();
+        sgd_prox_step(&mut a, &g, &anchor, &u, 0.1, 0.7);
+        sgd_prox_step_anchor(&mut b, &g, &anchor, 0.1, 0.7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn relu_mask_zeroes_clamped_lanes() {
+        let mut d = vec![1.0f32, 2.0, 3.0, 4.0];
+        let acts = vec![0.5f32, 0.0, -1.0, 2.0];
+        relu_mask(&mut d, &acts);
+        assert_eq!(d, vec![1.0, 0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn scratch_buffers_keep_capacity_across_reuse() {
+        let mut s = Scratch::new();
+        s.grad.resize(128, 0.0);
+        let cap = s.grad.capacity();
+        s.grad.clear();
+        s.grad.resize(128, 0.0);
+        assert_eq!(s.grad.capacity(), cap);
+    }
+}

@@ -36,6 +36,9 @@
 //!   the metrics registry behind `deluxe status` / `deluxe trace`
 //!   (DESIGN.md §13), and the hierarchical span layer + `deluxe
 //!   profile` critical-path analyzer on top of it (DESIGN.md §14).
+//! * [`kernels`] — SIMD-friendly f32/f64 microkernels with a documented
+//!   accumulation-order contract plus the per-worker [`kernels::Scratch`]
+//!   arena behind the allocation-free solve phase (DESIGN.md §15).
 //! * Substrates built from scratch for the offline environment: [`rng`],
 //!   [`jsonio`], [`linalg`], [`data`], [`topology`], [`metrics`],
 //!   [`benchlib`], [`proptest`], [`cli`].
@@ -47,6 +50,7 @@ pub mod comm;
 pub mod config;
 pub mod data;
 pub mod jsonio;
+pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod model;

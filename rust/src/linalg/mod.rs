@@ -58,18 +58,13 @@ impl Matrix {
         t
     }
 
-    /// `y = A x`.
+    /// `y = A x` — register-blocked dot rows
+    /// ([`crate::kernels::mat_vec_f64`]; per-row accumulation order
+    /// unchanged).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols, "matvec dim mismatch");
         let mut y = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let mut acc = 0.0;
-            for (a, b) in row.iter().zip(x.iter()) {
-                acc += a * b;
-            }
-            y[i] = acc;
-        }
+        crate::kernels::mat_vec_f64(&self.data, x, &mut y, self.rows, self.cols);
         y
     }
 
@@ -87,42 +82,29 @@ impl Matrix {
         y
     }
 
-    /// `C = A B` (naive ikj loop — cache-friendly for row-major).
+    /// `C = A B` (ikj loop — cache-friendly for row-major), via
+    /// [`crate::kernels::gemm_acc_f64`].  The historical `aik == 0.0`
+    /// zero-skip branch is gone: it mispredicted on dense data and
+    /// blocked vectorization (the same §Perf rationale as the MLP
+    /// forward), and skipping changes values only through `±0.0` terms
+    /// (DESIGN.md §15).
     pub fn matmul(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.rows, "matmul dim mismatch");
         let mut c = Matrix::zeros(self.rows, b.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let aik = self[(i, k)];
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = b.row(k);
-                let crow =
-                    &mut c.data[i * b.cols..(i + 1) * b.cols];
-                for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
-                    *cj += aik * bj;
-                }
-            }
-        }
+        crate::kernels::gemm_acc_f64(
+            &self.data, &b.data, &mut c.data, self.rows, self.cols, b.cols,
+        );
         c
     }
 
-    /// Gram matrix `AᵀA`.
+    /// Gram matrix `AᵀA` — rank-1 upper-triangle updates per data row
+    /// ([`crate::kernels::syrk_upper_acc_f64`], no zero-skip), then
+    /// mirrored.
     pub fn gram(&self) -> Matrix {
         let n = self.cols;
         let mut g = Matrix::zeros(n, n);
         for i in 0..self.rows {
-            let row = self.row(i);
-            for a in 0..n {
-                let ra = row[a];
-                if ra == 0.0 {
-                    continue;
-                }
-                for b in a..n {
-                    g[(a, b)] += ra * row[b];
-                }
-            }
+            crate::kernels::syrk_upper_acc_f64(self.row(i), &mut g.data, n);
         }
         for a in 0..n {
             for b in 0..a {
@@ -130,6 +112,31 @@ impl Matrix {
             }
         }
         g
+    }
+
+    /// Order-sensitive FNV-1a digest of the matrix (shape + element
+    /// bits) — the content key of the shared Cholesky cache in
+    /// [`crate::solver::ExactQuadratic`].  Bit-exact equality of shape
+    /// and every `f64` (including `-0.0` vs `+0.0` and NaN payloads)
+    /// gives equal digests; a collision between distinct Gram matrices
+    /// would silently share a factorization, at FNV's ~2⁻⁶⁴ odds —
+    /// accepted for this non-adversarial, process-local cache.
+    pub fn digest(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        mix(self.rows as u64);
+        mix(self.cols as u64);
+        for &v in &self.data {
+            mix(v.to_bits());
+        }
+        h
     }
 
     /// Add `c` to the diagonal in place.
@@ -306,9 +313,7 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 }
 
 pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
+    crate::kernels::axpy_f64(y, a, x);
 }
 
 pub fn normalize(x: &mut [f64]) {
@@ -370,6 +375,42 @@ mod tests {
                 assert!((c[(i, j)] - want[i]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn matmul_includes_exact_zero_entries() {
+        // the zero-skip removal: a matrix with exact zeros multiplies
+        // bit-identically to the dense triple loop
+        let a = Matrix::from_rows(vec![
+            vec![0.0, 1.0, 0.0],
+            vec![2.0, 0.0, -3.0],
+        ]);
+        let mut rng = Pcg64::seed(9);
+        let b = Matrix::randn(3, 4, &mut rng);
+        let c = a.matmul(&b);
+        let mut want = Matrix::zeros(2, 4);
+        for i in 0..2 {
+            for k in 0..3 {
+                for j in 0..4 {
+                    want[(i, j)] += a[(i, k)] * b[(k, j)];
+                }
+            }
+        }
+        assert_eq!(c.data, want.data);
+    }
+
+    #[test]
+    fn digest_is_content_keyed() {
+        let mut rng = Pcg64::seed(17);
+        let a = Matrix::randn(4, 3, &mut rng);
+        let b = a.clone();
+        assert_eq!(a.digest(), b.digest());
+        let mut c = a.clone();
+        c[(2, 1)] += 1.0; // any bit flip changes the digest
+        assert_ne!(a.digest(), c.digest());
+        // shape participates even when the data bits agree
+        let flat = Matrix { rows: 3, cols: 4, data: a.data.clone() };
+        assert_ne!(a.digest(), flat.digest());
     }
 
     #[test]

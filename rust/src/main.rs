@@ -1456,7 +1456,7 @@ fn print_profile(p: &deluxe::obs::profile::Profile) {
 /// the stable knob fields, in fixed order, skipping absent ones.
 fn case_key(c: &Json) -> String {
     let mut parts = Vec::new();
-    for k in ["workers", "transport", "journal", "spans"] {
+    for k in ["workers", "transport", "journal", "spans", "kernel", "solver"] {
         if let Some(v) = c.get(k) {
             parts.push(format!("{k}={}", v.to_string()));
         }

@@ -9,6 +9,7 @@
 //! 2. experiments can run without artifacts (`LocalSolver::NativeSgd`),
 //! 3. the §Perf pass has a host-side baseline to compare PJRT against.
 
+use crate::kernels::{self, Scratch};
 use crate::rng::Rng;
 
 /// MLP architecture: `layers = [d_in, h1, ..., d_out]`.
@@ -45,13 +46,20 @@ impl MlpSpec {
     /// (w_offset, b_offset, din, dout) per layer.
     pub fn layer_offsets(&self) -> Vec<(usize, usize, usize, usize)> {
         let mut offs = Vec::new();
+        self.fill_offsets(&mut offs);
+        offs
+    }
+
+    /// [`Self::layer_offsets`] into a reused buffer (the arena-resident
+    /// hot path — no allocation once `offs` has capacity).
+    fn fill_offsets(&self, offs: &mut Vec<(usize, usize, usize, usize)>) {
+        offs.clear();
         let mut pos = 0;
         for w in self.layers.windows(2) {
             let (din, dout) = (w[0], w[1]);
             offs.push((pos, pos + din * dout, din, dout));
             pos += din * dout + dout;
         }
-        offs
     }
 
     /// He-initialized flat parameter vector.
@@ -70,58 +78,50 @@ impl MlpSpec {
     /// Batched forward: `xs` is `n x d_in` flattened; returns `n x C`
     /// logits.
     pub fn forward(&self, params: &[f32], xs: &[f32], n: usize) -> Vec<f32> {
-        // lint:allow(panic-in-library): forward_acts always returns at least the input activation, so pop() cannot fail
-        self.forward_acts(params, xs, n).pop().unwrap()
+        let mut scratch = Scratch::new();
+        self.forward_acts_into(params, xs, n, &mut scratch);
+        // lint:allow(panic-in-library): n_layers() >= 1 by construction, so the last activation exists
+        scratch.acts.pop().unwrap()
     }
 
-    /// Forward keeping all post-activation layer outputs (for backprop).
+    /// Forward keeping all post-activation layer outputs in
+    /// `scratch.acts` (for backprop): `scratch.acts[li]` is layer `li`'s
+    /// output; the input batch is not copied.
     ///
-    /// Row-blocked (§Perf): the weight matrix is streamed once per block
-    /// of `RB` batch rows instead of once per row, cutting the dominant
-    /// memory traffic by ~RB on bandwidth-bound boxes.
-    fn forward_acts(&self, params: &[f32], xs: &[f32], n: usize) -> Vec<Vec<f32>> {
-        const RB: usize = 8;
+    /// Row-blocked through [`kernels::layer_forward`] (§Perf): the
+    /// weight matrix is streamed once per block of `kernels::RB` batch
+    /// rows instead of once per row, cutting the dominant memory traffic
+    /// by ~RB on bandwidth-bound boxes.  Allocation-free once the arena
+    /// has warmed to this `(spec, n)` shape.
+    pub fn forward_acts_into(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        n: usize,
+        scratch: &mut Scratch,
+    ) {
         assert_eq!(params.len(), self.param_len(), "param ABI mismatch");
         assert_eq!(xs.len(), n * self.input_dim());
-        let offs = self.layer_offsets();
-        let mut acts: Vec<Vec<f32>> = vec![xs.to_vec()];
-        for (li, &(woff, boff, din, dout)) in offs.iter().enumerate() {
+        self.fill_offsets(&mut scratch.offs);
+        let nl = self.n_layers();
+        if scratch.acts.len() != nl {
+            scratch.acts.clear();
+            scratch.acts.resize_with(nl, Vec::new);
+        }
+        for li in 0..nl {
+            let (woff, boff, din, dout) = scratch.offs[li];
             let w = &params[woff..woff + din * dout];
             let b = &params[boff..boff + dout];
-            // lint:allow(panic-in-library): acts is seeded with the input batch before the loop, so last() always exists
-            let inp = acts.last().unwrap();
-            let mut out = vec![0.0f32; n * dout];
-            let last = li == offs.len() - 1;
-            let mut rb = 0;
-            while rb < n {
-                let rend = (rb + RB).min(n);
-                for r in rb..rend {
-                    out[r * dout..(r + 1) * dout].copy_from_slice(b);
-                }
-                for k in 0..din {
-                    let wrow = &w[k * dout..(k + 1) * dout];
-                    for r in rb..rend {
-                        let xv = inp[r * din + k];
-                        // no zero-skip: the branch mispredicts on ~50%-zero
-                        // ReLU activations and blocks vectorization (§Perf)
-                        let orow = &mut out[r * dout..(r + 1) * dout];
-                        for (o, &wv) in orow.iter_mut().zip(wrow) {
-                            *o += xv * wv;
-                        }
-                    }
-                }
-                if !last {
-                    for o in &mut out[rb * dout..rend * dout] {
-                        if *o < 0.0 {
-                            *o = 0.0;
-                        }
-                    }
-                }
-                rb = rend;
-            }
-            acts.push(out);
+            let last = li == nl - 1;
+            // split so the input (acts[li-1]) and output (acts[li])
+            // borrows are provably disjoint
+            let (head, tail) = scratch.acts.split_at_mut(li);
+            let out = &mut tail[0];
+            out.clear();
+            out.resize(n * dout, 0.0);
+            let inp: &[f32] = if li == 0 { xs } else { &head[li - 1] };
+            kernels::layer_forward(inp, w, b, out, n, din, dout, !last);
         }
-        acts
     }
 
     /// Mean softmax cross-entropy + flat gradient.
@@ -132,15 +132,39 @@ impl MlpSpec {
         ys_onehot: &[f32],
         n: usize,
     ) -> (f32, Vec<f32>) {
+        let mut scratch = Scratch::new();
+        let loss = self.loss_grad_into(params, xs, ys_onehot, n, &mut scratch);
+        (loss, scratch.grad)
+    }
+
+    /// [`Self::loss_grad`] into the arena: the flat gradient lands in
+    /// `scratch.grad`, the loss is returned.  Allocation-free after
+    /// warmup; value-identical to the historical scalar loops (the
+    /// kernels preserve per-element accumulation order — DESIGN.md §15).
+    pub fn loss_grad_into(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys_onehot: &[f32],
+        n: usize,
+        scratch: &mut Scratch,
+    ) -> f32 {
         let c = self.classes();
         assert_eq!(ys_onehot.len(), n * c);
-        let acts = self.forward_acts(params, xs, n);
-        // lint:allow(panic-in-library): acts is seeded with the input batch, so last() always exists
-        let logits = acts.last().unwrap();
+        self.forward_acts_into(params, xs, n, scratch);
+        let nl = self.n_layers();
 
-        // softmax + CE + dlogits
+        // take the non-activation buffers out of the arena so the
+        // activation reads and gradient writes are disjoint borrows
+        let mut grad = std::mem::take(&mut scratch.grad);
+        let mut delta = std::mem::take(&mut scratch.delta);
+        let mut dinp = std::mem::take(&mut scratch.delta2);
+
+        // softmax + CE + dlogits (f64 accumulation, order unchanged)
+        let logits = &scratch.acts[nl - 1];
         let mut loss = 0.0f64;
-        let mut dz = vec![0.0f32; n * c];
+        delta.clear();
+        delta.resize(n * c, 0.0);
         for r in 0..n {
             let row = &logits[r * c..(r + 1) * c];
             let yrow = &ys_onehot[r * c..(r + 1) * c];
@@ -153,83 +177,45 @@ impl MlpSpec {
             for j in 0..c {
                 let logp = (row[j] - maxv) as f64 - logdenom;
                 loss -= yrow[j] as f64 * logp;
-                dz[r * c + j] =
+                delta[r * c + j] =
                     ((logp.exp() - yrow[j] as f64) / n as f64) as f32;
             }
         }
         loss /= n as f64;
 
-        // backprop (row-blocked like the forward — §Perf)
-        const RB: usize = 8;
-        let offs = self.layer_offsets();
-        let mut grad = vec![0.0f32; self.param_len()];
-        let mut delta = dz; // gradient w.r.t. layer output (pre-relu-mask applied below)
-        for li in (0..offs.len()).rev() {
-            let (woff, boff, din, dout) = offs[li];
-            let inp = &acts[li]; // n x din (post-activation of previous layer)
-            // dW = inp^T delta : stream grad-W once per row block
-            {
-                let gw = &mut grad[woff..woff + din * dout];
-                let mut rb = 0;
-                while rb < n {
-                    let rend = (rb + RB).min(n);
-                    for k in 0..din {
-                        let grow = &mut gw[k * dout..(k + 1) * dout];
-                        for r in rb..rend {
-                            let xv = inp[r * din + k];
-                            let drow = &delta[r * dout..(r + 1) * dout];
-                            for (g, &dv) in grow.iter_mut().zip(drow) {
-                                *g += xv * dv;
-                            }
-                        }
-                    }
-                    rb = rend;
-                }
-            }
-            {
-                let gb = &mut grad[boff..boff + dout];
-                for r in 0..n {
-                    let drow = &delta[r * dout..(r + 1) * dout];
-                    for (g, &dv) in gb.iter_mut().zip(drow) {
-                        *g += dv;
-                    }
-                }
-            }
+        // backprop (row-blocked kernels — §Perf)
+        grad.clear();
+        grad.resize(self.param_len(), 0.0);
+        for li in (0..nl).rev() {
+            let (woff, boff, din, dout) = scratch.offs[li];
+            // n x din post-activation input of this layer
+            let inp: &[f32] =
+                if li == 0 { xs } else { &scratch.acts[li - 1] };
+            kernels::accum_outer(
+                inp,
+                &delta,
+                &mut grad[woff..woff + din * dout],
+                n,
+                din,
+                dout,
+            );
+            kernels::accum_bias(&delta, &mut grad[boff..boff + dout], n, dout);
             if li > 0 {
-                // dinp = delta W^T, masked by relu'(inp); W streamed once
-                // per row block
+                // dinp = delta W^T, masked by relu'(inp): acts[li-1] is
+                // post-relu, so act > 0 <=> pass
                 let w = &params[woff..woff + din * dout];
-                let mut dinp = vec![0.0f32; n * din];
-                let mut rb = 0;
-                while rb < n {
-                    let rend = (rb + RB).min(n);
-                    for k in 0..din {
-                        let wrow = &w[k * dout..(k + 1) * dout];
-                        for r in rb..rend {
-                            let drow = &delta[r * dout..(r + 1) * dout];
-                            let mut acc = 0.0f32;
-                            for (wv, dv) in wrow.iter().zip(drow) {
-                                acc += wv * dv;
-                            }
-                            dinp[r * din + k] = acc;
-                        }
-                    }
-                    rb = rend;
-                }
-                // relu mask: act[li] is post-relu, so act > 0 <=> pass
-                for r in 0..n {
-                    let irow = &mut dinp[r * din..(r + 1) * din];
-                    let arow = &acts[li][r * din..(r + 1) * din];
-                    for (iv, &av) in irow.iter_mut().zip(arow) {
-                        if av <= 0.0 {
-                            *iv = 0.0;
-                        }
-                    }
-                }
-                delta = dinp;
+                dinp.clear();
+                dinp.resize(n * din, 0.0);
+                kernels::backprop_dot(w, &delta, &mut dinp, n, din, dout);
+                kernels::relu_mask(&mut dinp, &scratch.acts[li - 1]);
+                std::mem::swap(&mut delta, &mut dinp);
             }
         }
-        (loss as f32, grad)
+
+        scratch.grad = grad;
+        scratch.delta = delta;
+        scratch.delta2 = dinp;
+        loss as f32
     }
 
     /// S proximal-SGD steps — the native twin of the `local_admm` artifact.
@@ -247,19 +233,103 @@ impl MlpSpec {
         steps: usize,
         batch: usize,
     ) -> Vec<f32> {
+        let mut scratch = Scratch::new();
+        let mut out = Vec::new();
+        self.local_admm_into(
+            params, zhat, u, xs, ys, lr, rho, steps, batch, &mut scratch,
+            &mut out,
+        );
+        out
+    }
+
+    /// [`Self::local_admm`] into the arena — the allocation-free hot
+    /// path behind the fused `NativeSgd::solve_batch` and the
+    /// coordinator endpoint.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_admm_into(
+        &self,
+        params: &[f32],
+        zhat: &[f32],
+        u: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+        rho: f32,
+        steps: usize,
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) {
         let d = self.input_dim();
         let c = self.classes();
-        let mut p = params.to_vec();
+        let mut p = std::mem::take(&mut scratch.params);
+        p.clear();
+        p.extend_from_slice(params);
         for s in 0..steps {
             let xsl = &xs[s * batch * d..(s + 1) * batch * d];
             let ysl = &ys[s * batch * c..(s + 1) * batch * c];
-            let (_, g) = self.loss_grad(&p, xsl, ysl, batch);
-            for i in 0..p.len() {
-                let anchor = zhat[i] - u[i];
-                p[i] -= lr * (g[i] + rho * (p[i] - anchor));
-            }
+            let _ = self.loss_grad_into(&p, xsl, ysl, batch, scratch);
+            kernels::sgd_prox_step(&mut p, &scratch.grad, zhat, u, lr, rho);
         }
-        p
+        out.clear();
+        out.extend_from_slice(&p);
+        scratch.params = p;
+    }
+
+    /// [`Self::local_admm_into`] with a pre-combined anchor
+    /// (`anchor = ẑ - u`) — bit-identical to passing `(zhat = anchor,
+    /// u = 0)` (see [`kernels::sgd_prox_step_anchor`]), without the
+    /// caller having to materialize a zero dual vector.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_admm_anchor_into(
+        &self,
+        params: &[f32],
+        anchor: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+        rho: f32,
+        steps: usize,
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) {
+        let d = self.input_dim();
+        let c = self.classes();
+        let mut p = std::mem::take(&mut scratch.params);
+        p.clear();
+        p.extend_from_slice(params);
+        for s in 0..steps {
+            let xsl = &xs[s * batch * d..(s + 1) * batch * d];
+            let ysl = &ys[s * batch * c..(s + 1) * batch * c];
+            let _ = self.loss_grad_into(&p, xsl, ysl, batch, scratch);
+            kernels::sgd_prox_step_anchor(&mut p, &scratch.grad, anchor, lr, rho);
+        }
+        out.clear();
+        out.extend_from_slice(&p);
+        scratch.params = p;
+    }
+
+    /// Allocating convenience wrapper over [`Self::local_admm_anchor_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_admm_anchor(
+        &self,
+        params: &[f32],
+        anchor: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+        rho: f32,
+        steps: usize,
+        batch: usize,
+    ) -> Vec<f32> {
+        let mut scratch = Scratch::new();
+        let mut out = Vec::new();
+        self.local_admm_anchor_into(
+            params, anchor, xs, ys, lr, rho, steps, batch, &mut scratch,
+            &mut out,
+        );
+        out
     }
 
     /// S corrected-SGD steps — the native twin of `local_scaffold`.
@@ -273,18 +343,42 @@ impl MlpSpec {
         steps: usize,
         batch: usize,
     ) -> Vec<f32> {
+        let mut scratch = Scratch::new();
+        let mut out = Vec::new();
+        self.local_scaffold_into(
+            params, corr, xs, ys, lr, steps, batch, &mut scratch, &mut out,
+        );
+        out
+    }
+
+    /// [`Self::local_scaffold`] into the arena.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_scaffold_into(
+        &self,
+        params: &[f32],
+        corr: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+        steps: usize,
+        batch: usize,
+        scratch: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) {
         let d = self.input_dim();
         let c = self.classes();
-        let mut p = params.to_vec();
+        let mut p = std::mem::take(&mut scratch.params);
+        p.clear();
+        p.extend_from_slice(params);
         for s in 0..steps {
             let xsl = &xs[s * batch * d..(s + 1) * batch * d];
             let ysl = &ys[s * batch * c..(s + 1) * batch * c];
-            let (_, g) = self.loss_grad(&p, xsl, ysl, batch);
-            for i in 0..p.len() {
-                p[i] -= lr * (g[i] + corr[i]);
-            }
+            let _ = self.loss_grad_into(&p, xsl, ysl, batch, scratch);
+            kernels::sgd_corr_step(&mut p, &scratch.grad, corr, lr);
         }
-        p
+        out.clear();
+        out.extend_from_slice(&p);
+        scratch.params = p;
     }
 
     /// Classification accuracy on a flat batch.

@@ -40,11 +40,13 @@
 
 use crate::admm::core::WorkerPool;
 use crate::data::synth::ClassDataset;
+use crate::kernels::Scratch;
 use crate::linalg::{Cholesky, Matrix};
 use crate::model::MlpSpec;
 use crate::rng::Pcg64;
 #[cfg(test)]
 use crate::rng::Rng;
+use std::collections::BTreeMap;
 
 /// An agent-side local solver over scalar type `T`.
 pub trait LocalSolver<T> {
@@ -88,6 +90,25 @@ pub trait LocalSolver<T> {
             .map(|((&a, anchor), rng)| self.solve(a, anchor, rho, rng))
             .collect()
     }
+
+    /// [`Self::solve_batch`] into caller-owned output buffers, reused
+    /// across rounds.  The default delegates to `solve_batch` (and so
+    /// allocates); [`NativeSgd`] overrides it with the fused,
+    /// allocation-free-after-warmup hot path that the zero-alloc test
+    /// pins.  Must be observably identical to `solve_batch` — same
+    /// values, same per-agent RNG consumption.
+    fn solve_batch_into(
+        &mut self,
+        agents: &[usize],
+        anchors: &[Vec<T>],
+        rho: f64,
+        rngs: &mut [Pcg64],
+        pool: &WorkerPool,
+        outs: &mut Vec<Vec<T>>,
+    ) {
+        outs.clear();
+        outs.append(&mut self.solve_batch(agents, anchors, rho, rngs, pool));
+    }
 }
 
 /// Server-side prox for the (possibly nonsmooth) `g`:
@@ -122,49 +143,75 @@ impl ServerProx<f64> for L1Prox {
 // ---------------------------------------------------------------------------
 
 /// Agents with `f_i(x) = 0.5 |A_i x - b_i|²`; the prox step is the linear
-/// solve `(A_iᵀA_i + ρI) x = A_iᵀ b_i + ρ v`, with the factorization cached
-/// per (agent, ρ).
+/// solve `(A_iᵀA_i + ρI) x = A_iᵀ b_i + ρ v`, with the factorization held
+/// in a **shared** [`CholCache`] keyed by `(gram digest, ρ bits)` — agents
+/// with bit-identical Gram matrices (IID shards of a common design, the
+/// replicated-block experiments) factor once and `solve_in_place` many.
 pub struct ExactQuadratic {
     grams: Vec<Matrix>,
     atbs: Vec<Vec<f64>>,
+    /// `grams[i].digest()`, precomputed — the cache key half.
+    digests: Vec<u64>,
     dim: usize,
-    cache: Vec<Option<(f64, Cholesky)>>,
+    cache: CholCache,
+}
+
+/// Shared Cholesky cache: `(Matrix::digest(), rho.to_bits())` →
+/// factorization.  Keying on exact ρ bits replaces the historical
+/// per-agent `|ρ - ρ'| <= 1e-12·max(|ρ|,1)` staleness test: any ρ the
+/// engines actually revisit is bit-stable (it comes from config or a
+/// deterministic schedule), and exact keys make hit/miss accounting
+/// well-defined.  A `BTreeMap` keeps iteration deterministic (the
+/// `nondet-iteration` lint applies to this module's callers).
+#[derive(Debug, Default)]
+pub struct CholCache {
+    map: BTreeMap<(u64, u64), Cholesky>,
+    hits: u64,
+    misses: u64,
+}
+
+impl CholCache {
+    fn factor(gram: &Matrix, rho: f64) -> Cholesky {
+        let mut m = gram.clone();
+        m.add_diag(rho);
+        // lint:allow(panic-in-library): AᵀA + ρI with ρ > 0 is positive definite by construction; a failure means corrupted input data
+        Cholesky::factor(&m).expect("gram + rho I must be PD")
+    }
+
+    /// Look up (counting a hit) or factor-and-insert (counting a miss).
+    fn get_or_factor(&mut self, gram: &Matrix, digest: u64, rho: f64) -> &Cholesky {
+        let key = (digest, rho.to_bits());
+        if self.map.contains_key(&key) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            self.map.insert(key, Self::factor(gram, rho));
+        }
+        // lint:allow(panic-in-library): the branch above inserted the key if it was absent, so the lookup cannot fail
+        self.map.get(&key).expect("key just ensured")
+    }
 }
 
 impl ExactQuadratic {
     pub fn new(blocks: &[crate::data::regress::AgentBlock]) -> Self {
         assert!(!blocks.is_empty());
         let dim = blocks[0].a.cols;
+        let grams: Vec<Matrix> = blocks.iter().map(|b| b.a.gram()).collect();
+        let digests = grams.iter().map(Matrix::digest).collect();
         ExactQuadratic {
-            grams: blocks.iter().map(|b| b.a.gram()).collect(),
             atbs: blocks.iter().map(|b| b.a.tmatvec(&b.b)).collect(),
+            grams,
+            digests,
             dim,
-            cache: vec![None; blocks.len()],
+            cache: CholCache::default(),
         }
     }
-}
 
-/// Cached `(AᵀA + ρI)` factorization for one agent — free function over
-/// the agent's own cache slot so the sequential and pool-sharded paths
-/// share it.
-fn chol_for<'c>(
-    gram: &Matrix,
-    cache: &'c mut Option<(f64, Cholesky)>,
-    rho: f64,
-) -> &'c Cholesky {
-    let stale = match cache {
-        Some((r, _)) => (*r - rho).abs() > 1e-12 * rho.abs().max(1.0),
-        None => true,
-    };
-    if stale {
-        let mut m = gram.clone();
-        m.add_diag(rho);
-        // lint:allow(panic-in-library): AᵀA + ρI with ρ > 0 is positive definite by construction; a failure means corrupted input data
-        let c = Cholesky::factor(&m).expect("gram + rho I must be PD");
-        *cache = Some((rho, c));
+    /// `(hits, misses, entries)` of the shared factorization cache —
+    /// the observable the cache-semantics tests pin.
+    pub fn cache_stats(&self) -> (u64, u64, usize) {
+        (self.cache.hits, self.cache.misses, self.cache.map.len())
     }
-    // lint:allow(panic-in-library): the branch above just filled the cache slot, so as_ref() cannot be None
-    &cache.as_ref().unwrap().1
 }
 
 impl LocalSolver<f64> for ExactQuadratic {
@@ -179,7 +226,8 @@ impl LocalSolver<f64> for ExactQuadratic {
         // buffer (§Perf — Cholesky::solve_in_place)
         let mut x = self.atbs[agent].clone();
         crate::linalg::axpy(&mut x, rho, anchor);
-        chol_for(&self.grams[agent], &mut self.cache[agent], rho)
+        self.cache
+            .get_or_factor(&self.grams[agent], self.digests[agent], rho)
             .solve_in_place(&mut x);
         x
     }
@@ -192,9 +240,15 @@ impl LocalSolver<f64> for ExactQuadratic {
         self.grams.len()
     }
 
-    /// Pool-sharded batch: per-agent state is each agent's cache slot;
-    /// `grams`/`atbs` are shared read-only.  Draws nothing from the
-    /// RNGs, so results are trivially order-independent.
+    /// Pool-sharded batch in three deterministic passes: (1) a
+    /// sequential scan accounts hits/misses and collects the distinct
+    /// missing keys in batch order (later same-key entries count as
+    /// hits — they reuse the factor the first entry produces); (2) the
+    /// missing factorizations run on the pool (each key's representative
+    /// agent factors it; the work set depends only on the batch, never
+    /// on scheduling) and insert sequentially; (3) the solves run on the
+    /// pool reading the now-complete cache immutably.  Draws nothing
+    /// from the RNGs, so results are trivially order-independent.
     fn solve_batch(
         &mut self,
         agents: &[usize],
@@ -204,26 +258,63 @@ impl LocalSolver<f64> for ExactQuadratic {
         pool: &WorkerPool,
     ) -> Vec<Vec<f64>> {
         debug_assert_eq!(agents.len(), anchors.len());
-        struct Job<'a> {
+        let rho_bits = rho.to_bits();
+        // pass 1: hit/miss accounting + distinct missing keys
+        let mut missing_keys: Vec<(u64, u64)> = Vec::new();
+        let mut reps: Vec<usize> = Vec::new();
+        for &agent in agents {
+            let key = (self.digests[agent], rho_bits);
+            if self.cache.map.contains_key(&key)
+                || missing_keys.contains(&key)
+            {
+                self.cache.hits += 1;
+            } else {
+                self.cache.misses += 1;
+                missing_keys.push(key);
+                reps.push(agent);
+            }
+        }
+        // pass 2: parallel factorization of the missing keys
+        struct FactorJob {
+            agent: usize,
+            out: Option<Cholesky>,
+        }
+        let mut fjobs: Vec<FactorJob> = reps
+            .iter()
+            .map(|&agent| FactorJob { agent, out: None })
+            .collect();
+        let grams = &self.grams;
+        pool.run(&mut fjobs, |_, job| {
+            job.out = Some(CholCache::factor(&grams[job.agent], rho));
+        });
+        for (key, job) in missing_keys.into_iter().zip(fjobs) {
+            // lint:allow(panic-in-library): the pool ran every factor job, so out was filled
+            self.cache.map.insert(key, job.out.expect("factored"));
+        }
+        // pass 3: parallel solves against the read-only cache
+        struct SolveJob<'a> {
             agent: usize,
             anchor: &'a [f64],
-            cache: &'a mut Option<(f64, Cholesky)>,
             out: Vec<f64>,
         }
-        let mut jobs =
-            pick_jobs(agents, &mut self.cache, |j, agent, cache| Job {
+        let mut jobs: Vec<SolveJob> = agents
+            .iter()
+            .zip(anchors)
+            .map(|(&agent, anchor)| SolveJob {
                 agent,
-                anchor: &anchors[j],
-                cache,
+                anchor,
                 out: Vec::new(),
-            });
-        let grams = &self.grams;
+            })
+            .collect();
         let atbs = &self.atbs;
+        let digests = &self.digests;
+        let cache = &self.cache;
         pool.run(&mut jobs, |_, job| {
             let mut x = atbs[job.agent].clone();
             crate::linalg::axpy(&mut x, rho, job.anchor);
-            chol_for(&grams[job.agent], job.cache, rho)
-                .solve_in_place(&mut x);
+            let key = (digests[job.agent], rho_bits);
+            // lint:allow(panic-in-library): pass 2 inserted every key this batch needs, so the lookup cannot fail
+            cache.map.get(&key).expect("factor present").solve_in_place(&mut x);
             job.out = x;
         });
         jobs.into_iter().map(|j| j.out).collect()
@@ -275,6 +366,10 @@ pub struct NativeSgd {
     /// Current local iterate per agent (warm start across rounds —
     /// x_{k+1} starts from x_k like the paper's implementation).
     pub xs: Vec<Vec<f32>>,
+    /// Per-worker-chunk scratch arenas for the fused batch path, lazily
+    /// sized to the pool shape and retained across rounds so the hot
+    /// path stops allocating after warmup (`rust/tests/alloc.rs`).
+    scratches: Vec<Scratch>,
 }
 
 impl NativeSgd {
@@ -287,7 +382,7 @@ impl NativeSgd {
         init: &[f32],
     ) -> Self {
         let xs = vec![init.to_vec(); shards.len()];
-        NativeSgd { spec, shards, lr, steps, batch, xs }
+        NativeSgd { spec, shards, lr, steps, batch, xs, scratches: Vec::new() }
     }
 
     /// Draw the S minibatches for one round as flat buffers.
@@ -321,12 +416,29 @@ pub fn draw_round_batches(
     let c = spec.classes();
     let mut xs = Vec::with_capacity(steps * batch * d);
     let mut ys = Vec::with_capacity(steps * batch * c);
-    for _ in 0..steps {
-        let (bx, by) = shard.sample_batch(batch, rng);
-        xs.extend_from_slice(&bx);
-        ys.extend_from_slice(&by);
-    }
+    draw_round_batches_into(spec, shard, steps, batch, rng, &mut xs, &mut ys);
     (xs, ys)
+}
+
+/// [`draw_round_batches`] appending into caller-owned arenas — the fused
+/// solve path stacks a whole worker chunk's minibatches (`agents·S·B`
+/// rows) into one buffer pair before any solve runs.  RNG consumption is
+/// identical to the allocating wrapper: one draw per sampled row, all
+/// from `rng`.
+pub fn draw_round_batches_into(
+    spec: &MlpSpec,
+    shard: &ClassDataset,
+    steps: usize,
+    batch: usize,
+    rng: &mut Pcg64,
+    xs: &mut Vec<f32>,
+    ys: &mut Vec<f32>,
+) {
+    xs.reserve(steps * batch * spec.input_dim());
+    ys.reserve(steps * batch * spec.classes());
+    for _ in 0..steps {
+        shard.sample_batch_into(batch, rng, xs, ys);
+    }
 }
 
 impl LocalSolver<f32> for NativeSgd {
@@ -338,13 +450,11 @@ impl LocalSolver<f32> for NativeSgd {
         rng: &mut Pcg64,
     ) -> Vec<f32> {
         let (bx, by) = self.draw_batches(agent, rng);
-        let zeros = vec![0.0f32; anchor.len()];
-        // local_admm expects (zhat, u); anchor = zhat - u, so pass
-        // (anchor, 0).
-        let x = self.spec.local_admm(
+        // local_admm expects (zhat, u); anchor = zhat - u, and the
+        // anchor variant folds u = 0 in bit-identically (x - 0.0 ≡ x).
+        let x = self.spec.local_admm_anchor(
             &self.xs[agent],
             anchor,
-            &zeros,
             &bx,
             &by,
             self.lr,
@@ -364,9 +474,7 @@ impl LocalSolver<f32> for NativeSgd {
         self.shards.len()
     }
 
-    /// Pool-sharded batch: per-agent state is the warm-started iterate
-    /// `xs[agent]`; the spec and shards are shared read-only; every
-    /// minibatch draw comes from that agent's own `rngs[j]` stream.
+    /// Allocating wrapper over the fused [`Self::solve_batch_into`].
     fn solve_batch(
         &mut self,
         agents: &[usize],
@@ -375,46 +483,153 @@ impl LocalSolver<f32> for NativeSgd {
         rngs: &mut [Pcg64],
         pool: &WorkerPool,
     ) -> Vec<Vec<f32>> {
+        let mut outs = Vec::new();
+        self.solve_batch_into(agents, anchors, rho, rngs, pool, &mut outs);
+        outs
+    }
+
+    /// The fused batch path.  Per-agent state is the warm-started
+    /// iterate `xs[agent]`; the spec and shards are shared read-only;
+    /// every minibatch draw comes from that entry's own `rngs[j]`
+    /// stream, so values are bit-identical to the sequential default
+    /// for every worker count.
+    ///
+    /// Shape: the batch is cut into the same contiguous chunks
+    /// [`WorkerPool::run`] would form (`per = n.div_ceil(w)`), each
+    /// chunk owning one retained [`Scratch`].  A chunk first stacks
+    /// *all* its entries' minibatches into one `[entries·S·B, D]` arena
+    /// pair (`scratch.bx`/`by`), then runs the solves over slices of
+    /// that arena through [`MlpSpec::local_admm_anchor_into`].  With one
+    /// worker the chunk machinery collapses to a plain loop that reuses
+    /// buffers across rounds — zero allocations per round after warmup
+    /// (pinned by `rust/tests/alloc.rs`).
+    fn solve_batch_into(
+        &mut self,
+        agents: &[usize],
+        anchors: &[Vec<f32>],
+        rho: f64,
+        rngs: &mut [Pcg64],
+        pool: &WorkerPool,
+        outs: &mut Vec<Vec<f32>>,
+    ) {
         debug_assert_eq!(agents.len(), anchors.len());
         debug_assert_eq!(agents.len(), rngs.len());
-        struct Job<'a> {
-            agent: usize,
-            anchor: &'a [f32],
-            x: &'a mut Vec<f32>,
-            rng: &'a mut Pcg64,
-            out: Vec<f32>,
+        let n = agents.len();
+        if outs.len() != n {
+            outs.clear();
+            outs.resize_with(n, Vec::new);
         }
-        let mut rng_refs: Vec<Option<&mut Pcg64>> =
-            rngs.iter_mut().map(Some).collect();
-        let mut jobs =
-            pick_jobs(agents, &mut self.xs, |j, agent, x| Job {
-                agent,
-                anchor: &anchors[j],
-                x,
-                // lint:allow(panic-in-library): pick_jobs visits each batch entry once, so each rng slot is taken exactly once
-                rng: rng_refs[j].take().expect("one rng per entry"),
-                out: Vec::new(),
-            });
-        let spec = &self.spec;
-        let shards = &self.shards;
-        let (lr, steps, batch) = (self.lr, self.steps, self.batch);
+        let rho32 = rho as f32;
+        let w = pool.workers().min(n);
+        if w <= 1 {
+            // Sequential fused path: one scratch, buffers reused across
+            // both entries and rounds.  Warm iterates are mem::take'n
+            // around the solve call to keep the borrows disjoint.
+            if self.scratches.is_empty() {
+                self.scratches.push(Scratch::new());
+            }
+            let NativeSgd { spec, shards, lr, steps, batch, xs, scratches } =
+                self;
+            let scratch = &mut scratches[0];
+            let mut bx = std::mem::take(&mut scratch.bx);
+            let mut by = std::mem::take(&mut scratch.by);
+            for (j, (&agent, anchor)) in
+                agents.iter().zip(anchors).enumerate()
+            {
+                bx.clear();
+                by.clear();
+                draw_round_batches_into(
+                    spec, &shards[agent], *steps, *batch, &mut rngs[j],
+                    &mut bx, &mut by,
+                );
+                let mut x = std::mem::take(&mut xs[agent]);
+                spec.local_admm_anchor_into(
+                    &x, anchor, &bx, &by, *lr, rho32, *steps, *batch,
+                    scratch, &mut outs[j],
+                );
+                x.clear();
+                x.extend_from_slice(&outs[j]);
+                xs[agent] = x;
+            }
+            scratch.bx = bx;
+            scratch.by = by;
+            return;
+        }
+        // Chunked pool path.  Chunk boundaries replicate WorkerPool::run
+        // exactly, so each chunk lands on one worker and its scratch is
+        // touched by one thread.
+        let per = n.div_ceil(w);
+        let nchunks = n.div_ceil(per);
+        if self.scratches.len() < nchunks {
+            self.scratches.resize_with(nchunks, Scratch::new);
+        }
+        let NativeSgd { spec, shards, lr, steps, batch, xs, scratches } =
+            self;
+        // Disjoint &mut borrows of each entry's warm iterate, in batch
+        // order (batch agent ids are distinct by the round-core contract).
+        let mut xrefs: Vec<Option<&mut Vec<f32>>> =
+            pick_jobs(agents, xs.as_mut_slice(), |_, _, x| Some(x));
+        struct ChunkJob<'a, 'x> {
+            agents: &'a [usize],
+            anchors: &'a [Vec<f32>],
+            rngs: &'a mut [Pcg64],
+            xrefs: &'a mut [Option<&'x mut Vec<f32>>],
+            outs: &'a mut [Vec<f32>],
+            scratch: &'a mut Scratch,
+        }
+        let mut jobs: Vec<ChunkJob> = agents
+            .chunks(per)
+            .zip(anchors.chunks(per))
+            .zip(rngs.chunks_mut(per))
+            .zip(xrefs.chunks_mut(per))
+            .zip(outs.chunks_mut(per))
+            .zip(scratches[..nchunks].iter_mut())
+            .map(|(((((ca, cn), cr), cx), co), scratch)| ChunkJob {
+                agents: ca,
+                anchors: cn,
+                rngs: cr,
+                xrefs: cx,
+                outs: co,
+                scratch,
+            })
+            .collect();
+        let (lr, steps, batch) = (*lr, *steps, *batch);
+        let spec = &*spec;
+        let shards = &*shards;
         pool.run(&mut jobs, |_, job| {
-            let (bx, by) = draw_round_batches(
-                spec,
-                &shards[job.agent],
-                steps,
-                batch,
-                job.rng,
-            );
-            let zeros = vec![0.0f32; job.anchor.len()];
-            let x = spec.local_admm(
-                &*job.x, job.anchor, &zeros, &bx, &by, lr, rho as f32,
-                steps, batch,
-            );
-            *job.x = x.clone();
-            job.out = x;
+            let scratch = &mut *job.scratch;
+            let mut bx = std::mem::take(&mut scratch.bx);
+            let mut by = std::mem::take(&mut scratch.by);
+            bx.clear();
+            by.clear();
+            // pass 1: stack the whole chunk's minibatches
+            for (i, &agent) in job.agents.iter().enumerate() {
+                draw_round_batches_into(
+                    spec, &shards[agent], steps, batch, &mut job.rngs[i],
+                    &mut bx, &mut by,
+                );
+            }
+            // pass 2: per-entry solves over slices of the arena
+            let rows = steps * batch;
+            let d = spec.input_dim();
+            let c = spec.classes();
+            for i in 0..job.agents.len() {
+                let xsl = &bx[i * rows * d..(i + 1) * rows * d];
+                let ysl = &by[i * rows * c..(i + 1) * rows * c];
+                let x = job.xrefs[i]
+                    .take()
+                    // lint:allow(panic-in-library): pick_jobs filled every slot and each entry is visited once, so the slot cannot be empty
+                    .expect("one warm iterate per entry");
+                spec.local_admm_anchor_into(
+                    x, &job.anchors[i], xsl, ysl, lr, rho32, steps, batch,
+                    scratch, &mut job.outs[i],
+                );
+                x.clear();
+                x.extend_from_slice(&job.outs[i]);
+            }
+            scratch.bx = bx;
+            scratch.by = by;
         });
-        jobs.into_iter().map(|j| j.out).collect()
     }
 }
 

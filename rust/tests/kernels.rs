@@ -1,0 +1,348 @@
+//! The fused-kernel contract (DESIGN.md §15):
+//!
+//! * **bit-exactness** — every blocked kernel equals its unblocked
+//!   scalar reference twin bit-for-bit over randomized shapes, because
+//!   blocking never reassociates a per-element fold (property tests);
+//! * **arena equivalence** — the `*_into` scratch-arena entry points
+//!   return exactly what the allocating wrappers return, with one
+//!   `Scratch` reused across heterogeneous shapes;
+//! * **Cholesky-cache semantics** — `ExactQuadratic`'s shared cache is
+//!   keyed by `(gram digest, ρ bits)`: identical blocks share one
+//!   factorization, hit/miss books are exact, and caching never changes
+//!   solve values;
+//! * **fused-batch determinism** — `NativeSgd::solve_batch[_into]`
+//!   (chunk-stacked minibatch arenas) is bit-identical to per-agent
+//!   sequential `solve` calls and across worker counts 1/4.
+
+use deluxe::admm::core::solve_rngs;
+use deluxe::admm::WorkerPool;
+use deluxe::data::partition::iid_split;
+use deluxe::data::regress::{generate, RegressSpec};
+use deluxe::data::synth::{self, SynthSpec};
+use deluxe::kernels::{self, reference, Scratch};
+use deluxe::model::MlpSpec;
+use deluxe::proptest::forall;
+use deluxe::rng::{Pcg64, Rng};
+use deluxe::solver::{ExactQuadratic, LocalSolver, NativeSgd};
+
+fn randv32(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+    (0..n).map(|_| rng.f32n()).collect()
+}
+
+fn randv64(n: usize, rng: &mut Pcg64) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// kernel == reference, bit-exactly, over randomized shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_layer_forward_matches_reference_bitwise() {
+    forall(
+        "blocked layer_forward == scalar reference (bitwise)",
+        |rng| {
+            let n = 1 + rng.below(33);
+            let din = 1 + rng.below(37);
+            let dout = 1 + rng.below(29);
+            let fuse = rng.bernoulli(0.5);
+            (
+                randv32(n * din, rng),
+                randv32(din * dout, rng),
+                randv32(dout, rng),
+                n,
+                din,
+                dout,
+                fuse,
+            )
+        },
+        |(inp, w, bias, n, din, dout, fuse)| {
+            let mut got = vec![0.0f32; n * dout];
+            let mut want = vec![0.0f32; n * dout];
+            kernels::layer_forward(inp, w, bias, &mut got, *n, *din, *dout, *fuse);
+            reference::layer_forward(inp, w, bias, &mut want, *n, *din, *dout, *fuse);
+            if bits32(&got) == bits32(&want) {
+                Ok(())
+            } else {
+                Err(format!("n={n} din={din} dout={dout} fuse={fuse}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_backprop_kernels_match_reference_bitwise() {
+    forall(
+        "accum_outer + backprop_dot == scalar references (bitwise)",
+        |rng| {
+            let n = 1 + rng.below(25);
+            let din = 1 + rng.below(21);
+            let dout = 1 + rng.below(19);
+            (
+                randv32(n * din, rng),
+                randv32(n * dout, rng),
+                randv32(din * dout, rng),
+                n,
+                din,
+                dout,
+            )
+        },
+        |(inp, delta, w, n, din, dout)| {
+            let mut gw_got = vec![0.25f32; din * dout];
+            let mut gw_want = gw_got.clone();
+            kernels::accum_outer(inp, delta, &mut gw_got, *n, *din, *dout);
+            reference::accum_outer(inp, delta, &mut gw_want, *n, *din, *dout);
+            if bits32(&gw_got) != bits32(&gw_want) {
+                return Err(format!("accum_outer n={n} din={din} dout={dout}"));
+            }
+            let mut di_got = vec![0.0f32; n * din];
+            let mut di_want = vec![0.0f32; n * din];
+            kernels::backprop_dot(w, delta, &mut di_got, *n, *din, *dout);
+            reference::backprop_dot(w, delta, &mut di_want, *n, *din, *dout);
+            if bits32(&di_got) != bits32(&di_want) {
+                return Err(format!("backprop_dot n={n} din={din} dout={dout}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_f64_gemm_and_matvec_match_reference_bitwise() {
+    forall(
+        "gemm_acc_f64 + mat_vec_f64 == scalar references (bitwise)",
+        |rng| {
+            let m = 1 + rng.below(13);
+            let k = 1 + rng.below(17);
+            let n = 1 + rng.below(11);
+            // sprinkle exact zeros: the historical zero-skip's territory
+            let mut a = randv64(m * k, rng);
+            for v in a.iter_mut() {
+                if rng.bernoulli(0.3) {
+                    *v = 0.0;
+                }
+            }
+            (a, randv64(k * n, rng), m, k, n)
+        },
+        |(a, b, m, k, n)| {
+            let mut c_got = vec![0.5f64; m * n];
+            let mut c_want = c_got.clone();
+            kernels::gemm_acc_f64(a, b, &mut c_got, *m, *k, *n);
+            reference::gemm_acc_f64(a, b, &mut c_want, *m, *k, *n);
+            if bits64(&c_got) != bits64(&c_want) {
+                return Err(format!("gemm m={m} k={k} n={n}"));
+            }
+            let mut y_got = vec![0.0f64; *m];
+            let mut y_want = vec![0.0f64; *m];
+            let x = &b[..*k];
+            kernels::mat_vec_f64(a, x, &mut y_got, *m, *k);
+            reference::mat_vec_f64(a, x, &mut y_want, *m, *k);
+            if bits64(&y_got) != bits64(&y_want) {
+                return Err(format!("matvec rows={m} cols={k}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// arena entry points == allocating wrappers, scratch reused across shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scratch_entry_points_match_allocating_wrappers_across_shapes() {
+    let mut rng = Pcg64::seed(11);
+    let mut scratch = Scratch::new();
+    // one retained scratch driven across two different architectures and
+    // batch sizes — resizing must never change values
+    for arch in [vec![8, 16, 4], vec![6, 10, 10, 3]] {
+        let spec = MlpSpec::new(arch);
+        let params = spec.init(&mut rng);
+        for n in [1usize, 5, 12] {
+            let xs = randv32(n * spec.input_dim(), &mut rng);
+            let ys: Vec<f32> = {
+                let mut y = vec![0.0f32; n * spec.classes()];
+                for r in 0..n {
+                    y[r * spec.classes() + r % spec.classes()] = 1.0;
+                }
+                y
+            };
+            let (loss_a, grad_a) = spec.loss_grad(&params, &xs, &ys, n);
+            let loss_b =
+                spec.loss_grad_into(&params, &xs, &ys, n, &mut scratch);
+            assert_eq!(loss_a.to_bits(), loss_b.to_bits());
+            assert_eq!(bits32(&grad_a), bits32(&scratch.grad));
+        }
+    }
+}
+
+#[test]
+fn local_admm_anchor_equals_zero_dual_path_bitwise() {
+    let mut rng = Pcg64::seed(12);
+    let spec = MlpSpec::new(vec![8, 12, 4]);
+    let params = spec.init(&mut rng);
+    let anchor = randv32(params.len(), &mut rng);
+    let zeros = vec![0.0f32; params.len()];
+    let (steps, batch) = (3usize, 5usize);
+    let xs = randv32(steps * batch * spec.input_dim(), &mut rng);
+    let mut ys = vec![0.0f32; steps * batch * spec.classes()];
+    for r in 0..steps * batch {
+        ys[r * spec.classes() + r % spec.classes()] = 1.0;
+    }
+    let via_u = spec.local_admm(
+        &params, &anchor, &zeros, &xs, &ys, 0.07, 0.9, steps, batch,
+    );
+    let via_anchor = spec.local_admm_anchor(
+        &params, &anchor, &xs, &ys, 0.07, 0.9, steps, batch,
+    );
+    assert_eq!(bits32(&via_u), bits32(&via_anchor));
+}
+
+// ---------------------------------------------------------------------------
+// shared Cholesky cache: keying, hit/miss books, value-neutrality
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chol_cache_shares_factorizations_and_counts_exactly() {
+    let mut rng = Pcg64::seed(21);
+    let (blocks3, _) = generate(
+        &RegressSpec {
+            n_agents: 3,
+            rows_per_agent: 9,
+            dim: 5,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    // agents 0 and 1 share a bit-identical block -> one shared factor
+    let blocks = vec![
+        blocks3[0].clone(),
+        blocks3[0].clone(),
+        blocks3[1].clone(),
+        blocks3[2].clone(),
+    ];
+    let mut solver = ExactQuadratic::new(&blocks);
+    let anchors: Vec<Vec<f64>> =
+        (0..4).map(|_| randv64(5, &mut rng)).collect();
+    let agents = [0usize, 1, 2, 3];
+    let pool = WorkerPool::new(2);
+    let mut rngs = solve_rngs(&Pcg64::seed(1), 0, 4);
+
+    let xs1 = solver.solve_batch(&agents, &anchors, 0.7, &mut rngs, &pool);
+    // 3 distinct gram digests -> 3 misses; the duplicate is a hit
+    assert_eq!(solver.cache_stats(), (1, 3, 3));
+
+    // same rho again: all four hit, no new entries
+    let xs2 = solver.solve_batch(&agents, &anchors, 0.7, &mut rngs, &pool);
+    assert_eq!(solver.cache_stats(), (5, 3, 3));
+    for (a, b) in xs1.iter().zip(&xs2) {
+        assert_eq!(bits64(a), bits64(b), "cache hits must not change values");
+    }
+
+    // new rho: three fresh factorizations alongside the old ones
+    let _ = solver.solve_batch(&agents, &anchors, 1.3, &mut rngs, &pool);
+    assert_eq!(solver.cache_stats(), (6, 6, 6));
+
+    // sequential solve() books into the same cache
+    let _ = solver.solve(3, &anchors[3], 0.7, &mut rngs[3]);
+    assert_eq!(solver.cache_stats(), (7, 6, 6));
+
+    // caching is value-neutral: a fresh solver solving sequentially,
+    // agent by agent, produces the same bits the pooled batch produced
+    let mut fresh = ExactQuadratic::new(&blocks);
+    for (j, &agent) in agents.iter().enumerate() {
+        let x = fresh.solve(agent, &anchors[j], 0.7, &mut rngs[j]);
+        assert_eq!(bits64(&x), bits64(&xs1[j]), "agent {agent}");
+    }
+    // identical duplicated blocks with identical anchors would also be a
+    // trivial equality; make sure anchors actually differed
+    assert_ne!(bits64(&xs1[0]), bits64(&xs1[1]));
+}
+
+// ---------------------------------------------------------------------------
+// fused NativeSgd batch: == sequential solve, == across worker counts,
+// and the _into path reuses buffers without changing values
+// ---------------------------------------------------------------------------
+
+fn tiny_sgd(seed: u64, n: usize) -> (NativeSgd, Vec<f32>) {
+    let mut rng = Pcg64::seed(seed);
+    let (train, _) = synth::generate(&SynthSpec::tiny(), &mut rng);
+    let shards = iid_split(&train, n, &mut rng);
+    let spec = MlpSpec::new(vec![8, 16, 4]);
+    let init = spec.init(&mut rng);
+    (NativeSgd::new(spec, shards, 0.1, 2, 4, &init), init)
+}
+
+#[test]
+fn native_sgd_fused_batch_is_bit_identical_to_sequential_solves() {
+    let n = 4;
+    let rounds = 3;
+    let run = |workers: usize, use_into: bool| {
+        let (mut solver, init) = tiny_sgd(31, n);
+        let pool = if workers <= 1 {
+            WorkerPool::sequential()
+        } else {
+            WorkerPool::new(workers)
+        };
+        let agents: Vec<usize> = (0..n).collect();
+        let mut anchors = vec![init; n];
+        let base = Pcg64::seed(32);
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        let mut trace: Vec<u32> = Vec::new();
+        for round in 0..rounds {
+            let mut rngs = solve_rngs(&base, round, n);
+            if use_into {
+                solver.solve_batch_into(
+                    &agents, &anchors, 0.8, &mut rngs, &pool, &mut outs,
+                );
+            } else {
+                outs = solver.solve_batch(
+                    &agents, &anchors, 0.8, &mut rngs, &pool,
+                );
+            }
+            for (anchor, x) in anchors.iter_mut().zip(&outs) {
+                trace.extend(bits32(x));
+                anchor.clone_from(x);
+            }
+        }
+        for a in 0..n {
+            trace.extend(bits32(&solver.xs[a]));
+        }
+        trace
+    };
+    // per-agent sequential solve() through the same forked streams — the
+    // trait-default shape the fused path must reproduce observably
+    let reference = {
+        let (mut solver, init) = tiny_sgd(31, n);
+        let base = Pcg64::seed(32);
+        let mut anchors = vec![init; n];
+        let mut trace: Vec<u32> = Vec::new();
+        for round in 0..rounds {
+            let mut rngs = solve_rngs(&base, round, n);
+            for a in 0..n {
+                let x = solver.solve(a, &anchors[a], 0.8, &mut rngs[a]);
+                trace.extend(bits32(&x));
+                anchors[a].clone_from(&x);
+            }
+        }
+        for a in 0..n {
+            trace.extend(bits32(&solver.xs[a]));
+        }
+        trace
+    };
+    assert_eq!(run(1, false), reference, "fused w=1 != sequential solves");
+    assert_eq!(run(1, true), reference, "fused _into w=1 != sequential");
+    assert_eq!(run(4, false), reference, "fused w=4 != sequential solves");
+    assert_eq!(run(4, true), reference, "fused _into w=4 != sequential");
+    // worker count beyond the batch, and a non-dividing chunk width
+    assert_eq!(run(3, true), reference, "fused w=3 != sequential");
+    assert_eq!(run(16, true), reference, "fused w=16 != sequential");
+}
